@@ -1,0 +1,77 @@
+//! Cloud bursting: exhaust the local cluster, then burst to the simulated
+//! EC2 provider — explicit instance types, generic requests through the
+//! (XLA-scored, when artifacts are built) selector, and an EC2 Fleet with
+//! zone-aware placement.
+
+use fluxion::external::ec2::{Ec2Provider, Ec2SimConfig};
+use fluxion::external::fleet::FleetRequest;
+use fluxion::external::provider::ExternalProvider;
+use fluxion::jobspec::{JobSpec, ResourceReq};
+use fluxion::resource::builder::{table2_graph, UidGen};
+use fluxion::resource::ResourceType;
+use fluxion::sched::{PruneConfig, SchedInstance};
+
+fn main() {
+    let mut sched = SchedInstance::new(table2_graph(3, &mut UidGen::new()), PruneConfig::default());
+    let mut provider = Ec2Provider::new(Ec2SimConfig {
+        time_scale: 1e-2, // 100× faster than real EC2 for the demo
+        ..Ec2SimConfig::default()
+    });
+    if fluxion::runtime::artifacts_available() {
+        if let Ok(sel) = fluxion::runtime::scorer::XlaSelector::load() {
+            provider = provider.with_selector(Box::new(sel));
+            println!("fleet scoring: AOT XLA artifact (L1 Pallas kernel)");
+        }
+    } else {
+        println!("fleet scoring: rust-native (run `make artifacts` for the XLA path)");
+    }
+
+    // exhaust the 2-node local cluster
+    let local = JobSpec::nodes_sockets_cores(2, 2, 16);
+    let job = sched.match_allocate(&local).expect("local fit").job;
+    assert!(sched.match_only(&local).is_err(), "cluster exhausted");
+    println!("local cluster exhausted by job {job:?}");
+
+    // burst: generic request — the provider picks the instance type
+    let burst = JobSpec::new(vec![ResourceReq::new("node", 4)
+        .with_child(ResourceReq::new("core", 8))
+        .with_child(ResourceReq::new("memory", 16))]);
+    let grant = provider.request(&burst).expect("burstable");
+    println!(
+        "EC2 grant: {} instances, subgraph {} v+e, created in {:.3}s (sim), JGF encode {:.6}s",
+        grant.instance_ids.len(),
+        grant.subgraph.size(),
+        grant.creation_s,
+        grant.encode_s
+    );
+    let (report, add_s) = sched.accept_grant(&grant.subgraph, Some(job)).expect("splice");
+    println!(
+        "spliced {} vertices into the local graph in {add_s:.6}s; zone vertices interposed:",
+        report.added.len()
+    );
+    for vid in &report.added {
+        let v = sched.graph.vertex(*vid);
+        if v.rtype == ResourceType::Zone {
+            println!("  zone {}", v.path);
+        }
+    }
+
+    // EC2 Fleet: provider chooses types + zones ("the user does not know
+    // which instance types will meet the request")
+    let fleet = provider
+        .request_fleet(&FleetRequest {
+            total_instances: 10,
+            allowed_types: Vec::new(),
+            on_demand: true,
+            min_zones: 3,
+        })
+        .expect("fleet");
+    println!(
+        "\nfleet grant: {} instances across zones, subgraph {} v+e",
+        fleet.instance_ids.len(),
+        fleet.subgraph.size()
+    );
+    let (added, add_s) = sched.accept_grant(&fleet.subgraph, None).expect("add fleet");
+    println!("fleet spliced: {} new vertices in {add_s:.6}s", added.added.len());
+    sched.check().expect("scheduler consistent");
+}

@@ -1,0 +1,61 @@
+//! END-TO-END DRIVER (DESIGN.md E11): the full system on a real workload.
+//!
+//! Generates a deterministic elastic ensemble-workflow trace (40 jobs with
+//! grow/shrink phases), replays it three ways on the 128-node cluster
+//! graph — elastic with EC2 bursting, elastic local-only, and a rigid
+//! allocate-peak-up-front baseline — and reports completion, makespan,
+//! queue wait, utilization, and measured scheduler-operation latencies.
+//! Every layer composes here: graph edits (L3), fleet scoring through the
+//! AOT XLA artifact when built (L2+L1), and the simulated provider.
+//! Results are recorded in EXPERIMENTS.md §E11.
+
+use fluxion::experiments::{e2e, ExpConfig};
+use fluxion::workload::{demand_summary, generate, WorkloadSpec};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let jobs = args
+        .iter()
+        .position(|a| a == "--jobs")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(40);
+
+    let cfg = ExpConfig::default();
+    let spec = WorkloadSpec {
+        jobs,
+        ..WorkloadSpec::default()
+    };
+    let trace = generate(&spec);
+    let (elastic_demand, rigid_demand) = demand_summary(&trace);
+    println!(
+        "trace: {} jobs, elastic demand {:.0} node·s vs rigid reservation {:.0} node·s ({:.1}% waste avoided)",
+        trace.len(),
+        elastic_demand,
+        rigid_demand,
+        100.0 * (1.0 - elastic_demand / rigid_demand)
+    );
+    println!(
+        "xla artifacts: {}",
+        if fluxion::runtime::artifacts_available() {
+            "present (fleet scoring through the L1 Pallas kernel)"
+        } else {
+            "absent (rust-native scoring; run `make artifacts`)"
+        }
+    );
+
+    let results = e2e::run(&cfg, &spec);
+    println!("\n{}", e2e::comparison_table(&results));
+    for r in &results {
+        println!("--- {} scheduler-op latencies ---", r.mode);
+        println!("{}", r.recorder.table());
+    }
+
+    // headline: elastic completes the same work with less queueing
+    let elastic = &results[0];
+    let rigid = &results[2];
+    println!(
+        "headline: rigid total wait {:.2}s vs elastic+burst {:.2}s; makespan {:.2}s vs {:.2}s",
+        rigid.total_wait_s, elastic.total_wait_s, rigid.makespan_s, elastic.makespan_s
+    );
+}

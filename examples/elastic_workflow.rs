@@ -1,0 +1,55 @@
+//! An elastic ensemble workflow on a five-level scheduling hierarchy —
+//! the paper's motivating scenario (§2.1): a leaf workflow job that grows
+//! through its ancestors via nested MatchGrow and shrinks when a phase
+//! completes.
+
+use fluxion::hier::{paper_levels, Hierarchy};
+use fluxion::jobspec::table1_jobspec;
+use fluxion::resource::builder::{table2_graph, UidGen};
+use fluxion::rpc::transport::Latency;
+
+fn main() {
+    let root = table2_graph(0, &mut UidGen::new());
+    println!("L0 cluster graph size: {}", root.size());
+    let h = Hierarchy::build(root, &paper_levels(Latency::of(1400, 60.0)))
+        .expect("five-level hierarchy");
+    println!("hierarchy depth: {} levels; leaf fully allocated", h.depth());
+
+    // ensemble phases: grow by successively larger subgraphs (T7 -> T5),
+    // as an ensemble fans out
+    for test in ["T7", "T6", "T5"] {
+        let report = h.grow_from_leaf(&table1_jobspec(test)).expect("grow");
+        println!(
+            "\nphase {test}: +{} vertices+edges in {:.6}s total",
+            report.subgraph_size, report.total_s
+        );
+        for lt in &report.levels {
+            println!(
+                "  L{} match={:.6}s ({}) comms={:.6}s add_upd={:.6}s",
+                lt.level,
+                lt.match_s,
+                if lt.match_ok { "hit" } else { "miss" },
+                lt.comms_s,
+                lt.add_upd_s
+            );
+        }
+    }
+    // shrink: the ensemble's reduction phase releases the last grow — the
+    // subtractive transformation ascends the hierarchy bottom-up (§3)
+    let report = h.grow_from_leaf(&table1_jobspec("T7")).expect("grow");
+    let removed = h
+        .shrink_from_leaf(&report.roots[0])
+        .expect("hierarchical shrink");
+    println!("
+shrink phase: released {removed} vertices back up the hierarchy");
+
+    // component sum ≈ total (the §6 decomposition)
+    let report = h.grow_from_leaf(&table1_jobspec("T7")).expect("grow");
+    println!(
+        "\ncomponent sum {:.6}s vs wall total {:.6}s ({:.1}%)",
+        report.component_sum(),
+        report.total_s,
+        100.0 * report.component_sum() / report.total_s
+    );
+    h.shutdown();
+}

@@ -1,0 +1,52 @@
+//! Quickstart: build a cluster graph, allocate a job, grow it, shrink it.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use fluxion::jobspec::JobSpec;
+use fluxion::resource::builder::{ClusterSpec, UidGen};
+use fluxion::resource::jgf::Jgf;
+use fluxion::sched::{PruneConfig, SchedInstance};
+
+fn main() {
+    // a 4-node cluster: 2 sockets × 8 cores each
+    let mut uids = UidGen::new();
+    let graph = ClusterSpec::new("cluster", 4, 2, 8).build(&mut uids);
+    println!(
+        "cluster graph: {} vertices, {} edges",
+        graph.num_vertices(),
+        graph.num_edges()
+    );
+    let mut sched = SchedInstance::new(graph, PruneConfig::default());
+
+    // MatchAllocate: 2 nodes × 2 sockets × 8 cores
+    let spec = JobSpec::nodes_sockets_cores(2, 2, 8);
+    let out = sched.match_allocate(&spec).expect("resources available");
+    println!(
+        "allocated job {:?}: {} vertices in {:.6}s",
+        out.job,
+        out.subgraph.nodes.len(),
+        out.timing.match_s
+    );
+
+    // MatchGrow: one more node into the same job
+    let grow = sched
+        .match_grow_local(out.job, &JobSpec::nodes_sockets_cores(1, 2, 8))
+        .expect("a free node remains");
+    println!(
+        "grew job {:?} by {} vertices; it now holds {}",
+        grow.job,
+        grow.subgraph.nodes.len(),
+        sched.job_vertices(out.job).unwrap().len()
+    );
+
+    // the grown subgraph as JGF — what travels between scheduler levels
+    let jgf: Jgf = grow.subgraph;
+    println!("grow subgraph JGF ({} bytes):", jgf.dump().len());
+    println!("{}", jgf.to_json().dump_pretty());
+
+    // shrink back: release everything
+    let freed = sched.free_job(out.job).expect("job exists");
+    println!("released {freed} vertices; scheduler consistent: {:?}", sched.check());
+}

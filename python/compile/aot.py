@@ -1,0 +1,55 @@
+"""AOT compile path: lower the L2 JAX functions to HLO **text** artifacts.
+
+HLO text — not ``lowered.compile()`` or serialized protos — is the
+interchange format: the image's xla_extension 0.5.1 rejects jax>=0.5's
+64-bit-instruction-id protos (``proto.id() <= INT_MAX``), while the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` runs). Each export in model.EXPORTS becomes
+``<name>.hlo.txt``; functions returning tuples are wrapped so rust unwraps
+one tuple per execute.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    written = {}
+    args = model.example_args()
+    for name, fn in model.EXPORTS.items():
+        lowered = jax.jit(fn).lower(*args[name])
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        written[name] = path
+        print(f"wrote {len(text):>9} chars -> {path}")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    lower_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: batched fleet instance-type scoring.
+
+The coordinator's EC2 Fleet path must rank every candidate instance type for
+a batch of pending generic resource requests (paper §4: EC2API "maps the
+request to corresponding EC2 instance types or builds an EC2 Fleet request").
+That scoring — feasibility mask + waste + normalized price over a
+[B, 3] x [N, 3] cross product — is the numeric hot-spot this kernel owns.
+
+Math (must match `rust/src/external/ec2.rs::score_one` exactly):
+
+    feasible[b, n] = all_f(cand[n, f] >= req[b, f])
+    waste[b, n]    = mean_f((cand[n, f] - req[b, f]) / max(cand[n, f], 1))
+    score[b, n]    = feasible ? price_norm[n] + waste[b, n] : +inf
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the candidate axis is tiled
+into VMEM-resident blocks with a 1-D grid via BlockSpec; the request block
+[B, F] is small and replicated into every grid step. Everything is
+element-wise/VPU work over [B, BLOCK_N] tiles — there is no contraction, so
+the MXU stays free for the linreg kernel. `interpret=True` always: the CPU
+PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT shapes (the rust runtime pads to these).
+BATCH = 8      # concurrent generic requests scored per call
+NCAND = 512    # candidate instance types (349-type catalog padded)
+FEATS = 3      # [vcpus, mem_gib, gpus]
+BLOCK_N = 128  # candidate tile: [BATCH, BLOCK_N] f32 out tile = 4 KiB VMEM
+
+# A finite stand-in for +inf: infeasible marker that survives argmin and
+# round-trips through HLO text cleanly. Plain float: jnp scalars would be
+# captured as pallas constants, which pallas_call rejects.
+INFEASIBLE = 3.0e38
+
+
+def _score_kernel(req_ref, cand_ref, price_ref, out_ref):
+    """One grid step: score all B requests against one candidate tile."""
+    req = req_ref[...]        # [B, F]
+    cand = cand_ref[...]      # [BLOCK_N, F]
+    price = price_ref[...]    # [BLOCK_N] (pre-normalized to [0, 1])
+    # feasibility: every feature demand satisfied
+    feas = jnp.all(cand[None, :, :] >= req[:, None, :], axis=-1)  # [B, Nb]
+    # over-provision waste, averaged over features
+    denom = jnp.maximum(cand, 1.0)[None, :, :]                    # [1, Nb, F]
+    waste = jnp.sum((cand[None, :, :] - req[:, None, :]) / denom, axis=-1) / FEATS
+    score = price[None, :] + waste
+    out_ref[...] = jnp.where(feas, score, INFEASIBLE)
+
+
+@partial(jax.jit, static_argnames=())
+def fleet_score(requests, candidates, prices_norm):
+    """Score matrix [B, N] for requests [B, F] against candidates [N, F].
+
+    `prices_norm` must already be divided by max price (the L2 wrapper in
+    model.py does this so the kernel stays a pure map).
+    """
+    b, f = requests.shape
+    n, f2 = candidates.shape
+    assert f == FEATS and f2 == FEATS, "feature dim mismatch"
+    assert n % BLOCK_N == 0, "candidate count must tile by BLOCK_N"
+    grid = (n // BLOCK_N,)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, f), lambda i: (0, 0)),          # requests: replicated
+            pl.BlockSpec((BLOCK_N, f), lambda i: (i, 0)),    # candidate tile
+            pl.BlockSpec((BLOCK_N,), lambda i: (i,)),        # price tile
+        ],
+        out_specs=pl.BlockSpec((b, BLOCK_N), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(requests, candidates, prices_norm)

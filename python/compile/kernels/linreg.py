@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: weighted normal-equations accumulation for the paper's
+§6 regression models.
+
+The perf model fits `t = beta * n + beta0` for the comms and add-update
+components (Table 4). Fitting is X'WX / X'Wy accumulation over the sample
+matrix — a contraction, i.e. MXU work on real TPUs. The sample axis is tiled
+by a 1-D grid; each step accumulates one tile's partial products into the
+output refs (output blocks are grid-invariant, so they act as accumulators).
+
+Weights `w` double as a padding mask: the rust runtime pads samples to
+`NSAMP` with w = 0 rows, which contribute nothing to either product.
+
+TPU notes: tiles are [BLOCK_S, K] with K=2; on a real TPU one would pad K to
+the 128-lane register width and let the MXU contract [BLOCK_S, 128] tiles —
+the structure below keeps that retuning a BlockSpec change. interpret=True
+for CPU-PJRT execution.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Fixed AOT shapes.
+NSAMP = 1024   # padded sample count
+K = 2          # design-matrix columns: [1, x]
+BLOCK_S = 256  # samples per grid step
+
+
+def _xtx_kernel(x_ref, y_ref, w_ref, xtx_ref, xty_ref):
+    """Accumulate one sample tile's X'WX and X'Wy."""
+    step = pl.program_id(0)
+    x = x_ref[...]            # [BLOCK_S, K]
+    y = y_ref[...]            # [BLOCK_S]
+    w = w_ref[...]            # [BLOCK_S]
+    xw = x * w[:, None]       # weighted rows
+    part_xtx = jnp.dot(xw.T, x)          # [K, K]  (MXU contraction on TPU)
+    part_xty = jnp.dot(xw.T, y)          # [K]
+
+    @pl.when(step == 0)
+    def _init():
+        xtx_ref[...] = part_xtx
+        xty_ref[...] = part_xty
+
+    @pl.when(step != 0)
+    def _accum():
+        xtx_ref[...] += part_xtx
+        xty_ref[...] += part_xty
+
+
+@partial(jax.jit, static_argnames=())
+def normal_eq(x, y, w):
+    """X'WX [K, K] and X'Wy [K] for design matrix x [S, K]."""
+    s, k = x.shape
+    assert s % BLOCK_S == 0, "sample count must tile by BLOCK_S"
+    grid = (s // BLOCK_S,)
+    return pl.pallas_call(
+        _xtx_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_S, k), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_S,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_S,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, k), lambda i: (0, 0)),  # grid-invariant: accumulator
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, k), jnp.float32),
+            jax.ShapeDtypeStruct((k,), jnp.float32),
+        ],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y, w)

@@ -1,0 +1,37 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These are the ground truth the kernels are pytest/hypothesis-verified
+against (`python/tests/test_kernels.py`), and they mirror the rust-native
+implementations (`NativeSelector::select`, `stats::ols`) so all three layers
+agree on the same math.
+"""
+
+import jax.numpy as jnp
+
+INFEASIBLE = 3.0e38
+FEATS = 3
+
+
+def fleet_score_ref(requests, candidates, prices_norm):
+    """Reference score matrix [B, N]; see fleet_score.py for the math."""
+    req = requests[:, None, :]        # [B, 1, F]
+    cand = candidates[None, :, :]     # [1, N, F]
+    feas = jnp.all(cand >= req, axis=-1)
+    waste = jnp.sum((cand - req) / jnp.maximum(cand, 1.0), axis=-1) / FEATS
+    score = prices_norm[None, :] + waste
+    return jnp.where(feas, score, INFEASIBLE)
+
+
+def normal_eq_ref(x, y, w):
+    """Reference weighted normal equations: X'WX, X'Wy."""
+    xw = x * w[:, None]
+    return xw.T @ x, xw.T @ y
+
+
+def linreg_fit_ref(x, y, w):
+    """Closed-form weighted OLS solve, matching model.linreg_fit."""
+    import numpy as np
+
+    design = np.stack([np.ones_like(x), x], axis=-1)
+    xtx, xty = normal_eq_ref(design, y, w)
+    return np.linalg.solve(np.asarray(xtx), np.asarray(xty))

@@ -1,0 +1,90 @@
+"""L2 JAX compute graphs, calling the L1 Pallas kernels.
+
+Three functions are AOT-lowered (aot.py) to HLO text and executed from the
+rust coordinator via PJRT — Python never runs on the request path:
+
+- ``fleet_select``  : score candidate instance types for a batch of generic
+                      resource requests and pick per-request winners
+                      (drives `external::ec2` fleet decisions).
+- ``linreg_fit``    : weighted simple linear regression via the
+                      normal-equations kernel (fits the paper's §6
+                      comms / add-update component models).
+- ``linreg_predict``: evaluate a fitted model over a sample vector
+                      (model application, Eq. 6 components).
+
+Shapes are fixed for AOT (the rust side pads): see kernels/*.py constants.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.fleet_score import BATCH, FEATS, NCAND, fleet_score
+from compile.kernels.linreg import K, NSAMP, normal_eq
+
+INFEASIBLE_THRESHOLD = jnp.float32(1.0e38)
+
+
+def fleet_select(requests, candidates, prices):
+    """requests [B,3], candidates [N,3], prices [N] (raw, unnormalized)
+    -> (scores [B,N], best [B] int32, feasible [B] bool).
+
+    best[b] is the argmin-score candidate; feasible[b] is False when no
+    candidate satisfies the request (rust maps that to `None`).
+    """
+    prices_norm = prices / jnp.maximum(jnp.max(prices), 1.0)
+    scores = fleet_score(requests, candidates, prices_norm)
+    best = jnp.argmin(scores, axis=1).astype(jnp.int32)
+    # int32 rather than bool: the rust PJRT bridge decodes i32 natively
+    feasible = (jnp.min(scores, axis=1) < INFEASIBLE_THRESHOLD).astype(jnp.int32)
+    return scores, best, feasible
+
+
+def linreg_fit(x, y, w):
+    """x, y, w: [NSAMP] -> beta [2] = [intercept, slope].
+
+    Weighted OLS through the Pallas normal-equations kernel, solved in
+    closed form (2x2), with a ridge epsilon for degenerate (all-padding)
+    inputs.
+    """
+    design = jnp.stack([jnp.ones_like(x), x], axis=-1)  # [S, K]
+    xtx, xty = normal_eq(design, y, w)
+    # 2x2 solve: [[a, b], [b, d]]^-1 = 1/det [[d, -b], [-b, a]]
+    a, b, d = xtx[0, 0], xtx[0, 1], xtx[1, 1]
+    det = a * d - b * b
+    det = jnp.where(jnp.abs(det) < 1e-12, 1e-12, det)
+    beta0 = (d * xty[0] - b * xty[1]) / det
+    beta1 = (a * xty[1] - b * xty[0]) / det
+    return jnp.stack([beta0, beta1])
+
+
+def linreg_predict(x, beta):
+    """x [NSAMP], beta [2] -> predictions [NSAMP]."""
+    return beta[0] + beta[1] * x
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering of each exported function."""
+    f32 = jnp.float32
+    return {
+        "fleet_select": (
+            jax.ShapeDtypeStruct((BATCH, FEATS), f32),
+            jax.ShapeDtypeStruct((NCAND, FEATS), f32),
+            jax.ShapeDtypeStruct((NCAND,), f32),
+        ),
+        "linreg_fit": (
+            jax.ShapeDtypeStruct((NSAMP,), f32),
+            jax.ShapeDtypeStruct((NSAMP,), f32),
+            jax.ShapeDtypeStruct((NSAMP,), f32),
+        ),
+        "linreg_predict": (
+            jax.ShapeDtypeStruct((NSAMP,), f32),
+            jax.ShapeDtypeStruct((K,), f32),
+        ),
+    }
+
+
+EXPORTS = {
+    "fleet_select": fleet_select,
+    "linreg_fit": linreg_fit,
+    "linreg_predict": linreg_predict,
+}

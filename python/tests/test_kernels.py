@@ -1,0 +1,128 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracle.
+
+Hypothesis sweeps shapes and values; fixed cases pin the exact padded AOT
+shapes the rust runtime uses.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile.kernels.fleet_score import (
+    BATCH,
+    BLOCK_N,
+    FEATS,
+    INFEASIBLE,
+    NCAND,
+    fleet_score,
+)
+from compile.kernels.linreg import BLOCK_S, NSAMP, normal_eq
+from compile.kernels.ref import fleet_score_ref, linreg_fit_ref, normal_eq_ref
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+# ---------------------------------------------------------------------------
+# fleet_score
+# ---------------------------------------------------------------------------
+
+def _mk_fleet_inputs(rng, b, n):
+    requests = rng.uniform(0.0, 64.0, size=(b, FEATS)).astype(np.float32)
+    candidates = rng.uniform(0.5, 128.0, size=(n, FEATS)).astype(np.float32)
+    prices = rng.uniform(1.0, 1000.0, size=(n,)).astype(np.float32)
+    prices_norm = prices / prices.max()
+    return jnp.asarray(requests), jnp.asarray(candidates), jnp.asarray(prices_norm)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.sampled_from([1, 4, BATCH]),
+    blocks=st.integers(1, 4),
+)
+def test_fleet_score_matches_ref(seed, b, blocks):
+    rng = np.random.default_rng(seed)
+    req, cand, prices = _mk_fleet_inputs(rng, b, blocks * BLOCK_N)
+    got = fleet_score(req, cand, prices)
+    want = fleet_score_ref(req, cand, prices)
+    assert got.shape == (b, blocks * BLOCK_N)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_fleet_score_aot_shape():
+    rng = np.random.default_rng(0)
+    req, cand, prices = _mk_fleet_inputs(rng, BATCH, NCAND)
+    got = fleet_score(req, cand, prices)
+    assert got.shape == (BATCH, NCAND)
+    assert got.dtype == jnp.float32
+
+
+def test_fleet_score_infeasible_marked():
+    # candidate smaller than request in one feature -> INFEASIBLE
+    req = jnp.asarray([[4.0, 8.0, 1.0]] * BATCH, dtype=jnp.float32)
+    cand = jnp.zeros((BLOCK_N, FEATS), dtype=jnp.float32)
+    cand = cand.at[0].set(jnp.asarray([8.0, 16.0, 0.0]))  # no gpu
+    cand = cand.at[1].set(jnp.asarray([8.0, 16.0, 2.0]))  # feasible
+    prices = jnp.full((BLOCK_N,), 0.5, dtype=jnp.float32)
+    scores = fleet_score(req, cand, prices)
+    assert float(scores[0, 0]) == pytest.approx(float(INFEASIBLE))
+    assert float(scores[0, 1]) < 1.0e38
+
+
+def test_fleet_score_exact_fit_beats_oversize():
+    req = jnp.asarray([[2.0, 4.0, 0.0]] * BATCH, dtype=jnp.float32)
+    cand = jnp.tile(jnp.asarray([[128.0, 512.0, 8.0]], jnp.float32), (BLOCK_N, 1))
+    cand = cand.at[7].set(jnp.asarray([2.0, 4.0, 0.0]))  # exact fit
+    prices = jnp.full((BLOCK_N,), 0.5, dtype=jnp.float32)
+    scores = fleet_score(req, cand, prices)
+    assert int(jnp.argmin(scores[0])) == 7
+
+
+# ---------------------------------------------------------------------------
+# normal_eq / linreg
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1), blocks=st.integers(1, 4))
+def test_normal_eq_matches_ref(seed, blocks):
+    rng = np.random.default_rng(seed)
+    s = blocks * BLOCK_S
+    x = jnp.asarray(rng.uniform(-2.0, 2.0, size=(s, 2)).astype(np.float32))
+    y = jnp.asarray(rng.uniform(-1.0, 1.0, size=(s,)).astype(np.float32))
+    w = jnp.asarray((rng.uniform(size=(s,)) > 0.3).astype(np.float32))
+    xtx, xty = normal_eq(x, y, w)
+    rxtx, rxty = normal_eq_ref(x, y, w)
+    assert_allclose(np.asarray(xtx), np.asarray(rxtx), rtol=2e-4, atol=2e-3)
+    assert_allclose(np.asarray(xty), np.asarray(rxty), rtol=2e-4, atol=2e-3)
+
+
+def test_padding_rows_are_inert():
+    rng = np.random.default_rng(7)
+    s = NSAMP
+    x = rng.uniform(0.0, 100.0, size=(s,)).astype(np.float32)
+    y = (2.5 * x + 1.0).astype(np.float32)
+    w = np.ones(s, dtype=np.float32)
+    w[s // 2 :] = 0.0  # half the rows are padding
+    x[s // 2 :] = 9999.0  # garbage in padded region
+    y[s // 2 :] = -9999.0
+    design = jnp.stack([jnp.ones(s, jnp.float32), jnp.asarray(x)], axis=-1)
+    xtx, xty = normal_eq(design, jnp.asarray(y), jnp.asarray(w))
+    # fit from the kernel outputs must recover the clean line
+    beta = np.linalg.solve(np.asarray(xtx, np.float64), np.asarray(xty, np.float64))
+    assert beta[0] == pytest.approx(1.0, rel=1e-2, abs=2e-2)
+    assert beta[1] == pytest.approx(2.5, rel=1e-3)
+
+
+def test_linreg_fit_ref_consistency():
+    rng = np.random.default_rng(3)
+    x = rng.uniform(0, 10, size=64).astype(np.float32)
+    y = (0.5 * x - 2.0).astype(np.float32)
+    w = np.ones(64, dtype=np.float32)
+    beta = linreg_fit_ref(x, y, w)
+    assert beta[0] == pytest.approx(-2.0, abs=1e-4)
+    assert beta[1] == pytest.approx(0.5, abs=1e-5)

@@ -1,0 +1,89 @@
+"""L2 model tests: fleet_select semantics and linreg fit/predict, at the
+exact padded AOT shapes the rust runtime uses."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.fleet_score import BATCH, FEATS, NCAND
+from compile.kernels.linreg import NSAMP
+from compile.kernels.ref import linreg_fit_ref
+
+
+def _catalog():
+    """The rust EC2_CATALOG (Table 3), mirrored for cross-layer agreement."""
+    rows = [
+        ("t2.micro", 1, 1, 0, 116),
+        ("t2.small", 1, 2, 0, 230),
+        ("t2.medium", 2, 4, 0, 464),
+        ("t2.large", 2, 8, 0, 928),
+        ("t2.xlarge", 4, 16, 0, 1856),
+        ("t2.2xlarge", 8, 32, 0, 3712),
+        ("g2.2xlarge", 8, 15, 1, 6500),
+        ("g3.4xlarge", 16, 128, 4, 11400),
+    ]
+    feats = np.zeros((NCAND, FEATS), np.float32)
+    prices = np.full((NCAND,), 1e12, np.float32)  # padding: never wins
+    for i, (_, cpu, mem, gpu, price) in enumerate(rows):
+        feats[i] = [cpu, mem, gpu]
+        prices[i] = price
+    return rows, jnp.asarray(feats), jnp.asarray(prices)
+
+
+def test_fleet_select_picks_cheapest_feasible():
+    rows, cands, prices = _catalog()
+    req = np.zeros((BATCH, FEATS), np.float32)
+    req[0] = [2, 4, 0]   # exact t2.medium
+    req[1] = [1, 1, 1]   # needs a gpu -> g2.2xlarge
+    req[2] = [64, 0, 0]  # infeasible
+    _, best, feasible = model.fleet_select(jnp.asarray(req), cands, prices)
+    assert rows[int(best[0])][0] == "t2.medium"
+    assert rows[int(best[1])][0] == "g2.2xlarge"
+    assert int(feasible[2]) == 0
+    assert int(feasible[0]) == 1 and int(feasible[1]) == 1
+    assert best.dtype == jnp.int32 and feasible.dtype == jnp.int32
+
+
+def test_fleet_select_scores_shape():
+    _, cands, prices = _catalog()
+    req = jnp.zeros((BATCH, FEATS), jnp.float32)
+    scores, best, feasible = model.fleet_select(req, cands, prices)
+    assert scores.shape == (BATCH, NCAND)
+    assert best.shape == (BATCH,)
+    assert feasible.shape == (BATCH,)
+
+
+def test_linreg_fit_recovers_line():
+    rng = np.random.default_rng(1)
+    x = np.zeros(NSAMP, np.float32)
+    y = np.zeros(NSAMP, np.float32)
+    w = np.zeros(NSAMP, np.float32)
+    n = 700
+    x[:n] = rng.uniform(30, 4500, n).astype(np.float32)
+    y[:n] = 9.0824e-6 * x[:n] + 6.3196e-4  # the paper's Table 4 intra model
+    w[:n] = 1.0
+    beta = model.linreg_fit(jnp.asarray(x), jnp.asarray(y), jnp.asarray(w))
+    assert float(beta[0]) == pytest.approx(6.3196e-4, rel=5e-2)
+    assert float(beta[1]) == pytest.approx(9.0824e-6, rel=1e-2)
+    # agrees with the numpy oracle on the same (unpadded) data
+    ref = linreg_fit_ref(x[:n], y[:n], np.ones(n, np.float32))
+    assert_allclose(np.asarray(beta), ref, rtol=2e-2, atol=1e-5)
+
+
+def test_linreg_predict_matches_formula():
+    x = jnp.arange(NSAMP, dtype=jnp.float32)
+    beta = jnp.asarray([1.5, -0.25], jnp.float32)
+    y = model.linreg_predict(x, beta)
+    assert_allclose(np.asarray(y), 1.5 - 0.25 * np.arange(NSAMP), rtol=1e-6)
+
+
+def test_example_args_cover_exports():
+    args = model.example_args()
+    assert set(args) == set(model.EXPORTS)
+    # every export traces at its declared shapes
+    import jax
+
+    for name, fn in model.EXPORTS.items():
+        jax.eval_shape(fn, *args[name])

@@ -1,0 +1,25 @@
+//! Bench E5/E6 (§5.3, Fig 2): EC2 instance creation times by type, Fleet
+//! dynamic binding, and the static-configuration blowup comparison at the
+//! paper's full 300×77×128 scale.
+
+use fluxion::experiments::{ec2, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig::default();
+    // Fig 2: 8 types × {1,2,4,8} × 20 reps = 640 requests
+    let r = ec2::run_creation(&cfg, 20);
+    println!("{}", r.figure2_table());
+    println!("total requests: {}", r.requests_run);
+
+    // Fleet + static comparison at paper scale
+    let f = ec2::run_fleet(&cfg, 10, 10, 300, 77, 128);
+    println!("{}", f.table());
+
+    // ablation: dynamic graph cost scales with use, not catalog size
+    for nodes in [10usize, 100, 1000] {
+        println!(
+            "dynamic add of {nodes} cloud nodes: {:.6}s",
+            ec2::dynamic_equivalent_cost(nodes)
+        );
+    }
+}

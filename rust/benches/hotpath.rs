@@ -1,0 +1,110 @@
+//! §Perf harness: micro-benchmarks of the L3 hot paths that make up a
+//! MatchGrow — match, JGF encode/decode, JSON dump/parse, AddSubgraph +
+//! UpdateMetadata, and a full RPC round trip. Used by the performance pass
+//! (EXPERIMENTS.md §Perf) to measure before/after each optimization.
+
+use fluxion::jobspec::table1_jobspec;
+use fluxion::resource::builder::{table2_graph, UidGen};
+use fluxion::resource::jgf::Jgf;
+use fluxion::sched::{PruneConfig, SchedInstance};
+use fluxion::util::bench::{print_row, run_simple, run_timed};
+use fluxion::rpc::transport::Conn;
+use fluxion::util::json::Json;
+
+fn main() {
+    let mut uids = UidGen::new();
+    let inst = SchedInstance::new(table2_graph(0, &mut uids), PruneConfig::default());
+    let t1 = table1_jobspec("T1");
+    let t7 = table1_jobspec("T7");
+
+    // 1. match: T1 (64 nodes) and T7 (1 node) on the 8961-unit L0 graph
+    let s = run_simple(5, 200, || inst.match_only(&t1).unwrap().selection.len());
+    print_row("match/T1@L0", &s);
+    let s = run_simple(5, 200, || inst.match_only(&t7).unwrap().selection.len());
+    print_row("match/T7@L0", &s);
+
+    // null match on a fully-allocated graph
+    let mut full = SchedInstance::new(table2_graph(1, &mut UidGen::new()), PruneConfig::default());
+    let all = full
+        .match_allocate(&fluxion::jobspec::JobSpec::nodes_sockets_cores(8, 2, 16))
+        .unwrap();
+    let _ = all;
+    let s = run_simple(5, 200, || full.match_only(&t7).is_err());
+    print_row("match/null@L1", &s);
+
+    // 1b. ablation: the ALL:core pruning filter on vs off (DESIGN.md calls
+    // this design choice out; the paper's §5.2.3 match behavior depends on
+    // it). "off" = no tracked types: full traversal on null matches.
+    // (measured on the fully-allocated 128-node L0 graph, where the
+    // difference is visible: pruning stops at node vertices, no-pruning
+    // walks all 4481)
+    let mut unpruned = SchedInstance::new(
+        table2_graph(0, &mut UidGen::new()),
+        fluxion::sched::PruneConfig { tracked: vec![] },
+    );
+    let mut pruned =
+        SchedInstance::new(table2_graph(0, &mut UidGen::new()), PruneConfig::default());
+    // allocate every socket+core (nodes stay traversable scope), then ask
+    // for one core: pruning rejects each node at its aggregate; without
+    // the filter the matcher inspects every core vertex
+    let sockets = fluxion::jobspec::JobSpec::nodes_sockets_cores(0, 256, 16);
+    unpruned.match_allocate(&sockets).unwrap();
+    pruned.match_allocate(&sockets).unwrap();
+    let one_core = fluxion::jobspec::JobSpec::new(vec![
+        fluxion::jobspec::ResourceReq::new("core", 1),
+    ]);
+    let s = run_simple(5, 200, || unpruned.match_only(&one_core).is_err());
+    print_row("ablate/null_no_pruning@L0", &s);
+    let s = run_simple(5, 200, || pruned.match_only(&one_core).is_err());
+    print_row("ablate/null_with_pruning@L0", &s);
+
+    // 2. JGF encode of a T1-sized grant selection
+    let sel = inst.match_only(&t1).unwrap().selection;
+    let s = run_simple(5, 200, || Jgf::from_selection_closed(&inst.graph, &sel).nodes.len());
+    print_row("jgf/encode_T1", &s);
+
+    // 3. JSON dump + parse of the T1 grant document
+    let jgf = Jgf::from_selection_closed(&inst.graph, &sel);
+    let s = run_simple(5, 200, || jgf.dump().len());
+    print_row("json/dump_T1", &s);
+    let text = jgf.dump();
+    println!("  (T1 JGF wire size: {} bytes)", text.len());
+    let s = run_simple(5, 200, || Json::parse(&text).unwrap());
+    print_row("json/parse_T1", &s);
+    let s = run_simple(5, 200, || Jgf::parse(&text).unwrap().nodes.len());
+    print_row("jgf/parse_T1", &s);
+
+    // 4. AddSubgraph + UpdateMetadata of the T1 grant into a fresh child
+    let s = run_timed(
+        3,
+        100,
+        || {
+            SchedInstance::new(
+                fluxion::resource::builder::ClusterSpec::new("cluster", 2, 2, 16)
+                    .with_node_base(200)
+                    .build(&mut UidGen::starting_at(1 << 40)),
+                PruneConfig::default(),
+            )
+        },
+        |mut child| {
+            child.accept_grant(&jgf, None).unwrap();
+            child.graph.size()
+        },
+    );
+    print_row("grow/add_update_T1", &s);
+
+    // 5. full in-proc RPC round trip carrying the T1 grant
+    let payload = jgf.to_json();
+    let server = fluxion::rpc::transport::InProcServer::spawn(
+        fluxion::rpc::transport::handler(move |req: fluxion::rpc::Request| {
+            fluxion::rpc::Response::ok(req.id, payload.clone())
+        }),
+    );
+    let mut conn = server.connect();
+    let s = run_simple(5, 200, || {
+        conn.call(&fluxion::rpc::Request::new(1, "grant", Json::Null))
+            .unwrap()
+    });
+    print_row("rpc/inproc_T1_grant", &s);
+    server.shutdown();
+}

@@ -1,0 +1,14 @@
+//! Bench E7 (§5.4): KubeFlux ReplicaSet scheduling — MA for the first pod,
+//! MG for the scale-up to 100 pods on the 4343-vertex OpenShift graph.
+
+use fluxion::experiments::{kubeflux, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig {
+        iters: 10,
+        ..ExpConfig::default()
+    };
+    let r = kubeflux::run(&cfg, 100);
+    println!("{}", r.table());
+    println!("{}", r.recorder.table());
+}

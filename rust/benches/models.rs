@@ -1,0 +1,30 @@
+//! Bench E8/E9/E10 (§6): fit the component models from a fresh nested run
+//! (Table 4, Figs 3/4), apply Eq. 6 to the held-out GPU+memory request
+//! (Table 5), and validate the §6.3 bound. Uses the XLA linreg artifact
+//! when built (three-layer stack on the paper's own analysis).
+
+use fluxion::experiments::{models, nested, ExpConfig};
+use fluxion::perfmodel::FitBackend;
+
+fn main() {
+    let cfg = ExpConfig {
+        iters: 50,
+        ..ExpConfig::default()
+    };
+    let tests = nested::default_tests();
+    let data = nested::run(&cfg, &tests);
+    let backend = FitBackend::best();
+    println!("fit backend: {}\n", backend.name());
+    let model = models::fit_models(&data, &backend);
+    println!("E8 (Table 4, raw samples)\n{}", model.table4());
+    let robust = models::fit_models_median(&data, &backend);
+    println!(
+        "E8 (Table 4, per-size medians — robust to shared-machine noise)\n{}",
+        robust.table4()
+    );
+    println!("{}", models::figure34_table(&data, &model));
+    println!("{}", models::apply_model(&cfg, &model).table());
+    let (obs, bound, factor) = models::validate_bound(&data, "T7");
+    println!("E10 — observed total match {obs:.6}s <= bound {bound:.6}s (factor {factor:.3})");
+    println!("{}", models::bound_ablation());
+}

@@ -1,0 +1,27 @@
+//! Bench E2/E3/E4 (§5.2, Figs 1a/1b): nested MatchGrow across the
+//! five-level hierarchy for the Table 1 request sizes — communication,
+//! add+update, and null-match timing distributions per level.
+
+use fluxion::experiments::{nested, ExpConfig};
+
+fn main() {
+    let cfg = ExpConfig {
+        iters: 50,
+        ..ExpConfig::default()
+    };
+    let tests = nested::default_tests();
+    let r = nested::run(&cfg, &tests);
+    for t in &tests {
+        println!("{}", r.figure1_table(t));
+    }
+    println!("\nE4 (§5.2.3) — null-match time by level (T2)");
+    for level in 0..=4usize {
+        if let Some(s) = r.match_summary(level, "T2") {
+            println!(
+                "  L{level}: mean {:.6}s median {:.6}s (graph shrinks with depth)",
+                s.mean, s.median
+            );
+        }
+    }
+    println!("\nraw series:\n{}", r.recorder.table());
+}

@@ -1,0 +1,205 @@
+//! Bitmap-based baseline scheduler — the traditional resource model the
+//! paper argues against (§2.2, §5.3).
+//!
+//! "Slurm and PBS Pro base their resource data models on simplistic, rigid
+//! representation schemes such as bitmaps. A bitmap is a rigid
+//! representation of a set of homogeneous compute nodes and their states
+//! where each bit represents whether a node is allocated or free."
+//!
+//! This module implements that model faithfully — node-type partitions with
+//! word-packed free/allocated bitmaps and bitwise idle-node scans — plus the
+//! **static cloud configuration generator** that reproduces the paper's
+//! blowup: encoding 300 instance types × 77 availability zones × 128
+//! instances/type yields a 2,958,600-node partition that a static-config
+//! scheduler must enumerate up front, while the graph model binds the same
+//! resources dynamically per request.
+
+pub mod config;
+
+use std::collections::HashMap;
+
+/// A homogeneous node-type partition with a free bitmap.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub name: String,
+    pub cpus_per_node: u64,
+    pub mem_mib_per_node: u64,
+    pub nodes: usize,
+    /// Bit i set = node i is FREE. Word-packed, as real bitmap schedulers do.
+    free: Vec<u64>,
+}
+
+impl Partition {
+    pub fn new(name: &str, nodes: usize, cpus: u64, mem_mib: u64) -> Partition {
+        let words = nodes.div_ceil(64);
+        let mut free = vec![u64::MAX; words];
+        // clear the tail bits beyond `nodes`
+        let tail = nodes % 64;
+        if tail != 0 {
+            free[words - 1] = (1u64 << tail) - 1;
+        }
+        Partition {
+            name: name.to_string(),
+            cpus_per_node: cpus,
+            mem_mib_per_node: mem_mib,
+            nodes,
+            free,
+        }
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.free.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Find and claim `k` idle nodes with bitwise scans ("a few bitwise
+    /// operators to find idle nodes"). Returns their indices, or None
+    /// without claiming anything if fewer than `k` are free.
+    pub fn allocate(&mut self, k: usize) -> Option<Vec<usize>> {
+        if self.free_count() < k {
+            return None;
+        }
+        let mut picked = Vec::with_capacity(k);
+        'outer: for (wi, word) in self.free.iter_mut().enumerate() {
+            while *word != 0 {
+                let bit = word.trailing_zeros() as usize;
+                *word &= *word - 1; // clear lowest set bit
+                picked.push(wi * 64 + bit);
+                if picked.len() == k {
+                    break 'outer;
+                }
+            }
+        }
+        Some(picked)
+    }
+
+    /// Release nodes back to the pool.
+    pub fn release(&mut self, indices: &[usize]) {
+        for &i in indices {
+            assert!(i < self.nodes, "release out of range");
+            self.free[i / 64] |= 1u64 << (i % 64);
+        }
+    }
+
+    /// Memory footprint of the bitmap itself (bytes).
+    pub fn bitmap_bytes(&self) -> usize {
+        self.free.len() * 8
+    }
+}
+
+/// The bitmap scheduler: static partitions defined entirely up front.
+/// Adding a new node *type* requires regenerating the configuration and
+/// re-initializing — the rigidity the paper contrasts with graph editing.
+#[derive(Debug, Default)]
+pub struct BitmapScheduler {
+    pub partitions: Vec<Partition>,
+    index: HashMap<String, usize>,
+}
+
+impl BitmapScheduler {
+    pub fn new() -> BitmapScheduler {
+        BitmapScheduler::default()
+    }
+
+    pub fn add_partition(&mut self, p: Partition) {
+        self.index.insert(p.name.clone(), self.partitions.len());
+        self.partitions.push(p);
+    }
+
+    pub fn partition(&self, name: &str) -> Option<&Partition> {
+        self.index.get(name).map(|&i| &self.partitions[i])
+    }
+
+    pub fn partition_mut(&mut self, name: &str) -> Option<&mut Partition> {
+        let i = *self.index.get(name)?;
+        Some(&mut self.partitions[i])
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.partitions.iter().map(|p| p.nodes).sum()
+    }
+
+    /// Allocate `k` nodes with ≥ cpus/mem per node, scanning partitions in
+    /// definition order (first fit — Slurm's default without weights).
+    pub fn allocate(
+        &mut self,
+        k: usize,
+        min_cpus: u64,
+        min_mem_mib: u64,
+    ) -> Option<(String, Vec<usize>)> {
+        for p in &mut self.partitions {
+            if p.cpus_per_node >= min_cpus && p.mem_mib_per_node >= min_mem_mib {
+                if let Some(nodes) = p.allocate(k) {
+                    return Some((p.name.clone(), nodes));
+                }
+            }
+        }
+        None
+    }
+
+    /// Total bitmap memory (bytes) — what the static model costs even when
+    /// idle, before daemon state multiplies it.
+    pub fn bitmap_bytes(&self) -> usize {
+        self.partitions.iter().map(Partition::bitmap_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_partition_all_free() {
+        let p = Partition::new("batch", 100, 32, 64_000);
+        assert_eq!(p.free_count(), 100);
+        assert_eq!(p.bitmap_bytes(), 16); // 2 words
+    }
+
+    #[test]
+    fn allocate_release_roundtrip() {
+        let mut p = Partition::new("batch", 130, 32, 64_000);
+        let nodes = p.allocate(70).unwrap();
+        assert_eq!(nodes.len(), 70);
+        assert_eq!(p.free_count(), 60);
+        p.release(&nodes);
+        assert_eq!(p.free_count(), 130);
+    }
+
+    #[test]
+    fn over_allocation_fails_atomically() {
+        let mut p = Partition::new("batch", 10, 32, 64_000);
+        assert!(p.allocate(11).is_none());
+        assert_eq!(p.free_count(), 10); // nothing claimed
+        assert!(p.allocate(10).is_some());
+        assert!(p.allocate(1).is_none());
+    }
+
+    #[test]
+    fn tail_bits_not_allocatable() {
+        let mut p = Partition::new("batch", 65, 1, 1);
+        let nodes = p.allocate(65).unwrap();
+        assert!(nodes.iter().all(|&n| n < 65));
+        assert_eq!(p.free_count(), 0);
+    }
+
+    #[test]
+    fn scheduler_first_fit_by_constraints() {
+        let mut s = BitmapScheduler::new();
+        s.add_partition(Partition::new("small", 4, 2, 4_000));
+        s.add_partition(Partition::new("big", 4, 64, 512_000));
+        let (part, _) = s.allocate(1, 32, 0).unwrap();
+        assert_eq!(part, "big");
+        let (part, _) = s.allocate(1, 1, 0).unwrap();
+        assert_eq!(part, "small");
+        assert!(s.allocate(1, 128, 0).is_none());
+    }
+
+    #[test]
+    fn release_via_scheduler() {
+        let mut s = BitmapScheduler::new();
+        s.add_partition(Partition::new("p", 8, 4, 1000));
+        let (_, nodes) = s.allocate(8, 1, 1).unwrap();
+        assert!(s.allocate(1, 1, 1).is_none());
+        s.partition_mut("p").unwrap().release(&nodes);
+        assert!(s.allocate(1, 1, 1).is_some());
+    }
+}

@@ -1,0 +1,65 @@
+//! Experiment drivers: one module per paper table/figure (see DESIGN.md's
+//! experiment index). Each driver returns structured results *and* renders
+//! the paper-style table, and is callable from both the `repro` CLI and the
+//! cargo benches, so `cargo bench` regenerates every figure.
+
+pub mod e2e;
+pub mod ec2;
+pub mod kubeflux;
+pub mod models;
+pub mod nested;
+pub mod single_level;
+
+use crate::rpc::transport::Latency;
+
+/// Serializes timing-sensitive experiment tests: statistical assertions on
+/// measured latencies are unreliable when a dozen test threads contend for
+/// cores. Production code never takes this lock.
+#[cfg(test)]
+pub(crate) fn timing_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Shared experiment configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ExpConfig {
+    /// Repetitions per measured case (paper: 100).
+    pub iters: usize,
+    /// Simulated-provider time scale (1.0 = realistic EC2 seconds).
+    pub time_scale: f64,
+    /// Injected internode link latency for the L0↔L1 hop, calibrated so
+    /// the inter/intra regression regimes separate as in Table 4.
+    pub internode: Latency,
+}
+
+impl Default for ExpConfig {
+    fn default() -> ExpConfig {
+        ExpConfig {
+            iters: 30,
+            time_scale: 1e-3,
+            internode: Latency::of(1400, 60.0),
+        }
+    }
+}
+
+impl ExpConfig {
+    /// The paper's full repetition count (slower).
+    pub fn paper() -> ExpConfig {
+        ExpConfig {
+            iters: 100,
+            ..ExpConfig::default()
+        }
+    }
+
+    /// Fast smoke configuration for tests. The internode per-byte latency
+    /// is deliberately strong (150 ns/B) so the inter-vs-intra regression
+    /// split is detectable from only 5 iterations under test-runner load.
+    pub fn smoke() -> ExpConfig {
+        ExpConfig {
+            iters: 5,
+            time_scale: 1e-4,
+            internode: Latency::of(200, 150.0),
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! External resource providers (paper §3 "External API", §4 "EC2API").
+//!
+//! The provider abstraction lets the top-level scheduler burst to cloud
+//! resources; the EC2 simulator reproduces the paper's §5.3 experiments
+//! (instance catalog, creation-latency model, Fleet requests, availability
+//! zones) without AWS credentials — see DESIGN.md "Substitutions".
+
+pub mod ec2;
+pub mod fleet;
+pub mod provider;
+
+pub use ec2::{Ec2Provider, Ec2SimConfig, InstanceType, EC2_CATALOG};
+pub use provider::{ExternalGrant, ExternalProvider, ProviderError};

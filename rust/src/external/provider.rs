@@ -1,0 +1,46 @@
+//! The External API abstraction (paper §3): "translate additive or
+//! subtractive transformations from the hierarchical scheduler into external
+//! resource provider functions ... To a scheduler instance, the external
+//! resource provider is functionally just another parent in the hierarchical
+//! scheduling."
+
+use crate::jobspec::JobSpec;
+use crate::resource::jgf::Jgf;
+
+/// Outcome of an external resource request.
+#[derive(Debug, Clone)]
+pub struct ExternalGrant {
+    /// The provider-selected resources as a JGF subgraph ready to splice
+    /// into the requester's graph.
+    pub subgraph: Jgf,
+    /// Provider-side instance handles (for later release).
+    pub instance_ids: Vec<String>,
+    /// Seconds the provider took to create the resources (the dominant cost
+    /// in §5.3's measurements).
+    pub creation_s: f64,
+    /// Seconds spent translating the provider response into JGF (the
+    /// ~1.6% overhead the paper reports).
+    pub encode_s: f64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ProviderError {
+    #[error("provider cannot satisfy request: {0}")]
+    Unsatisfiable(String),
+    #[error("provider API error: {0}")]
+    Api(String),
+}
+
+/// An external resource provider. Implementations: [`crate::external::ec2`]
+/// (simulated AWS EC2 + EC2 Fleet).
+pub trait ExternalProvider: Send {
+    fn name(&self) -> &str;
+
+    /// Translate a jobspec into provider calls, create the resources, and
+    /// return them as a subgraph (the `ExternalAPI(jobSpec)` step in
+    /// Algorithm 1).
+    fn request(&mut self, spec: &JobSpec) -> Result<ExternalGrant, ProviderError>;
+
+    /// Release previously created instances (subtractive transformation).
+    fn release(&mut self, instance_ids: &[String]) -> Result<(), ProviderError>;
+}

@@ -1,0 +1,635 @@
+//! Fully hierarchical scheduling: the paper's central runtime.
+//!
+//! A hierarchy is a chain of scheduler instances (`L0` at the top), each
+//! holding a resource graph that is a subgraph of its parent's
+//! (`G_c ⊆ G_p`, §3). Children boot by issuing a `MatchAllocate` to their
+//! parent and instantiating their graph from the returned JGF — "each
+//! instance initializes its resource graph with only those resources within
+//! its purview".
+//!
+//! [`Hierarchy::grow_from_leaf`] implements Algorithm 1's bottom-up /
+//! top-down `MatchGrow`: the leaf tries a local match; on failure the
+//! request ascends parent links (RPC) until a level matches (or the
+//! top-level consults its [`ExternalProvider`]); the granted subgraph then
+//! descends, each level splicing it via `AddSubgraph` + `UpdateMetadata`
+//! and handing the new vertices to the child's allocation.
+//!
+//! Transports model the paper's testbed: L1↔L0 crosses nodes (TCP with
+//! injected IPoIB-like latency); deeper pairs share a node (in-proc).
+
+pub mod report;
+
+use std::sync::{Arc, Mutex};
+
+use crate::external::provider::ExternalProvider;
+use crate::jobspec::JobSpec;
+use crate::resource::graph::JobId;
+use crate::resource::jgf::Jgf;
+use crate::resource::ResourceGraph;
+use crate::rpc::transport::{
+    handler, Conn, InProcServer, Latency, TcpConn, TcpServer,
+};
+use crate::rpc::{Request, Response};
+use crate::sched::{PruneConfig, SchedInstance};
+use crate::util::json::Json;
+use crate::util::metrics::Timer;
+
+pub use report::{GrowReport, LevelTiming};
+
+/// How a level talks to its parent.
+#[derive(Debug, Clone, Copy)]
+pub enum LinkKind {
+    /// Same-node parent (paper's levels 2–4): in-process channel.
+    InProc,
+    /// Cross-node parent (paper's level 1 → level 0): TCP + latency.
+    Tcp(Latency),
+}
+
+/// Specification of one level below the root: how many nodes it requests
+/// from its parent at boot, and the link to the parent.
+#[derive(Debug, Clone, Copy)]
+pub struct LevelSpec {
+    pub boot_nodes: u64,
+    pub link: LinkKind,
+}
+
+/// The paper's §5.2 testbed: Table 2 levels L1..L4 carved from a Table 2 L0
+/// graph; L1 is remote (internode), deeper levels local.
+pub fn paper_levels(internode: Latency) -> Vec<LevelSpec> {
+    vec![
+        LevelSpec {
+            boot_nodes: 8,
+            link: LinkKind::Tcp(internode),
+        },
+        LevelSpec {
+            boot_nodes: 4,
+            link: LinkKind::InProc,
+        },
+        LevelSpec {
+            boot_nodes: 2,
+            link: LinkKind::InProc,
+        },
+        LevelSpec {
+            boot_nodes: 1,
+            link: LinkKind::InProc,
+        },
+    ]
+}
+
+/// Mutable state of one hierarchy node.
+struct NodeState {
+    level: usize,
+    inst: SchedInstance,
+    /// Connection to the parent (None at L0).
+    parent: Option<Box<dyn Conn>>,
+    /// Parent-side job id representing THIS node's child instance: grants
+    /// descending through this node are charged to that job.
+    child_job: Option<JobId>,
+    /// The leaf's own running job that grows.
+    own_job: Option<JobId>,
+    /// External provider consulted when the local match fails. At the top
+    /// level this is Algorithm 1 lines 23–27; at a *nested* level it is the
+    /// paper's **external resource specialization** (§3): "external
+    /// resources E_i are managed by a first-level allocation G_i
+    /// independent of the top-level scheduler" — the additive transform is
+    /// allowed to invalidate the supergraph inclusion sequence, so burst
+    /// resources never ascend past this node.
+    external: Option<Box<dyn ExternalProvider>>,
+    /// Snapshot for experiment reinitialization.
+    snapshot: Option<(ResourceGraph, crate::sched::AllocTable)>,
+    /// Attach-root paths of subgraphs this node *dynamically added* (grants
+    /// that descended through it). A shrink deletes vertices at these
+    /// levels; at the owner level (which matched from its own graph) it
+    /// only frees the allocation — physical resources are not deleted.
+    added_roots: std::collections::HashSet<String>,
+    /// Burst subgraphs this node obtained from ITS provider: attach-root
+    /// path -> provider instance ids. A shrink that reaches one of these
+    /// roots releases the instances here and stops ascending (the
+    /// supergraph never contained them — per-user specialization, §3).
+    cloud_grants: Vec<(String, Vec<String>)>,
+}
+
+impl NodeState {
+    /// The match-or-escalate core shared by the RPC handler and the leaf
+    /// driver. Returns the granted subgraph plus per-level timing entries
+    /// accumulated top-down.
+    fn match_grow(&mut self, spec: &JobSpec) -> Result<(Jgf, Vec<LevelTiming>), String> {
+        // 1. local match attempt
+        let t = Timer::start();
+        let local = self.inst.match_only(spec);
+        let match_s = t.elapsed_secs();
+        match local {
+            Ok(m) => {
+                // matched locally: allocate to the child's job (or a fresh
+                // one at the top when no child asked — defensive default).
+                // Closed form: missing interior ancestors ride along so a
+                // below-node-level grant (T8) can attach anywhere downstream.
+                let subgraph = Jgf::from_selection_closed(&self.inst.graph, &m.selection);
+                let tu = Timer::start();
+                match self.child_job {
+                    Some(job) => {
+                        self.inst
+                            .allocs
+                            .grow(&mut self.inst.graph, &self.inst.prune, job, m.selection)
+                            .map_err(|e| e.to_string())?;
+                    }
+                    None => {
+                        self.inst
+                            .allocs
+                            .allocate(&mut self.inst.graph, &self.inst.prune, m.selection)
+                            .map_err(|e| e.to_string())?;
+                    }
+                }
+                let upd_s = tu.elapsed_secs();
+                let timing = LevelTiming {
+                    level: self.level,
+                    match_s,
+                    match_ok: true,
+                    comms_s: 0.0,
+                    add_upd_s: upd_s,
+                    visited: m.visited,
+                };
+                Ok((subgraph, vec![timing]))
+            }
+            Err(fail) => {
+                let visited = match &fail {
+                    crate::sched::MatchFail::NoMatch { visited } => *visited,
+                };
+                // 2. escalate: a specialized provider at this node wins
+                //    over the parent (per-user specialization, §3);
+                //    otherwise ascend; the top level falls back to its
+                //    site provider. "To a scheduler instance, the external
+                //    resource provider is functionally just another
+                //    parent."
+                let (jgf, upper_levels, comms_s) = match (&mut self.parent, &mut self.external) {
+                    (_, Some(provider)) => {
+                        let tc = Timer::start();
+                        let grant = provider.request(spec).map_err(|e| e.to_string())?;
+                        // remember which attach roots came from the cloud,
+                        // so a later shrink releases the instances here
+                        let roots = attach_roots(&grant.subgraph);
+                        self.cloud_grants
+                            .push((roots.join(","), grant.instance_ids.clone()));
+                        (grant.subgraph, Vec::new(), tc.elapsed_secs())
+                    }
+                    (Some(conn), _) => {
+                        let tc = Timer::start();
+                        let resp = conn
+                            .call(&Request::new(
+                                self.level as u64,
+                                "matchgrow",
+                                spec.to_json(),
+                            ))
+                            .map_err(|e| e.to_string())?;
+                        let rtt = tc.elapsed_secs();
+                        let doc = resp.result?;
+                        let jgf = Jgf::from_json(
+                            doc.get("subgraph").ok_or("response missing subgraph")?,
+                        )
+                        .map_err(|e| e.to_string())?;
+                        let levels = report::levels_from_json(
+                            doc.get("levels").ok_or("response missing levels")?,
+                        )?;
+                        // pure inter-level communication time: the round
+                        // trip minus the time the ancestors spent working
+                        // (they escalate recursively, so the raw RTT of a
+                        // deep level contains every upper level's match/
+                        // comms/add work — the paper's Fig 1a measures the
+                        // link, not the recursion)
+                        let upper: f64 = levels.iter().map(LevelTiming::total).sum();
+                        let comms_s = (rtt - upper).max(0.0);
+                        (jgf, levels, comms_s)
+                    }
+                    (None, None) => {
+                        return Err("top level: no resources and no external provider".into())
+                    }
+                };
+                // 3. top-down: splice the grant into our graph, charge it to
+                //    the child's job (it passes through to the requester)
+                let ta = Timer::start();
+                let report = self
+                    .inst
+                    .accept_grant(&jgf, self.child_job)
+                    .map_err(|e| e.to_string())?;
+                let add_upd_s = ta.elapsed_secs();
+                for r in attach_roots(&jgf) {
+                    self.added_roots.insert(r);
+                }
+                let _ = report;
+                let mut all = upper_levels;
+                all.push(LevelTiming {
+                    level: self.level,
+                    match_s,
+                    match_ok: false,
+                    comms_s,
+                    add_upd_s,
+                    visited,
+                });
+                Ok((jgf, all))
+            }
+        }
+    }
+}
+
+impl NodeState {
+    /// The subtractive transformation at this level: release + detach the
+    /// subtree, then ascend — unless the subtree is a cloud grant obtained
+    /// through this node's own provider, in which case the instances are
+    /// released here and the shrink stops (the supergraph never saw them).
+    fn shrink_return(&mut self, path: &str) -> Result<usize, String> {
+        // cloud-specialized grant? delete, release instances, stop — the
+        // supergraph never contained E_i
+        if let Some(pos) = self
+            .cloud_grants
+            .iter()
+            .position(|(roots, _)| roots.split(',').any(|r| r == path))
+        {
+            let removed = self.inst.release_subtree(path).map_err(|e| e.to_string())?;
+            self.added_roots.remove(path);
+            let (_, ids) = self.cloud_grants.remove(pos);
+            if let Some(provider) = &mut self.external {
+                provider.release(&ids).map_err(|e| e.to_string())?;
+            }
+            return Ok(removed);
+        }
+        if self.added_roots.remove(path) {
+            // this level spliced the subgraph in dynamically: delete it and
+            // keep ascending (bottom-up subtractive transformation)
+            let removed = self.inst.release_subtree(path).map_err(|e| e.to_string())?;
+            if let Some(conn) = &mut self.parent {
+                let resp = conn
+                    .call(&Request::new(
+                        self.level as u64,
+                        "shrinkreturn",
+                        Json::obj().with("path", Json::from(path)),
+                    ))
+                    .map_err(|e| e.to_string())?;
+                resp.result?;
+            }
+            Ok(removed)
+        } else {
+            // owner level: the vertices are part of this graph's physical
+            // inventory — free the child's allocation, keep the vertices
+            self.inst
+                .free_allocations_in(path)
+                .map_err(|e| e.to_string())
+        }
+    }
+}
+
+/// Attach-root paths of a JGF document (nodes whose parent path is not in
+/// the document).
+fn attach_roots(jgf: &Jgf) -> Vec<String> {
+    jgf.nodes
+        .iter()
+        .filter(|n| {
+            n.parent_path()
+                .map(|pp| !jgf.nodes.iter().any(|m| m.path == pp))
+                .unwrap_or(true)
+        })
+        .map(|n| n.path.clone())
+        .collect()
+}
+
+enum ServerHandle {
+    InProc(InProcServer),
+    Tcp(TcpServer),
+}
+
+/// A built hierarchy: level 0 first. All levels run in this process; links
+/// between them are real RPC transports per their [`LevelSpec`].
+pub struct Hierarchy {
+    nodes: Vec<Arc<Mutex<NodeState>>>,
+    servers: Vec<ServerHandle>,
+}
+
+impl Hierarchy {
+    /// Build a hierarchy from a root graph and per-level boot specs.
+    /// Each level requests `boot_nodes` full nodes (2 sockets × 16 cores,
+    /// the Table 2 shape) from its parent.
+    pub fn build(root_graph: ResourceGraph, levels: &[LevelSpec]) -> Result<Hierarchy, String> {
+        Self::build_with_external(root_graph, levels, None)
+    }
+
+    /// Like [`Hierarchy::build`] but giving the top level an external
+    /// provider for bursting.
+    pub fn build_with_external(
+        root_graph: ResourceGraph,
+        levels: &[LevelSpec],
+        external: Option<Box<dyn ExternalProvider>>,
+    ) -> Result<Hierarchy, String> {
+        let mut nodes = Vec::new();
+        let mut servers = Vec::new();
+        let root = Arc::new(Mutex::new(NodeState {
+            level: 0,
+            inst: SchedInstance::new(root_graph, PruneConfig::default()),
+            parent: None,
+            child_job: None,
+            own_job: None,
+            external,
+            snapshot: None,
+            added_roots: std::collections::HashSet::new(),
+            cloud_grants: Vec::new(),
+        }));
+        nodes.push(root);
+
+        for (i, spec) in levels.iter().enumerate() {
+            let level = i + 1;
+            let parent = nodes[i].clone();
+            // 1. boot allocation from the parent (direct call: boot is not
+            //    part of any measured path)
+            let boot_spec = JobSpec::nodes_sockets_cores(spec.boot_nodes, 2, 16);
+            let grant = {
+                let mut p = parent.lock().unwrap();
+                let out = p.inst.match_allocate(&boot_spec).map_err(|e| {
+                    format!("level {level} boot: parent cannot grant {} nodes: {e}", spec.boot_nodes)
+                })?;
+                p.child_job = Some(out.job);
+                out.subgraph
+            };
+            // 2. serve the parent over the requested transport
+            let conn: Box<dyn Conn> = match spec.link {
+                LinkKind::InProc => {
+                    let h = node_handler(parent.clone());
+                    let server = InProcServer::spawn(h);
+                    let conn = server.connect();
+                    servers.push(ServerHandle::InProc(server));
+                    Box::new(conn)
+                }
+                LinkKind::Tcp(latency) => {
+                    let h = node_handler(parent.clone());
+                    let server = TcpServer::spawn(h).map_err(|e| e.to_string())?;
+                    let conn =
+                        TcpConn::connect(server.addr, latency).map_err(|e| e.to_string())?;
+                    servers.push(ServerHandle::Tcp(server));
+                    Box::new(conn)
+                }
+            };
+            // 3. boot the child instance from the grant
+            let inst =
+                SchedInstance::from_jgf(&grant, PruneConfig::default()).map_err(|e| e.to_string())?;
+            nodes.push(Arc::new(Mutex::new(NodeState {
+                level,
+                inst,
+                parent: Some(conn),
+                child_job: None,
+                own_job: None,
+                external: None,
+                snapshot: None,
+                added_roots: std::collections::HashSet::new(),
+                cloud_grants: Vec::new(),
+            })));
+        }
+
+        let h = Hierarchy { nodes, servers };
+        h.saturate_and_snapshot()?;
+        Ok(h)
+    }
+
+    /// Fully allocate every level's remaining free resources to local jobs
+    /// ("Levels 1–4 are configured to be fully allocated", §5.2), give the
+    /// leaf a running job to grow, then snapshot all levels for `reset`.
+    fn saturate_and_snapshot(&self) -> Result<(), String> {
+        let leaf_idx = self.nodes.len() - 1;
+        for (i, node) in self.nodes.iter().enumerate() {
+            let mut n = node.lock().unwrap();
+            if i > 0 {
+                // node-level saturation, then socket-level (the leaf may
+                // have had a socket granted away), then core-level
+                for (nodes, sockets, cores) in
+                    [(1u64, 2u64, 16u64), (0, 1, 16)]
+                {
+                    loop {
+                        let spec = JobSpec::nodes_sockets_cores(nodes, sockets, cores);
+                        match n.inst.match_allocate(&spec) {
+                            Ok(out) => {
+                                if i == leaf_idx && n.own_job.is_none() {
+                                    n.own_job = Some(out.job);
+                                }
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                }
+            }
+            n.snapshot = Some((n.inst.graph.clone(), n.inst.allocs.clone()));
+        }
+        Ok(())
+    }
+
+    /// Issue a `MatchGrow` from the leaf (the paper's helper-script step).
+    pub fn grow_from_leaf(&self, spec: &JobSpec) -> Result<GrowReport, String> {
+        let leaf = self.nodes.last().expect("hierarchy has levels");
+        let mut n = leaf.lock().unwrap();
+        let own_job = n.own_job;
+        // ensure grants terminate at the leaf's own running job
+        n.child_job = own_job;
+        let total = Timer::start();
+        let (jgf, levels) = n.match_grow(spec)?;
+        let total_s = total.elapsed_secs();
+        Ok(GrowReport {
+            subgraph_size: jgf.size(),
+            roots: attach_roots(&jgf),
+            levels,
+            total_s,
+        })
+    }
+
+    /// Give a *nested* level its own external provider — the paper's
+    /// per-user external resource specialization (§3): that level's bursts
+    /// are managed independently of the top-level scheduler, and shrinks of
+    /// burst subgraphs stop at this level.
+    pub fn set_external(&self, level: usize, provider: Box<dyn ExternalProvider>) {
+        self.nodes[level].lock().unwrap().external = Some(provider);
+    }
+
+    /// Shrink: remove the subtree at `path` from the leaf and propagate the
+    /// subtractive transformation up the hierarchy (§3 — "a subtractive
+    /// transformation moves from the bottom up"). Returns the vertices
+    /// removed at the leaf.
+    pub fn shrink_from_leaf(&self, path: &str) -> Result<usize, String> {
+        let leaf = self.nodes.last().expect("hierarchy has levels");
+        let mut n = leaf.lock().unwrap();
+        n.shrink_return(path)
+    }
+
+    /// Restore every level to its post-boot snapshot (the "helper script
+    /// reinitializes the resource graphs at each level" step).
+    pub fn reset(&self) {
+        for node in &self.nodes {
+            let mut n = node.lock().unwrap();
+            if let Some((g, a)) = n.snapshot.clone() {
+                n.inst.graph = g;
+                n.inst.allocs = a;
+            }
+        }
+    }
+
+    /// Number of levels (root included).
+    pub fn depth(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Graph size (vertices + edges) at a level.
+    pub fn graph_size(&self, level: usize) -> usize {
+        self.nodes[level].lock().unwrap().inst.graph.size()
+    }
+
+    /// Run invariant checks on every level (tests / failure injection).
+    pub fn check_all(&self) -> Result<(), String> {
+        for node in &self.nodes {
+            node.lock().unwrap().inst.check()?;
+        }
+        Ok(())
+    }
+
+    /// Stop all servers. Called on drop as well.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        for node in &self.nodes {
+            if let Ok(mut n) = node.lock() {
+                n.parent = None; // drop client conns first
+            }
+        }
+        for s in self.servers.drain(..) {
+            match s {
+                ServerHandle::InProc(s) => s.shutdown(),
+                ServerHandle::Tcp(s) => s.shutdown(),
+            }
+        }
+    }
+}
+
+impl Drop for Hierarchy {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// RPC handler dispatching to a node's state.
+fn node_handler(node: Arc<Mutex<NodeState>>) -> crate::rpc::transport::Handler {
+    handler(move |req: Request| {
+        let mut n = node.lock().expect("node poisoned");
+        match req.method.as_str() {
+            "matchgrow" => {
+                let spec = match JobSpec::from_json(&req.params) {
+                    Ok(s) => s,
+                    Err(e) => return Response::err(req.id, format!("bad jobspec: {e}")),
+                };
+                match n.match_grow(&spec) {
+                    Ok((jgf, levels)) => Response::ok(
+                        req.id,
+                        Json::obj()
+                            .with("subgraph", jgf.to_json())
+                            .with("levels", report::levels_to_json(&levels)),
+                    ),
+                    Err(e) => Response::err(req.id, e),
+                }
+            }
+            "shrinkreturn" => {
+                let Some(path) = req.params.get("path").and_then(Json::as_str) else {
+                    return Response::err(req.id, "shrinkreturn missing 'path'");
+                };
+                match n.shrink_return(path) {
+                    Ok(removed) => Response::ok(req.id, Json::from(removed as u64)),
+                    Err(e) => Response::err(req.id, e),
+                }
+            }
+            other => Response::err(req.id, format!("unknown method '{other}'")),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobspec::table1_jobspec;
+    use crate::resource::builder::{table2_graph, UidGen};
+
+    fn paper_hierarchy() -> Hierarchy {
+        let root = table2_graph(0, &mut UidGen::new());
+        Hierarchy::build(root, &paper_levels(Latency::none())).unwrap()
+    }
+
+    #[test]
+    fn five_level_grow_t7() {
+        let h = paper_hierarchy();
+        assert_eq!(h.depth(), 5);
+        let report = h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
+        // all levels below L0 fail locally; L0 matches
+        assert_eq!(report.levels.len(), 5);
+        assert_eq!(report.levels[0].level, 0);
+        assert!(report.levels[0].match_ok);
+        for lt in &report.levels[1..] {
+            assert!(!lt.match_ok, "level {} should escalate", lt.level);
+            assert!(lt.comms_s > 0.0);
+            assert!(lt.add_upd_s > 0.0);
+        }
+        // T7 grant: 35 vertices + 35 edges
+        assert_eq!(report.subgraph_size, 70);
+        h.check_all().unwrap();
+        h.shutdown();
+    }
+
+    #[test]
+    fn leaf_graph_grows_by_subgraph_size() {
+        let h = paper_hierarchy();
+        let leaf = h.depth() - 1;
+        let before = h.graph_size(leaf);
+        let report = h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
+        assert_eq!(h.graph_size(leaf), before + report.subgraph_size);
+        h.shutdown();
+    }
+
+    #[test]
+    fn reset_restores_graphs() {
+        let h = paper_hierarchy();
+        let sizes: Vec<usize> = (0..h.depth()).map(|l| h.graph_size(l)).collect();
+        h.grow_from_leaf(&table1_jobspec("T6")).unwrap();
+        assert_ne!(h.graph_size(h.depth() - 1), sizes[h.depth() - 1]);
+        h.reset();
+        let after: Vec<usize> = (0..h.depth()).map(|l| h.graph_size(l)).collect();
+        assert_eq!(after, sizes);
+        // and grows work again after reset
+        h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
+        h.shutdown();
+    }
+
+    #[test]
+    fn grow_too_large_fails_cleanly() {
+        let h = paper_hierarchy();
+        // 200 nodes: larger than L0's 128-node cluster
+        let spec = JobSpec::nodes_sockets_cores(200, 2, 16);
+        assert!(h.grow_from_leaf(&spec).is_err());
+        h.check_all().unwrap();
+        h.shutdown();
+    }
+
+    #[test]
+    fn repeated_grows_accumulate_until_exhaustion() {
+        let h = paper_hierarchy();
+        // L0 has 128 - 8 = 120 free nodes after boot; T1 takes 64
+        assert!(h.grow_from_leaf(&table1_jobspec("T1")).is_ok());
+        assert!(h.grow_from_leaf(&table1_jobspec("T2")).is_ok()); // 32 more
+        assert!(h.grow_from_leaf(&table1_jobspec("T1")).is_err()); // 64 > 24
+        h.check_all().unwrap();
+        h.shutdown();
+    }
+
+    #[test]
+    fn two_level_minimal() {
+        let root = table2_graph(3, &mut UidGen::new()); // 2 nodes
+        let levels = [LevelSpec {
+            boot_nodes: 1,
+            link: LinkKind::InProc,
+        }];
+        let h = Hierarchy::build(root, &levels).unwrap();
+        let report = h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
+        assert_eq!(report.levels.len(), 2);
+        assert!(report.levels[0].match_ok);
+        h.shutdown();
+    }
+}

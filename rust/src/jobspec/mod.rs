@@ -1,0 +1,305 @@
+//! Jobspec: the hierarchical resource-request specification.
+//!
+//! A jobspec is "a resource match request specification" (§3) — the argument
+//! to both `MatchAllocate` and `MatchGrow`. It mirrors Fluxion's canonical
+//! jobspec: a tree of typed resource requests with counts, e.g.
+//!
+//! ```json
+//! {"version": 1, "resources": [
+//!   {"type": "node", "count": 4, "with": [
+//!     {"type": "socket", "count": 2, "with": [
+//!       {"type": "core", "count": 16}]}]}]}
+//! ```
+//!
+//! plus optional per-request attributes used by the external provider
+//! translation (e.g. `"zone": "us-east-1a"`, `"instance_type": "t2.micro"`).
+
+use crate::util::json::{Json, JsonError};
+
+/// One level of a hierarchical resource request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceReq {
+    /// Requested type name (kept as a string: requests may name types the
+    /// local graph has never seen — dynamic heterogeneity).
+    pub rtype: String,
+    pub count: u64,
+    /// Exclusive requests claim the matched vertex; non-exclusive requests
+    /// use it only as traversal scope (Fluxion's exclusivity flag — how
+    /// KubeFlux pods share nodes, §5.4).
+    pub exclusive: bool,
+    /// Nested requirements per matched vertex of this type.
+    pub with: Vec<ResourceReq>,
+    /// Free-form attribute constraints (provider hints, zone pinning, ...).
+    pub attrs: Vec<(String, String)>,
+}
+
+impl ResourceReq {
+    pub fn new(rtype: &str, count: u64) -> ResourceReq {
+        ResourceReq {
+            rtype: rtype.to_string(),
+            count,
+            exclusive: true,
+            with: Vec::new(),
+            attrs: Vec::new(),
+        }
+    }
+
+    /// Make this request non-exclusive (scope-only container).
+    pub fn shared(mut self) -> ResourceReq {
+        self.exclusive = false;
+        self
+    }
+
+    pub fn with_child(mut self, child: ResourceReq) -> ResourceReq {
+        self.with.push(child);
+        self
+    }
+
+    pub fn with_attr(mut self, key: &str, val: &str) -> ResourceReq {
+        self.attrs.push((key.to_string(), val.to_string()));
+        self
+    }
+
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Total vertices this request will select (itself × nested;
+    /// non-exclusive scopes contribute traversal only, not selection).
+    pub fn total_vertices(&self) -> u64 {
+        let inner: u64 = self.with.iter().map(ResourceReq::total_vertices).sum();
+        let own = if self.exclusive { 1 } else { 0 };
+        self.count * (own + inner)
+    }
+}
+
+/// A complete job request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    pub version: u64,
+    pub resources: Vec<ResourceReq>,
+    /// System-level attributes (duration, user, provider selection...).
+    pub attrs: Vec<(String, String)>,
+}
+
+impl JobSpec {
+    pub fn new(resources: Vec<ResourceReq>) -> JobSpec {
+        JobSpec {
+            version: 1,
+            resources,
+            attrs: Vec::new(),
+        }
+    }
+
+    pub fn with_attr(mut self, key: &str, val: &str) -> JobSpec {
+        self.attrs.push((key.to_string(), val.to_string()));
+        self
+    }
+
+    pub fn attr(&self, key: &str) -> Option<&str> {
+        self.attrs
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// The paper's Table 1 request shape: `nodes × sockets/node ×
+    /// cores/socket`. When `nodes == 0`, request sockets directly (T8).
+    pub fn nodes_sockets_cores(nodes: u64, sockets: u64, cores: u64) -> JobSpec {
+        let core = ResourceReq::new("core", cores);
+        let socket = ResourceReq::new("socket", sockets).with_child(core);
+        if nodes == 0 {
+            JobSpec::new(vec![socket])
+        } else {
+            JobSpec::new(vec![ResourceReq::new("node", nodes).with_child(socket)])
+        }
+    }
+
+    /// Expected subgraph size (vertices + edges = 2·vertices, each selected
+    /// vertex contributing its in-edge; cf. Table 1's "graph size" column).
+    pub fn subgraph_size(&self) -> u64 {
+        2 * self.resources.iter().map(ResourceReq::total_vertices).sum::<u64>()
+    }
+
+    /// Total count of a resource type across the request tree
+    /// (e.g. total cores for the pruning pre-check).
+    pub fn total_of(&self, rtype: &str) -> u64 {
+        fn walk(r: &ResourceReq, rtype: &str) -> u64 {
+            let nested: u64 = r.with.iter().map(|c| walk(c, rtype)).sum();
+            if r.rtype == rtype {
+                r.count + r.count * nested
+            } else {
+                r.count * nested
+            }
+        }
+        self.resources.iter().map(|r| walk(r, rtype)).sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        fn req_to_json(r: &ResourceReq) -> Json {
+            let mut o = Json::obj()
+                .with("type", Json::from(r.rtype.as_str()))
+                .with("count", Json::from(r.count));
+            if !r.exclusive {
+                o.set("exclusive", Json::from(false));
+            }
+            if !r.with.is_empty() {
+                o.set(
+                    "with",
+                    Json::Arr(r.with.iter().map(req_to_json).collect()),
+                );
+            }
+            if !r.attrs.is_empty() {
+                let mut attrs = Json::obj();
+                for (k, v) in &r.attrs {
+                    attrs.set(k, Json::from(v.as_str()));
+                }
+                o.set("attributes", attrs);
+            }
+            o
+        }
+        let mut doc = Json::obj()
+            .with("version", Json::from(self.version))
+            .with(
+                "resources",
+                Json::Arr(self.resources.iter().map(req_to_json).collect()),
+            );
+        if !self.attrs.is_empty() {
+            let mut attrs = Json::obj();
+            for (k, v) in &self.attrs {
+                attrs.set(k, Json::from(v.as_str()));
+            }
+            doc.set("attributes", attrs);
+        }
+        doc
+    }
+
+    pub fn from_json(doc: &Json) -> Result<JobSpec, JsonError> {
+        fn req_from_json(o: &Json) -> Result<ResourceReq, JsonError> {
+            let mut r = ResourceReq::new(o.str_field("type")?, o.u64_field("count")?);
+            if let Some(false) = o.get("exclusive").and_then(Json::as_bool) {
+                r.exclusive = false;
+            }
+            if let Some(with) = o.get("with").and_then(Json::as_arr) {
+                for c in with {
+                    r.with.push(req_from_json(c)?);
+                }
+            }
+            if let Some(attrs) = o.get("attributes").and_then(Json::as_obj) {
+                for (k, v) in attrs {
+                    if let Some(s) = v.as_str() {
+                        r.attrs.push((k.clone(), s.to_string()));
+                    }
+                }
+            }
+            Ok(r)
+        }
+        let resources = doc
+            .get("resources")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| JsonError::Schema("jobspec missing 'resources'".into()))?;
+        let mut spec = JobSpec {
+            version: doc.get("version").and_then(Json::as_u64).unwrap_or(1),
+            resources: resources
+                .iter()
+                .map(req_from_json)
+                .collect::<Result<_, _>>()?,
+            attrs: Vec::new(),
+        };
+        if let Some(attrs) = doc.get("attributes").and_then(Json::as_obj) {
+            for (k, v) in attrs {
+                if let Some(s) = v.as_str() {
+                    spec.attrs.push((k.clone(), s.to_string()));
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+
+    pub fn parse(text: &str) -> Result<JobSpec, JsonError> {
+        JobSpec::from_json(&Json::parse(text)?)
+    }
+}
+
+/// The paper's Table 1 test requests T1..T8 as (name, nodes, sockets, cores).
+pub const TABLE1_TESTS: [(&str, u64, u64, u64); 8] = [
+    ("T1", 64, 2, 16),
+    ("T2", 32, 2, 16),
+    ("T3", 16, 2, 16),
+    ("T4", 8, 2, 16),
+    ("T5", 4, 2, 16),
+    ("T6", 2, 2, 16),
+    ("T7", 1, 2, 16),
+    ("T8", 0, 1, 16),
+];
+
+/// Build the Table 1 test jobspec by name.
+pub fn table1_jobspec(name: &str) -> JobSpec {
+    let (_, n, s, c) = TABLE1_TESTS
+        .iter()
+        .copied()
+        .find(|(t, ..)| *t == name)
+        .unwrap_or_else(|| panic!("unknown test {name}"));
+    JobSpec::nodes_sockets_cores(n, s, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_subgraph_sizes() {
+        // Our counting is 2 × total vertices. T7 (1 node, 2 sockets/node,
+        // 16 cores/socket) = 35 vertices → 70, matching the paper exactly.
+        let expected = [4480u64, 2240, 1120, 560, 280, 140, 70, 34];
+        for ((name, ..), want) in TABLE1_TESTS.iter().zip(expected) {
+            let spec = table1_jobspec(name);
+            assert_eq!(spec.subgraph_size(), want, "{name}");
+        }
+    }
+
+    #[test]
+    fn total_of_counts_nested() {
+        let spec = JobSpec::nodes_sockets_cores(4, 2, 16);
+        assert_eq!(spec.total_of("core"), 4 * 2 * 16);
+        assert_eq!(spec.total_of("socket"), 8);
+        assert_eq!(spec.total_of("node"), 4);
+        assert_eq!(spec.total_of("gpu"), 0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let spec = JobSpec::nodes_sockets_cores(2, 2, 8)
+            .with_attr("user", "alice");
+        let parsed = JobSpec::parse(&spec.dump()).unwrap();
+        assert_eq!(parsed, spec);
+    }
+
+    #[test]
+    fn attrs_roundtrip() {
+        let spec = JobSpec::new(vec![ResourceReq::new("node", 1)
+            .with_attr("instance_type", "t2.micro")
+            .with_attr("zone", "us-east-1a")]);
+        let parsed = JobSpec::parse(&spec.dump()).unwrap();
+        assert_eq!(parsed.resources[0].attr("zone"), Some("us-east-1a"));
+    }
+
+    #[test]
+    fn t8_requests_socket_directly() {
+        let spec = table1_jobspec("T8");
+        assert_eq!(spec.resources[0].rtype, "socket");
+        assert_eq!(spec.total_of("core"), 16);
+    }
+
+    #[test]
+    fn parse_rejects_missing_resources() {
+        assert!(JobSpec::parse(r#"{"version":1}"#).is_err());
+    }
+}

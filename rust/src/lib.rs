@@ -1,0 +1,32 @@
+//! # fluxion-rs — a dynamic, hierarchical resource model for converged computing
+//!
+//! Reproduction of Milroy, Herbein, Misale & Ahn, *"A Dynamic, Hierarchical
+//! Resource Model for Converged Computing"* (2021): a directed-graph resource
+//! model with **fully hierarchical scheduling**, dynamic subgraph grow/shrink
+//! (`MatchGrow`, Algorithm 1), external-provider bursting (EC2/Fleet), and a
+//! Kubernetes-orchestrator integration (KubeFlux).
+//!
+//! Architecture (three layers, Python never on the request path):
+//! - **L3 (this crate)** — the coordinator: resource graph, matcher,
+//!   hierarchy, RPC, external providers, baselines, experiments.
+//! - **L2 (python/compile/model.py)** — JAX compute graphs (fleet scoring,
+//!   regression fit/predict), AOT-lowered to HLO text at build time.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels called by L2.
+//!
+//! The rust side loads the AOT artifacts through [`runtime`] (PJRT CPU
+//! client) and drives them from scheduling decisions.
+
+pub mod util;
+
+pub mod resource;
+pub mod jobspec;
+pub mod sched;
+pub mod rpc;
+pub mod hier;
+pub mod external;
+pub mod bitmap;
+pub mod orchestrator;
+pub mod runtime;
+pub mod perfmodel;
+pub mod workload;
+pub mod experiments;

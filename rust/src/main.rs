@@ -1,0 +1,174 @@
+//! `repro` — the fluxion-rs coordinator CLI.
+//!
+//! Subcommands drive the paper's experiments (DESIGN.md's experiment index)
+//! and a small interactive scheduler loop. Hand-rolled argument parsing
+//! (clap is unavailable offline).
+
+use fluxion::experiments::{e2e, ec2, kubeflux, models, nested, single_level, ExpConfig};
+use fluxion::perfmodel::FitBackend;
+use fluxion::workload::WorkloadSpec;
+
+fn usage() -> ! {
+    eprintln!(
+        "repro — dynamic hierarchical resource model (Milroy et al. 2021 reproduction)
+
+USAGE: repro <command> [options]
+
+COMMANDS
+  exp single-level     E1  (§5.1)  MA vs MG single-scheduler overhead
+  exp nested           E2-4 (§5.2) five-level MatchGrow timings (Figs 1a/1b)
+  exp ec2              E5  (§5.3)  EC2 creation times by type (Fig 2)
+  exp fleet            E6  (§5.3)  Fleet dynamic binding vs static config
+  exp kubeflux         E7  (§5.4)  ReplicaSet MA vs MG on OpenShift graph
+  exp models           E8-10 (§6)  component models, Table 4/5, bound
+  exp e2e              E11 end-to-end elastic-vs-rigid workload replay
+  exp all              run everything in sequence
+  serve                demo scheduler loop on stdin jobspecs
+
+OPTIONS
+  --iters N            repetitions per case (default 30; paper used 100)
+  --paper              paper-scale repetitions (100)
+  --time-scale X       provider latency scale (default 1e-3; 1.0 = real)
+  --jobs N             e2e trace length (default 40)
+"
+    );
+    std::process::exit(2);
+}
+
+fn parse_config(args: &[String]) -> ExpConfig {
+    let mut cfg = ExpConfig::default();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--iters" => {
+                cfg.iters = args
+                    .get(i + 1)
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or_else(|| usage());
+                i += 1;
+            }
+            "--paper" => cfg.iters = 100,
+            "--time-scale" => {
+                cfg.time_scale = args
+                    .get(i + 1)
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or_else(|| usage());
+                i += 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    cfg
+}
+
+fn opt_usize(args: &[String], flag: &str, default: usize) -> usize {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    match cmd.as_str() {
+        "exp" => {
+            let Some(which) = args.get(1) else { usage() };
+            let rest = &args[2..];
+            let cfg = parse_config(rest);
+            run_experiment(which, &cfg, rest);
+        }
+        "serve" => serve(),
+        _ => usage(),
+    }
+}
+
+fn run_experiment(which: &str, cfg: &ExpConfig, rest: &[String]) {
+    match which {
+        "single-level" => {
+            println!("{}", single_level::run(cfg).table());
+        }
+        "nested" => {
+            let tests = nested::default_tests();
+            let r = nested::run(cfg, &tests);
+            for t in &tests {
+                println!("{}", r.figure1_table(t));
+            }
+            println!("{}", r.recorder.table());
+        }
+        "ec2" => {
+            let reps = opt_usize(rest, "--reps", 20);
+            println!("{}", ec2::run_creation(cfg, reps).figure2_table());
+        }
+        "fleet" => {
+            // paper scale: 10 fleets × 10 instances; static 300×77×128
+            let r = ec2::run_fleet(cfg, 10, 10, 300, 77, 128);
+            println!("{}", r.table());
+        }
+        "kubeflux" => {
+            println!("{}", kubeflux::run(cfg, 100).table());
+        }
+        "models" => {
+            let tests = nested::default_tests();
+            let data = nested::run(cfg, &tests);
+            let backend = FitBackend::best();
+            println!("fit backend: {}", backend.name());
+            let model = models::fit_models(&data, &backend);
+            println!("E8 (Table 4)\n{}", model.table4());
+            println!("{}", models::figure34_table(&data, &model));
+            println!("{}", models::apply_model(cfg, &model).table());
+            let (obs, bound, factor) = models::validate_bound(&data, "T7");
+            println!(
+                "E10 — §6.3 bound: observed total match {obs:.6}s <= bound {bound:.6}s (factor {factor:.3})"
+            );
+            println!("{}", models::bound_ablation());
+        }
+        "e2e" => {
+            let spec = WorkloadSpec {
+                jobs: opt_usize(rest, "--jobs", 40),
+                ..WorkloadSpec::default()
+            };
+            let results = e2e::run(cfg, &spec);
+            println!("{}", e2e::comparison_table(&results));
+        }
+        "all" => {
+            for w in ["single-level", "nested", "ec2", "fleet", "kubeflux", "models", "e2e"] {
+                println!("\n================ exp {w} ================");
+                run_experiment(w, cfg, rest);
+            }
+        }
+        _ => usage(),
+    }
+}
+
+/// Minimal interactive loop: read jobspec JSON lines from stdin, print the
+/// allocation decision (a smoke-testable "server").
+fn serve() {
+    use fluxion::jobspec::JobSpec;
+    use fluxion::resource::builder::{table2_graph, UidGen};
+    use fluxion::sched::{PruneConfig, SchedInstance};
+    use std::io::BufRead;
+
+    let mut inst = SchedInstance::new(table2_graph(0, &mut UidGen::new()), PruneConfig::default());
+    eprintln!("repro serve: 128-node cluster ready; one jobspec JSON per line");
+    for line in std::io::stdin().lock().lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match JobSpec::parse(&line) {
+            Ok(spec) => match inst.match_allocate(&spec) {
+                Ok(out) => println!(
+                    "{{\"job\":{},\"vertices\":{},\"match_s\":{:.6}}}",
+                    out.job.0,
+                    out.subgraph.nodes.len(),
+                    out.timing.match_s
+                ),
+                Err(e) => println!("{{\"error\":\"{e}\"}}"),
+            },
+            Err(e) => println!("{{\"error\":\"bad jobspec: {e}\"}}"),
+        }
+    }
+}

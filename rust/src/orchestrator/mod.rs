@@ -1,0 +1,312 @@
+//! KubeFlux simulator: scheduling cloud-orchestrator tasks through the
+//! graph scheduler (paper §2.2, §5.4).
+//!
+//! "KubeFlux is composed of three main parts: 1) Fluxion management level,
+//! 2) Fluxion daemons (FluxRQ), and 3) the resource graph. The management
+//! level ... defines how the resource graph is partitioned among FluxRQ
+//! instances. ... Upon receiving a binding request, FluxRQs build the
+//! Fluxion jobspec ... and submit a MA allocation query to get the target
+//! node for pod binding."
+//!
+//! We reproduce the same structure: a [`Management`] front end partitioning
+//! a cluster graph among [`FluxRq`] instances, pod-spec → jobspec
+//! translation, MatchAllocate binding, and the paper's extension —
+//! MatchGrow-based ReplicaSet scale-up so an allocation can grow without
+//! re-binding existing pods (§5.4's MA-vs-MG measurement).
+
+use crate::jobspec::{JobSpec, ResourceReq};
+use crate::resource::builder::{kubeflux_graph, UidGen};
+use crate::resource::graph::JobId;
+use crate::sched::{PruneConfig, SchedInstance};
+use crate::util::metrics::Timer;
+
+/// A Kubernetes pod resource request (the fields KubeFlux encodes into the
+/// Fluxion jobspec).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PodSpec {
+    pub cpu_milli: u64,
+    pub mem_mib: u64,
+    pub gpus: u64,
+}
+
+impl PodSpec {
+    /// Translate the pod spec into a Fluxion jobspec: whole cores (ceil of
+    /// millicores) and GPUs under a *shared* node/socket scope — pods pack
+    /// onto nodes, they do not own them (Kubernetes semantics).
+    pub fn to_jobspec(&self) -> JobSpec {
+        let cores = self.cpu_milli.div_ceil(1000).max(1);
+        let mut socket = ResourceReq::new("socket", 1)
+            .shared()
+            .with_child(ResourceReq::new("core", cores));
+        if self.gpus > 0 {
+            socket = socket.with_child(ResourceReq::new("gpu", self.gpus));
+        }
+        JobSpec::new(vec![ResourceReq::new("node", 1).shared().with_child(socket)])
+    }
+}
+
+/// A ReplicaSet: n identical pods.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSet {
+    pub replicas: usize,
+    pub pod: PodSpec,
+}
+
+/// A pod bound to a node.
+#[derive(Debug, Clone)]
+pub struct Binding {
+    pub pod_index: usize,
+    pub node_path: String,
+    pub job: JobId,
+    pub seconds: f64,
+}
+
+/// One FluxRQ daemon: owns a partition of the cluster as its resource graph
+/// and answers binding queries with MatchAllocate / MatchGrow.
+pub struct FluxRq {
+    pub name: String,
+    pub inst: SchedInstance,
+}
+
+impl FluxRq {
+    /// Bind one pod via MatchAllocate. Returns the binding (target node =
+    /// the matched node vertex) and the query time.
+    pub fn bind_ma(&mut self, pod_index: usize, pod: &PodSpec) -> Result<Binding, String> {
+        let spec = pod.to_jobspec();
+        let t = Timer::start();
+        let out = self.inst.match_allocate(&spec).map_err(|e| e.to_string())?;
+        let seconds = t.elapsed_secs();
+        let node_path = node_path_of(&out.subgraph).ok_or("match contained no node path")?;
+        Ok(Binding {
+            pod_index,
+            node_path,
+            job: out.job,
+            seconds,
+        })
+    }
+
+    /// Bind one more pod into an *existing* allocation via MatchGrow — the
+    /// elasticity extension this paper adds to KubeFlux.
+    pub fn bind_mg(
+        &mut self,
+        pod_index: usize,
+        pod: &PodSpec,
+        job: JobId,
+    ) -> Result<Binding, String> {
+        let spec = pod.to_jobspec();
+        let t = Timer::start();
+        let out = self
+            .inst
+            .match_grow_local(job, &spec)
+            .map_err(|e| e.to_string())?;
+        let seconds = t.elapsed_secs();
+        let node_path = node_path_of(&out.subgraph).ok_or("match contained no node path")?;
+        Ok(Binding {
+            pod_index,
+            node_path,
+            job,
+            seconds,
+        })
+    }
+
+    /// Release a pod's resources (scale-down / pod deletion).
+    pub fn unbind(&mut self, job: JobId) -> Result<(), String> {
+        self.inst.free_job(job).map(|_| ()).map_err(|e| e.to_string())
+    }
+}
+
+/// Target node of a pod binding: the `/nodeN` prefix of any matched vertex
+/// (pods match shared-scope cores, so the node itself is not in the JGF).
+fn node_path_of(subgraph: &crate::resource::jgf::Jgf) -> Option<String> {
+    let n = subgraph.nodes.first()?;
+    // path shape: /<cluster>/node<N>/...
+    let mut parts = n.path.split('/');
+    let _ = parts.next(); // leading empty
+    let cluster = parts.next()?;
+    let node = parts.next()?;
+    Some(format!("/{cluster}/{node}"))
+}
+
+/// The management level: partitions the cluster among FluxRQ instances and
+/// routes binding requests (round-robin, like the KubeFlux prototype's
+/// partition dispatch).
+pub struct Management {
+    pub rqs: Vec<FluxRq>,
+    next: usize,
+}
+
+impl Management {
+    /// Build the §5.4 testbed: the 26-node OpenShift graph split among
+    /// `partitions` FluxRQ instances.
+    pub fn openshift(partitions: usize) -> Management {
+        assert!(partitions >= 1);
+        let mut uids = UidGen::new();
+        let full = kubeflux_graph(&mut uids);
+        // partition: carve node subtrees round-robin into per-RQ graphs
+        let jgf = crate::resource::jgf::Jgf::from_graph(&full);
+        let mut rqs = Vec::new();
+        for p in 0..partitions {
+            // take every `partitions`-th node subtree
+            let mut keep = vec![];
+            let mut node_idx = 0usize;
+            for n in &jgf.nodes {
+                if n.rtype.name() == "cluster" {
+                    keep.push(n.clone());
+                    continue;
+                }
+                if n.rtype.name() == "node" {
+                    node_idx = n.id as usize;
+                }
+                if node_idx % partitions == p {
+                    keep.push(n.clone());
+                }
+            }
+            let sub = crate::resource::jgf::Jgf {
+                edges: Vec::new(), // rebuilt from paths
+                nodes: keep,
+            };
+            let graph = sub.build_graph(true).expect("partition graph");
+            let prune = PruneConfig::all_of(&[
+                crate::resource::ResourceType::Core,
+                crate::resource::ResourceType::Gpu,
+            ]);
+            rqs.push(FluxRq {
+                name: format!("fluxrq-{p}"),
+                inst: SchedInstance::new(graph, prune),
+            });
+        }
+        Management { rqs, next: 0 }
+    }
+
+    /// Route a binding request to the next FluxRQ (gRPC dispatch in the
+    /// real system). Falls over to other partitions when one is full.
+    pub fn bind_pod(&mut self, pod_index: usize, pod: &PodSpec) -> Result<Binding, String> {
+        let n = self.rqs.len();
+        for attempt in 0..n {
+            let rq = (self.next + attempt) % n;
+            match self.rqs[rq].bind_ma(pod_index, pod) {
+                Ok(b) => {
+                    self.next = (rq + 1) % n;
+                    return Ok(b);
+                }
+                Err(_) => continue,
+            }
+        }
+        Err("no FluxRQ can bind the pod".to_string())
+    }
+
+    /// Deploy a ReplicaSet: first pod via MatchAllocate (creating the
+    /// allocation), remaining pods via MatchGrow into the same allocation —
+    /// the §5.4 measurement pattern. Returns (MA binding, MG bindings).
+    pub fn deploy_replicaset(
+        &mut self,
+        rs: &ReplicaSet,
+    ) -> Result<(Binding, Vec<Binding>), String> {
+        assert!(rs.replicas >= 1);
+        let first = self.bind_pod(0, &rs.pod)?;
+        // grow within the partition that took the first pod
+        let rq = self
+            .rqs
+            .iter_mut()
+            .find(|r| r.inst.allocs.get(first.job).is_some())
+            .expect("binding came from some RQ");
+        let mut grows = Vec::with_capacity(rs.replicas - 1);
+        for i in 1..rs.replicas {
+            grows.push(rq.bind_mg(i, &rs.pod, first.job)?);
+        }
+        Ok((first, grows))
+    }
+
+    pub fn total_graph_size(&self) -> usize {
+        self.rqs.iter().map(|r| r.inst.graph.size()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_pod() -> PodSpec {
+        PodSpec {
+            cpu_milli: 500,
+            mem_mib: 256,
+            gpus: 0,
+        }
+    }
+
+    #[test]
+    fn podspec_translation() {
+        let spec = PodSpec {
+            cpu_milli: 2500,
+            mem_mib: 1024,
+            gpus: 1,
+        }
+        .to_jobspec();
+        assert_eq!(spec.total_of("core"), 3); // ceil(2500m)
+        assert_eq!(spec.total_of("gpu"), 1);
+        assert_eq!(spec.total_of("node"), 1);
+    }
+
+    #[test]
+    fn openshift_partitioning_covers_cluster() {
+        let m = Management::openshift(2);
+        assert_eq!(m.rqs.len(), 2);
+        // both partitions non-trivial, cores split 50/50 over 26 nodes
+        let sizes: Vec<usize> = m.rqs.iter().map(|r| r.inst.graph.num_vertices()).collect();
+        assert!(sizes.iter().all(|&s| s > 1000), "{sizes:?}");
+    }
+
+    #[test]
+    fn single_partition_matches_paper_graph() {
+        let m = Management::openshift(1);
+        // 4343 vertices + synthesized-root-free (cluster kept) = 4343
+        assert_eq!(m.rqs[0].inst.graph.num_vertices(), 4343);
+    }
+
+    #[test]
+    fn bind_and_unbind() {
+        let mut m = Management::openshift(2);
+        let b = m.bind_pod(0, &small_pod()).unwrap();
+        assert!(b.node_path.contains("/node"));
+        let rq = m
+            .rqs
+            .iter_mut()
+            .find(|r| r.inst.allocs.get(b.job).is_some())
+            .unwrap();
+        rq.unbind(b.job).unwrap();
+        rq.inst.check().unwrap();
+    }
+
+    #[test]
+    fn replicaset_deploys_100_pods() {
+        let mut m = Management::openshift(1);
+        let rs = ReplicaSet {
+            replicas: 100,
+            pod: small_pod(),
+        };
+        let (first, grows) = m.deploy_replicaset(&rs).unwrap();
+        assert_eq!(grows.len(), 99);
+        // all pods share one allocation (the KubeFlux elasticity extension)
+        assert!(grows.iter().all(|g| g.job == first.job));
+        m.rqs[0].inst.check().unwrap();
+    }
+
+    #[test]
+    fn round_robin_spreads_pods() {
+        let mut m = Management::openshift(2);
+        let b1 = m.bind_pod(0, &small_pod()).unwrap();
+        let b2 = m.bind_pod(1, &small_pod()).unwrap();
+        assert_ne!(b1.node_path, b2.node_path);
+    }
+
+    #[test]
+    fn oversize_pod_rejected() {
+        let mut m = Management::openshift(2);
+        let huge = PodSpec {
+            cpu_milli: 1_000_000,
+            mem_mib: 0,
+            gpus: 0,
+        };
+        assert!(m.bind_pod(0, &huge).is_err());
+    }
+}

@@ -1,0 +1,318 @@
+//! Cluster graph builders for the paper's test configurations.
+//!
+//! Table 2's level graphs are `nodes × sockets × cores` trees under a
+//! cluster root; EC2 instances are `node → {core, gpu, memory-GiB}` subtrees
+//! (Table 3); the KubeFlux OpenShift cluster is
+//! `cluster → node → socket → {core, gpu}` (§5 testbed).
+
+use crate::resource::graph::{make_vertex, ResourceGraph, VertexId};
+use crate::resource::types::ResourceType;
+
+/// Monotonic `uniq_id` allocator. A single generator is shared by every
+/// graph in one experiment so resource identity is globally unique, as the
+/// paper's multi-level instances require.
+#[derive(Debug, Default, Clone)]
+pub struct UidGen {
+    next: u64,
+}
+
+impl UidGen {
+    pub fn new() -> UidGen {
+        UidGen { next: 0 }
+    }
+
+    pub fn starting_at(next: u64) -> UidGen {
+        UidGen { next }
+    }
+
+    pub fn next(&mut self) -> u64 {
+        let v = self.next;
+        self.next += 1;
+        v
+    }
+}
+
+/// Homogeneous-cluster spec: `nodes × sockets/node × cores/socket`, with
+/// optional per-socket GPUs and per-node memory (GiB vertices).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub name: String,
+    pub nodes: usize,
+    pub sockets_per_node: usize,
+    pub cores_per_socket: usize,
+    pub gpus_per_socket: usize,
+    pub mem_gib_per_node: usize,
+    /// First node index (so different levels get distinct node names when
+    /// carved from one cluster).
+    pub node_base: usize,
+}
+
+impl ClusterSpec {
+    pub fn new(name: &str, nodes: usize, sockets: usize, cores: usize) -> ClusterSpec {
+        ClusterSpec {
+            name: name.to_string(),
+            nodes,
+            sockets_per_node: sockets,
+            cores_per_socket: cores,
+            gpus_per_socket: 0,
+            mem_gib_per_node: 0,
+            node_base: 0,
+        }
+    }
+
+    pub fn with_gpus(mut self, gpus_per_socket: usize) -> ClusterSpec {
+        self.gpus_per_socket = gpus_per_socket;
+        self
+    }
+
+    pub fn with_memory(mut self, mem_gib_per_node: usize) -> ClusterSpec {
+        self.mem_gib_per_node = mem_gib_per_node;
+        self
+    }
+
+    pub fn with_node_base(mut self, base: usize) -> ClusterSpec {
+        self.node_base = base;
+        self
+    }
+
+    /// Total core count.
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.sockets_per_node * self.cores_per_socket
+    }
+
+    /// Expected vertex count.
+    pub fn total_vertices(&self) -> usize {
+        1 + self.nodes
+            * (1
+                + self.sockets_per_node
+                    * (1 + self.cores_per_socket + self.gpus_per_socket)
+                + self.mem_gib_per_node)
+    }
+
+    pub fn build(&self, uids: &mut UidGen) -> ResourceGraph {
+        let mut g = ResourceGraph::new();
+        let cluster_path = format!("/{}0", self.name);
+        let root = g
+            .add_root(make_vertex(
+                ResourceType::Cluster,
+                &self.name,
+                0,
+                uids.next(),
+                &cluster_path,
+            ))
+            .expect("fresh graph has no root");
+        for ni in 0..self.nodes {
+            let n = ni + self.node_base;
+            let node_path = format!("{cluster_path}/node{n}");
+            let node = g
+                .add_child(
+                    root,
+                    make_vertex(ResourceType::Node, "node", n as u64, uids.next(), &node_path),
+                )
+                .unwrap();
+            for s in 0..self.sockets_per_node {
+                let sock_path = format!("{node_path}/socket{s}");
+                let sock = g
+                    .add_child(
+                        node,
+                        make_vertex(
+                            ResourceType::Socket,
+                            "socket",
+                            s as u64,
+                            uids.next(),
+                            &sock_path,
+                        ),
+                    )
+                    .unwrap();
+                for c in 0..self.cores_per_socket {
+                    g.add_child(
+                        sock,
+                        make_vertex(
+                            ResourceType::Core,
+                            "core",
+                            c as u64,
+                            uids.next(),
+                            &format!("{sock_path}/core{c}"),
+                        ),
+                    )
+                    .unwrap();
+                }
+                for gi in 0..self.gpus_per_socket {
+                    g.add_child(
+                        sock,
+                        make_vertex(
+                            ResourceType::Gpu,
+                            "gpu",
+                            gi as u64,
+                            uids.next(),
+                            &format!("{sock_path}/gpu{gi}"),
+                        ),
+                    )
+                    .unwrap();
+                }
+            }
+            for m in 0..self.mem_gib_per_node {
+                let mut v = make_vertex(
+                    ResourceType::Memory,
+                    "memory",
+                    m as u64,
+                    uids.next(),
+                    &format!("{node_path}/memory{m}"),
+                );
+                v.unit = "GiB".to_string();
+                g.add_child(node, v).unwrap();
+            }
+        }
+        g
+    }
+}
+
+/// Table 2 configurations: (level, nodes, sockets/node, cores/socket).
+/// Graph sizes in our counting are `2·V − 1` (unidirectional containment
+/// edges); the paper's Fluxion counts differ by a small bookkeeping constant
+/// (see EXPERIMENTS.md §E2).
+pub const TABLE2_LEVELS: [(usize, usize, usize, usize); 5] = [
+    (0, 128, 2, 16), // L0: 128 nodes, 256 sockets, 4096 cores
+    (1, 8, 2, 16),   // L1: 8 nodes, 16 sockets, 256 cores
+    (2, 4, 2, 16),   // L2
+    (3, 2, 2, 16),   // L3
+    (4, 1, 2, 16),   // L4
+];
+
+/// Build the level-`l` graph of Table 2.
+pub fn table2_graph(level: usize, uids: &mut UidGen) -> ResourceGraph {
+    let (_, nodes, sockets, cores) = TABLE2_LEVELS
+        .iter()
+        .copied()
+        .find(|(l, ..)| *l == level)
+        .expect("level 0..=4");
+    ClusterSpec::new("cluster", nodes, sockets, cores).build(uids)
+}
+
+/// An attachable subtree for one "node" shaped like the Table 1 requests:
+/// used to fabricate grant subgraphs in unit tests.
+pub fn node_subtree(
+    g: &mut ResourceGraph,
+    parent: VertexId,
+    node_idx: usize,
+    sockets: usize,
+    cores_per_socket: usize,
+    uids: &mut UidGen,
+) -> VertexId {
+    let ppath = g.vertex(parent).path.clone();
+    let node_path = format!("{ppath}/node{node_idx}");
+    let node = g
+        .add_child(
+            parent,
+            make_vertex(
+                ResourceType::Node,
+                "node",
+                node_idx as u64,
+                uids.next(),
+                &node_path,
+            ),
+        )
+        .unwrap();
+    for s in 0..sockets {
+        let sock_path = format!("{node_path}/socket{s}");
+        let sock = g
+            .add_child(
+                node,
+                make_vertex(ResourceType::Socket, "socket", s as u64, uids.next(), &sock_path),
+            )
+            .unwrap();
+        for c in 0..cores_per_socket {
+            g.add_child(
+                sock,
+                make_vertex(
+                    ResourceType::Core,
+                    "core",
+                    c as u64,
+                    uids.next(),
+                    &format!("{sock_path}/core{c}"),
+                ),
+            )
+            .unwrap();
+        }
+    }
+    node
+}
+
+/// The KubeFlux OpenShift testbed graph (§5): 26 nodes, 2 sockets × 10
+/// Power8 cores with SMT8 (160 hardware threads/node, modeled as cores),
+/// 4 GPUs per node (2 per socket). 4343 vertices in our counting vs the
+/// paper's 4344 (one bookkeeping vertex); edges unidirectional.
+pub fn kubeflux_graph(uids: &mut UidGen) -> ResourceGraph {
+    ClusterSpec::new("openshift", 26, 2, 80)
+        .with_gpus(2)
+        .build(uids)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_sizes() {
+        // Our counting: size = 2·V − 1.
+        let expected_vertices = [4481usize, 281, 141, 71, 36];
+        for (i, (level, ..)) in TABLE2_LEVELS.iter().enumerate() {
+            let g = table2_graph(*level, &mut UidGen::new());
+            assert_eq!(g.num_vertices(), expected_vertices[i], "level {level}");
+            assert_eq!(g.size(), 2 * expected_vertices[i] - 1);
+            g.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn uids_are_globally_unique_across_graphs() {
+        let mut uids = UidGen::new();
+        let a = table2_graph(4, &mut uids);
+        let b = table2_graph(3, &mut uids);
+        let mut seen = std::collections::HashSet::new();
+        for g in [&a, &b] {
+            for vid in g.iter_live() {
+                assert!(seen.insert(g.vertex(vid).uniq_id), "duplicate uniq_id");
+            }
+        }
+    }
+
+    #[test]
+    fn gpus_and_memory() {
+        let g = ClusterSpec::new("c", 1, 2, 4)
+            .with_gpus(1)
+            .with_memory(8)
+            .build(&mut UidGen::new());
+        // 1 cluster + 1 node + 2 sockets + 8 cores + 2 gpus + 8 mem = 22
+        assert_eq!(g.num_vertices(), 22);
+        assert!(g.lookup_path("/c0/node0/socket1/gpu0").is_some());
+        assert!(g.lookup_path("/c0/node0/memory7").is_some());
+    }
+
+    #[test]
+    fn total_vertices_formula_matches() {
+        for spec in [
+            ClusterSpec::new("c", 3, 2, 5),
+            ClusterSpec::new("c", 1, 1, 1).with_gpus(2).with_memory(4),
+        ] {
+            let g = spec.build(&mut UidGen::new());
+            assert_eq!(g.num_vertices(), spec.total_vertices());
+        }
+    }
+
+    #[test]
+    fn node_base_offsets_names() {
+        let g = ClusterSpec::new("c", 2, 1, 1).with_node_base(5).build(&mut UidGen::new());
+        assert!(g.lookup_path("/c0/node5").is_some());
+        assert!(g.lookup_path("/c0/node6").is_some());
+        assert!(g.lookup_path("/c0/node0").is_none());
+    }
+
+    #[test]
+    fn kubeflux_size() {
+        let g = kubeflux_graph(&mut UidGen::new());
+        // paper: 4344 vertices / 8686 bidirectional edges; ours: 4343 / 4342
+        assert_eq!(g.num_vertices(), 4343);
+        assert_eq!(g.num_edges(), 4342);
+    }
+}

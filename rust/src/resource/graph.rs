@@ -1,0 +1,463 @@
+//! The dynamic directed resource graph.
+//!
+//! This is the paper's core data structure (§3): a containment tree of typed
+//! resource vertices with
+//!
+//! - a **path index** (`path -> VertexId`) so a subgraph's attaching point is
+//!   located in O(1), making `AddSubgraph` O(n+m) in the subgraph size —
+//!   the "localization" technique that keeps dynamic edits scalable;
+//! - **per-vertex scheduling metadata** that is a function only of the vertex
+//!   and its subtree (allocations + pruning aggregates), so attaching a
+//!   subgraph only requires updating its `p` ancestors, giving
+//!   `UpdateMetadata` O(n+m+p);
+//! - tombstoned removal so `VertexId`s stay stable across shrink operations.
+//!
+//! The underlying structure replaces Fluxion's Boost Graph Library with an
+//! adjacency-list digraph: the paper uses only add/remove vertex/edge plus
+//! indexed lookup, which this provides at the same complexity.
+
+use std::collections::HashMap;
+
+use crate::resource::types::ResourceType;
+
+/// Stable handle to a vertex. Indexes into the graph's vertex arena.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VertexId(pub u32);
+
+/// Job identifier for allocation metadata.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+/// Allocation state of a vertex.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AllocInfo {
+    /// Jobs holding this vertex (exclusive vertices have at most one).
+    pub jobs: Vec<JobId>,
+}
+
+impl AllocInfo {
+    pub fn is_allocated(&self) -> bool {
+        !self.jobs.is_empty()
+    }
+}
+
+/// A typed resource vertex plus its scheduling metadata.
+#[derive(Debug, Clone)]
+pub struct Vertex {
+    pub rtype: ResourceType,
+    /// Basename, e.g. `core`; instance name is `basename + id`.
+    pub basename: String,
+    /// Sibling index, e.g. the `3` in `core3`.
+    pub id: u64,
+    /// Globally unique id (JGF `uniq_id`); preserved across levels so the
+    /// same physical resource has the same identity in every instance graph.
+    pub uniq_id: u64,
+    /// MPI-style rank hint; -1 when not applicable (Fluxion convention).
+    pub rank: i64,
+    /// Capacity units this vertex provides (1 for discrete resources).
+    pub size: u64,
+    pub unit: String,
+    /// Containment path, e.g. `/cluster0/rack0/node3/socket0/core7`.
+    pub path: String,
+    pub alloc: AllocInfo,
+    /// Pruning aggregate: free units of each tracked type in the subtree
+    /// rooted here (the ALL:core filter in the paper's test setup tracks
+    /// cores). Maintained incrementally; see `sched::pruning`.
+    pub agg_free: Vec<(ResourceType, i64)>,
+    /// Tombstone: true once removed. Ids are never reused.
+    pub dead: bool,
+}
+
+impl Vertex {
+    pub fn name(&self) -> String {
+        format!("{}{}", self.basename, self.id)
+    }
+
+    pub fn agg_get(&self, t: &ResourceType) -> i64 {
+        self.agg_free
+            .iter()
+            .find(|(rt, _)| rt == t)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    pub fn agg_add(&mut self, t: &ResourceType, delta: i64) {
+        if let Some(e) = self.agg_free.iter_mut().find(|(rt, _)| rt == t) {
+            e.1 += delta;
+        } else {
+            self.agg_free.push((t.clone(), delta));
+        }
+    }
+}
+
+/// The dynamic resource graph: a containment tree (per the paper's "we assume
+/// the scheduling hierarchy is a tree") with O(1) path lookup.
+#[derive(Debug, Clone, Default)]
+pub struct ResourceGraph {
+    vertices: Vec<Vertex>,
+    parent: Vec<Option<VertexId>>,
+    children: Vec<Vec<VertexId>>,
+    /// containment path -> vertex (the localization index).
+    path_index: HashMap<String, VertexId>,
+    root: Option<VertexId>,
+    live_vertices: usize,
+    live_edges: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum GraphError {
+    #[error("vertex path '{0}' already exists")]
+    DuplicatePath(String),
+    #[error("no vertex at path '{0}'")]
+    NoSuchPath(String),
+    #[error("vertex {0:?} is dead")]
+    Dead(VertexId),
+    #[error("graph already has a root")]
+    RootExists,
+    #[error("cannot remove vertex with live children: {0}")]
+    HasChildren(String),
+}
+
+impl ResourceGraph {
+    pub fn new() -> ResourceGraph {
+        ResourceGraph::default()
+    }
+
+    // ---- accessors -------------------------------------------------------
+
+    pub fn root(&self) -> Option<VertexId> {
+        self.root
+    }
+
+    pub fn vertex(&self, id: VertexId) -> &Vertex {
+        &self.vertices[id.0 as usize]
+    }
+
+    pub fn vertex_mut(&mut self, id: VertexId) -> &mut Vertex {
+        &mut self.vertices[id.0 as usize]
+    }
+
+    pub fn parent_of(&self, id: VertexId) -> Option<VertexId> {
+        self.parent[id.0 as usize]
+    }
+
+    pub fn children_of(&self, id: VertexId) -> &[VertexId] {
+        &self.children[id.0 as usize]
+    }
+
+    pub fn lookup_path(&self, path: &str) -> Option<VertexId> {
+        self.path_index.get(path).copied()
+    }
+
+    /// Live vertex count.
+    pub fn num_vertices(&self) -> usize {
+        self.live_vertices
+    }
+
+    /// Live (containment) edge count.
+    pub fn num_edges(&self) -> usize {
+        self.live_edges
+    }
+
+    /// "Graph size" in the paper's sense: vertices + edges.
+    pub fn size(&self) -> usize {
+        self.num_vertices() + self.num_edges()
+    }
+
+    /// Arena length (live + tombstoned). `VertexId.0` is always < this, so
+    /// callers can size side tables indexed by raw id.
+    pub fn arena_len(&self) -> usize {
+        self.vertices.len()
+    }
+
+    /// Iterate live vertex ids.
+    pub fn iter_live(&self) -> impl Iterator<Item = VertexId> + '_ {
+        self.vertices
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| !v.dead)
+            .map(|(i, _)| VertexId(i as u32))
+    }
+
+    /// Ancestors from the vertex's parent up to the root.
+    pub fn ancestors(&self, id: VertexId) -> Vec<VertexId> {
+        let mut out = Vec::new();
+        let mut cur = self.parent_of(id);
+        while let Some(p) = cur {
+            out.push(p);
+            cur = self.parent_of(p);
+        }
+        out
+    }
+
+    /// Depth-first preorder walk of the subtree rooted at `id`.
+    pub fn dfs(&self, id: VertexId) -> Vec<VertexId> {
+        let mut out = Vec::new();
+        let mut stack = vec![id];
+        while let Some(v) = stack.pop() {
+            if self.vertices[v.0 as usize].dead {
+                continue;
+            }
+            out.push(v);
+            // push in reverse so children come out in insertion order
+            for &c in self.children[v.0 as usize].iter().rev() {
+                stack.push(c);
+            }
+        }
+        out
+    }
+
+    // ---- mutation --------------------------------------------------------
+
+    /// Add a root vertex (no parent edge).
+    pub fn add_root(&mut self, v: Vertex) -> Result<VertexId, GraphError> {
+        if self.root.is_some() {
+            return Err(GraphError::RootExists);
+        }
+        let id = self.push_vertex(v)?;
+        self.root = Some(id);
+        Ok(id)
+    }
+
+    /// Add a vertex as a child of `parent` (adds the containment edge).
+    /// O(1) amortized — this is the primitive `AddSubgraph` loops over.
+    pub fn add_child(&mut self, parent: VertexId, v: Vertex) -> Result<VertexId, GraphError> {
+        if self.vertices[parent.0 as usize].dead {
+            return Err(GraphError::Dead(parent));
+        }
+        let id = self.push_vertex(v)?;
+        self.parent[id.0 as usize] = Some(parent);
+        self.children[parent.0 as usize].push(id);
+        self.live_edges += 1;
+        Ok(id)
+    }
+
+    fn push_vertex(&mut self, v: Vertex) -> Result<VertexId, GraphError> {
+        if self.path_index.contains_key(&v.path) {
+            return Err(GraphError::DuplicatePath(v.path.clone()));
+        }
+        let id = VertexId(self.vertices.len() as u32);
+        self.path_index.insert(v.path.clone(), id);
+        self.vertices.push(v);
+        self.parent.push(None);
+        self.children.push(Vec::new());
+        self.live_vertices += 1;
+        Ok(id)
+    }
+
+    /// Remove a leaf (or recursively a whole subtree with `remove_subtree`).
+    /// Tombstones the vertex; ids remain stable.
+    pub fn remove_leaf(&mut self, id: VertexId) -> Result<(), GraphError> {
+        if self.vertices[id.0 as usize].dead {
+            return Err(GraphError::Dead(id));
+        }
+        if self.children[id.0 as usize]
+            .iter()
+            .any(|c| !self.vertices[c.0 as usize].dead)
+        {
+            return Err(GraphError::HasChildren(
+                self.vertices[id.0 as usize].path.clone(),
+            ));
+        }
+        let path = self.vertices[id.0 as usize].path.clone();
+        self.path_index.remove(&path);
+        self.vertices[id.0 as usize].dead = true;
+        self.live_vertices -= 1;
+        if let Some(p) = self.parent[id.0 as usize] {
+            self.children[p.0 as usize].retain(|&c| c != id);
+            self.live_edges -= 1;
+        }
+        if self.root == Some(id) {
+            self.root = None;
+        }
+        Ok(())
+    }
+
+    /// Remove an entire subtree bottom-up (the paper's subtractive
+    /// transformation). Returns the number of removed vertices.
+    pub fn remove_subtree(&mut self, id: VertexId) -> Result<usize, GraphError> {
+        let order = self.dfs(id);
+        for &v in order.iter().rev() {
+            self.remove_leaf(v)?;
+        }
+        Ok(order.len())
+    }
+
+    /// Validate internal invariants (tests + failure injection):
+    /// path index maps exactly the live vertices; parent/child links agree;
+    /// live counts are consistent.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut live = 0usize;
+        let mut edges = 0usize;
+        for (i, v) in self.vertices.iter().enumerate() {
+            let id = VertexId(i as u32);
+            if v.dead {
+                if self.path_index.get(&v.path) == Some(&id) {
+                    return Err(format!("dead vertex {} still indexed", v.path));
+                }
+                continue;
+            }
+            live += 1;
+            if self.path_index.get(&v.path) != Some(&id) {
+                return Err(format!("live vertex {} not indexed", v.path));
+            }
+            if let Some(p) = self.parent[i] {
+                if self.vertices[p.0 as usize].dead {
+                    return Err(format!("{} has dead parent", v.path));
+                }
+                if !self.children[p.0 as usize].contains(&id) {
+                    return Err(format!("{} missing from parent's children", v.path));
+                }
+                edges += 1;
+            }
+            for &c in &self.children[i] {
+                if self.vertices[c.0 as usize].dead {
+                    return Err(format!("{} has dead child", v.path));
+                }
+                if self.parent[c.0 as usize] != Some(id) {
+                    return Err(format!("child of {} disagrees on parent", v.path));
+                }
+            }
+        }
+        if live != self.live_vertices {
+            return Err(format!(
+                "live count mismatch: counted {live}, cached {}",
+                self.live_vertices
+            ));
+        }
+        if edges != self.live_edges {
+            return Err(format!(
+                "edge count mismatch: counted {edges}, cached {}",
+                self.live_edges
+            ));
+        }
+        if self.path_index.len() != live {
+            return Err("path index size != live vertices".to_string());
+        }
+        Ok(())
+    }
+}
+
+/// Builder for a vertex with sensible defaults.
+pub fn make_vertex(rtype: ResourceType, basename: &str, id: u64, uniq_id: u64, path: &str) -> Vertex {
+    Vertex {
+        rtype,
+        basename: basename.to_string(),
+        id,
+        uniq_id,
+        rank: -1,
+        size: 1,
+        unit: String::new(),
+        path: path.to_string(),
+        alloc: AllocInfo::default(),
+        agg_free: Vec::new(),
+        dead: false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> (ResourceGraph, VertexId, VertexId, VertexId) {
+        let mut g = ResourceGraph::new();
+        let root = g
+            .add_root(make_vertex(ResourceType::Cluster, "cluster", 0, 0, "/cluster0"))
+            .unwrap();
+        let n0 = g
+            .add_child(
+                root,
+                make_vertex(ResourceType::Node, "node", 0, 1, "/cluster0/node0"),
+            )
+            .unwrap();
+        let c0 = g
+            .add_child(
+                n0,
+                make_vertex(ResourceType::Core, "core", 0, 2, "/cluster0/node0/core0"),
+            )
+            .unwrap();
+        (g, root, n0, c0)
+    }
+
+    #[test]
+    fn build_and_lookup() {
+        let (g, root, n0, c0) = tiny();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.size(), 5);
+        assert_eq!(g.lookup_path("/cluster0/node0"), Some(n0));
+        assert_eq!(g.parent_of(c0), Some(n0));
+        assert_eq!(g.children_of(root), &[n0]);
+        assert_eq!(g.ancestors(c0), vec![n0, root]);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn duplicate_path_rejected() {
+        let (mut g, root, _, _) = tiny();
+        let err = g.add_child(
+            root,
+            make_vertex(ResourceType::Node, "node", 0, 9, "/cluster0/node0"),
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn dfs_preorder() {
+        let (mut g, root, n0, _) = tiny();
+        let c1 = g
+            .add_child(
+                n0,
+                make_vertex(ResourceType::Core, "core", 1, 3, "/cluster0/node0/core1"),
+            )
+            .unwrap();
+        let order = g.dfs(root);
+        assert_eq!(order.len(), 4);
+        assert_eq!(order[0], root);
+        assert_eq!(order[1], n0);
+        assert!(order.contains(&c1));
+    }
+
+    #[test]
+    fn remove_leaf_and_reattach() {
+        let (mut g, _, n0, c0) = tiny();
+        g.remove_leaf(c0).unwrap();
+        assert_eq!(g.num_vertices(), 2);
+        assert_eq!(g.lookup_path("/cluster0/node0/core0"), None);
+        g.check_invariants().unwrap();
+        // same path can be re-added after removal (grow after shrink)
+        let c0b = g
+            .add_child(
+                n0,
+                make_vertex(ResourceType::Core, "core", 0, 7, "/cluster0/node0/core0"),
+            )
+            .unwrap();
+        assert_ne!(c0b, c0, "tombstoned ids are not reused");
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_nonleaf_rejected() {
+        let (mut g, _, n0, _) = tiny();
+        assert!(g.remove_leaf(n0).is_err());
+    }
+
+    #[test]
+    fn remove_subtree() {
+        let (mut g, _, n0, _) = tiny();
+        let removed = g.remove_subtree(n0).unwrap();
+        assert_eq!(removed, 2);
+        assert_eq!(g.num_vertices(), 1);
+        assert_eq!(g.num_edges(), 0);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn agg_helpers() {
+        let (mut g, root, _, _) = tiny();
+        g.vertex_mut(root).agg_add(&ResourceType::Core, 5);
+        g.vertex_mut(root).agg_add(&ResourceType::Core, -2);
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 3);
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Gpu), 0);
+    }
+}

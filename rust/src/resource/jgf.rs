@@ -1,0 +1,376 @@
+//! JSON Graph Format (JGF) encoding of resource (sub)graphs.
+//!
+//! JGF is the paper's interchange format: "Subgraphs to be added or removed
+//! are encoded in JSON Graph Format which can then be transmitted between
+//! parent and child schedulers via RPC" (§4). Vertex identity across
+//! scheduler instances is the containment **path** (the localization index),
+//! so a receiver can attach a subgraph in O(n+m) without global knowledge.
+//!
+//! A subgraph's JGF contains one edge per node — its containment in-edge —
+//! including the root's *attach edge* whose source vertex is not part of the
+//! document. This makes the paper's "graph size" (vertices + edges) of a
+//! subgraph exactly `2n`, matching Table 1 (e.g. T7: 35 vertices, size 70)
+//! and Table 3 (t2.micro: 3 vertices, size 6).
+
+use crate::resource::graph::{make_vertex, GraphError, ResourceGraph, Vertex, VertexId};
+use crate::resource::types::ResourceType;
+use crate::util::json::{Json, JsonError};
+
+/// One JGF node (a resource vertex in wire form).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JgfNode {
+    pub uniq_id: u64,
+    pub rtype: ResourceType,
+    pub basename: String,
+    pub id: u64,
+    pub rank: i64,
+    pub size: u64,
+    pub unit: String,
+    pub path: String,
+}
+
+impl JgfNode {
+    pub fn from_vertex(v: &Vertex) -> JgfNode {
+        JgfNode {
+            uniq_id: v.uniq_id,
+            rtype: v.rtype.clone(),
+            basename: v.basename.clone(),
+            id: v.id,
+            rank: v.rank,
+            size: v.size,
+            unit: v.unit.clone(),
+            path: v.path.clone(),
+        }
+    }
+
+    pub fn to_vertex(&self) -> Vertex {
+        let mut v = make_vertex(
+            self.rtype.clone(),
+            &self.basename,
+            self.id,
+            self.uniq_id,
+            &self.path,
+        );
+        v.rank = self.rank;
+        v.size = self.size;
+        v.unit = self.unit.clone();
+        v
+    }
+
+    /// Containment path of this node's parent (everything before the last
+    /// `/` component), or None for a bare root like `/cluster0`.
+    pub fn parent_path(&self) -> Option<&str> {
+        let idx = self.path.rfind('/')?;
+        if idx == 0 {
+            None
+        } else {
+            Some(&self.path[..idx])
+        }
+    }
+}
+
+/// A JGF document: nodes in topological (parent-before-child) order plus
+/// containment edges `(source uniq_id, target uniq_id)`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Jgf {
+    pub nodes: Vec<JgfNode>,
+    pub edges: Vec<(u64, u64)>,
+}
+
+impl Jgf {
+    /// Paper-style size: vertices + edges.
+    pub fn size(&self) -> usize {
+        self.nodes.len() + self.edges.len()
+    }
+
+    /// Encode an entire graph.
+    pub fn from_graph(g: &ResourceGraph) -> Jgf {
+        match g.root() {
+            Some(root) => Self::from_subtree(g, root),
+            None => Jgf::default(),
+        }
+    }
+
+    /// Encode the subtree rooted at `root` (attach edge included if the
+    /// subtree root has a parent).
+    pub fn from_subtree(g: &ResourceGraph, root: VertexId) -> Jgf {
+        Self::from_selection(g, &g.dfs(root))
+    }
+
+    /// Encode a selection of vertices (must be parent-before-child closed
+    /// upward within the selection; `dfs` order satisfies this). Each
+    /// selected vertex contributes its in-edge; sources outside the
+    /// selection become attach edges.
+    pub fn from_selection(g: &ResourceGraph, selection: &[VertexId]) -> Jgf {
+        let mut jgf = Jgf::default();
+        for &vid in selection {
+            let v = g.vertex(vid);
+            jgf.nodes.push(JgfNode::from_vertex(v));
+            if let Some(p) = g.parent_of(vid) {
+                jgf.edges.push((g.vertex(p).uniq_id, v.uniq_id));
+            }
+        }
+        jgf
+    }
+
+    /// Like [`Jgf::from_selection`] but prepending the selection's missing
+    /// *interior* ancestors (everything between a selected vertex and the
+    /// graph root, exclusive). A grant whose root is below node level
+    /// (e.g. the paper's T8: one socket + 16 cores) would otherwise have no
+    /// attach point in a child that never saw that node — the ancestors
+    /// ride along as structural (unallocated) vertices, and `add_subgraph`
+    /// treats already-present ones as the identity. With the interposed
+    /// node this makes T8's wire size exactly Table 1's 36.
+    pub fn from_selection_closed(g: &ResourceGraph, selection: &[VertexId]) -> Jgf {
+        use std::collections::HashSet;
+        let sel: HashSet<VertexId> = selection.iter().copied().collect();
+        let root = g.root();
+        let mut extra: Vec<VertexId> = Vec::new();
+        let mut seen: HashSet<VertexId> = HashSet::new();
+        for &vid in selection {
+            for a in g.ancestors(vid) {
+                if Some(a) == root || sel.contains(&a) {
+                    continue;
+                }
+                if seen.insert(a) {
+                    extra.push(a);
+                }
+            }
+        }
+        // deepest-last so parents precede children after the sort below
+        extra.sort_by_key(|&v| g.ancestors(v).len());
+        let mut all: Vec<VertexId> = extra;
+        all.extend_from_slice(selection);
+        Self::from_selection(g, &all)
+    }
+
+    pub fn to_json(&self) -> Json {
+        // Wire-size discipline (§Perf): default-valued fields (rank −1,
+        // size 1, empty unit) and derivable ones (name = basename+id) are
+        // omitted; the decoder restores the defaults. A T1-sized grant
+        // shrinks ~45% and every serialize/parse/copy on the MatchGrow
+        // path shrinks with it.
+        let nodes: Vec<Json> = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let paths = Json::obj().with("containment", Json::from(n.path.as_str()));
+                let mut meta = Json::obj()
+                    .with("type", Json::from(n.rtype.name()))
+                    .with("basename", Json::from(n.basename.as_str()))
+                    .with("id", Json::from(n.id))
+                    .with("uniq_id", Json::from(n.uniq_id));
+                if n.rank != -1 {
+                    meta.set("rank", Json::from(n.rank));
+                }
+                if n.size != 1 {
+                    meta.set("size", Json::from(n.size));
+                }
+                if !n.unit.is_empty() {
+                    meta.set("unit", Json::from(n.unit.as_str()));
+                }
+                meta.set("paths", paths);
+                Json::obj()
+                    .with("id", Json::from(n.uniq_id.to_string()))
+                    .with("metadata", meta)
+            })
+            .collect();
+        let edges: Vec<Json> = self
+            .edges
+            .iter()
+            .map(|(s, t)| {
+                Json::obj()
+                    .with("source", Json::from(s.to_string()))
+                    .with("target", Json::from(t.to_string()))
+            })
+            .collect();
+        Json::obj().with(
+            "graph",
+            Json::obj()
+                .with("nodes", Json::Arr(nodes))
+                .with("edges", Json::Arr(edges)),
+        )
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Jgf, JsonError> {
+        let graph = doc
+            .get("graph")
+            .ok_or_else(|| JsonError::Schema("missing 'graph'".into()))?;
+        let nodes_json = graph
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| JsonError::Schema("missing 'graph.nodes'".into()))?;
+        let edges_json = graph
+            .get("edges")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| JsonError::Schema("missing 'graph.edges'".into()))?;
+        let mut jgf = Jgf::default();
+        for n in nodes_json {
+            let meta = n
+                .get("metadata")
+                .ok_or_else(|| JsonError::Schema("node missing metadata".into()))?;
+            let paths = meta
+                .get("paths")
+                .ok_or_else(|| JsonError::Schema("node missing paths".into()))?;
+            jgf.nodes.push(JgfNode {
+                uniq_id: meta.u64_field("uniq_id")?,
+                rtype: ResourceType::from_name(meta.str_field("type")?),
+                basename: meta.str_field("basename")?.to_string(),
+                id: meta.u64_field("id")?,
+                rank: meta.get("rank").and_then(Json::as_i64).unwrap_or(-1),
+                size: meta.get("size").and_then(Json::as_u64).unwrap_or(1),
+                unit: meta
+                    .get("unit")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                path: paths.str_field("containment")?.to_string(),
+            });
+        }
+        for e in edges_json {
+            let s = e
+                .str_field("source")?
+                .parse::<u64>()
+                .map_err(|_| JsonError::Schema("edge source not an id".into()))?;
+            let t = e
+                .str_field("target")?
+                .parse::<u64>()
+                .map_err(|_| JsonError::Schema("edge target not an id".into()))?;
+            jgf.edges.push((s, t));
+        }
+        Ok(jgf)
+    }
+
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+
+    pub fn parse(text: &str) -> Result<Jgf, JsonError> {
+        Jgf::from_json(&Json::parse(text)?)
+    }
+
+    /// Materialize this JGF as a standalone graph (used when a child
+    /// instance initializes its resource graph from the subgraph its parent
+    /// granted — "each instance initializes its resource graph with only
+    /// those resources within its purview", §3).
+    ///
+    /// Nodes whose parent path is absent from the document become roots —
+    /// but a standalone graph needs exactly one, so callers pass
+    /// `synthesize_root=true` to interpose a cluster root when the document
+    /// contains a forest (e.g. two nodes granted from a larger cluster).
+    pub fn build_graph(&self, synthesize_root: bool) -> Result<ResourceGraph, GraphError> {
+        let mut g = ResourceGraph::new();
+        let mut roots: Vec<&JgfNode> = Vec::new();
+        for n in &self.nodes {
+            match n.parent_path() {
+                Some(pp) if g.lookup_path(pp).is_some() => {}
+                _ => roots.push(n),
+            }
+        }
+        let needs_synth = synthesize_root
+            && (roots.len() != 1 || roots[0].parent_path().is_some());
+        if needs_synth {
+            // Root path: the common prefix component of all node paths.
+            let prefix = self
+                .nodes
+                .first()
+                .and_then(|n| n.path.split('/').nth(1))
+                .unwrap_or("cluster0")
+                .to_string();
+            let root_path = format!("/{prefix}");
+            if self.nodes.iter().all(|n| n.path != root_path) {
+                g.add_root(make_vertex(
+                    ResourceType::Cluster,
+                    prefix.trim_end_matches(char::is_numeric),
+                    0,
+                    u64::MAX, // synthetic id; not a wire identity
+                    &root_path,
+                ))?;
+            }
+        }
+        for n in &self.nodes {
+            let v = n.to_vertex();
+            match n.parent_path().and_then(|pp| g.lookup_path(pp)) {
+                Some(p) => {
+                    g.add_child(p, v)?;
+                }
+                None => {
+                    g.add_root(v)?;
+                }
+            }
+        }
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::builder::{ClusterSpec, UidGen};
+
+    fn sample_graph() -> ResourceGraph {
+        ClusterSpec::new("cluster", 2, 2, 4).build(&mut UidGen::new())
+    }
+
+    #[test]
+    fn whole_graph_roundtrip() {
+        let g = sample_graph();
+        let jgf = Jgf::from_graph(&g);
+        assert_eq!(jgf.nodes.len(), g.num_vertices());
+        assert_eq!(jgf.edges.len(), g.num_edges());
+        let parsed = Jgf::parse(&jgf.dump()).unwrap();
+        assert_eq!(parsed, jgf);
+    }
+
+    #[test]
+    fn subtree_has_attach_edge() {
+        let g = sample_graph();
+        let node0 = g.lookup_path("/cluster0/node0").unwrap();
+        let jgf = Jgf::from_subtree(&g, node0);
+        // node + 2 sockets + 8 cores = 11 vertices, 11 edges (attach incl.)
+        assert_eq!(jgf.nodes.len(), 11);
+        assert_eq!(jgf.edges.len(), 11);
+        assert_eq!(jgf.size(), 22);
+        // attach edge's source (cluster) is not among the nodes
+        let ids: Vec<u64> = jgf.nodes.iter().map(|n| n.uniq_id).collect();
+        assert!(jgf.edges.iter().any(|(s, _)| !ids.contains(s)));
+    }
+
+    #[test]
+    fn build_graph_from_subtree_synthesizes_root() {
+        let g = sample_graph();
+        let node0 = g.lookup_path("/cluster0/node0").unwrap();
+        let jgf = Jgf::from_subtree(&g, node0);
+        let child = jgf.build_graph(true).unwrap();
+        assert!(child.root().is_some());
+        assert_eq!(child.num_vertices(), 12); // 11 + synthetic cluster root
+        assert!(child.lookup_path("/cluster0/node0/socket1/core3").is_some());
+        child.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn build_graph_whole_cluster_no_synth_needed() {
+        let g = sample_graph();
+        let jgf = Jgf::from_graph(&g);
+        let rebuilt = jgf.build_graph(true).unwrap();
+        assert_eq!(rebuilt.num_vertices(), g.num_vertices());
+        assert_eq!(rebuilt.num_edges(), g.num_edges());
+        rebuilt.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn parent_path() {
+        let g = sample_graph();
+        let jgf = Jgf::from_graph(&g);
+        let root = &jgf.nodes[0];
+        assert_eq!(root.parent_path(), None);
+        let leaf = jgf.nodes.last().unwrap();
+        assert!(leaf.parent_path().unwrap().starts_with("/cluster0/node"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Jgf::parse("{}").is_err());
+        assert!(Jgf::parse(r#"{"graph":{"nodes":[{"id":"0"}],"edges":[]}}"#).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! The dynamic directed-graph resource model (paper §3): typed vertices,
+//! containment tree with a path index, JGF interchange, and builders for the
+//! paper's test configurations.
+
+pub mod builder;
+pub mod graph;
+pub mod jgf;
+pub mod types;
+
+pub use graph::{JobId, ResourceGraph, Vertex, VertexId};
+pub use jgf::Jgf;
+pub use types::ResourceType;

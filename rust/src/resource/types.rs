@@ -1,0 +1,84 @@
+//! Resource types for the directed graph model.
+//!
+//! The paper's model is deliberately open-ended — "new resource types and
+//! relationships" must not require a static configuration (§1, §2.2). Common
+//! HPC/cloud types are interned as enum variants for cheap comparison; any
+//! other type round-trips through [`ResourceType::Other`], so a subgraph
+//! arriving from an external provider can introduce types this scheduler has
+//! never seen (e.g. an EC2 availability-zone vertex).
+
+use std::fmt;
+
+/// A resource vertex type. Ordering follows typical containment depth.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ResourceType {
+    Cluster,
+    /// Cloud availability zone — interposed between cluster and node for
+    /// externally provided resources (§4: "EC2 zone vertex").
+    Zone,
+    Rack,
+    Node,
+    Socket,
+    Core,
+    Gpu,
+    /// Memory in 1 GiB units; a vertex per unit (see DESIGN.md on how this
+    /// reproduces Table 3's subgraph sizes).
+    Memory,
+    /// Any type not known at compile time (dynamic heterogeneity).
+    Other(String),
+}
+
+impl ResourceType {
+    pub fn from_name(name: &str) -> ResourceType {
+        match name {
+            "cluster" => ResourceType::Cluster,
+            "zone" => ResourceType::Zone,
+            "rack" => ResourceType::Rack,
+            "node" => ResourceType::Node,
+            "socket" => ResourceType::Socket,
+            "core" => ResourceType::Core,
+            "gpu" => ResourceType::Gpu,
+            "memory" => ResourceType::Memory,
+            other => ResourceType::Other(other.to_string()),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        match self {
+            ResourceType::Cluster => "cluster",
+            ResourceType::Zone => "zone",
+            ResourceType::Rack => "rack",
+            ResourceType::Node => "node",
+            ResourceType::Socket => "socket",
+            ResourceType::Core => "core",
+            ResourceType::Gpu => "gpu",
+            ResourceType::Memory => "memory",
+            ResourceType::Other(s) => s,
+        }
+    }
+}
+
+impl fmt::Display for ResourceType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_known() {
+        for n in ["cluster", "zone", "rack", "node", "socket", "core", "gpu", "memory"] {
+            assert_eq!(ResourceType::from_name(n).name(), n);
+        }
+    }
+
+    #[test]
+    fn roundtrip_dynamic() {
+        let t = ResourceType::from_name("smartnic");
+        assert_eq!(t, ResourceType::Other("smartnic".to_string()));
+        assert_eq!(t.name(), "smartnic");
+    }
+}

@@ -1,0 +1,157 @@
+//! Parent↔child RPC: length-prefixed JSON messages over two transports.
+//!
+//! The paper transmits JGF subgraphs "between parent and child schedulers
+//! via Remote Procedure Call functionality built into the Flux RJMS
+//! framework" (§4). We reproduce the same pairwise request/response pattern
+//! with two interchangeable transports:
+//!
+//! - [`transport::Transport::InProc`] — an in-process duplex channel (the
+//!   paper's *intranode* levels 2–4, which share node1);
+//! - [`transport::Transport::Tcp`] — a localhost TCP socket with optional
+//!   injected per-message + per-byte latency, standing in for the paper's
+//!   IPoIB *internode* hop between level 1 and level 0 (see DESIGN.md
+//!   "Substitutions").
+//!
+//! Framing: 4-byte big-endian length + UTF-8 JSON body.
+
+pub mod transport;
+
+use crate::util::json::{Json, JsonError};
+
+/// A request: method name + params document.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub method: String,
+    pub params: Json,
+}
+
+/// A response: either a result document or an error string.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub result: Result<Json, String>,
+}
+
+impl Request {
+    pub fn new(id: u64, method: &str, params: Json) -> Request {
+        Request {
+            id,
+            method: method.to_string(),
+            params,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("id", Json::from(self.id))
+            .with("method", Json::from(self.method.as_str()))
+            .with("params", self.params.clone())
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Request, JsonError> {
+        Ok(Request {
+            id: doc.u64_field("id")?,
+            method: doc.str_field("method")?.to_string(),
+            params: doc.get("params").cloned().unwrap_or(Json::Null),
+        })
+    }
+}
+
+impl Response {
+    pub fn ok(id: u64, result: Json) -> Response {
+        Response {
+            id,
+            result: Ok(result),
+        }
+    }
+
+    pub fn err(id: u64, msg: impl Into<String>) -> Response {
+        Response {
+            id,
+            result: Err(msg.into()),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj().with("id", Json::from(self.id));
+        match &self.result {
+            Ok(v) => doc.set("result", v.clone()),
+            Err(e) => doc.set("error", Json::from(e.as_str())),
+        };
+        doc
+    }
+
+    pub fn from_json(doc: &Json) -> Result<Response, JsonError> {
+        let id = doc.u64_field("id")?;
+        if let Some(e) = doc.get("error").and_then(Json::as_str) {
+            Ok(Response::err(id, e))
+        } else {
+            Ok(Response::ok(
+                id,
+                doc.get("result")
+                    .cloned()
+                    .ok_or_else(|| JsonError::Schema("response missing result/error".into()))?,
+            ))
+        }
+    }
+}
+
+/// Encode a JSON document into a length-prefixed frame.
+pub fn encode_frame(doc: &Json) -> Vec<u8> {
+    let body = doc.dump().into_bytes();
+    let mut frame = Vec::with_capacity(4 + body.len());
+    frame.extend_from_slice(&(body.len() as u32).to_be_bytes());
+    frame.extend_from_slice(&body);
+    frame
+}
+
+/// Decode one frame from a reader.
+pub fn read_frame(r: &mut impl std::io::Read) -> std::io::Result<Json> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_be_bytes(len_buf) as usize;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let text = String::from_utf8(body)
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+    Json::parse(&text).map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = Request::new(7, "matchgrow", Json::obj().with("x", Json::from(1u64)));
+        let parsed = Request::from_json(&req.to_json()).unwrap();
+        assert_eq!(parsed, req);
+    }
+
+    #[test]
+    fn response_roundtrips_both_arms() {
+        let ok = Response::ok(1, Json::from("fine"));
+        assert_eq!(Response::from_json(&ok.to_json()).unwrap(), ok);
+        let err = Response::err(2, "nope");
+        assert_eq!(Response::from_json(&err.to_json()).unwrap(), err);
+    }
+
+    #[test]
+    fn frame_roundtrip() {
+        let doc = Json::obj().with("k", Json::from("v"));
+        let frame = encode_frame(&doc);
+        let mut cursor = std::io::Cursor::new(frame);
+        let parsed = read_frame(&mut cursor).unwrap();
+        assert_eq!(parsed, doc);
+    }
+
+    #[test]
+    fn frame_rejects_truncation() {
+        let doc = Json::obj().with("k", Json::from("v"));
+        let mut frame = encode_frame(&doc);
+        frame.truncate(frame.len() - 2);
+        let mut cursor = std::io::Cursor::new(frame);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! RPC transports: in-process duplex channels (intranode) and TCP with
+//! injected latency (standing in for the paper's IPoIB internode hop).
+
+use std::io::Write;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::rpc::{encode_frame, read_frame, Request, Response};
+
+/// Shared, state-mutating request handler (one scheduler instance serves
+/// many child connections, so the state sits behind a mutex).
+pub type Handler = Arc<Mutex<dyn FnMut(Request) -> Response + Send>>;
+
+pub fn handler<F: FnMut(Request) -> Response + Send + 'static>(f: F) -> Handler {
+    Arc::new(Mutex::new(f))
+}
+
+/// Synthetic link latency: `base` per message + `per_byte` nanoseconds,
+/// applied to each direction. Calibrated in `hier::topology` so the
+/// internode (L0↔L1) regression slope/intercept dominate the intranode
+/// ones, as in the paper's Table 4.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Latency {
+    pub base: Duration,
+    pub per_byte_ns: f64,
+}
+
+impl Latency {
+    pub fn none() -> Latency {
+        Latency::default()
+    }
+
+    pub fn of(base_us: u64, per_byte_ns: f64) -> Latency {
+        Latency {
+            base: Duration::from_micros(base_us),
+            per_byte_ns,
+        }
+    }
+
+    fn apply(&self, bytes: usize) {
+        let extra = Duration::from_nanos((self.per_byte_ns * bytes as f64) as u64);
+        let total = self.base + extra;
+        if total > Duration::ZERO {
+            std::thread::sleep(total);
+        }
+    }
+}
+
+/// A client connection a child holds to its parent.
+pub trait Conn: Send {
+    fn call(&mut self, req: &Request) -> std::io::Result<Response>;
+}
+
+// ---------------------------------------------------------------------------
+// In-process transport
+// ---------------------------------------------------------------------------
+
+enum InProcMsg {
+    Call(Request, Sender<Response>),
+    Shutdown,
+}
+
+/// Client half of the in-process transport.
+pub struct InProcConn {
+    tx: Sender<InProcMsg>,
+}
+
+impl Conn for InProcConn {
+    fn call(&mut self, req: &Request) -> std::io::Result<Response> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(InProcMsg::Call(req.clone(), reply_tx))
+            .map_err(|_| std::io::Error::new(std::io::ErrorKind::BrokenPipe, "server gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| std::io::Error::new(std::io::ErrorKind::BrokenPipe, "server gone"))
+    }
+}
+
+/// Server handle; dropping it does not stop the thread — call `shutdown`.
+pub struct InProcServer {
+    tx: Sender<InProcMsg>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl InProcServer {
+    /// Spawn a server thread around `handler`; `connect` yields clients.
+    pub fn spawn(h: Handler) -> InProcServer {
+        let (tx, rx): (Sender<InProcMsg>, Receiver<InProcMsg>) = channel();
+        let thread = std::thread::spawn(move || {
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    InProcMsg::Call(req, reply) => {
+                        let resp = (h.lock().expect("handler poisoned"))(req);
+                        let _ = reply.send(resp);
+                    }
+                    InProcMsg::Shutdown => break,
+                }
+            }
+        });
+        InProcServer {
+            tx,
+            thread: Some(thread),
+        }
+    }
+
+    pub fn connect(&self) -> InProcConn {
+        InProcConn {
+            tx: self.tx.clone(),
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(InProcMsg::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP transport (simulated internode link)
+// ---------------------------------------------------------------------------
+
+/// Client half over TCP. Latency is applied per direction on the client so
+/// measured round-trips include the simulated link cost.
+pub struct TcpConn {
+    stream: TcpStream,
+    latency: Latency,
+}
+
+impl TcpConn {
+    pub fn connect(addr: SocketAddr, latency: Latency) -> std::io::Result<TcpConn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(TcpConn { stream, latency })
+    }
+}
+
+impl Conn for TcpConn {
+    fn call(&mut self, req: &Request) -> std::io::Result<Response> {
+        let frame = encode_frame(&req.to_json());
+        self.latency.apply(frame.len());
+        self.stream.write_all(&frame)?;
+        let doc = read_frame(&mut self.stream)?;
+        let resp = Response::from_json(&doc)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        // response-direction latency (frame length approximated by re-encode)
+        self.latency.apply(encode_frame(&resp.to_json()).len());
+        Ok(resp)
+    }
+}
+
+/// TCP server: accepts connections, one frame-loop thread each.
+pub struct TcpServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    pub fn spawn(h: Handler) -> std::io::Result<TcpServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            listener
+                .set_nonblocking(true)
+                .expect("nonblocking listener");
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let h = h.clone();
+                        // detached: a connection thread exits when its peer
+                        // closes; joining here would deadlock shutdown while
+                        // clients are still connected
+                        std::thread::spawn(move || serve_conn(stream, h));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(TcpServer {
+            addr,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, h: Handler) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        let doc = match read_frame(&mut stream) {
+            Ok(d) => d,
+            Err(_) => break, // peer closed
+        };
+        let resp = match Request::from_json(&doc) {
+            Ok(req) => (h.lock().expect("handler poisoned"))(req),
+            Err(e) => Response::err(0, format!("bad request: {e}")),
+        };
+        if stream.write_all(&encode_frame(&resp.to_json())).is_err() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn echo_handler() -> Handler {
+        handler(|req: Request| Response::ok(req.id, req.params))
+    }
+
+    #[test]
+    fn inproc_roundtrip() {
+        let server = InProcServer::spawn(echo_handler());
+        let mut conn = server.connect();
+        let resp = conn
+            .call(&Request::new(1, "echo", Json::from("hello")))
+            .unwrap();
+        assert_eq!(resp.result.unwrap().as_str(), Some("hello"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn inproc_many_clients_share_state() {
+        let counter = handler({
+            let mut n = 0u64;
+            move |req: Request| {
+                n += 1;
+                Response::ok(req.id, Json::from(n))
+            }
+        });
+        let server = InProcServer::spawn(counter);
+        let mut c1 = server.connect();
+        let mut c2 = server.connect();
+        c1.call(&Request::new(1, "inc", Json::Null)).unwrap();
+        let r = c2.call(&Request::new(2, "inc", Json::Null)).unwrap();
+        assert_eq!(r.result.unwrap().as_u64(), Some(2));
+        server.shutdown();
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let server = TcpServer::spawn(echo_handler()).unwrap();
+        let mut conn = TcpConn::connect(server.addr, Latency::none()).unwrap();
+        for i in 0..5 {
+            let resp = conn
+                .call(&Request::new(i, "echo", Json::from(i)))
+                .unwrap();
+            assert_eq!(resp.result.unwrap().as_u64(), Some(i));
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn tcp_latency_injection_slows_calls() {
+        let server = TcpServer::spawn(echo_handler()).unwrap();
+        let mut fast = TcpConn::connect(server.addr, Latency::none()).unwrap();
+        let mut slow =
+            TcpConn::connect(server.addr, Latency::of(2000, 0.0)).unwrap();
+        let req = Request::new(1, "echo", Json::from("x"));
+        let (_, fast_s) = crate::util::metrics::time_it(|| fast.call(&req).unwrap());
+        let (_, slow_s) = crate::util::metrics::time_it(|| slow.call(&req).unwrap());
+        assert!(slow_s > fast_s + 0.003, "fast={fast_s} slow={slow_s}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn tcp_handler_error_propagates() {
+        let server = TcpServer::spawn(handler(|req: Request| {
+            Response::err(req.id, "denied")
+        }))
+        .unwrap();
+        let mut conn = TcpConn::connect(server.addr, Latency::none()).unwrap();
+        let resp = conn.call(&Request::new(9, "x", Json::Null)).unwrap();
+        assert_eq!(resp.result.unwrap_err(), "denied");
+        server.shutdown();
+    }
+}

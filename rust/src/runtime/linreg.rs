@@ -1,0 +1,162 @@
+//! XLA-backed linear regression: the AOT `linreg_fit` / `linreg_predict`
+//! artifacts (normal-equations Pallas kernel) used to fit the paper's §6
+//! component models from rust. The rust-native `stats::ols` is the oracle
+//! these are tested against.
+
+use crate::runtime::{RuntimeError, TensorF32, XlaHandle};
+use crate::util::stats::LinFit;
+
+/// AOT sample capacity (python/compile/kernels/linreg.py NSAMP).
+pub const NSAMP: usize = 1024;
+
+pub struct XlaLinReg {
+    handle: &'static XlaHandle,
+}
+
+impl XlaLinReg {
+    pub fn load() -> Result<XlaLinReg, RuntimeError> {
+        let handle = XlaHandle::global();
+        // probe both artifacts so missing files fail here, not mid-fit
+        handle.execute(
+            "linreg_predict",
+            vec![
+                TensorF32::new(vec![0.0; NSAMP], vec![NSAMP as i64]),
+                TensorF32::new(vec![0.0, 0.0], vec![2]),
+            ],
+        )?;
+        handle.execute(
+            "linreg_fit",
+            vec![
+                TensorF32::new(vec![0.0; NSAMP], vec![NSAMP as i64]),
+                TensorF32::new(vec![0.0; NSAMP], vec![NSAMP as i64]),
+                TensorF32::new(vec![0.0; NSAMP], vec![NSAMP as i64]),
+            ],
+        )?;
+        Ok(XlaLinReg { handle })
+    }
+
+    /// Weighted-OLS fit of `y = beta x + beta0`. Samples beyond NSAMP are
+    /// rejected; fewer are zero-weight padded (padding rows are inert — a
+    /// property the python tests pin).
+    pub fn fit(&self, xs: &[f64], ys: &[f64]) -> Result<LinFit, RuntimeError> {
+        assert_eq!(xs.len(), ys.len());
+        assert!(
+            xs.len() <= NSAMP,
+            "sample count {} exceeds AOT capacity {NSAMP}",
+            xs.len()
+        );
+        let mut x = vec![0f32; NSAMP];
+        let mut y = vec![0f32; NSAMP];
+        let mut w = vec![0f32; NSAMP];
+        for (i, (&xi, &yi)) in xs.iter().zip(ys).enumerate() {
+            x[i] = xi as f32;
+            y[i] = yi as f32;
+            w[i] = 1.0;
+        }
+        let out = self.handle.execute(
+            "linreg_fit",
+            vec![
+                TensorF32::new(x, vec![NSAMP as i64]),
+                TensorF32::new(y, vec![NSAMP as i64]),
+                TensorF32::new(w, vec![NSAMP as i64]),
+            ],
+        )?;
+        let beta = out[0]
+            .as_f32()
+            .ok_or_else(|| RuntimeError::Xla("beta not f32".into()))?;
+        Ok(LinFit {
+            beta0: beta[0] as f64,
+            beta: beta[1] as f64,
+        })
+    }
+
+    /// Evaluate a fitted model over up to NSAMP points.
+    pub fn predict(&self, xs: &[f64], fit: &LinFit) -> Result<Vec<f64>, RuntimeError> {
+        assert!(xs.len() <= NSAMP);
+        let mut x = vec![0f32; NSAMP];
+        for (i, &xi) in xs.iter().enumerate() {
+            x[i] = xi as f32;
+        }
+        let beta = vec![fit.beta0 as f32, fit.beta as f32];
+        let out = self.handle.execute(
+            "linreg_predict",
+            vec![
+                TensorF32::new(x, vec![NSAMP as i64]),
+                TensorF32::new(beta, vec![2]),
+            ],
+        )?;
+        let ys = out[0]
+            .as_f32()
+            .ok_or_else(|| RuntimeError::Xla("prediction not f32".into()))?;
+        Ok(ys.iter().take(xs.len()).map(|&v| v as f64).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::ols;
+
+    #[test]
+    fn xla_fit_matches_native_ols() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = XlaLinReg::load().unwrap();
+        let mut rng = Rng::new(7);
+        // the §6 scale: x = subgraph sizes (tens..thousands), y = seconds
+        let xs: Vec<f64> = (0..200).map(|_| rng.uniform(30.0, 4500.0)).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&x| 9.08e-6 * x + 6.3e-4 + rng.normal(0.0, 1e-5))
+            .collect();
+        let got = reg.fit(&xs, &ys).unwrap();
+        let want = ols(&xs, &ys);
+        assert!(
+            (got.beta - want.beta).abs() / want.beta < 1e-2,
+            "beta {} vs {}",
+            got.beta,
+            want.beta
+        );
+        assert!(
+            (got.beta0 - want.beta0).abs() < 1e-4,
+            "beta0 {} vs {}",
+            got.beta0,
+            want.beta0
+        );
+    }
+
+    #[test]
+    fn xla_predict_is_linear() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = XlaLinReg::load().unwrap();
+        let fit = LinFit {
+            beta: 2.0,
+            beta0: 1.0,
+        };
+        let ys = reg.predict(&[0.0, 1.0, 10.0], &fit).unwrap();
+        assert_eq!(ys.len(), 3);
+        assert!((ys[0] - 1.0).abs() < 1e-6);
+        assert!((ys[1] - 3.0).abs() < 1e-6);
+        assert!((ys[2] - 21.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn exact_line_recovered() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let reg = XlaLinReg::load().unwrap();
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 3.5 * x - 2.0).collect();
+        let fit = reg.fit(&xs, &ys).unwrap();
+        assert!((fit.beta - 3.5).abs() < 1e-3);
+        assert!((fit.beta0 + 2.0).abs() < 1e-2);
+    }
+}

@@ -1,0 +1,177 @@
+//! PJRT runtime: load and execute the AOT-compiled XLA artifacts from the
+//! rust coordinator — the L3↔L2 bridge, with Python never on the request
+//! path.
+//!
+//! Artifacts are HLO **text** (`artifacts/*.hlo.txt`, produced by
+//! `python/compile/aot.py`); text is the interchange format because the
+//! image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
+//! protos. Each artifact is compiled once per process on a shared PJRT CPU
+//! client and then executed with concrete literals.
+
+pub mod linreg;
+pub mod scorer;
+pub mod service;
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+
+pub use service::{OutBuf, TensorF32, XlaHandle};
+
+thread_local! {
+    /// Per-thread PJRT CPU client: the xla crate's client holds `Rc`s and
+    /// cannot cross threads. In practice only the `service` thread creates
+    /// one; tests that use [`Artifact`] directly get their own.
+    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact not found: {0} (run `make artifacts`)")]
+    MissingArtifact(PathBuf),
+    #[error("xla error: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> RuntimeError {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// Run `f` with this thread's PJRT client (created on first use).
+fn with_client<T>(
+    f: impl FnOnce(&xla::PjRtClient) -> Result<T, RuntimeError>,
+) -> Result<T, RuntimeError> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(xla::PjRtClient::cpu()?);
+        }
+        f(slot.as_ref().expect("just initialized"))
+    })
+}
+
+/// Default artifacts directory: `$REPRO_ARTIFACTS`, else `artifacts/`
+/// relative to the crate root (works from `cargo test`/`cargo bench`), else
+/// the current directory.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("REPRO_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest.exists() {
+        return manifest;
+    }
+    PathBuf::from("artifacts")
+}
+
+/// Whether the AOT artifacts have been built (tests skip XLA paths
+/// gracefully when not).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("fleet_select.hlo.txt").exists()
+        && artifacts_dir().join("linreg_fit.hlo.txt").exists()
+        && artifacts_dir().join("linreg_predict.hlo.txt").exists()
+}
+
+/// A compiled artifact: HLO text loaded, compiled once, executed many times.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Artifact {
+    /// Load `<name>.hlo.txt` from the artifacts directory.
+    pub fn load(name: &str) -> Result<Artifact, RuntimeError> {
+        Self::load_from(&artifacts_dir().join(format!("{name}.hlo.txt")), name)
+    }
+
+    pub fn load_from(path: &Path, name: &str) -> Result<Artifact, RuntimeError> {
+        if !path.exists() {
+            return Err(RuntimeError::MissingArtifact(path.to_path_buf()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 artifact path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|c| Ok(c.compile(&comp)?))?;
+        Ok(Artifact {
+            exe,
+            name: name.to_string(),
+        })
+    }
+
+    /// Execute with input literals; returns the flattened outputs of the
+    /// single result tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given shape from row-major data.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal, RuntimeError> {
+    let n: i64 = dims.iter().product();
+    assert_eq!(n as usize, data.len(), "literal shape mismatch");
+    if dims.len() == 1 {
+        Ok(xla::Literal::vec1(data))
+    } else {
+        Ok(xla::Literal::vec1(data).reshape(dims)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifacts_dir_resolves() {
+        let d = artifacts_dir();
+        assert!(d.ends_with("artifacts"));
+    }
+
+    #[test]
+    fn missing_artifact_is_reported() {
+        match Artifact::load("definitely_not_there") {
+            Err(RuntimeError::MissingArtifact(_)) => {}
+            Err(e) => panic!("wrong error: {e}"),
+            Ok(_) => panic!("load of missing artifact succeeded"),
+        }
+    }
+
+    #[test]
+    fn literal_shape_checked() {
+        let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(lit.element_count(), 4);
+    }
+
+    #[test]
+    fn execute_fleet_select_roundtrip() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let art = Artifact::load("fleet_select").unwrap();
+        // B=8 requests, N=512 candidates: request 0 wants 2 cpus; candidate
+        // 3 offers exactly [2,0,0] at the lowest price
+        let mut req = vec![0f32; 8 * 3];
+        req[0] = 2.0;
+        let mut cand = vec![0f32; 512 * 3];
+        let mut price = vec![1000f32; 512];
+        cand[3 * 3] = 2.0;
+        price[3] = 1.0;
+        // all other candidates are infeasible for request 0 (0 cpus < 2)
+        let out = art
+            .execute(&[
+                literal_f32(&req, &[8, 3]).unwrap(),
+                literal_f32(&cand, &[512, 3]).unwrap(),
+                literal_f32(&price, &[512]).unwrap(),
+            ])
+            .unwrap();
+        assert_eq!(out.len(), 3);
+        let best = out[1].to_vec::<i32>().unwrap();
+        let feas = out[2].to_vec::<i32>().unwrap();
+        assert_eq!(best[0], 3);
+        assert_eq!(feas[0], 1);
+    }
+}

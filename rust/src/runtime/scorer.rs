@@ -1,0 +1,197 @@
+//! XLA-backed fleet instance selector: the AOT `fleet_select` artifact
+//! (L2 jax + L1 Pallas scoring kernel) driven from the coordinator's EC2
+//! decision path. Drop-in [`InstanceSelector`] replacement for the
+//! rust-native reference — tests assert the two agree.
+
+use crate::external::ec2::InstanceSelector;
+use crate::runtime::{RuntimeError, TensorF32, XlaHandle};
+
+/// AOT shapes, fixed at lowering time (python/compile/kernels constants).
+pub const BATCH: usize = 8;
+pub const NCAND: usize = 512;
+pub const FEATS: usize = 3;
+
+pub struct XlaSelector {
+    handle: &'static XlaHandle,
+}
+
+impl XlaSelector {
+    pub fn load() -> Result<XlaSelector, RuntimeError> {
+        let handle = XlaHandle::global();
+        // fail fast if the artifact is absent: probe with a zero batch
+        handle.execute(
+            "fleet_select",
+            vec![
+                TensorF32::new(vec![0.0; BATCH * FEATS], vec![BATCH as i64, FEATS as i64]),
+                TensorF32::new(vec![0.0; NCAND * FEATS], vec![NCAND as i64, FEATS as i64]),
+                TensorF32::new(vec![1.0; NCAND], vec![NCAND as i64]),
+            ],
+        )?;
+        Ok(XlaSelector { handle })
+    }
+
+    /// Score one padded batch; returns (best index, feasible) per row.
+    fn run_batch(
+        &self,
+        req: &[f32],   // BATCH*FEATS
+        cand: &[f32],  // NCAND*FEATS
+        price: &[f32], // NCAND
+    ) -> Result<Vec<(i32, bool)>, RuntimeError> {
+        let out = self.handle.execute(
+            "fleet_select",
+            vec![
+                TensorF32::new(req.to_vec(), vec![BATCH as i64, FEATS as i64]),
+                TensorF32::new(cand.to_vec(), vec![NCAND as i64, FEATS as i64]),
+                TensorF32::new(price.to_vec(), vec![NCAND as i64]),
+            ],
+        )?;
+        let best = out[1]
+            .as_i32()
+            .ok_or_else(|| RuntimeError::Xla("best idx not i32".into()))?;
+        let feas = out[2]
+            .as_i32()
+            .ok_or_else(|| RuntimeError::Xla("feasible not i32".into()))?;
+        Ok(best
+            .iter()
+            .zip(feas)
+            .map(|(&b, &f)| (b, f != 0))
+            .collect())
+    }
+}
+
+impl InstanceSelector for XlaSelector {
+    fn select(
+        &mut self,
+        requests: &[[f64; 3]],
+        candidates: &[[f64; 3]],
+        prices: &[f64],
+    ) -> Vec<Option<usize>> {
+        assert!(
+            candidates.len() <= NCAND,
+            "catalog exceeds AOT candidate capacity"
+        );
+        // pad candidates with all-zero rows at max price: a zero row is
+        // infeasible for any request demanding >0 of some feature, and its
+        // high price keeps it from winning for zero-demand requests
+        let mut cand = vec![0f32; NCAND * FEATS];
+        let mut price = vec![f32::MAX / 2.0; NCAND];
+        let max_price = prices.iter().cloned().fold(1.0, f64::max) as f32;
+        for (i, c) in candidates.iter().enumerate() {
+            for f in 0..FEATS {
+                cand[i * FEATS + f] = c[f] as f32;
+            }
+            price[i] = prices[i] as f32;
+        }
+        for p in price.iter_mut().skip(candidates.len()) {
+            *p = max_price * 1.0e6; // never selected over a real candidate
+        }
+        let mut out = Vec::with_capacity(requests.len());
+        for chunk in requests.chunks(BATCH) {
+            let mut req = vec![0f32; BATCH * FEATS];
+            for (i, r) in chunk.iter().enumerate() {
+                for f in 0..FEATS {
+                    req[i * FEATS + f] = r[f] as f32;
+                }
+            }
+            match self.run_batch(&req, &cand, &price) {
+                Ok(rows) => {
+                    for (i, (best, feas)) in rows.into_iter().enumerate().take(chunk.len()) {
+                        let idx = best as usize;
+                        // guard: a padding candidate can only win when the
+                        // request was itself padding — treat as infeasible
+                        if feas && idx < candidates.len() {
+                            out.push(Some(idx));
+                        } else {
+                            out.push(None);
+                        }
+                        let _ = i;
+                    }
+                }
+                Err(e) => {
+                    // fail closed: no selection rather than a wrong one
+                    eprintln!("XlaSelector: execution failed: {e}");
+                    out.extend(std::iter::repeat(None).take(chunk.len()));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::external::ec2::{InstanceSelector, NativeSelector, EC2_CATALOG};
+    use crate::util::rng::Rng;
+
+    fn catalog_inputs() -> (Vec<[f64; 3]>, Vec<f64>) {
+        (
+            EC2_CATALOG.iter().map(|t| t.features()).collect(),
+            EC2_CATALOG
+                .iter()
+                .map(|t| t.price_tenths_cent as f64)
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn xla_agrees_with_native_on_catalog() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (cands, prices) = catalog_inputs();
+        let mut rng = Rng::new(42);
+        let requests: Vec<[f64; 3]> = (0..24)
+            .map(|_| {
+                [
+                    rng.range(1, 16) as f64,
+                    rng.range(1, 64) as f64,
+                    if rng.bool_with(0.3) {
+                        rng.range(1, 4) as f64
+                    } else {
+                        0.0
+                    },
+                ]
+            })
+            .collect();
+        let mut xla = XlaSelector::load().unwrap();
+        let mut native = NativeSelector;
+        let got = xla.select(&requests, &cands, &prices);
+        let want = native.select(&requests, &cands, &prices);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn infeasible_requests_yield_none() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let (cands, prices) = catalog_inputs();
+        let mut xla = XlaSelector::load().unwrap();
+        let got = xla.select(&[[4096.0, 0.0, 0.0]], &cands, &prices);
+        assert_eq!(got, vec![None]);
+    }
+
+    #[test]
+    fn full_fleet_catalog_fits() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let catalog = crate::external::fleet::full_catalog();
+        let cands: Vec<[f64; 3]> = catalog.iter().map(|t| t.features()).collect();
+        let prices: Vec<f64> = catalog
+            .iter()
+            .map(|t| t.price_tenths_cent as f64)
+            .collect();
+        let mut xla = XlaSelector::load().unwrap();
+        let mut native = NativeSelector;
+        let requests = vec![[2.0, 4.0, 0.0], [16.0, 64.0, 2.0]];
+        assert_eq!(
+            xla.select(&requests, &cands, &prices),
+            native.select(&requests, &cands, &prices)
+        );
+    }
+}

@@ -1,0 +1,199 @@
+//! XLA execution service: a dedicated thread owning the (non-`Send`) PJRT
+//! client and compiled artifacts, driven through channels by `Send` handles.
+//!
+//! The xla crate's client/executable types hold `Rc`s, so they cannot cross
+//! threads; the coordinator instead runs one XLA service thread per process
+//! ("one compiled executable per model variant", compiled once at first
+//! use) and the scheduler threads submit execution jobs.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+
+use once_cell::sync::OnceCell;
+
+use crate::runtime::{literal_f32, Artifact, RuntimeError};
+
+/// One tensor crossing the service boundary.
+#[derive(Debug, Clone)]
+pub struct TensorF32 {
+    pub data: Vec<f32>,
+    pub dims: Vec<i64>,
+}
+
+impl TensorF32 {
+    pub fn new(data: Vec<f32>, dims: Vec<i64>) -> TensorF32 {
+        TensorF32 { data, dims }
+    }
+}
+
+/// A decoded output buffer.
+#[derive(Debug, Clone)]
+pub enum OutBuf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl OutBuf {
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            OutBuf::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            OutBuf::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+struct Job {
+    artifact: String,
+    inputs: Vec<TensorF32>,
+    reply: Sender<Result<Vec<OutBuf>, RuntimeError>>,
+}
+
+/// `Send` handle to the service thread.
+pub struct XlaHandle {
+    tx: Mutex<Sender<Job>>,
+}
+
+static SERVICE: OnceCell<XlaHandle> = OnceCell::new();
+
+impl XlaHandle {
+    /// The process-wide service (spawned on first use).
+    pub fn global() -> &'static XlaHandle {
+        SERVICE.get_or_init(|| {
+            let (tx, rx) = channel::<Job>();
+            std::thread::Builder::new()
+                .name("xla-service".into())
+                .spawn(move || {
+                    let mut artifacts: HashMap<String, Artifact> = HashMap::new();
+                    while let Ok(job) = rx.recv() {
+                        let result = run_job(&mut artifacts, &job);
+                        let _ = job.reply.send(result);
+                    }
+                })
+                .expect("spawn xla service");
+            XlaHandle { tx: Mutex::new(tx) }
+        })
+    }
+
+    /// Execute `artifact` (loaded + compiled on first use) with the given
+    /// inputs; blocks until the service replies.
+    pub fn execute(
+        &self,
+        artifact: &str,
+        inputs: Vec<TensorF32>,
+    ) -> Result<Vec<OutBuf>, RuntimeError> {
+        let (reply_tx, reply_rx) = channel();
+        {
+            let tx = self.tx.lock().expect("service sender poisoned");
+            tx.send(Job {
+                artifact: artifact.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| RuntimeError::Xla("xla service thread died".into()))?;
+        }
+        reply_rx
+            .recv()
+            .map_err(|_| RuntimeError::Xla("xla service dropped reply".into()))?
+    }
+}
+
+fn run_job(
+    artifacts: &mut HashMap<String, Artifact>,
+    job: &Job,
+) -> Result<Vec<OutBuf>, RuntimeError> {
+    if !artifacts.contains_key(&job.artifact) {
+        let art = Artifact::load(&job.artifact)?;
+        artifacts.insert(job.artifact.clone(), art);
+    }
+    let art = artifacts.get(&job.artifact).expect("just inserted");
+    let mut literals = Vec::with_capacity(job.inputs.len());
+    for t in &job.inputs {
+        literals.push(literal_f32(&t.data, &t.dims)?);
+    }
+    let outs = art.execute(&literals)?;
+    let mut decoded = Vec::with_capacity(outs.len());
+    for lit in outs {
+        let ty = lit.ty()?;
+        let buf = match ty {
+            xla::ElementType::S32 => OutBuf::I32(lit.to_vec::<i32>()?),
+            xla::ElementType::Pred => OutBuf::I32(
+                lit.convert(xla::PrimitiveType::S32)?.to_vec::<i32>()?,
+            ),
+            _ => OutBuf::F32(lit.to_vec::<f32>()?),
+        };
+        decoded.push(buf);
+    }
+    Ok(decoded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn service_reports_missing_artifact() {
+        let err = XlaHandle::global()
+            .execute("no_such_artifact", vec![])
+            .unwrap_err();
+        assert!(err.to_string().contains("artifact not found"));
+    }
+
+    #[test]
+    fn service_survives_errors_and_recovers() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let h = XlaHandle::global();
+        // first a failing job...
+        assert!(h.execute("nope", vec![]).is_err());
+        // ...then a good one on the same thread
+        let out = h
+            .execute(
+                "linreg_predict",
+                vec![
+                    TensorF32::new(vec![0.0; 1024], vec![1024]),
+                    TensorF32::new(vec![5.0, 2.0], vec![2]),
+                ],
+            )
+            .unwrap();
+        let ys = out[0].as_f32().unwrap();
+        assert!((ys[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn handle_usable_from_many_threads() {
+        if !crate::runtime::artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let threads: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let out = XlaHandle::global()
+                        .execute(
+                            "linreg_predict",
+                            vec![
+                                TensorF32::new(vec![i as f32; 1024], vec![1024]),
+                                TensorF32::new(vec![1.0, 2.0], vec![2]),
+                            ],
+                        )
+                        .unwrap();
+                    out[0].as_f32().unwrap()[0]
+                })
+            })
+            .collect();
+        for (i, t) in threads.into_iter().enumerate() {
+            let v = t.join().unwrap();
+            assert!((v - (1.0 + 2.0 * i as f32)).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! Allocation bookkeeping: which vertices belong to which jobs.
+//!
+//! The paper's MatchGrow differs from MatchAllocate only in that "the new
+//! resources are given the allocation metadata of a running job allocation"
+//! (§5.1) — so grow extends an existing [`JobId`]'s vertex set instead of
+//! minting a new one.
+
+use std::collections::HashMap;
+
+use crate::resource::graph::{JobId, ResourceGraph, VertexId};
+use crate::sched::pruning::{bubble_delta, PruneConfig};
+
+/// Lifecycle state of a job allocation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Running,
+    Completed,
+}
+
+/// One job's allocation record.
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub job: JobId,
+    pub vertices: Vec<VertexId>,
+    pub state: JobState,
+}
+
+/// Allocation table for one scheduler instance.
+#[derive(Debug, Default, Clone)]
+pub struct AllocTable {
+    jobs: HashMap<JobId, Allocation>,
+    next_job: u64,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum AllocError {
+    #[error("job {0:?} not found")]
+    NoSuchJob(JobId),
+    #[error("vertex {0:?} already allocated")]
+    AlreadyAllocated(VertexId),
+    #[error("job {0:?} is not running")]
+    NotRunning(JobId),
+}
+
+impl AllocTable {
+    pub fn new() -> AllocTable {
+        AllocTable::default()
+    }
+
+    pub fn fresh_job_id(&mut self) -> JobId {
+        let id = JobId(self.next_job);
+        self.next_job += 1;
+        id
+    }
+
+    pub fn get(&self, job: JobId) -> Option<&Allocation> {
+        self.jobs.get(&job)
+    }
+
+    pub fn running_jobs(&self) -> impl Iterator<Item = &Allocation> {
+        self.jobs.values().filter(|a| a.state == JobState::Running)
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Mark `selection` allocated to a *new* job. Updates vertex alloc
+    /// metadata and pruning aggregates (ancestor-local, O(k·depth)).
+    pub fn allocate(
+        &mut self,
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        selection: Vec<VertexId>,
+    ) -> Result<JobId, AllocError> {
+        let job = self.fresh_job_id();
+        self.mark(g, cfg, job, selection.clone())?;
+        self.jobs.insert(
+            job,
+            Allocation {
+                job,
+                vertices: selection,
+                state: JobState::Running,
+            },
+        );
+        Ok(job)
+    }
+
+    /// Grow an existing running job by `selection` (MatchGrow semantics).
+    pub fn grow(
+        &mut self,
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        job: JobId,
+        selection: Vec<VertexId>,
+    ) -> Result<(), AllocError> {
+        match self.jobs.get(&job) {
+            None => return Err(AllocError::NoSuchJob(job)),
+            Some(a) if a.state != JobState::Running => {
+                return Err(AllocError::NotRunning(job))
+            }
+            Some(_) => {}
+        }
+        self.mark(g, cfg, job, selection.clone())?;
+        self.jobs
+            .get_mut(&job)
+            .expect("checked above")
+            .vertices
+            .extend(selection);
+        Ok(())
+    }
+
+    fn mark(
+        &mut self,
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        job: JobId,
+        selection: Vec<VertexId>,
+    ) -> Result<(), AllocError> {
+        // validate first so failure leaves no partial marks
+        for &vid in &selection {
+            if g.vertex(vid).alloc.is_allocated() {
+                return Err(AllocError::AlreadyAllocated(vid));
+            }
+        }
+        for vid in selection {
+            g.vertex_mut(vid).alloc.jobs.push(job);
+            bubble_delta(g, vid, cfg, -1);
+        }
+        Ok(())
+    }
+
+    /// Release a job's resources (shrink-to-zero / completion).
+    pub fn free(
+        &mut self,
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        job: JobId,
+    ) -> Result<usize, AllocError> {
+        let alloc = self.jobs.get_mut(&job).ok_or(AllocError::NoSuchJob(job))?;
+        if alloc.state != JobState::Running {
+            return Err(AllocError::NotRunning(job));
+        }
+        alloc.state = JobState::Completed;
+        let vertices = std::mem::take(&mut alloc.vertices);
+        let n = vertices.len();
+        for vid in vertices {
+            if g.vertex(vid).dead {
+                continue; // vertex left with a removed subgraph
+            }
+            g.vertex_mut(vid).alloc.jobs.retain(|&j| j != job);
+            if !g.vertex(vid).alloc.is_allocated() {
+                bubble_delta(g, vid, cfg, 1);
+            }
+        }
+        Ok(n)
+    }
+
+    /// Release a subset of a running job's vertices (partial shrink).
+    pub fn shrink(
+        &mut self,
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        job: JobId,
+        victims: &[VertexId],
+    ) -> Result<(), AllocError> {
+        let alloc = self.jobs.get_mut(&job).ok_or(AllocError::NoSuchJob(job))?;
+        if alloc.state != JobState::Running {
+            return Err(AllocError::NotRunning(job));
+        }
+        alloc.vertices.retain(|v| !victims.contains(v));
+        for &vid in victims {
+            if g.vertex(vid).dead {
+                continue;
+            }
+            g.vertex_mut(vid).alloc.jobs.retain(|&j| j != job);
+            if !g.vertex(vid).alloc.is_allocated() {
+                bubble_delta(g, vid, cfg, 1);
+            }
+        }
+        Ok(())
+    }
+
+    /// Conservation check for tests: every vertex's job list agrees with the
+    /// table and vice versa.
+    pub fn check_consistency(&self, g: &ResourceGraph) -> Result<(), String> {
+        for a in self.jobs.values() {
+            if a.state != JobState::Running {
+                continue;
+            }
+            for &vid in &a.vertices {
+                if g.vertex(vid).dead {
+                    return Err(format!("job {:?} holds dead vertex", a.job));
+                }
+                if !g.vertex(vid).alloc.jobs.contains(&a.job) {
+                    return Err(format!(
+                        "vertex {} missing job {:?}",
+                        g.vertex(vid).path,
+                        a.job
+                    ));
+                }
+            }
+        }
+        for vid in g.iter_live() {
+            for j in &g.vertex(vid).alloc.jobs {
+                let Some(a) = self.jobs.get(j) else {
+                    return Err(format!("vertex {} has unknown job", g.vertex(vid).path));
+                };
+                if !a.vertices.contains(&vid) {
+                    return Err(format!(
+                        "table for {:?} missing vertex {}",
+                        j,
+                        g.vertex(vid).path
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::builder::{ClusterSpec, UidGen};
+    use crate::resource::types::ResourceType;
+    use crate::sched::pruning::{check_aggregates, init_aggregates};
+
+    fn setup() -> (ResourceGraph, AllocTable, PruneConfig) {
+        let mut g = ClusterSpec::new("c", 1, 1, 4).build(&mut UidGen::new());
+        let cfg = PruneConfig::default();
+        init_aggregates(&mut g, &cfg);
+        (g, AllocTable::new(), cfg)
+    }
+
+    #[test]
+    fn allocate_then_free_restores() {
+        let (mut g, mut t, cfg) = setup();
+        let cores: Vec<_> = (0..2)
+            .map(|i| g.lookup_path(&format!("/c0/node0/socket0/core{i}")).unwrap())
+            .collect();
+        let job = t.allocate(&mut g, &cfg, cores.clone()).unwrap();
+        assert!(g.vertex(cores[0]).alloc.is_allocated());
+        let root = g.root().unwrap();
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 2);
+        t.check_consistency(&g).unwrap();
+        check_aggregates(&g, &cfg).unwrap();
+
+        let n = t.free(&mut g, &cfg, job).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 4);
+        assert!(!g.vertex(cores[0]).alloc.is_allocated());
+        check_aggregates(&g, &cfg).unwrap();
+    }
+
+    #[test]
+    fn double_allocation_rejected() {
+        let (mut g, mut t, cfg) = setup();
+        let core = g.lookup_path("/c0/node0/socket0/core0").unwrap();
+        t.allocate(&mut g, &cfg, vec![core]).unwrap();
+        assert!(t.allocate(&mut g, &cfg, vec![core]).is_err());
+        // failed alloc left no marks on other vertices
+        t.check_consistency(&g).unwrap();
+    }
+
+    #[test]
+    fn grow_extends_same_job() {
+        let (mut g, mut t, cfg) = setup();
+        let c0 = g.lookup_path("/c0/node0/socket0/core0").unwrap();
+        let c1 = g.lookup_path("/c0/node0/socket0/core1").unwrap();
+        let job = t.allocate(&mut g, &cfg, vec![c0]).unwrap();
+        t.grow(&mut g, &cfg, job, vec![c1]).unwrap();
+        assert_eq!(t.get(job).unwrap().vertices.len(), 2);
+        assert!(g.vertex(c1).alloc.jobs.contains(&job));
+        t.check_consistency(&g).unwrap();
+        check_aggregates(&g, &cfg).unwrap();
+    }
+
+    #[test]
+    fn grow_unknown_job_fails() {
+        let (mut g, mut t, cfg) = setup();
+        let c0 = g.lookup_path("/c0/node0/socket0/core0").unwrap();
+        assert!(t.grow(&mut g, &cfg, JobId(99), vec![c0]).is_err());
+    }
+
+    #[test]
+    fn shrink_releases_subset() {
+        let (mut g, mut t, cfg) = setup();
+        let cores: Vec<_> = (0..4)
+            .map(|i| g.lookup_path(&format!("/c0/node0/socket0/core{i}")).unwrap())
+            .collect();
+        let job = t.allocate(&mut g, &cfg, cores.clone()).unwrap();
+        t.shrink(&mut g, &cfg, job, &cores[2..]).unwrap();
+        assert_eq!(t.get(job).unwrap().vertices.len(), 2);
+        let root = g.root().unwrap();
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 2);
+        t.check_consistency(&g).unwrap();
+        check_aggregates(&g, &cfg).unwrap();
+    }
+
+    #[test]
+    fn free_twice_rejected() {
+        let (mut g, mut t, cfg) = setup();
+        let c0 = g.lookup_path("/c0/node0/socket0/core0").unwrap();
+        let job = t.allocate(&mut g, &cfg, vec![c0]).unwrap();
+        t.free(&mut g, &cfg, job).unwrap();
+        assert!(t.free(&mut g, &cfg, job).is_err());
+    }
+}

@@ -1,0 +1,233 @@
+//! Dynamic graph transformations: `AddSubgraph`, `UpdateMetadata`, and
+//! subgraph removal (paper §3 and Algorithm 1).
+//!
+//! `add_subgraph` walks a JGF document and splices missing vertices/edges
+//! into the local graph. Vertex identity is the containment path; the attach
+//! point of each subgraph root is found through the graph's path index in
+//! O(1) ("localization"), so the whole operation is **O(n + m)** in the
+//! subgraph size — independent of the resource graph size, which is what
+//! makes hierarchical elasticity scalable (§5.2.2 / Fig 1b).
+//!
+//! `update_metadata` then refreshes scheduling metadata: interior aggregates
+//! in one pass plus the subgraph roots' totals bubbled to their `p`
+//! pre-existing ancestors — **O(n + m + p)**.
+
+use crate::resource::graph::{GraphError, JobId, ResourceGraph, VertexId};
+use crate::resource::jgf::Jgf;
+use crate::sched::alloc::{AllocError, AllocTable};
+use crate::sched::pruning::{update_for_attach, update_for_detach, PruneConfig};
+
+#[derive(Debug, thiserror::Error)]
+pub enum GrowError {
+    #[error("subgraph root '{0}' has no attach point in this graph")]
+    NoAttachPoint(String),
+    #[error(transparent)]
+    Graph(#[from] GraphError),
+    #[error(transparent)]
+    Alloc(#[from] AllocError),
+}
+
+/// Result of adding a subgraph: which vertices were newly created (in
+/// parents-before-children order) and how many already existed (the paper:
+/// "the addition is the identity if the vertices already exist").
+#[derive(Debug, Clone)]
+pub struct AddReport {
+    pub added: Vec<VertexId>,
+    pub preexisting: usize,
+}
+
+/// Algorithm 1, `AddSubgraph`: splice `jgf` into `g`. Nodes must be ordered
+/// parents-before-children (JGF emitted by this crate always is).
+pub fn add_subgraph(g: &mut ResourceGraph, jgf: &Jgf) -> Result<AddReport, GrowError> {
+    let mut added = Vec::with_capacity(jgf.nodes.len());
+    let mut preexisting = 0usize;
+    for n in &jgf.nodes {
+        if g.lookup_path(&n.path).is_some() {
+            preexisting += 1; // identity: vertex already present
+            continue;
+        }
+        let vid = match n.parent_path() {
+            None => g.add_root(n.to_vertex())?,
+            Some(pp) => {
+                // O(1) attach-point lookup via the path index
+                let parent = g
+                    .lookup_path(pp)
+                    .ok_or_else(|| GrowError::NoAttachPoint(n.path.clone()))?;
+                g.add_child(parent, n.to_vertex())?
+            }
+        };
+        added.push(vid);
+    }
+    Ok(AddReport { added, preexisting })
+}
+
+/// Algorithm 1, `UpdateMetadata`: refresh pruning aggregates for the newly
+/// attached vertices and their ancestors.
+pub fn update_metadata(g: &mut ResourceGraph, report: &AddReport, cfg: &PruneConfig) {
+    update_for_attach(g, &report.added, cfg);
+}
+
+/// `RunGrow` with `add = true` (Algorithm 1): splice the subgraph, refresh
+/// metadata, and (if `job` is given) hand the new vertices to that running
+/// job's allocation — arriving resources belong to the job that grew.
+pub fn run_grow(
+    g: &mut ResourceGraph,
+    allocs: &mut AllocTable,
+    cfg: &PruneConfig,
+    jgf: &Jgf,
+    job: Option<JobId>,
+) -> Result<AddReport, GrowError> {
+    let report = add_subgraph(g, jgf)?;
+    update_metadata(g, &report, cfg);
+    if let Some(job) = job {
+        allocs.grow(g, cfg, job, report.added.clone())?;
+    }
+    Ok(report)
+}
+
+/// Subtractive transformation: detach the subtree rooted at `path`,
+/// updating ancestor aggregates first (bottom-up direction, §3).
+/// Returns the number of removed vertices.
+pub fn remove_subgraph(
+    g: &mut ResourceGraph,
+    cfg: &PruneConfig,
+    path: &str,
+) -> Result<usize, GrowError> {
+    let root = g
+        .lookup_path(path)
+        .ok_or_else(|| GrowError::NoAttachPoint(path.to_string()))?;
+    update_for_detach(g, root, cfg);
+    Ok(g.remove_subtree(root)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobspec::JobSpec;
+    use crate::resource::builder::{ClusterSpec, UidGen};
+    use crate::resource::types::ResourceType;
+    use crate::sched::matcher::match_resources;
+    use crate::sched::pruning::{check_aggregates, init_aggregates};
+
+    /// Build a parent graph, match a request on it, and emit the grant JGF —
+    /// the top-down payload of a MatchGrow.
+    fn grant(uids: &mut UidGen, nodes: usize) -> (Jgf, PruneConfig) {
+        let mut parent = ClusterSpec::new("cluster", 8, 2, 8).build(uids);
+        let cfg = PruneConfig::default();
+        init_aggregates(&mut parent, &cfg);
+        let spec = JobSpec::nodes_sockets_cores(nodes as u64, 2, 8);
+        let m = match_resources(&parent, &cfg, &spec).unwrap();
+        (Jgf::from_selection(&parent, &m.selection), cfg)
+    }
+
+    fn child_graph(uids: &mut UidGen) -> ResourceGraph {
+        // child owns nodes 6..8 of the same cluster namespace
+        let mut g = ClusterSpec::new("cluster", 2, 2, 8)
+            .with_node_base(6)
+            .build(uids);
+        init_aggregates(&mut g, &PruneConfig::default());
+        g
+    }
+
+    #[test]
+    fn add_subgraph_attaches_and_updates() {
+        let mut uids = UidGen::new();
+        let (jgf, cfg) = grant(&mut uids, 2); // grants node0, node1
+        let mut child = child_graph(&mut uids);
+        let before = child.size();
+        let report = add_subgraph(&mut child, &jgf).unwrap();
+        update_metadata(&mut child, &report, &cfg);
+        assert_eq!(report.added.len(), jgf.nodes.len());
+        assert_eq!(report.preexisting, 0);
+        assert_eq!(child.size(), before + jgf.size());
+        child.check_invariants().unwrap();
+        check_aggregates(&child, &cfg).unwrap();
+        // free cores grew by the subgraph's cores
+        let root = child.root().unwrap();
+        assert_eq!(child.vertex(root).agg_get(&ResourceType::Core), 32 + 32);
+    }
+
+    #[test]
+    fn add_is_identity_on_existing_vertices() {
+        let mut uids = UidGen::new();
+        let (jgf, cfg) = grant(&mut uids, 1);
+        let mut child = child_graph(&mut uids);
+        let r1 = add_subgraph(&mut child, &jgf).unwrap();
+        update_metadata(&mut child, &r1, &cfg);
+        let size = child.size();
+        // adding the same subgraph again is the identity
+        let r2 = add_subgraph(&mut child, &jgf).unwrap();
+        assert!(r2.added.is_empty());
+        assert_eq!(r2.preexisting, jgf.nodes.len());
+        assert_eq!(child.size(), size);
+        check_aggregates(&child, &cfg).unwrap();
+    }
+
+    #[test]
+    fn missing_attach_point_fails() {
+        let mut uids = UidGen::new();
+        let (jgf, _) = grant(&mut uids, 1);
+        // a graph with a different cluster namespace has no attach point
+        let mut other = ClusterSpec::new("elsewhere", 1, 1, 2).build(&mut uids);
+        assert!(matches!(
+            add_subgraph(&mut other, &jgf),
+            Err(GrowError::NoAttachPoint(_))
+        ));
+    }
+
+    #[test]
+    fn run_grow_assigns_to_job() {
+        let mut uids = UidGen::new();
+        let (jgf, cfg) = grant(&mut uids, 1);
+        let mut child = child_graph(&mut uids);
+        let mut allocs = AllocTable::new();
+        // the child has a running job occupying one of its own nodes
+        let spec = JobSpec::nodes_sockets_cores(1, 2, 8);
+        let m = match_resources(&child, &cfg, &spec).unwrap();
+        let job = allocs.allocate(&mut child, &cfg, m.selection).unwrap();
+
+        let report = run_grow(&mut child, &mut allocs, &cfg, &jgf, Some(job)).unwrap();
+        assert_eq!(
+            allocs.get(job).unwrap().vertices.len(),
+            19 + report.added.len()
+        );
+        // grown vertices are allocated -> they contribute 0 free cores
+        check_aggregates(&child, &cfg).unwrap();
+        allocs.check_consistency(&child).unwrap();
+    }
+
+    #[test]
+    fn remove_subgraph_roundtrip() {
+        let mut uids = UidGen::new();
+        let (jgf, cfg) = grant(&mut uids, 1);
+        let mut child = child_graph(&mut uids);
+        let before_size = child.size();
+        let root = child.root().unwrap();
+        let before_free = child.vertex(root).agg_get(&ResourceType::Core);
+
+        let report = add_subgraph(&mut child, &jgf).unwrap();
+        update_metadata(&mut child, &report, &cfg);
+        let added_root_path = child.vertex(report.added[0]).path.clone();
+        let removed = remove_subgraph(&mut child, &cfg, &added_root_path).unwrap();
+
+        assert_eq!(removed, report.added.len());
+        assert_eq!(child.size(), before_size);
+        assert_eq!(child.vertex(root).agg_get(&ResourceType::Core), before_free);
+        child.check_invariants().unwrap();
+        check_aggregates(&child, &cfg).unwrap();
+    }
+
+    #[test]
+    fn grown_resources_can_be_matched_later() {
+        // after growing, a new MatchAllocate can use the added resources
+        let mut uids = UidGen::new();
+        let (jgf, cfg) = grant(&mut uids, 2);
+        let mut child = child_graph(&mut uids);
+        let mut allocs = AllocTable::new();
+        run_grow(&mut child, &mut allocs, &cfg, &jgf, None).unwrap();
+        // child originally has 2 nodes; now 4 -> a 4-node request matches
+        let spec = JobSpec::nodes_sockets_cores(4, 2, 8);
+        let m = match_resources(&child, &cfg, &spec).unwrap();
+        assert_eq!(m.selection.len(), 4 * 19);
+    }
+}

@@ -1,0 +1,289 @@
+//! A single scheduler instance: resource graph + allocations + policies.
+//!
+//! This is the unit the fully hierarchical runtime (`crate::hier`) composes:
+//! "any scheduler instance can spawn child instances ... which can recurse
+//! to an arbitrary depth" (§2.1). An instance exposes the paper's two
+//! primitives — `MatchAllocate` and the local half of `MatchGrow` — plus the
+//! subgraph add/remove entry points used when grants arrive from a parent.
+
+use crate::jobspec::JobSpec;
+use crate::resource::graph::{JobId, ResourceGraph, VertexId};
+use crate::resource::jgf::Jgf;
+use crate::sched::alloc::AllocTable;
+use crate::sched::grow::{self, AddReport, GrowError};
+use crate::sched::matcher::{match_resources, MatchFail, MatchResult};
+use crate::sched::pruning::{init_aggregates, PruneConfig};
+
+/// Timing breakdown of one local scheduling operation, mirroring the three
+/// components the paper measures (§5.2): match, add, update.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpTiming {
+    pub match_s: f64,
+    pub add_upd_s: f64,
+}
+
+/// A successful local allocate/grow.
+#[derive(Debug, Clone)]
+pub struct AllocOutcome {
+    pub job: JobId,
+    pub subgraph: Jgf,
+    pub timing: OpTiming,
+    pub visited: usize,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum InstanceError {
+    #[error(transparent)]
+    Match(#[from] MatchFail),
+    #[error(transparent)]
+    Grow(#[from] GrowError),
+}
+
+/// One scheduler instance.
+pub struct SchedInstance {
+    pub graph: ResourceGraph,
+    pub allocs: AllocTable,
+    pub prune: PruneConfig,
+}
+
+impl SchedInstance {
+    /// Wrap a graph, initializing pruning aggregates.
+    pub fn new(mut graph: ResourceGraph, prune: PruneConfig) -> SchedInstance {
+        init_aggregates(&mut graph, &prune);
+        SchedInstance {
+            graph,
+            allocs: AllocTable::new(),
+            prune,
+        }
+    }
+
+    /// Build an instance from a JGF grant (how a child instance boots: "each
+    /// instance initializes its resource graph with only those resources
+    /// within its purview", §3).
+    pub fn from_jgf(jgf: &Jgf, prune: PruneConfig) -> Result<SchedInstance, GrowError> {
+        let graph = jgf.build_graph(true)?;
+        Ok(SchedInstance::new(graph, prune))
+    }
+
+    /// Try to match a jobspec without allocating (used for probing).
+    pub fn match_only(&self, spec: &JobSpec) -> Result<MatchResult, MatchFail> {
+        match_resources(&self.graph, &self.prune, spec)
+    }
+
+    /// `MatchAllocate`: match + allocate to a fresh job id.
+    pub fn match_allocate(&mut self, spec: &JobSpec) -> Result<AllocOutcome, InstanceError> {
+        let (m, match_s) = crate::util::metrics::time_it(|| self.match_only(spec));
+        let m = m?;
+        let t = crate::util::metrics::Timer::start();
+        let subgraph = Jgf::from_selection(&self.graph, &m.selection);
+        let job = self
+            .allocs
+            .allocate(&mut self.graph, &self.prune, m.selection)
+            .expect("matcher returned free vertices");
+        let add_upd_s = t.elapsed_secs();
+        Ok(AllocOutcome {
+            job,
+            subgraph,
+            timing: OpTiming { match_s, add_upd_s },
+            visited: m.visited,
+        })
+    }
+
+    /// Local half of `MatchGrow`: match free local resources and attach them
+    /// to the running job `job`. Fails with `MatchFail` if the local graph
+    /// cannot satisfy the request — the hierarchical runtime then escalates
+    /// to the parent (Algorithm 1).
+    pub fn match_grow_local(
+        &mut self,
+        job: JobId,
+        spec: &JobSpec,
+    ) -> Result<AllocOutcome, InstanceError> {
+        let (m, match_s) = crate::util::metrics::time_it(|| self.match_only(spec));
+        let m = m?;
+        let t = crate::util::metrics::Timer::start();
+        let subgraph = Jgf::from_selection(&self.graph, &m.selection);
+        self.allocs
+            .grow(&mut self.graph, &self.prune, job, m.selection)
+            .map_err(GrowError::from)?;
+        let add_upd_s = t.elapsed_secs();
+        Ok(AllocOutcome {
+            job,
+            subgraph,
+            timing: OpTiming { match_s, add_upd_s },
+            visited: m.visited,
+        })
+    }
+
+    /// Splice a subgraph granted by the parent into the local graph and hand
+    /// it to `job` (the top-down half of MatchGrow). Returns the add report
+    /// and the measured add+update seconds.
+    pub fn accept_grant(
+        &mut self,
+        jgf: &Jgf,
+        job: Option<JobId>,
+    ) -> Result<(AddReport, f64), GrowError> {
+        let t = crate::util::metrics::Timer::start();
+        let report = grow::run_grow(&mut self.graph, &mut self.allocs, &self.prune, jgf, job)?;
+        Ok((report, t.elapsed_secs()))
+    }
+
+    /// Subtractive transformation: release + detach a subtree.
+    pub fn remove_subgraph(&mut self, path: &str) -> Result<usize, GrowError> {
+        grow::remove_subgraph(&mut self.graph, &self.prune, path)
+    }
+
+    /// Release every allocation inside a subtree WITHOUT detaching it —
+    /// what the owning level does when a shrink ascends to it: the
+    /// resources return to its free pool. Returns the number of vertices
+    /// released.
+    pub fn free_allocations_in(&mut self, path: &str) -> Result<usize, GrowError> {
+        let root = self
+            .graph
+            .lookup_path(path)
+            .ok_or_else(|| grow::GrowError::NoAttachPoint(path.to_string()))?;
+        let victims = self.graph.dfs(root);
+        let mut jobs: Vec<crate::resource::graph::JobId> = Vec::new();
+        for &vid in &victims {
+            for &job in &self.graph.vertex(vid).alloc.jobs {
+                if !jobs.contains(&job) {
+                    jobs.push(job);
+                }
+            }
+        }
+        let n = victims.len();
+        for job in jobs {
+            self.allocs
+                .shrink(&mut self.graph, &self.prune, job, &victims)
+                .map_err(GrowError::from)?;
+        }
+        Ok(n)
+    }
+
+    /// Release every allocation inside a subtree, then detach it — the
+    /// full subtractive step a level performs when a shrink ascends the
+    /// hierarchy (§3: "a subtractive transformation moves from the bottom
+    /// up"). Returns the number of removed vertices.
+    pub fn release_subtree(&mut self, path: &str) -> Result<usize, GrowError> {
+        let root = self
+            .graph
+            .lookup_path(path)
+            .ok_or_else(|| grow::GrowError::NoAttachPoint(path.to_string()))?;
+        let victims = self.graph.dfs(root);
+        // unbind victims from whatever jobs hold them (usually the single
+        // child job the grant descended through)
+        let mut jobs: Vec<crate::resource::graph::JobId> = Vec::new();
+        for &vid in &victims {
+            for &job in &self.graph.vertex(vid).alloc.jobs {
+                if !jobs.contains(&job) {
+                    jobs.push(job);
+                }
+            }
+        }
+        for job in jobs {
+            self.allocs
+                .shrink(&mut self.graph, &self.prune, job, &victims)
+                .map_err(GrowError::from)?;
+        }
+        self.remove_subgraph(path)
+    }
+
+    /// Release all of a job's resources.
+    pub fn free_job(&mut self, job: JobId) -> Result<usize, GrowError> {
+        Ok(self.allocs.free(&mut self.graph, &self.prune, job)?)
+    }
+
+    /// Resources (by id) currently held by a job.
+    pub fn job_vertices(&self, job: JobId) -> Option<&[VertexId]> {
+        self.allocs.get(job).map(|a| a.vertices.as_slice())
+    }
+
+    /// Graph + allocation consistency for tests and failure injection.
+    pub fn check(&self) -> Result<(), String> {
+        self.graph.check_invariants()?;
+        self.allocs.check_consistency(&self.graph)?;
+        crate::sched::pruning::check_aggregates(&self.graph, &self.prune)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobspec::{table1_jobspec, JobSpec};
+    use crate::resource::builder::{table2_graph, UidGen};
+
+    #[test]
+    fn ma_and_mg_match_times_are_comparable() {
+        // the §5.1 shape: MatchGrow's match phase ≈ MatchAllocate's
+        let mut uids = UidGen::new();
+        let mut inst = SchedInstance::new(table2_graph(3, &mut uids), PruneConfig::default());
+        let spec = table1_jobspec("T7");
+        let a = inst.match_allocate(&spec).unwrap();
+        let b = inst.match_grow_local(a.job, &spec).unwrap();
+        assert_eq!(b.job, a.job);
+        assert_eq!(inst.job_vertices(a.job).unwrap().len(), 70);
+        inst.check().unwrap();
+    }
+
+    #[test]
+    fn from_jgf_boots_child_instance() {
+        let mut uids = UidGen::new();
+        let mut parent = SchedInstance::new(table2_graph(1, &mut uids), PruneConfig::default());
+        let grant = parent
+            .match_allocate(&JobSpec::nodes_sockets_cores(2, 2, 16))
+            .unwrap();
+        let child = SchedInstance::from_jgf(&grant.subgraph, PruneConfig::default()).unwrap();
+        // child sees exactly its purview (plus synthesized root)
+        assert_eq!(child.graph.num_vertices(), grant.subgraph.nodes.len() + 1);
+        child.check().unwrap();
+    }
+
+    #[test]
+    fn grow_after_grant_roundtrip() {
+        let mut uids = UidGen::new();
+        let mut parent = SchedInstance::new(table2_graph(1, &mut uids), PruneConfig::default());
+        let boot = parent
+            .match_allocate(&JobSpec::nodes_sockets_cores(1, 2, 16))
+            .unwrap();
+        let mut child = SchedInstance::from_jgf(&boot.subgraph, PruneConfig::default()).unwrap();
+
+        // child's own job takes everything it has
+        let job = child
+            .match_allocate(&JobSpec::nodes_sockets_cores(1, 2, 16))
+            .unwrap()
+            .job;
+        // further local grow fails -> escalate (simulated): parent matches,
+        // child accepts the grant
+        let spec = table1_jobspec("T7");
+        assert!(child.match_grow_local(job, &spec).is_err());
+        let pjob = parent_job(&mut parent);
+        let grant = parent.match_grow_local(pjob, &spec).unwrap();
+        let (report, secs) = child.accept_grant(&grant.subgraph, Some(job)).unwrap();
+        assert_eq!(report.added.len(), 35);
+        assert!(secs >= 0.0);
+        assert_eq!(child.job_vertices(job).unwrap().len(), 35 + 35);
+        child.check().unwrap();
+        parent.check().unwrap();
+    }
+
+    /// Helper: parent-side job representing the child instance.
+    fn parent_job(parent: &mut SchedInstance) -> JobId {
+        parent
+            .allocs
+            .running_jobs()
+            .next()
+            .map(|a| a.job)
+            .expect("parent has the boot job")
+    }
+
+    #[test]
+    fn free_job_restores_capacity() {
+        let mut uids = UidGen::new();
+        let mut inst = SchedInstance::new(table2_graph(4, &mut uids), PruneConfig::default());
+        let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+        let out = inst.match_allocate(&spec).unwrap();
+        assert!(inst.match_only(&spec).is_err());
+        inst.free_job(out.job).unwrap();
+        assert!(inst.match_only(&spec).is_ok());
+        inst.check().unwrap();
+    }
+}

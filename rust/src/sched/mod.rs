@@ -1,0 +1,13 @@
+//! The graph scheduler core: matching with pruning filters, allocation
+//! bookkeeping, and the dynamic grow/shrink transformations of paper §3.
+
+pub mod alloc;
+pub mod grow;
+pub mod instance;
+pub mod matcher;
+pub mod pruning;
+
+pub use alloc::AllocTable;
+pub use instance::SchedInstance;
+pub use matcher::{match_resources, MatchFail, MatchResult};
+pub use pruning::PruneConfig;

@@ -1,0 +1,284 @@
+//! Pruning filters: per-vertex aggregates of free resources in the subtree.
+//!
+//! The paper's tests run Fluxion with the `ALL:core` pruning filter (§5):
+//! every vertex carries the count of free cores beneath it, letting the
+//! matcher skip fully (or insufficiently) allocated subtrees without
+//! descending. Crucially the aggregate is "a function of its subgraph"
+//! (§3), so graph edits only dirty the edited vertices' ancestors — this is
+//! what bounds `UpdateMetadata` to O(n + m + p).
+
+use crate::resource::graph::{ResourceGraph, VertexId};
+use crate::resource::types::ResourceType;
+
+/// Which resource types are tracked by the filter. `ALL:core` tracks cores;
+/// experiments that allocate GPUs/memory track those too.
+#[derive(Debug, Clone)]
+pub struct PruneConfig {
+    pub tracked: Vec<ResourceType>,
+}
+
+impl Default for PruneConfig {
+    fn default() -> PruneConfig {
+        PruneConfig {
+            tracked: vec![ResourceType::Core],
+        }
+    }
+}
+
+impl PruneConfig {
+    pub fn all_of(types: &[ResourceType]) -> PruneConfig {
+        PruneConfig {
+            tracked: types.to_vec(),
+        }
+    }
+
+    pub fn tracks(&self, t: &ResourceType) -> bool {
+        self.tracked.contains(t)
+    }
+}
+
+/// (Re)initialize aggregates for the whole graph: one post-order pass.
+/// Used at instance start; incremental updates keep them fresh afterwards.
+pub fn init_aggregates(g: &mut ResourceGraph, cfg: &PruneConfig) {
+    let Some(root) = g.root() else { return };
+    let order = g.dfs(root); // preorder; reverse gives children-before-parent
+    for &vid in order.iter().rev() {
+        let mut totals: Vec<(ResourceType, i64)> = cfg
+            .tracked
+            .iter()
+            .map(|t| (t.clone(), 0i64))
+            .collect();
+        // own contribution
+        {
+            let v = g.vertex(vid);
+            if cfg.tracks(&v.rtype) && !v.alloc.is_allocated() {
+                if let Some(e) = totals.iter_mut().find(|(t, _)| *t == v.rtype) {
+                    e.1 += v.size as i64;
+                }
+            }
+        }
+        // children contributions (already computed: post-order)
+        for ci in 0..g.children_of(vid).len() {
+            let c = g.children_of(vid)[ci];
+            for (t, acc) in totals.iter_mut() {
+                *acc += g.vertex(c).agg_get(t);
+            }
+        }
+        g.vertex_mut(vid).agg_free = totals;
+    }
+}
+
+/// Apply a delta for one vertex becoming allocated/free: adjust the vertex
+/// itself and all ancestors. O(depth) per vertex.
+pub fn bubble_delta(g: &mut ResourceGraph, vid: VertexId, cfg: &PruneConfig, delta: i64) {
+    let t = g.vertex(vid).rtype.clone();
+    if !cfg.tracks(&t) {
+        return;
+    }
+    let amount = delta * g.vertex(vid).size as i64;
+    g.vertex_mut(vid).agg_add(&t, amount);
+    let ancestors = g.ancestors(vid);
+    for a in ancestors {
+        g.vertex_mut(a).agg_add(&t, amount);
+    }
+}
+
+/// Recompute aggregates for a freshly attached subgraph and propagate its
+/// totals to the `p` pre-existing ancestors. `new_vertices` must be in
+/// parents-before-children order (as `grow::add_subgraph` returns).
+/// O(n + m + p) — the subgraph interior is one reverse pass, and only the
+/// attach roots' totals bubble up.
+pub fn update_for_attach(
+    g: &mut ResourceGraph,
+    new_vertices: &[VertexId],
+    cfg: &PruneConfig,
+) {
+    use std::collections::HashSet;
+    let new_set: HashSet<VertexId> = new_vertices.iter().copied().collect();
+    // interior pass: children-before-parents
+    for &vid in new_vertices.iter().rev() {
+        let mut totals: Vec<(ResourceType, i64)> = cfg
+            .tracked
+            .iter()
+            .map(|t| (t.clone(), 0i64))
+            .collect();
+        {
+            let v = g.vertex(vid);
+            if cfg.tracks(&v.rtype) && !v.alloc.is_allocated() {
+                if let Some(e) = totals.iter_mut().find(|(t, _)| *t == v.rtype) {
+                    e.1 += v.size as i64;
+                }
+            }
+        }
+        for ci in 0..g.children_of(vid).len() {
+            let c = g.children_of(vid)[ci];
+            // children of a new vertex are all new (attach adds whole
+            // subtrees), but guard anyway
+            for (t, acc) in totals.iter_mut() {
+                *acc += g.vertex(c).agg_get(t);
+            }
+        }
+        g.vertex_mut(vid).agg_free = totals;
+    }
+    // boundary pass: each attach root adds its totals to pre-existing
+    // ancestors only
+    for &vid in new_vertices {
+        let parent = g.parent_of(vid);
+        let is_attach_root = parent.map(|p| !new_set.contains(&p)).unwrap_or(false);
+        if !is_attach_root {
+            continue;
+        }
+        let totals = g.vertex(vid).agg_free.clone();
+        let mut cur = parent;
+        while let Some(a) = cur {
+            for (t, amount) in &totals {
+                if *amount != 0 {
+                    g.vertex_mut(a).agg_add(t, *amount);
+                }
+            }
+            cur = g.parent_of(a);
+        }
+    }
+}
+
+/// Subtract a subtree's aggregate totals from its ancestors before removal
+/// (the subtractive transformation's metadata update).
+pub fn update_for_detach(g: &mut ResourceGraph, subtree_root: VertexId, cfg: &PruneConfig) {
+    let totals = g.vertex(subtree_root).agg_free.clone();
+    let ancestors = g.ancestors(subtree_root);
+    for a in ancestors {
+        for (t, amount) in &totals {
+            if cfg.tracks(t) && *amount != 0 {
+                g.vertex_mut(a).agg_add(t, -amount);
+            }
+        }
+    }
+}
+
+/// Debug/test helper: verify aggregates equal a fresh recount.
+pub fn check_aggregates(g: &ResourceGraph, cfg: &PruneConfig) -> Result<(), String> {
+    let Some(root) = g.root() else { return Ok(()) };
+    for vid in g.dfs(root) {
+        for t in &cfg.tracked {
+            let counted: i64 = g
+                .dfs(vid)
+                .iter()
+                .map(|&d| {
+                    let v = g.vertex(d);
+                    if v.rtype == *t && !v.alloc.is_allocated() {
+                        v.size as i64
+                    } else {
+                        0
+                    }
+                })
+                .sum();
+            let cached = g.vertex(vid).agg_get(t);
+            if counted != cached {
+                return Err(format!(
+                    "aggregate mismatch at {} for {t}: counted {counted}, cached {cached}",
+                    g.vertex(vid).path
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::builder::{ClusterSpec, UidGen};
+    use crate::resource::graph::JobId;
+
+    #[test]
+    fn init_counts_free_cores() {
+        let mut g = ClusterSpec::new("c", 2, 2, 4).build(&mut UidGen::new());
+        let cfg = PruneConfig::default();
+        init_aggregates(&mut g, &cfg);
+        let root = g.root().unwrap();
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 16);
+        let n0 = g.lookup_path("/c0/node0").unwrap();
+        assert_eq!(g.vertex(n0).agg_get(&ResourceType::Core), 8);
+        check_aggregates(&g, &cfg).unwrap();
+    }
+
+    #[test]
+    fn bubble_delta_propagates() {
+        let mut g = ClusterSpec::new("c", 1, 1, 4).build(&mut UidGen::new());
+        let cfg = PruneConfig::default();
+        init_aggregates(&mut g, &cfg);
+        let core = g.lookup_path("/c0/node0/socket0/core2").unwrap();
+        g.vertex_mut(core).alloc.jobs.push(JobId(1));
+        bubble_delta(&mut g, core, &cfg, -1);
+        let root = g.root().unwrap();
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 3);
+        check_aggregates(&g, &cfg).unwrap();
+    }
+
+    #[test]
+    fn attach_updates_ancestors_only_once() {
+        let mut g = ClusterSpec::new("c", 1, 1, 2).build(&mut UidGen::new());
+        let cfg = PruneConfig::default();
+        init_aggregates(&mut g, &cfg);
+        // attach a new socket+2cores under node0
+        let node0 = g.lookup_path("/c0/node0").unwrap();
+        let mut uids = UidGen::starting_at(1000);
+        let sock = g
+            .add_child(
+                node0,
+                crate::resource::graph::make_vertex(
+                    ResourceType::Socket,
+                    "socket",
+                    9,
+                    uids.next(),
+                    "/c0/node0/socket9",
+                ),
+            )
+            .unwrap();
+        let mut new_vs = vec![sock];
+        for c in 0..2 {
+            new_vs.push(
+                g.add_child(
+                    sock,
+                    crate::resource::graph::make_vertex(
+                        ResourceType::Core,
+                        "core",
+                        c,
+                        uids.next(),
+                        &format!("/c0/node0/socket9/core{c}"),
+                    ),
+                )
+                .unwrap(),
+            );
+        }
+        update_for_attach(&mut g, &new_vs, &cfg);
+        let root = g.root().unwrap();
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 4);
+        check_aggregates(&g, &cfg).unwrap();
+    }
+
+    #[test]
+    fn detach_subtracts() {
+        let mut g = ClusterSpec::new("c", 2, 1, 4).build(&mut UidGen::new());
+        let cfg = PruneConfig::default();
+        init_aggregates(&mut g, &cfg);
+        let n1 = g.lookup_path("/c0/node1").unwrap();
+        update_for_detach(&mut g, n1, &cfg);
+        g.remove_subtree(n1).unwrap();
+        let root = g.root().unwrap();
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 4);
+        check_aggregates(&g, &cfg).unwrap();
+    }
+
+    #[test]
+    fn multi_type_tracking() {
+        let mut g = ClusterSpec::new("c", 1, 2, 4)
+            .with_gpus(1)
+            .build(&mut UidGen::new());
+        let cfg = PruneConfig::all_of(&[ResourceType::Core, ResourceType::Gpu]);
+        init_aggregates(&mut g, &cfg);
+        let root = g.root().unwrap();
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 8);
+        assert_eq!(g.vertex(root).agg_get(&ResourceType::Gpu), 2);
+    }
+}

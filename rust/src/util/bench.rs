@@ -1,0 +1,96 @@
+//! Micro-bench harness (criterion is unavailable offline).
+//!
+//! Cargo benches in this repo use `harness = false` and drive this module:
+//! warmup, fixed iteration counts (the paper repeats each test 100 times and
+//! reports distribution statistics, which we mirror), and quantile reports.
+
+use std::time::Instant;
+
+use crate::util::stats::{summarize, Summary};
+
+/// Run `iters` timed repetitions of `f` after `warmup` untimed ones.
+/// `setup` runs before every repetition and is excluded from timing.
+pub fn run_timed<S, T>(
+    warmup: usize,
+    iters: usize,
+    mut setup: impl FnMut() -> S,
+    mut f: impl FnMut(S) -> T,
+) -> Vec<f64> {
+    for _ in 0..warmup {
+        let s = setup();
+        std::hint::black_box(f(s));
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let s = setup();
+        let t = Instant::now();
+        std::hint::black_box(f(s));
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    samples
+}
+
+/// Simple variant with no per-iteration setup.
+pub fn run_simple<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    run_timed(warmup, iters, || (), |()| f())
+}
+
+/// One printed row of a bench report.
+pub fn report_row(name: &str, samples: &[f64]) -> String {
+    let s = summarize(samples);
+    format!(
+        "{:<36} n={:<4} mean={:>11.6}s median={:>11.6}s q1={:>11.6}s q3={:>11.6}s",
+        name, s.n, s.mean, s.median, s.q1, s.q3
+    )
+}
+
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+pub fn print_row(name: &str, samples: &[f64]) -> Summary {
+    println!("{}", report_row(name, samples));
+    summarize(samples)
+}
+
+/// Throughput helper: items/sec given total seconds.
+pub fn throughput(items: usize, secs: f64) -> f64 {
+    items as f64 / secs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_simple_counts() {
+        let mut calls = 0;
+        let samples = run_simple(2, 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(samples.len(), 5);
+        assert_eq!(calls, 7); // 2 warmup + 5 timed
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn setup_excluded_from_timing() {
+        // setup sleeps; measured body is ~instant -> samples must be far
+        // below the sleep duration.
+        let samples = run_timed(
+            0,
+            3,
+            || std::thread::sleep(std::time::Duration::from_millis(5)),
+            |()| 1 + 1,
+        );
+        assert!(samples.iter().all(|&s| s < 0.004), "{samples:?}");
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let row = report_row("my_bench", &[0.1, 0.2]);
+        assert!(row.contains("my_bench"));
+        assert!(row.contains("n=2"));
+    }
+}

@@ -1,0 +1,182 @@
+//! Timing + memory measurement used by every experiment.
+//!
+//! The paper reports elapsed times for match / comms / add-update phases and
+//! max RSS (resident set size) from `resource-query`. We mirror that: a
+//! monotonic `Timer`, a named-phase `Stopwatch`, and `max_rss_kb()` via
+//! `getrusage(2)`.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use crate::util::stats::{summarize, Summary};
+
+/// Monotonic elapsed-time helper.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_secs())
+}
+
+/// Max resident set size of this process in kB, as the paper's
+/// resource-query reports. Linux getrusage returns kB directly.
+pub fn max_rss_kb() -> u64 {
+    unsafe {
+        let mut usage: libc::rusage = std::mem::zeroed();
+        if libc::getrusage(libc::RUSAGE_SELF, &mut usage) == 0 {
+            usage.ru_maxrss as u64
+        } else {
+            0
+        }
+    }
+}
+
+/// Current RSS in kB from /proc/self/statm (max RSS is sticky; experiments
+/// that compare configurations inside one process need the live value).
+pub fn current_rss_kb() -> u64 {
+    let page_kb = 4; // x86-64 Linux
+    std::fs::read_to_string("/proc/self/statm")
+        .ok()
+        .and_then(|s| {
+            s.split_whitespace()
+                .nth(1)
+                .and_then(|f| f.parse::<u64>().ok())
+        })
+        .map(|pages| pages * page_kb)
+        .unwrap_or(0)
+}
+
+/// Accumulates timing samples under named series — one series per measured
+/// phase per level, e.g. `comms/L1`, `add_upd/L3`.
+#[derive(Debug, Default, Clone)]
+pub struct Recorder {
+    series: BTreeMap<String, Vec<f64>>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn record(&mut self, series: &str, seconds: f64) {
+        self.series.entry(series.to_string()).or_default().push(seconds);
+    }
+
+    pub fn record_all(&mut self, series: &str, xs: &[f64]) {
+        self.series
+            .entry(series.to_string())
+            .or_default()
+            .extend_from_slice(xs);
+    }
+
+    pub fn get(&self, series: &str) -> Option<&[f64]> {
+        self.series.get(series).map(|v| v.as_slice())
+    }
+
+    pub fn series_names(&self) -> impl Iterator<Item = &str> {
+        self.series.keys().map(String::as_str)
+    }
+
+    pub fn summary(&self, series: &str) -> Option<Summary> {
+        self.series.get(series).map(|v| summarize(v))
+    }
+
+    pub fn merge(&mut self, other: &Recorder) {
+        for (k, v) in &other.series {
+            self.series.entry(k.clone()).or_default().extend_from_slice(v);
+        }
+    }
+
+    /// Render all series as an aligned text table (what benches print).
+    pub fn table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<28} {:>6} {:>12} {:>12} {:>12} {:>12} {:>12}\n",
+            "series", "n", "mean(s)", "median(s)", "q1(s)", "q3(s)", "std(s)"
+        ));
+        for (name, xs) in &self.series {
+            let s = summarize(xs);
+            out.push_str(&format!(
+                "{:<28} {:>6} {:>12.6} {:>12.6} {:>12.6} {:>12.6} {:>12.6}\n",
+                name, s.n, s.mean, s.median, s.q1, s.q3, s.std
+            ));
+        }
+        out
+    }
+
+    /// CSV export: series,value rows (raw samples, for offline plotting).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("series,seconds\n");
+        for (name, xs) in &self.series {
+            for x in xs {
+                out.push_str(&format!("{name},{x}\n"));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(t.elapsed_secs() >= 0.002);
+    }
+
+    #[test]
+    fn rss_nonzero() {
+        assert!(max_rss_kb() > 0);
+        assert!(current_rss_kb() > 0);
+    }
+
+    #[test]
+    fn recorder_summary() {
+        let mut r = Recorder::new();
+        for v in [1.0, 2.0, 3.0] {
+            r.record("x", v);
+        }
+        let s = r.summary("x").unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.median, 2.0);
+        assert!(r.summary("missing").is_none());
+    }
+
+    #[test]
+    fn recorder_merge_and_csv() {
+        let mut a = Recorder::new();
+        a.record("x", 1.0);
+        let mut b = Recorder::new();
+        b.record("x", 2.0);
+        b.record("y", 3.0);
+        a.merge(&b);
+        assert_eq!(a.get("x").unwrap().len(), 2);
+        let csv = a.to_csv();
+        assert!(csv.contains("x,1"));
+        assert!(csv.contains("y,3"));
+    }
+}

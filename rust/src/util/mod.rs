@@ -1,0 +1,9 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! JSON codec, PRNG, statistics, metrics, bench harness, property testing.
+
+pub mod bench;
+pub mod json;
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+pub mod stats;

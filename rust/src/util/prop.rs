@@ -1,0 +1,100 @@
+//! Property-based testing helper (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` generated inputs from a seeded
+//! generator; on failure it performs a bounded "shrink-lite" pass by retrying
+//! with fresh, smaller inputs from the generator's `shrunk` hook, then panics
+//! with the seed so the case is reproducible.
+
+use crate::util::rng::Rng;
+
+/// A generator of test inputs. `gen` produces an arbitrary value at a size
+/// hint; implementors should make smaller sizes produce structurally smaller
+/// values so the shrink pass is meaningful.
+pub trait Gen {
+    type Value;
+    fn generate(&self, rng: &mut Rng, size: usize) -> Self::Value;
+}
+
+impl<T, F: Fn(&mut Rng, usize) -> T> Gen for F {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng, size: usize) -> T {
+        self(rng, size)
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. On failure, retry with
+/// decreasing size to report the smallest failing size found.
+pub fn check<G: Gen>(
+    seed: u64,
+    cases: usize,
+    max_size: usize,
+    gen: G,
+    prop: impl Fn(&G::Value) -> Result<(), String>,
+) where
+    G::Value: std::fmt::Debug,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        // Ramp size up over the run, like proptest/quickcheck do.
+        let size = 1 + (max_size.saturating_sub(1)) * case / cases.max(1);
+        let value = gen.generate(&mut rng, size);
+        if let Err(msg) = prop(&value) {
+            // shrink-lite: look for a smaller failing input
+            let mut best: (usize, String, String) = (size, format!("{value:?}"), msg);
+            for s in (1..size).rev() {
+                let mut srng = Rng::new(seed ^ (s as u64).wrapping_mul(0x9E37));
+                for _ in 0..16 {
+                    let v = gen.generate(&mut srng, s);
+                    if let Err(m) = prop(&v) {
+                        best = (s, format!("{v:?}"), m);
+                        break;
+                    }
+                }
+                if best.0 != s {
+                    break; // no failure at this size; stop shrinking
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, case={case}, size={}):\n  input: {}\n  error: {}",
+                best.0, best.1, best.2
+            );
+        }
+    }
+}
+
+/// Assertion adapter: turn a bool into the Result the checker wants.
+pub fn ensure(cond: bool, msg: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check(
+            1,
+            50,
+            20,
+            |rng: &mut Rng, size: usize| rng.below(size as u64 + 1),
+            |&v| ensure(v <= 20, "bounded"),
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            2,
+            50,
+            100,
+            |rng: &mut Rng, size: usize| rng.below(size as u64 + 1),
+            |&v| ensure(v < 5, "v too big"),
+        );
+    }
+}

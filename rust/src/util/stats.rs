@@ -1,0 +1,393 @@
+//! Statistics substrate: summaries, quantiles, OLS regression, MAPE/R²,
+//! k-fold cross-validation.
+//!
+//! This backs the paper's §6 analysis (Table 4, Table 5, Figs 3/4): linear
+//! component models for comms / add-update / match times, validated with
+//! five-fold CV and reported as MAPE and R². The normal-equations fit also
+//! has an XLA-artifact path (see `runtime::linreg`); this module is the
+//! rust-native oracle the artifact is tested against.
+
+/// Five-number-style summary of a sample (used for the boxplot figures).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn iqr(&self) -> f64 {
+        self.q3 - self.q1
+    }
+
+    /// Boxplot whisker positions (Tukey 1.5·IQR, clamped to data range).
+    pub fn whiskers(&self) -> (f64, f64) {
+        let lo = (self.q1 - 1.5 * self.iqr()).max(self.min);
+        let hi = (self.q3 + 1.5 * self.iqr()).min(self.max);
+        (lo, hi)
+    }
+}
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Linear-interpolated quantile (type-7, what numpy/scikit default to —
+/// keeps our Table 4 numbers comparable to the paper's toolchain).
+pub fn quantile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    let h = (sorted.len() - 1) as f64 * q;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (h - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize of empty sample");
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n: s.len(),
+        mean: mean(&s),
+        std: std_dev(&s),
+        min: s[0],
+        q1: quantile(&s, 0.25),
+        median: quantile(&s, 0.5),
+        q3: quantile(&s, 0.75),
+        max: s[s.len() - 1],
+    }
+}
+
+/// Fitted simple linear model `y = beta * x + beta0`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinFit {
+    pub beta: f64,
+    pub beta0: f64,
+}
+
+impl LinFit {
+    pub fn predict(&self, x: f64) -> f64 {
+        self.beta * x + self.beta0
+    }
+
+    /// The paper zeroes the (slightly negative, unphysical) add-update
+    /// intercept; same convention here.
+    pub fn clamp_intercept(mut self) -> LinFit {
+        if self.beta0 < 0.0 {
+            self.beta0 = 0.0;
+        }
+        self
+    }
+}
+
+/// Ordinary least squares for a single feature. Closed form.
+pub fn ols(xs: &[f64], ys: &[f64]) -> LinFit {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "ols needs >= 2 points");
+    let n = xs.len() as f64;
+    let mx = mean(xs);
+    let my = mean(ys);
+    let sxx: f64 = xs.iter().map(|x| (x - mx).powi(2)).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    if sxx == 0.0 {
+        // Degenerate (all x equal): flat model through the mean.
+        return LinFit {
+            beta: 0.0,
+            beta0: my,
+        };
+    }
+    let beta = sxy / sxx;
+    LinFit {
+        beta,
+        beta0: my - beta * mx,
+    }
+    .tap_check(n)
+}
+
+trait TapCheck {
+    fn tap_check(self, _n: f64) -> Self
+    where
+        Self: Sized,
+    {
+        self
+    }
+}
+impl TapCheck for LinFit {}
+
+/// Multiple linear regression with intercept via normal equations
+/// (X'X) b = X'y solved by Gaussian elimination with partial pivoting.
+/// This is the rust-native oracle for the `linreg_fit` XLA artifact.
+pub fn ols_multi(rows: &[Vec<f64>], ys: &[f64]) -> Vec<f64> {
+    assert_eq!(rows.len(), ys.len());
+    assert!(!rows.is_empty());
+    let k = rows[0].len() + 1; // + intercept column
+    let mut xtx = vec![vec![0.0f64; k]; k];
+    let mut xty = vec![0.0f64; k];
+    for (row, &y) in rows.iter().zip(ys) {
+        let mut xi = Vec::with_capacity(k);
+        xi.push(1.0);
+        xi.extend_from_slice(row);
+        for a in 0..k {
+            xty[a] += xi[a] * y;
+            for b in 0..k {
+                xtx[a][b] += xi[a] * xi[b];
+            }
+        }
+    }
+    solve(&mut xtx, &mut xty)
+}
+
+/// Solve A x = b in place (Gaussian elimination, partial pivoting).
+pub fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        assert!(d.abs() > 1e-12, "singular system in stats::solve");
+        for row in (col + 1)..n {
+            let f = a[row][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[row][c] -= f * a[col][c];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0f64; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for c in (row + 1)..n {
+            acc -= a[row][c] * x[c];
+        }
+        x[row] = acc / a[row][row];
+    }
+    x
+}
+
+/// Mean Absolute Percentage Error — the paper's §6 accuracy metric.
+pub fn mape(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (&a, &p) in actual.iter().zip(predicted) {
+        if a != 0.0 {
+            acc += ((a - p) / a).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        acc / n as f64
+    }
+}
+
+/// Coefficient of determination.
+pub fn r2(actual: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(actual.len(), predicted.len());
+    let m = mean(actual);
+    let ss_tot: f64 = actual.iter().map(|a| (a - m).powi(2)).sum();
+    let ss_res: f64 = actual
+        .iter()
+        .zip(predicted)
+        .map(|(a, p)| (a - p).powi(2))
+        .sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { f64::NEG_INFINITY };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Result of one cross-validation: per-fold metrics, averaged.
+#[derive(Debug, Clone)]
+pub struct CvResult {
+    pub avg_mape: f64,
+    pub avg_r2: f64,
+    pub folds: usize,
+}
+
+/// K-fold cross-validation of the simple linear model, reproducing the
+/// paper's "typical five-fold cross-validation" (§6.1). Deterministic fold
+/// assignment given the seed.
+pub fn cross_validate(
+    xs: &[f64],
+    ys: &[f64],
+    k: usize,
+    seed: u64,
+    zero_intercept: bool,
+) -> CvResult {
+    assert_eq!(xs.len(), ys.len());
+    assert!(k >= 2 && xs.len() >= k);
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    crate::util::rng::Rng::new(seed).shuffle(&mut order);
+    // pooled CV: gather every fold's held-out (actual, predicted) pairs and
+    // compute the metrics once — well-defined even when a fold holds a
+    // single point (per-fold R² would be degenerate there)
+    let mut held_actual = Vec::with_capacity(xs.len());
+    let mut held_pred = Vec::with_capacity(xs.len());
+    for fold in 0..k {
+        let (mut trx, mut tr_y, mut tex, mut te_y) = (vec![], vec![], vec![], vec![]);
+        for (pos, &i) in order.iter().enumerate() {
+            if pos % k == fold {
+                tex.push(xs[i]);
+                te_y.push(ys[i]);
+            } else {
+                trx.push(xs[i]);
+                tr_y.push(ys[i]);
+            }
+        }
+        let mut fit = ols(&trx, &tr_y);
+        if zero_intercept {
+            fit = fit.clamp_intercept();
+        }
+        held_pred.extend(tex.iter().map(|&x| fit.predict(x)));
+        held_actual.extend(te_y);
+    }
+    CvResult {
+        avg_mape: mape(&held_actual, &held_pred),
+        avg_r2: r2(&held_actual, &held_pred),
+        folds: k,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.q1, 2.0);
+        assert_eq!(s.q3, 4.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_interpolates() {
+        let s = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&s, 0.5) - 2.5).abs() < 1e-12);
+        assert_eq!(quantile(&s, 0.0), 1.0);
+        assert_eq!(quantile(&s, 1.0), 4.0);
+    }
+
+    #[test]
+    fn ols_exact_line() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x + 7.0).collect();
+        let fit = ols(&xs, &ys);
+        assert!((fit.beta - 3.0).abs() < 1e-10);
+        assert!((fit.beta0 - 7.0).abs() < 1e-10);
+        assert!((r2(&ys, &xs.iter().map(|&x| fit.predict(x)).collect::<Vec<_>>()) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ols_noisy_recovers() {
+        let mut rng = crate::util::rng::Rng::new(5);
+        let xs: Vec<f64> = (0..500).map(|_| rng.uniform(0.0, 100.0)).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&x| 1.5e-5 * x + 2.0e-3 + rng.normal(0.0, 1e-5))
+            .collect();
+        let fit = ols(&xs, &ys);
+        assert!((fit.beta - 1.5e-5).abs() < 2e-6, "beta={}", fit.beta);
+        assert!((fit.beta0 - 2.0e-3).abs() < 2e-5, "beta0={}", fit.beta0);
+    }
+
+    #[test]
+    fn ols_multi_matches_simple() {
+        let xs: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x - 1.0).collect();
+        let rows: Vec<Vec<f64>> = xs.iter().map(|&x| vec![x]).collect();
+        let b = ols_multi(&rows, &ys);
+        assert!((b[0] - (-1.0)).abs() < 1e-9);
+        assert!((b[1] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ols_multi_two_features() {
+        // y = 1 + 2a + 3b exactly
+        let mut rows = vec![];
+        let mut ys = vec![];
+        for a in 0..10 {
+            for b in 0..10 {
+                rows.push(vec![a as f64, b as f64]);
+                ys.push(1.0 + 2.0 * a as f64 + 3.0 * b as f64);
+            }
+        }
+        let b = ols_multi(&rows, &ys);
+        for (got, want) in b.iter().zip([1.0, 2.0, 3.0]) {
+            assert!((got - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn mape_r2_perfect() {
+        let a = [1.0, 2.0, 4.0];
+        assert_eq!(mape(&a, &a), 0.0);
+        assert_eq!(r2(&a, &a), 1.0);
+    }
+
+    #[test]
+    fn cv_on_clean_line_is_accurate() {
+        let xs: Vec<f64> = (0..100).map(|i| (i * 40) as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 9.08e-6 * x + 6.3e-4).collect();
+        let cv = cross_validate(&xs, &ys, 5, 42, false);
+        assert!(cv.avg_mape < 1e-9, "mape={}", cv.avg_mape);
+        assert!(cv.avg_r2 > 0.999999, "r2={}", cv.avg_r2);
+    }
+
+    #[test]
+    fn clamp_intercept() {
+        let f = LinFit {
+            beta: 1.0,
+            beta0: -0.5,
+        }
+        .clamp_intercept();
+        assert_eq!(f.beta0, 0.0);
+    }
+
+    #[test]
+    fn solve_3x3() {
+        let mut a = vec![
+            vec![2.0, 1.0, -1.0],
+            vec![-3.0, -1.0, 2.0],
+            vec![-2.0, 1.0, 2.0],
+        ];
+        let mut b = vec![8.0, -11.0, -3.0];
+        let x = solve(&mut a, &mut b);
+        for (got, want) in x.iter().zip([2.0, 3.0, -1.0]) {
+            assert!((got - want).abs() < 1e-9);
+        }
+    }
+}

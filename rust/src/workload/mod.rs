@@ -1,0 +1,217 @@
+//! Synthetic elastic-workflow traces: the workload side of the end-to-end
+//! driver (DESIGN.md E11).
+//!
+//! The paper motivates dynamism with ensemble workflows (MuMMI, AMPL) whose
+//! stages "change resource requirements at runtime" (§2.1): a base
+//! allocation followed by grow phases (ensemble fan-out) and shrink phases
+//! (analysis/reduction). This module generates deterministic traces with
+//! that shape; `experiments::e2e` replays them against the hierarchical
+//! scheduler and against a rigid (allocate-peak-up-front) baseline.
+
+use crate::util::rng::Rng;
+
+/// One elasticity phase of a job's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Phase {
+    /// Grow by `nodes` full nodes and hold for `hold_s`.
+    Grow { nodes: u64, hold_s: f64 },
+    /// Release the most recent grow and hold for `hold_s`.
+    Shrink { hold_s: f64 },
+}
+
+/// An elastic ensemble job.
+#[derive(Debug, Clone)]
+pub struct ElasticJob {
+    pub id: usize,
+    pub arrival_s: f64,
+    /// Base allocation in full nodes (2 sockets × 16 cores, Table 2 shape).
+    pub base_nodes: u64,
+    /// Hold time of the base phase before the first elastic phase.
+    pub base_hold_s: f64,
+    pub phases: Vec<Phase>,
+}
+
+impl ElasticJob {
+    /// Peak simultaneous node demand — what a rigid scheduler must reserve
+    /// for the job's whole lifetime.
+    pub fn peak_nodes(&self) -> u64 {
+        let mut cur = self.base_nodes;
+        let mut peak = cur;
+        for p in &self.phases {
+            match p {
+                Phase::Grow { nodes, .. } => {
+                    cur += nodes;
+                    peak = peak.max(cur);
+                }
+                Phase::Shrink { .. } => {
+                    // shrink releases the most recent grow
+                }
+            }
+        }
+        peak
+    }
+
+    /// Total lifetime (sum of holds).
+    pub fn lifetime_s(&self) -> f64 {
+        self.base_hold_s
+            + self
+                .phases
+                .iter()
+                .map(|p| match p {
+                    Phase::Grow { hold_s, .. } | Phase::Shrink { hold_s } => *hold_s,
+                })
+                .sum::<f64>()
+    }
+
+    /// Node·seconds actually used (elastic execution).
+    pub fn node_seconds_elastic(&self) -> f64 {
+        let mut cur = self.base_nodes as f64;
+        let mut acc = cur * self.base_hold_s;
+        let mut grow_stack: Vec<u64> = Vec::new();
+        for p in &self.phases {
+            match p {
+                Phase::Grow { nodes, hold_s } => {
+                    grow_stack.push(*nodes);
+                    cur += *nodes as f64;
+                    acc += cur * hold_s;
+                }
+                Phase::Shrink { hold_s } => {
+                    if let Some(n) = grow_stack.pop() {
+                        cur -= n as f64;
+                    }
+                    acc += cur * hold_s;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Node·seconds a rigid scheduler charges (peak × lifetime).
+    pub fn node_seconds_rigid(&self) -> f64 {
+        self.peak_nodes() as f64 * self.lifetime_s()
+    }
+}
+
+/// Trace generation parameters.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub jobs: usize,
+    pub seed: u64,
+    /// Mean interarrival (exponential), in trace seconds.
+    pub mean_interarrival_s: f64,
+    /// Base allocation range in nodes.
+    pub base_nodes: (u64, u64),
+    /// Grow burst size range in nodes.
+    pub grow_nodes: (u64, u64),
+    /// Elastic phases per job (grow/shrink pairs).
+    pub phase_pairs: (u64, u64),
+    /// Mean phase hold, in trace seconds.
+    pub mean_hold_s: f64,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> WorkloadSpec {
+        // contended enough on a 128-node cluster that rigid reservation
+        // queues and elastic grows occasionally need the cloud
+        WorkloadSpec {
+            jobs: 40,
+            seed: 0xE2E,
+            mean_interarrival_s: 1.0,
+            base_nodes: (2, 8),
+            grow_nodes: (4, 24),
+            phase_pairs: (1, 3),
+            mean_hold_s: 6.0,
+        }
+    }
+}
+
+/// Generate a deterministic trace, sorted by arrival.
+pub fn generate(spec: &WorkloadSpec) -> Vec<ElasticJob> {
+    let mut rng = Rng::new(spec.seed);
+    let mut t = 0.0;
+    let mut jobs = Vec::with_capacity(spec.jobs);
+    for id in 0..spec.jobs {
+        t += rng.exponential(1.0 / spec.mean_interarrival_s);
+        let pairs = rng.range(spec.phase_pairs.0, spec.phase_pairs.1);
+        let mut phases = Vec::new();
+        for _ in 0..pairs {
+            phases.push(Phase::Grow {
+                nodes: rng.range(spec.grow_nodes.0, spec.grow_nodes.1),
+                hold_s: rng.exponential(1.0 / spec.mean_hold_s),
+            });
+            phases.push(Phase::Shrink {
+                hold_s: rng.exponential(1.0 / spec.mean_hold_s),
+            });
+        }
+        jobs.push(ElasticJob {
+            id,
+            arrival_s: t,
+            base_nodes: rng.range(spec.base_nodes.0, spec.base_nodes.1),
+            base_hold_s: rng.exponential(1.0 / spec.mean_hold_s),
+            phases,
+        });
+    }
+    jobs
+}
+
+/// Aggregate elastic-vs-rigid demand over a trace: the headline utilization
+/// argument for RJMS dynamism.
+pub fn demand_summary(jobs: &[ElasticJob]) -> (f64, f64) {
+    let elastic: f64 = jobs.iter().map(ElasticJob::node_seconds_elastic).sum();
+    let rigid: f64 = jobs.iter().map(ElasticJob::node_seconds_rigid).sum();
+    (elastic, rigid)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let spec = WorkloadSpec::default();
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.phases, y.phases);
+        }
+    }
+
+    #[test]
+    fn arrivals_are_sorted() {
+        let jobs = generate(&WorkloadSpec::default());
+        for w in jobs.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+    }
+
+    #[test]
+    fn peak_accounts_for_stacked_grows() {
+        let job = ElasticJob {
+            id: 0,
+            arrival_s: 0.0,
+            base_nodes: 2,
+            base_hold_s: 1.0,
+            phases: vec![
+                Phase::Grow { nodes: 3, hold_s: 1.0 },
+                Phase::Grow { nodes: 4, hold_s: 1.0 },
+                Phase::Shrink { hold_s: 1.0 },
+                Phase::Shrink { hold_s: 1.0 },
+            ],
+        };
+        assert_eq!(job.peak_nodes(), 9);
+        assert!((job.lifetime_s() - 5.0).abs() < 1e-12);
+        // elastic: 2 + 5 + 9 + 5 + 2 node·s = 23; rigid: 9 × 5 = 45
+        assert!((job.node_seconds_elastic() - 23.0).abs() < 1e-12);
+        assert!((job.node_seconds_rigid() - 45.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn elastic_demand_below_rigid() {
+        let jobs = generate(&WorkloadSpec::default());
+        let (elastic, rigid) = demand_summary(&jobs);
+        assert!(elastic < rigid, "elastic {elastic} >= rigid {rigid}");
+        assert!(elastic > 0.0);
+    }
+}
