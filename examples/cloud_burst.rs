@@ -50,9 +50,8 @@ fn main() {
         report.added.len()
     );
     for vid in &report.added {
-        let v = sched.graph.vertex(*vid);
-        if v.rtype == ResourceType::Zone {
-            println!("  zone {}", v.path);
+        if sched.graph.rtype(*vid) == &ResourceType::Zone {
+            println!("  zone {}", sched.graph.vertex(*vid).path);
         }
     }
 

@@ -1,27 +1,40 @@
 //! §Perf harness: micro-benchmarks of the L3 hot paths that make up a
 //! MatchGrow — match, JGF encode/decode, JSON dump/parse, AddSubgraph +
 //! UpdateMetadata, and a full RPC round trip. Used by the performance pass
-//! (EXPERIMENTS.md §Perf) to measure before/after each optimization.
+//! (EXPERIMENTS.md §Perf, PERF.md) to measure before/after each
+//! optimization.
+//!
+//! Flags (after `cargo bench --bench hotpath --`):
+//!   --json    write `BENCH_hotpath.json` at the repo root (the perf
+//!             trajectory file successive PRs diff)
+//!   --smoke   1 warmup / 5 iters per case (CI smoke via scripts/verify.sh)
 
 use fluxion::jobspec::table1_jobspec;
 use fluxion::resource::builder::{table2_graph, UidGen};
 use fluxion::resource::jgf::Jgf;
-use fluxion::sched::{PruneConfig, SchedInstance};
-use fluxion::util::bench::{print_row, run_simple, run_timed};
 use fluxion::rpc::transport::Conn;
+use fluxion::sched::{PruneConfig, SchedInstance};
+use fluxion::util::bench::{run_simple, run_timed, BenchReport};
 use fluxion::util::json::Json;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json = args.iter().any(|a| a == "--json");
+    let (warm, iters) = if smoke { (1, 5) } else { (5, 200) };
+    let (gwarm, giters) = if smoke { (1, 5) } else { (3, 100) };
+    let mut report = BenchReport::new();
+
     let mut uids = UidGen::new();
     let inst = SchedInstance::new(table2_graph(0, &mut uids), PruneConfig::default());
     let t1 = table1_jobspec("T1");
     let t7 = table1_jobspec("T7");
 
     // 1. match: T1 (64 nodes) and T7 (1 node) on the 8961-unit L0 graph
-    let s = run_simple(5, 200, || inst.match_only(&t1).unwrap().selection.len());
-    print_row("match/T1@L0", &s);
-    let s = run_simple(5, 200, || inst.match_only(&t7).unwrap().selection.len());
-    print_row("match/T7@L0", &s);
+    let s = run_simple(warm, iters, || inst.match_only(&t1).unwrap().selection.len());
+    report.row("match/T1@L0", &s);
+    let s = run_simple(warm, iters, || inst.match_only(&t7).unwrap().selection.len());
+    report.row("match/T7@L0", &s);
 
     // null match on a fully-allocated graph
     let mut full = SchedInstance::new(table2_graph(1, &mut UidGen::new()), PruneConfig::default());
@@ -29,8 +42,8 @@ fn main() {
         .match_allocate(&fluxion::jobspec::JobSpec::nodes_sockets_cores(8, 2, 16))
         .unwrap();
     let _ = all;
-    let s = run_simple(5, 200, || full.match_only(&t7).is_err());
-    print_row("match/null@L1", &s);
+    let s = run_simple(warm, iters, || full.match_only(&t7).is_err());
+    report.row("match/null@L1", &s);
 
     // 1b. ablation: the ALL:core pruning filter on vs off (DESIGN.md calls
     // this design choice out; the paper's §5.2.3 match behavior depends on
@@ -53,31 +66,33 @@ fn main() {
     let one_core = fluxion::jobspec::JobSpec::new(vec![
         fluxion::jobspec::ResourceReq::new("core", 1),
     ]);
-    let s = run_simple(5, 200, || unpruned.match_only(&one_core).is_err());
-    print_row("ablate/null_no_pruning@L0", &s);
-    let s = run_simple(5, 200, || pruned.match_only(&one_core).is_err());
-    print_row("ablate/null_with_pruning@L0", &s);
+    let s = run_simple(warm, iters, || unpruned.match_only(&one_core).is_err());
+    report.row("ablate/null_no_pruning@L0", &s);
+    let s = run_simple(warm, iters, || pruned.match_only(&one_core).is_err());
+    report.row("ablate/null_with_pruning@L0", &s);
 
     // 2. JGF encode of a T1-sized grant selection
     let sel = inst.match_only(&t1).unwrap().selection;
-    let s = run_simple(5, 200, || Jgf::from_selection_closed(&inst.graph, &sel).nodes.len());
-    print_row("jgf/encode_T1", &s);
+    let s = run_simple(warm, iters, || {
+        Jgf::from_selection_closed(&inst.graph, &sel).nodes.len()
+    });
+    report.row("jgf/encode_T1", &s);
 
     // 3. JSON dump + parse of the T1 grant document
     let jgf = Jgf::from_selection_closed(&inst.graph, &sel);
-    let s = run_simple(5, 200, || jgf.dump().len());
-    print_row("json/dump_T1", &s);
+    let s = run_simple(warm, iters, || jgf.dump().len());
+    report.row("json/dump_T1", &s);
     let text = jgf.dump();
     println!("  (T1 JGF wire size: {} bytes)", text.len());
-    let s = run_simple(5, 200, || Json::parse(&text).unwrap());
-    print_row("json/parse_T1", &s);
-    let s = run_simple(5, 200, || Jgf::parse(&text).unwrap().nodes.len());
-    print_row("jgf/parse_T1", &s);
+    let s = run_simple(warm, iters, || Json::parse(&text).unwrap());
+    report.row("json/parse_T1", &s);
+    let s = run_simple(warm, iters, || Jgf::parse(&text).unwrap().nodes.len());
+    report.row("jgf/parse_T1", &s);
 
     // 4. AddSubgraph + UpdateMetadata of the T1 grant into a fresh child
     let s = run_timed(
-        3,
-        100,
+        gwarm,
+        giters,
         || {
             SchedInstance::new(
                 fluxion::resource::builder::ClusterSpec::new("cluster", 2, 2, 16)
@@ -91,7 +106,7 @@ fn main() {
             child.graph.size()
         },
     );
-    print_row("grow/add_update_T1", &s);
+    report.row("grow/add_update_T1", &s);
 
     // 5. full in-proc RPC round trip carrying the T1 grant
     let payload = jgf.to_json();
@@ -101,10 +116,16 @@ fn main() {
         }),
     );
     let mut conn = server.connect();
-    let s = run_simple(5, 200, || {
+    let s = run_simple(warm, iters, || {
         conn.call(&fluxion::rpc::Request::new(1, "grant", Json::Null))
             .unwrap()
     });
-    print_row("rpc/inproc_T1_grant", &s);
+    report.row("rpc/inproc_T1_grant", &s);
     server.shutdown();
+
+    if json {
+        let path = "BENCH_hotpath.json";
+        report.write_json(path).expect("write bench report");
+        println!("wrote {path} ({} benchmarks)", report.len());
+    }
 }

@@ -18,6 +18,66 @@ pub mod config;
 
 use std::collections::HashMap;
 
+/// A plain word-packed bit set, reused by the matcher's scratch state for
+/// its tentative-selection marks (`sched::matcher::MatchScratch`): the same
+/// packed representation the baseline scheduler uses for node states, here
+/// as a general-purpose container indexed by arbitrary ids.
+#[derive(Debug, Clone, Default)]
+pub struct BitSet {
+    words: Vec<u64>,
+}
+
+impl BitSet {
+    pub fn new() -> BitSet {
+        BitSet::default()
+    }
+
+    /// Grow (never shrink) to hold at least `nbits` bits; new bits are 0.
+    pub fn ensure(&mut self, nbits: usize) {
+        let words = nbits.div_ceil(64);
+        if self.words.len() < words {
+            self.words.resize(words, 0);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        self.words
+            .get(i / 64)
+            .map(|w| w & (1u64 << (i % 64)) != 0)
+            .unwrap_or(false)
+    }
+
+    /// Set bit `i`. Callers must have `ensure`d capacity.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        if let Some(w) = self.words.get_mut(i / 64) {
+            *w &= !(1u64 << (i % 64));
+        }
+    }
+
+    /// Zero every bit, keeping the backing capacity.
+    pub fn clear_all(&mut self) {
+        for w in &mut self.words {
+            *w = 0;
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Backing word count (capacity telemetry for scratch-reuse tests).
+    pub fn words_len(&self) -> usize {
+        self.words.len()
+    }
+}
+
 /// A homogeneous node-type partition with a free bitmap.
 #[derive(Debug, Clone)]
 pub struct Partition {
@@ -146,6 +206,29 @@ impl BitmapScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bitset_roundtrip() {
+        let mut b = BitSet::new();
+        b.ensure(130);
+        assert_eq!(b.words_len(), 3);
+        assert!(!b.get(0) && !b.get(129));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert_eq!(b.count(), 3);
+        b.clear(64);
+        assert!(!b.get(64));
+        b.clear_all();
+        assert_eq!(b.count(), 0);
+        assert_eq!(b.words_len(), 3, "clear keeps capacity");
+        // out-of-range reads are false, never a panic
+        assert!(!b.get(100_000));
+        // ensure never shrinks
+        b.ensure(10);
+        assert_eq!(b.words_len(), 3);
+    }
 
     #[test]
     fn fresh_partition_all_free() {

@@ -24,9 +24,9 @@ pub const MAX_FLEET_TYPES: usize = 300;
 /// families/sizes. Names leak into JGF vertex basenames, so they are leaked
 /// as `&'static str` once (the catalog is a process-lifetime singleton).
 pub fn full_catalog() -> &'static [InstanceType] {
-    use once_cell::sync::Lazy;
-    static CATALOG: Lazy<Vec<InstanceType>> = Lazy::new(build_catalog);
-    &CATALOG
+    use std::sync::OnceLock;
+    static CATALOG: OnceLock<Vec<InstanceType>> = OnceLock::new();
+    CATALOG.get_or_init(build_catalog)
 }
 
 fn build_catalog() -> Vec<InstanceType> {

@@ -23,13 +23,24 @@ pub struct ExternalGrant {
     pub encode_s: f64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ProviderError {
-    #[error("provider cannot satisfy request: {0}")]
     Unsatisfiable(String),
-    #[error("provider API error: {0}")]
     Api(String),
 }
+
+impl std::fmt::Display for ProviderError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProviderError::Unsatisfiable(s) => {
+                write!(f, "provider cannot satisfy request: {s}")
+            }
+            ProviderError::Api(s) => write!(f, "provider API error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ProviderError {}
 
 /// An external resource provider. Implementations: [`crate::external::ec2`]
 /// (simulated AWS EC2 + EC2 Fleet).

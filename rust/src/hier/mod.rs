@@ -278,13 +278,16 @@ impl NodeState {
 }
 
 /// Attach-root paths of a JGF document (nodes whose parent path is not in
-/// the document).
+/// the document). One pass with a path set — grants are checked on every
+/// level they descend through, so this runs per level per MatchGrow.
 fn attach_roots(jgf: &Jgf) -> Vec<String> {
+    let paths: std::collections::HashSet<&str> =
+        jgf.nodes.iter().map(|n| n.path.as_str()).collect();
     jgf.nodes
         .iter()
         .filter(|n| {
             n.parent_path()
-                .map(|pp| !jgf.nodes.iter().any(|m| m.path == pp))
+                .map(|pp| !paths.contains(pp))
                 .unwrap_or(true)
         })
         .map(|n| n.path.clone())

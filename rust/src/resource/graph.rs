@@ -15,10 +15,17 @@
 //! The underlying structure replaces Fluxion's Boost Graph Library with an
 //! adjacency-list digraph: the paper uses only add/remove vertex/edge plus
 //! indexed lookup, which this provides at the same complexity.
+//!
+//! §Perf: the graph owns a [`TypeTable`] and every vertex stores an interned
+//! [`TypeId`] — type checks on the match hot path are integer compares, and
+//! dynamic `Other` type names are stored once per graph. Vertices also cache
+//! their containment `depth` (maintained on `add_child`) so topological
+//! ordering of a selection never re-derives depth from the path string.
 
 use std::collections::HashMap;
+use std::fmt;
 
-use crate::resource::types::ResourceType;
+use crate::resource::types::{ResourceType, TypeId, TypeTable};
 
 /// Stable handle to a vertex. Indexes into the graph's vertex arena.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -41,10 +48,26 @@ impl AllocInfo {
     }
 }
 
+/// A vertex under construction: everything the caller specifies, before the
+/// graph assigns interned/derived state (type id, depth, aggregates).
+/// [`make_vertex`] returns one of these; `add_root`/`add_child` consume it.
+#[derive(Debug, Clone)]
+pub struct VertexProto {
+    pub rtype: ResourceType,
+    pub basename: String,
+    pub id: u64,
+    pub uniq_id: u64,
+    pub rank: i64,
+    pub size: u64,
+    pub unit: String,
+    pub path: String,
+}
+
 /// A typed resource vertex plus its scheduling metadata.
 #[derive(Debug, Clone)]
 pub struct Vertex {
-    pub rtype: ResourceType,
+    /// Interned resource type (resolve through the graph's [`TypeTable`]).
+    pub tid: TypeId,
     /// Basename, e.g. `core`; instance name is `basename + id`.
     pub basename: String,
     /// Sibling index, e.g. the `3` in `core3`.
@@ -59,11 +82,15 @@ pub struct Vertex {
     pub unit: String,
     /// Containment path, e.g. `/cluster0/rack0/node3/socket0/core7`.
     pub path: String,
+    /// Containment depth, maintained incrementally on `add_child`. The root
+    /// has depth 1, matching the path's `'/'` count, so sort keys are
+    /// identical to the path-derived ones they replace.
+    pub depth: u32,
     pub alloc: AllocInfo,
-    /// Pruning aggregate: free units of each tracked type in the subtree
-    /// rooted here (the ALL:core filter in the paper's test setup tracks
-    /// cores). Maintained incrementally; see `sched::pruning`.
-    pub agg_free: Vec<(ResourceType, i64)>,
+    /// Pruning aggregate: free units in the subtree rooted here, one slot
+    /// per tracked type of the active `PruneConfig` (dense, slot-indexed —
+    /// see `sched::pruning`). Empty until aggregates are initialized.
+    pub agg_free: Vec<i64>,
     /// Tombstone: true once removed. Ids are never reused.
     pub dead: bool,
 }
@@ -73,20 +100,20 @@ impl Vertex {
         format!("{}{}", self.basename, self.id)
     }
 
-    pub fn agg_get(&self, t: &ResourceType) -> i64 {
-        self.agg_free
-            .iter()
-            .find(|(rt, _)| rt == t)
-            .map(|(_, v)| *v)
-            .unwrap_or(0)
+    /// Aggregate for a pruning slot; 0 when aggregates are uninitialized.
+    #[inline]
+    pub fn agg_slot(&self, slot: usize) -> i64 {
+        self.agg_free.get(slot).copied().unwrap_or(0)
     }
 
-    pub fn agg_add(&mut self, t: &ResourceType, delta: i64) {
-        if let Some(e) = self.agg_free.iter_mut().find(|(rt, _)| rt == t) {
-            e.1 += delta;
-        } else {
-            self.agg_free.push((t.clone(), delta));
+    /// Add a delta to a pruning slot, growing the dense vector to `nslots`
+    /// on first touch (vertices attached after init start empty).
+    #[inline]
+    pub fn agg_add_slot(&mut self, slot: usize, nslots: usize, delta: i64) {
+        if self.agg_free.len() < nslots {
+            self.agg_free.resize(nslots, 0);
         }
+        self.agg_free[slot] += delta;
     }
 }
 
@@ -99,24 +126,37 @@ pub struct ResourceGraph {
     children: Vec<Vec<VertexId>>,
     /// containment path -> vertex (the localization index).
     path_index: HashMap<String, VertexId>,
+    /// Interned resource types for every vertex in this graph.
+    types: TypeTable,
     root: Option<VertexId>,
     live_vertices: usize,
     live_edges: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum GraphError {
-    #[error("vertex path '{0}' already exists")]
     DuplicatePath(String),
-    #[error("no vertex at path '{0}'")]
     NoSuchPath(String),
-    #[error("vertex {0:?} is dead")]
     Dead(VertexId),
-    #[error("graph already has a root")]
     RootExists,
-    #[error("cannot remove vertex with live children: {0}")]
     HasChildren(String),
 }
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::DuplicatePath(p) => write!(f, "vertex path '{p}' already exists"),
+            GraphError::NoSuchPath(p) => write!(f, "no vertex at path '{p}'"),
+            GraphError::Dead(v) => write!(f, "vertex {v:?} is dead"),
+            GraphError::RootExists => write!(f, "graph already has a root"),
+            GraphError::HasChildren(p) => {
+                write!(f, "cannot remove vertex with live children: {p}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
 
 impl ResourceGraph {
     pub fn new() -> ResourceGraph {
@@ -135,6 +175,25 @@ impl ResourceGraph {
 
     pub fn vertex_mut(&mut self, id: VertexId) -> &mut Vertex {
         &mut self.vertices[id.0 as usize]
+    }
+
+    /// The graph's type intern table.
+    pub fn types(&self) -> &TypeTable {
+        &self.types
+    }
+
+    pub fn types_mut(&mut self) -> &mut TypeTable {
+        &mut self.types
+    }
+
+    /// Resolved resource type of a vertex.
+    pub fn rtype(&self, id: VertexId) -> &ResourceType {
+        self.types.get(self.vertex(id).tid)
+    }
+
+    /// Type name of a vertex (resolved through the intern table).
+    pub fn type_name(&self, id: VertexId) -> &str {
+        self.types.name(self.vertex(id).tid)
     }
 
     pub fn parent_of(&self, id: VertexId) -> Option<VertexId> {
@@ -180,6 +239,8 @@ impl ResourceGraph {
     }
 
     /// Ancestors from the vertex's parent up to the root.
+    ///
+    /// Allocates; hot paths should walk `parent_of` directly instead.
     pub fn ancestors(&self, id: VertexId) -> Vec<VertexId> {
         let mut out = Vec::new();
         let mut cur = self.parent_of(id);
@@ -210,35 +271,51 @@ impl ResourceGraph {
     // ---- mutation --------------------------------------------------------
 
     /// Add a root vertex (no parent edge).
-    pub fn add_root(&mut self, v: Vertex) -> Result<VertexId, GraphError> {
+    pub fn add_root(&mut self, v: VertexProto) -> Result<VertexId, GraphError> {
         if self.root.is_some() {
             return Err(GraphError::RootExists);
         }
-        let id = self.push_vertex(v)?;
+        let id = self.push_vertex(v, 1)?;
         self.root = Some(id);
         Ok(id)
     }
 
     /// Add a vertex as a child of `parent` (adds the containment edge).
     /// O(1) amortized — this is the primitive `AddSubgraph` loops over.
-    pub fn add_child(&mut self, parent: VertexId, v: Vertex) -> Result<VertexId, GraphError> {
+    /// Interns the vertex type and assigns `depth = parent.depth + 1`.
+    pub fn add_child(&mut self, parent: VertexId, v: VertexProto) -> Result<VertexId, GraphError> {
         if self.vertices[parent.0 as usize].dead {
             return Err(GraphError::Dead(parent));
         }
-        let id = self.push_vertex(v)?;
+        let depth = self.vertices[parent.0 as usize].depth + 1;
+        let id = self.push_vertex(v, depth)?;
         self.parent[id.0 as usize] = Some(parent);
         self.children[parent.0 as usize].push(id);
         self.live_edges += 1;
         Ok(id)
     }
 
-    fn push_vertex(&mut self, v: Vertex) -> Result<VertexId, GraphError> {
+    fn push_vertex(&mut self, v: VertexProto, depth: u32) -> Result<VertexId, GraphError> {
         if self.path_index.contains_key(&v.path) {
-            return Err(GraphError::DuplicatePath(v.path.clone()));
+            return Err(GraphError::DuplicatePath(v.path));
         }
+        let tid = self.types.intern(&v.rtype);
         let id = VertexId(self.vertices.len() as u32);
         self.path_index.insert(v.path.clone(), id);
-        self.vertices.push(v);
+        self.vertices.push(Vertex {
+            tid,
+            basename: v.basename,
+            id: v.id,
+            uniq_id: v.uniq_id,
+            rank: v.rank,
+            size: v.size,
+            unit: v.unit,
+            path: v.path,
+            depth,
+            alloc: AllocInfo::default(),
+            agg_free: Vec::new(),
+            dead: false,
+        });
         self.parent.push(None);
         self.children.push(Vec::new());
         self.live_vertices += 1;
@@ -285,12 +362,15 @@ impl ResourceGraph {
 
     /// Validate internal invariants (tests + failure injection):
     /// path index maps exactly the live vertices; parent/child links agree;
-    /// live counts are consistent.
+    /// cached depths are consistent; live counts are consistent.
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut live = 0usize;
         let mut edges = 0usize;
         for (i, v) in self.vertices.iter().enumerate() {
             let id = VertexId(i as u32);
+            if v.tid.index() >= self.types.len() {
+                return Err(format!("vertex {} has out-of-table type id", v.path));
+            }
             if v.dead {
                 if self.path_index.get(&v.path) == Some(&id) {
                     return Err(format!("dead vertex {} still indexed", v.path));
@@ -301,14 +381,27 @@ impl ResourceGraph {
             if self.path_index.get(&v.path) != Some(&id) {
                 return Err(format!("live vertex {} not indexed", v.path));
             }
-            if let Some(p) = self.parent[i] {
-                if self.vertices[p.0 as usize].dead {
-                    return Err(format!("{} has dead parent", v.path));
+            match self.parent[i] {
+                Some(p) => {
+                    if self.vertices[p.0 as usize].dead {
+                        return Err(format!("{} has dead parent", v.path));
+                    }
+                    if !self.children[p.0 as usize].contains(&id) {
+                        return Err(format!("{} missing from parent's children", v.path));
+                    }
+                    if v.depth != self.vertices[p.0 as usize].depth + 1 {
+                        return Err(format!(
+                            "{} depth {} != parent depth + 1",
+                            v.path, v.depth
+                        ));
+                    }
+                    edges += 1;
                 }
-                if !self.children[p.0 as usize].contains(&id) {
-                    return Err(format!("{} missing from parent's children", v.path));
+                None => {
+                    if v.depth != 1 {
+                        return Err(format!("root {} has depth {} != 1", v.path, v.depth));
+                    }
                 }
-                edges += 1;
             }
             for &c in &self.children[i] {
                 if self.vertices[c.0 as usize].dead {
@@ -339,8 +432,14 @@ impl ResourceGraph {
 }
 
 /// Builder for a vertex with sensible defaults.
-pub fn make_vertex(rtype: ResourceType, basename: &str, id: u64, uniq_id: u64, path: &str) -> Vertex {
-    Vertex {
+pub fn make_vertex(
+    rtype: ResourceType,
+    basename: &str,
+    id: u64,
+    uniq_id: u64,
+    path: &str,
+) -> VertexProto {
+    VertexProto {
         rtype,
         basename: basename.to_string(),
         id,
@@ -349,9 +448,6 @@ pub fn make_vertex(rtype: ResourceType, basename: &str, id: u64, uniq_id: u64, p
         size: 1,
         unit: String::new(),
         path: path.to_string(),
-        alloc: AllocInfo::default(),
-        agg_free: Vec::new(),
-        dead: false,
     }
 }
 
@@ -390,6 +486,62 @@ mod tests {
         assert_eq!(g.children_of(root), &[n0]);
         assert_eq!(g.ancestors(c0), vec![n0, root]);
         g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn types_interned_and_depth_cached() {
+        let (g, root, n0, c0) = tiny();
+        assert_eq!(g.vertex(root).tid, TypeId::CLUSTER);
+        assert_eq!(g.vertex(c0).tid, TypeId::CORE);
+        assert_eq!(g.type_name(n0), "node");
+        assert_eq!(g.rtype(c0), &ResourceType::Core);
+        assert_eq!(g.vertex(root).depth, 1);
+        assert_eq!(g.vertex(n0).depth, 2);
+        assert_eq!(g.vertex(c0).depth, 3);
+    }
+
+    #[test]
+    fn dynamic_types_share_one_interned_entry() {
+        let mut g = ResourceGraph::new();
+        let root = g
+            .add_root(make_vertex(
+                ResourceType::from_name("enclave"),
+                "enclave",
+                0,
+                0,
+                "/enclave0",
+            ))
+            .unwrap();
+        let a = g
+            .add_child(
+                root,
+                make_vertex(
+                    ResourceType::from_name("smartnic"),
+                    "smartnic",
+                    0,
+                    1,
+                    "/enclave0/smartnic0",
+                ),
+            )
+            .unwrap();
+        let b = g
+            .add_child(
+                root,
+                make_vertex(
+                    ResourceType::from_name("smartnic"),
+                    "smartnic",
+                    1,
+                    2,
+                    "/enclave0/smartnic1",
+                ),
+            )
+            .unwrap();
+        assert_eq!(g.vertex(a).tid, g.vertex(b).tid);
+        assert_ne!(g.vertex(a).tid, g.vertex(root).tid);
+        assert_eq!(g.type_name(a), "smartnic");
+        assert_eq!(g.types().lookup_name("smartnic"), Some(g.vertex(a).tid));
+        // two dynamic types + eight builtins
+        assert_eq!(g.types().len(), 10);
     }
 
     #[test]
@@ -453,11 +605,13 @@ mod tests {
     }
 
     #[test]
-    fn agg_helpers() {
+    fn agg_slot_helpers() {
         let (mut g, root, _, _) = tiny();
-        g.vertex_mut(root).agg_add(&ResourceType::Core, 5);
-        g.vertex_mut(root).agg_add(&ResourceType::Core, -2);
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 3);
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Gpu), 0);
+        g.vertex_mut(root).agg_add_slot(0, 2, 5);
+        g.vertex_mut(root).agg_add_slot(0, 2, -2);
+        assert_eq!(g.vertex(root).agg_slot(0), 3);
+        assert_eq!(g.vertex(root).agg_slot(1), 0);
+        // reading past the dense vector is 0, never a panic
+        assert_eq!(g.vertex(root).agg_slot(7), 0);
     }
 }

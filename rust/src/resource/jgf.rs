@@ -12,7 +12,7 @@
 //! subgraph exactly `2n`, matching Table 1 (e.g. T7: 35 vertices, size 70)
 //! and Table 3 (t2.micro: 3 vertices, size 6).
 
-use crate::resource::graph::{make_vertex, GraphError, ResourceGraph, Vertex, VertexId};
+use crate::resource::graph::{make_vertex, GraphError, ResourceGraph, VertexId, VertexProto};
 use crate::resource::types::ResourceType;
 use crate::util::json::{Json, JsonError};
 
@@ -30,10 +30,13 @@ pub struct JgfNode {
 }
 
 impl JgfNode {
-    pub fn from_vertex(v: &Vertex) -> JgfNode {
+    /// Wire form of one graph vertex; the interned type id is resolved back
+    /// to a named `ResourceType` (ids are per-graph, names are universal).
+    pub fn from_vertex(g: &ResourceGraph, vid: VertexId) -> JgfNode {
+        let v = g.vertex(vid);
         JgfNode {
             uniq_id: v.uniq_id,
-            rtype: v.rtype.clone(),
+            rtype: g.rtype(vid).clone(),
             basename: v.basename.clone(),
             id: v.id,
             rank: v.rank,
@@ -43,7 +46,7 @@ impl JgfNode {
         }
     }
 
-    pub fn to_vertex(&self) -> Vertex {
+    pub fn to_vertex(&self) -> VertexProto {
         let mut v = make_vertex(
             self.rtype.clone(),
             &self.basename,
@@ -104,10 +107,9 @@ impl Jgf {
     pub fn from_selection(g: &ResourceGraph, selection: &[VertexId]) -> Jgf {
         let mut jgf = Jgf::default();
         for &vid in selection {
-            let v = g.vertex(vid);
-            jgf.nodes.push(JgfNode::from_vertex(v));
+            jgf.nodes.push(JgfNode::from_vertex(g, vid));
             if let Some(p) = g.parent_of(vid) {
-                jgf.edges.push((g.vertex(p).uniq_id, v.uniq_id));
+                jgf.edges.push((g.vertex(p).uniq_id, g.vertex(vid).uniq_id));
             }
         }
         jgf
@@ -138,7 +140,8 @@ impl Jgf {
             }
         }
         // deepest-last so parents precede children after the sort below
-        extra.sort_by_key(|&v| g.ancestors(v).len());
+        // (depth is cached on the vertex; no ancestor walk per key)
+        extra.sort_by_key(|&v| g.vertex(v).depth);
         let mut all: Vec<VertexId> = extra;
         all.extend_from_slice(selection);
         Self::from_selection(g, &all)

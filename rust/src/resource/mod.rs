@@ -7,6 +7,6 @@ pub mod graph;
 pub mod jgf;
 pub mod types;
 
-pub use graph::{JobId, ResourceGraph, Vertex, VertexId};
+pub use graph::{JobId, ResourceGraph, Vertex, VertexId, VertexProto};
 pub use jgf::Jgf;
-pub use types::ResourceType;
+pub use types::{ResourceType, TypeId, TypeTable};

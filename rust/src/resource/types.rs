@@ -6,7 +6,16 @@
 //! other type round-trips through [`ResourceType::Other`], so a subgraph
 //! arriving from an external provider can introduce types this scheduler has
 //! never seen (e.g. an EC2 availability-zone vertex).
+//!
+//! On the scheduling hot path types are compared millions of times, so each
+//! graph owns a [`TypeTable`] that interns every `ResourceType` it has seen
+//! into a dense [`TypeId`] — type equality becomes a `u16` compare and
+//! `Other` strings are stored once per table instead of cloned per vertex.
+//! Built-in types have fixed ids in every table; `Other` ids are
+//! per-table, which is why the JGF wire format carries type *names* and the
+//! receiver re-interns on attach.
 
+use std::collections::HashMap;
 use std::fmt;
 
 /// A resource vertex type. Ordering follows typical containment depth.
@@ -64,6 +73,157 @@ impl fmt::Display for ResourceType {
     }
 }
 
+/// Interned handle for a [`ResourceType`] within one [`TypeTable`].
+///
+/// Built-in types have the same id in every table (the `CLUSTER`..`MEMORY`
+/// constants); `Other` types get the next free id in interning order.
+/// `u16::MAX` is reserved as an "absent" sentinel and never allocated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TypeId(pub u16);
+
+impl TypeId {
+    pub const CLUSTER: TypeId = TypeId(0);
+    pub const ZONE: TypeId = TypeId(1);
+    pub const RACK: TypeId = TypeId(2);
+    pub const NODE: TypeId = TypeId(3);
+    pub const SOCKET: TypeId = TypeId(4);
+    pub const CORE: TypeId = TypeId(5);
+    pub const GPU: TypeId = TypeId(6);
+    pub const MEMORY: TypeId = TypeId(7);
+
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+fn builtin_id(t: &ResourceType) -> Option<TypeId> {
+    match t {
+        ResourceType::Cluster => Some(TypeId::CLUSTER),
+        ResourceType::Zone => Some(TypeId::ZONE),
+        ResourceType::Rack => Some(TypeId::RACK),
+        ResourceType::Node => Some(TypeId::NODE),
+        ResourceType::Socket => Some(TypeId::SOCKET),
+        ResourceType::Core => Some(TypeId::CORE),
+        ResourceType::Gpu => Some(TypeId::GPU),
+        ResourceType::Memory => Some(TypeId::MEMORY),
+        ResourceType::Other(_) => None,
+    }
+}
+
+fn builtin_id_by_name(name: &str) -> Option<TypeId> {
+    match name {
+        "cluster" => Some(TypeId::CLUSTER),
+        "zone" => Some(TypeId::ZONE),
+        "rack" => Some(TypeId::RACK),
+        "node" => Some(TypeId::NODE),
+        "socket" => Some(TypeId::SOCKET),
+        "core" => Some(TypeId::CORE),
+        "gpu" => Some(TypeId::GPU),
+        "memory" => Some(TypeId::MEMORY),
+        _ => None,
+    }
+}
+
+/// Per-graph intern table: `TypeId -> ResourceType` plus a name index for
+/// `Other` types. Always seeded with the built-ins so their ids are stable.
+#[derive(Debug, Clone)]
+pub struct TypeTable {
+    types: Vec<ResourceType>,
+    /// Name index for `Other` types only (built-ins resolve via `match`,
+    /// no hashing on the hot path).
+    other: HashMap<String, TypeId>,
+}
+
+impl Default for TypeTable {
+    fn default() -> TypeTable {
+        TypeTable {
+            types: vec![
+                ResourceType::Cluster,
+                ResourceType::Zone,
+                ResourceType::Rack,
+                ResourceType::Node,
+                ResourceType::Socket,
+                ResourceType::Core,
+                ResourceType::Gpu,
+                ResourceType::Memory,
+            ],
+            other: HashMap::new(),
+        }
+    }
+}
+
+impl TypeTable {
+    pub fn new() -> TypeTable {
+        TypeTable::default()
+    }
+
+    /// Number of distinct interned types (built-ins included).
+    pub fn len(&self) -> usize {
+        self.types.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.types.is_empty()
+    }
+
+    pub fn get(&self, id: TypeId) -> &ResourceType {
+        &self.types[id.index()]
+    }
+
+    pub fn name(&self, id: TypeId) -> &str {
+        self.types[id.index()].name()
+    }
+
+    /// Intern a type, returning its stable id for this table.
+    pub fn intern(&mut self, t: &ResourceType) -> TypeId {
+        if let Some(id) = builtin_id(t) {
+            return id;
+        }
+        if let Some(&id) = self.other.get(t.name()) {
+            return id;
+        }
+        self.push_other(t.name())
+    }
+
+    /// Intern by name (used when decoding wire formats).
+    pub fn intern_name(&mut self, name: &str) -> TypeId {
+        if let Some(id) = builtin_id_by_name(name) {
+            return id;
+        }
+        if let Some(&id) = self.other.get(name) {
+            return id;
+        }
+        self.push_other(name)
+    }
+
+    fn push_other(&mut self, name: &str) -> TypeId {
+        assert!(
+            self.types.len() < u16::MAX as usize,
+            "type table overflow (u16::MAX is reserved)"
+        );
+        let id = TypeId(self.types.len() as u16);
+        self.types.push(ResourceType::Other(name.to_string()));
+        self.other.insert(name.to_string(), id);
+        id
+    }
+
+    /// Resolve a type without interning (read-only paths like matching).
+    pub fn lookup(&self, t: &ResourceType) -> Option<TypeId> {
+        match builtin_id(t) {
+            Some(id) => Some(id),
+            None => self.other.get(t.name()).copied(),
+        }
+    }
+
+    /// Resolve a type name without interning.
+    pub fn lookup_name(&self, name: &str) -> Option<TypeId> {
+        match builtin_id_by_name(name) {
+            Some(id) => Some(id),
+            None => self.other.get(name).copied(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +240,30 @@ mod tests {
         let t = ResourceType::from_name("smartnic");
         assert_eq!(t, ResourceType::Other("smartnic".to_string()));
         assert_eq!(t.name(), "smartnic");
+    }
+
+    #[test]
+    fn builtins_have_fixed_ids() {
+        let mut a = TypeTable::new();
+        let b = TypeTable::new();
+        assert_eq!(a.intern(&ResourceType::Core), TypeId::CORE);
+        assert_eq!(b.lookup(&ResourceType::Core), Some(TypeId::CORE));
+        assert_eq!(a.lookup_name("node"), Some(TypeId::NODE));
+        assert_eq!(a.name(TypeId::GPU), "gpu");
+    }
+
+    #[test]
+    fn other_interned_once() {
+        let mut t = TypeTable::new();
+        let a = t.intern(&ResourceType::from_name("smartnic"));
+        let b = t.intern_name("smartnic");
+        assert_eq!(a, b);
+        assert_eq!(t.name(a), "smartnic");
+        assert_eq!(t.len(), 9);
+        // a different dynamic type gets a different id
+        let c = t.intern_name("fpga");
+        assert_ne!(a, c);
+        assert_eq!(t.lookup_name("fpga"), Some(c));
+        assert_eq!(t.lookup_name("absent"), None);
     }
 }

@@ -7,49 +7,42 @@
 //! image's xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized
 //! protos. Each artifact is compiled once per process on a shared PJRT CPU
 //! client and then executed with concrete literals.
+//!
+//! The PJRT path needs the vendored `xla` crate, which is not part of the
+//! offline-clean default build. It is gated behind
+//! `--cfg xla_runtime` (see Cargo.toml); without it this module compiles a stub whose
+//! [`artifacts_available`] is always false, so every XLA consumer
+//! (perfmodel, scorer, linreg) takes its rust-native fallback and the
+//! corresponding tests skip — identical behavior to running without built
+//! artifacts.
 
 pub mod linreg;
 pub mod scorer;
 pub mod service;
 
-use std::cell::RefCell;
-use std::path::{Path, PathBuf};
+use std::fmt;
+use std::path::PathBuf;
 
 pub use service::{OutBuf, TensorF32, XlaHandle};
 
-thread_local! {
-    /// Per-thread PJRT CPU client: the xla crate's client holds `Rc`s and
-    /// cannot cross threads. In practice only the `service` thread creates
-    /// one; tests that use [`Artifact`] directly get their own.
-    static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
-}
-
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("artifact not found: {0} (run `make artifacts`)")]
     MissingArtifact(PathBuf),
-    #[error("xla error: {0}")]
     Xla(String),
 }
 
-impl From<xla::Error> for RuntimeError {
-    fn from(e: xla::Error) -> RuntimeError {
-        RuntimeError::Xla(e.to_string())
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RuntimeError::MissingArtifact(p) => {
+                write!(f, "artifact not found: {} (run `make artifacts`)", p.display())
+            }
+            RuntimeError::Xla(s) => write!(f, "xla error: {s}"),
+        }
     }
 }
 
-/// Run `f` with this thread's PJRT client (created on first use).
-fn with_client<T>(
-    f: impl FnOnce(&xla::PjRtClient) -> Result<T, RuntimeError>,
-) -> Result<T, RuntimeError> {
-    CLIENT.with(|slot| {
-        let mut slot = slot.borrow_mut();
-        if slot.is_none() {
-            *slot = Some(xla::PjRtClient::cpu()?);
-        }
-        f(slot.as_ref().expect("just initialized"))
-    })
-}
+impl std::error::Error for RuntimeError {}
 
 /// Default artifacts directory: `$REPRO_ARTIFACTS`, else `artifacts/`
 /// relative to the crate root (works from `cargo test`/`cargo bench`), else
@@ -65,60 +58,173 @@ pub fn artifacts_dir() -> PathBuf {
     PathBuf::from("artifacts")
 }
 
-/// Whether the AOT artifacts have been built (tests skip XLA paths
-/// gracefully when not).
+/// Whether the AOT artifacts can be executed (tests skip XLA paths
+/// gracefully when not). Requires both the `--cfg xla_runtime` build and the
+/// artifact files on disk.
 pub fn artifacts_available() -> bool {
-    artifacts_dir().join("fleet_select.hlo.txt").exists()
+    cfg!(xla_runtime)
+        && artifacts_dir().join("fleet_select.hlo.txt").exists()
         && artifacts_dir().join("linreg_fit.hlo.txt").exists()
         && artifacts_dir().join("linreg_predict.hlo.txt").exists()
 }
 
-/// A compiled artifact: HLO text loaded, compiled once, executed many times.
-pub struct Artifact {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
+#[cfg(xla_runtime)]
+mod backend {
+    //! The real PJRT backend (vendored `xla` crate).
 
-impl Artifact {
-    /// Load `<name>.hlo.txt` from the artifacts directory.
-    pub fn load(name: &str) -> Result<Artifact, RuntimeError> {
-        Self::load_from(&artifacts_dir().join(format!("{name}.hlo.txt")), name)
+    use std::cell::RefCell;
+    use std::path::Path;
+
+    use super::{artifacts_dir, RuntimeError};
+    use crate::runtime::service::{OutBuf, TensorF32};
+
+    impl From<xla::Error> for RuntimeError {
+        fn from(e: xla::Error) -> RuntimeError {
+            RuntimeError::Xla(e.to_string())
+        }
     }
 
-    pub fn load_from(path: &Path, name: &str) -> Result<Artifact, RuntimeError> {
-        if !path.exists() {
-            return Err(RuntimeError::MissingArtifact(path.to_path_buf()));
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().expect("utf-8 artifact path"),
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = with_client(|c| Ok(c.compile(&comp)?))?;
-        Ok(Artifact {
-            exe,
-            name: name.to_string(),
+    thread_local! {
+        /// Per-thread PJRT CPU client: the xla crate's client holds `Rc`s
+        /// and cannot cross threads. In practice only the `service` thread
+        /// creates one; tests that use [`Artifact`] directly get their own.
+        static CLIENT: RefCell<Option<xla::PjRtClient>> = const { RefCell::new(None) };
+    }
+
+    /// Run `f` with this thread's PJRT client (created on first use).
+    fn with_client<T>(
+        f: impl FnOnce(&xla::PjRtClient) -> Result<T, RuntimeError>,
+    ) -> Result<T, RuntimeError> {
+        CLIENT.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(xla::PjRtClient::cpu()?);
+            }
+            f(slot.as_ref().expect("just initialized"))
         })
     }
 
-    /// Execute with input literals; returns the flattened outputs of the
-    /// single result tuple (aot.py lowers with `return_tuple=True`).
-    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>, RuntimeError> {
-        let result = self.exe.execute::<xla::Literal>(inputs)?;
-        let lit = result[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
+    /// A compiled artifact: HLO text loaded, compiled once, executed many
+    /// times.
+    pub struct Artifact {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl Artifact {
+        /// Load `<name>.hlo.txt` from the artifacts directory.
+        pub fn load(name: &str) -> Result<Artifact, RuntimeError> {
+            Self::load_from(&artifacts_dir().join(format!("{name}.hlo.txt")), name)
+        }
+
+        pub fn load_from(path: &Path, name: &str) -> Result<Artifact, RuntimeError> {
+            if !path.exists() {
+                return Err(RuntimeError::MissingArtifact(path.to_path_buf()));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf-8 artifact path"),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = with_client(|c| Ok(c.compile(&comp)?))?;
+            Ok(Artifact {
+                exe,
+                name: name.to_string(),
+            })
+        }
+
+        /// Execute with input literals; returns the flattened outputs of the
+        /// single result tuple (aot.py lowers with `return_tuple=True`).
+        pub fn execute(
+            &self,
+            inputs: &[xla::Literal],
+        ) -> Result<Vec<xla::Literal>, RuntimeError> {
+            let result = self.exe.execute::<xla::Literal>(inputs)?;
+            let lit = result[0][0].to_literal_sync()?;
+            Ok(lit.to_tuple()?)
+        }
+
+        /// Execute with tensor inputs, decoding outputs into plain buffers
+        /// (the service-boundary form).
+        pub fn execute_decoded(
+            &self,
+            inputs: &[TensorF32],
+        ) -> Result<Vec<OutBuf>, RuntimeError> {
+            let mut literals = Vec::with_capacity(inputs.len());
+            for t in inputs {
+                literals.push(literal_f32(&t.data, &t.dims)?);
+            }
+            let outs = self.execute(&literals)?;
+            let mut decoded = Vec::with_capacity(outs.len());
+            for lit in outs {
+                let ty = lit.ty()?;
+                let buf = match ty {
+                    xla::ElementType::S32 => OutBuf::I32(lit.to_vec::<i32>()?),
+                    xla::ElementType::Pred => OutBuf::I32(
+                        lit.convert(xla::PrimitiveType::S32)?.to_vec::<i32>()?,
+                    ),
+                    _ => OutBuf::F32(lit.to_vec::<f32>()?),
+                };
+                decoded.push(buf);
+            }
+            Ok(decoded)
+        }
+    }
+
+    /// Build an f32 literal of the given shape from row-major data.
+    pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal, RuntimeError> {
+        let n: i64 = dims.iter().product();
+        assert_eq!(n as usize, data.len(), "literal shape mismatch");
+        if dims.len() == 1 {
+            Ok(xla::Literal::vec1(data))
+        } else {
+            Ok(xla::Literal::vec1(data).reshape(dims)?)
+        }
     }
 }
 
-/// Build an f32 literal of the given shape from row-major data.
-pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal, RuntimeError> {
-    let n: i64 = dims.iter().product();
-    assert_eq!(n as usize, data.len(), "literal shape mismatch");
-    if dims.len() == 1 {
-        Ok(xla::Literal::vec1(data))
-    } else {
-        Ok(xla::Literal::vec1(data).reshape(dims)?)
+#[cfg(not(xla_runtime))]
+mod backend {
+    //! Offline stub: reports missing artifacts (or a disabled runtime when
+    //! the files exist but the build lacks `--cfg xla_runtime`). Never
+    //! executes anything.
+
+    use std::path::Path;
+
+    use super::{artifacts_dir, RuntimeError};
+    use crate::runtime::service::{OutBuf, TensorF32};
+
+    pub struct Artifact {
+        pub name: String,
+    }
+
+    impl Artifact {
+        pub fn load(name: &str) -> Result<Artifact, RuntimeError> {
+            Self::load_from(&artifacts_dir().join(format!("{name}.hlo.txt")), name)
+        }
+
+        pub fn load_from(path: &Path, _name: &str) -> Result<Artifact, RuntimeError> {
+            if !path.exists() {
+                return Err(RuntimeError::MissingArtifact(path.to_path_buf()));
+            }
+            Err(RuntimeError::Xla(
+                "built without `--cfg xla_runtime`".to_string(),
+            ))
+        }
+
+        pub fn execute_decoded(
+            &self,
+            _inputs: &[TensorF32],
+        ) -> Result<Vec<OutBuf>, RuntimeError> {
+            Err(RuntimeError::Xla(
+                "built without `--cfg xla_runtime`".to_string(),
+            ))
+        }
     }
 }
+
+pub use backend::Artifact;
+#[cfg(xla_runtime)]
+pub use backend::literal_f32;
 
 #[cfg(test)]
 mod tests {
@@ -139,12 +245,14 @@ mod tests {
         }
     }
 
+    #[cfg(xla_runtime)]
     #[test]
     fn literal_shape_checked() {
         let lit = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
         assert_eq!(lit.element_count(), 4);
     }
 
+    #[cfg(xla_runtime)]
     #[test]
     fn execute_fleet_select_roundtrip() {
         if !artifacts_available() {

@@ -8,11 +8,9 @@
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 
-use once_cell::sync::OnceCell;
-
-use crate::runtime::{literal_f32, Artifact, RuntimeError};
+use crate::runtime::{Artifact, RuntimeError};
 
 /// One tensor crossing the service boundary.
 #[derive(Debug, Clone)]
@@ -61,7 +59,7 @@ pub struct XlaHandle {
     tx: Mutex<Sender<Job>>,
 }
 
-static SERVICE: OnceCell<XlaHandle> = OnceCell::new();
+static SERVICE: OnceLock<XlaHandle> = OnceLock::new();
 
 impl XlaHandle {
     /// The process-wide service (spawned on first use).
@@ -114,24 +112,9 @@ fn run_job(
         artifacts.insert(job.artifact.clone(), art);
     }
     let art = artifacts.get(&job.artifact).expect("just inserted");
-    let mut literals = Vec::with_capacity(job.inputs.len());
-    for t in &job.inputs {
-        literals.push(literal_f32(&t.data, &t.dims)?);
-    }
-    let outs = art.execute(&literals)?;
-    let mut decoded = Vec::with_capacity(outs.len());
-    for lit in outs {
-        let ty = lit.ty()?;
-        let buf = match ty {
-            xla::ElementType::S32 => OutBuf::I32(lit.to_vec::<i32>()?),
-            xla::ElementType::Pred => OutBuf::I32(
-                lit.convert(xla::PrimitiveType::S32)?.to_vec::<i32>()?,
-            ),
-            _ => OutBuf::F32(lit.to_vec::<f32>()?),
-        };
-        decoded.push(buf);
-    }
-    Ok(decoded)
+    // literal construction + output decoding live with the backend so the
+    // service stays xla-type-free (and compiles in the stub build)
+    art.execute_decoded(&job.inputs)
 }
 
 #[cfg(test)]

@@ -32,15 +32,24 @@ pub struct AllocTable {
     next_job: u64,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum AllocError {
-    #[error("job {0:?} not found")]
     NoSuchJob(JobId),
-    #[error("vertex {0:?} already allocated")]
     AlreadyAllocated(VertexId),
-    #[error("job {0:?} is not running")]
     NotRunning(JobId),
 }
+
+impl std::fmt::Display for AllocError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AllocError::NoSuchJob(j) => write!(f, "job {j:?} not found"),
+            AllocError::AlreadyAllocated(v) => write!(f, "vertex {v:?} already allocated"),
+            AllocError::NotRunning(j) => write!(f, "job {j:?} is not running"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
 
 impl AllocTable {
     pub fn new() -> AllocTable {
@@ -246,13 +255,13 @@ mod tests {
         let job = t.allocate(&mut g, &cfg, cores.clone()).unwrap();
         assert!(g.vertex(cores[0]).alloc.is_allocated());
         let root = g.root().unwrap();
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 2);
+        assert_eq!(cfg.free_at(&g, root, &ResourceType::Core), 2);
         t.check_consistency(&g).unwrap();
         check_aggregates(&g, &cfg).unwrap();
 
         let n = t.free(&mut g, &cfg, job).unwrap();
         assert_eq!(n, 2);
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 4);
+        assert_eq!(cfg.free_at(&g, root, &ResourceType::Core), 4);
         assert!(!g.vertex(cores[0]).alloc.is_allocated());
         check_aggregates(&g, &cfg).unwrap();
     }
@@ -297,7 +306,7 @@ mod tests {
         t.shrink(&mut g, &cfg, job, &cores[2..]).unwrap();
         assert_eq!(t.get(job).unwrap().vertices.len(), 2);
         let root = g.root().unwrap();
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 2);
+        assert_eq!(cfg.free_at(&g, root, &ResourceType::Core), 2);
         t.check_consistency(&g).unwrap();
         check_aggregates(&g, &cfg).unwrap();
     }

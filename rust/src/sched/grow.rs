@@ -17,14 +17,45 @@ use crate::resource::jgf::Jgf;
 use crate::sched::alloc::{AllocError, AllocTable};
 use crate::sched::pruning::{update_for_attach, update_for_detach, PruneConfig};
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum GrowError {
-    #[error("subgraph root '{0}' has no attach point in this graph")]
     NoAttachPoint(String),
-    #[error(transparent)]
-    Graph(#[from] GraphError),
-    #[error(transparent)]
-    Alloc(#[from] AllocError),
+    Graph(GraphError),
+    Alloc(AllocError),
+}
+
+impl std::fmt::Display for GrowError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GrowError::NoAttachPoint(p) => {
+                write!(f, "subgraph root '{p}' has no attach point in this graph")
+            }
+            GrowError::Graph(e) => e.fmt(f),
+            GrowError::Alloc(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for GrowError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            GrowError::NoAttachPoint(_) => None,
+            GrowError::Graph(e) => Some(e),
+            GrowError::Alloc(e) => Some(e),
+        }
+    }
+}
+
+impl From<GraphError> for GrowError {
+    fn from(e: GraphError) -> GrowError {
+        GrowError::Graph(e)
+    }
+}
+
+impl From<AllocError> for GrowError {
+    fn from(e: AllocError) -> GrowError {
+        GrowError::Alloc(e)
+    }
 }
 
 /// Result of adding a subgraph: which vertices were newly created (in
@@ -144,7 +175,7 @@ mod tests {
         check_aggregates(&child, &cfg).unwrap();
         // free cores grew by the subgraph's cores
         let root = child.root().unwrap();
-        assert_eq!(child.vertex(root).agg_get(&ResourceType::Core), 32 + 32);
+        assert_eq!(cfg.free_at(&child, root, &ResourceType::Core), 32 + 32);
     }
 
     #[test]
@@ -203,7 +234,7 @@ mod tests {
         let mut child = child_graph(&mut uids);
         let before_size = child.size();
         let root = child.root().unwrap();
-        let before_free = child.vertex(root).agg_get(&ResourceType::Core);
+        let before_free = cfg.free_at(&child, root, &ResourceType::Core);
 
         let report = add_subgraph(&mut child, &jgf).unwrap();
         update_metadata(&mut child, &report, &cfg);
@@ -212,7 +243,7 @@ mod tests {
 
         assert_eq!(removed, report.added.len());
         assert_eq!(child.size(), before_size);
-        assert_eq!(child.vertex(root).agg_get(&ResourceType::Core), before_free);
+        assert_eq!(cfg.free_at(&child, root, &ResourceType::Core), before_free);
         child.check_invariants().unwrap();
         check_aggregates(&child, &cfg).unwrap();
     }

@@ -6,12 +6,16 @@
 //! primitives — `MatchAllocate` and the local half of `MatchGrow` — plus the
 //! subgraph add/remove entry points used when grants arrive from a parent.
 
+use std::cell::RefCell;
+
 use crate::jobspec::JobSpec;
 use crate::resource::graph::{JobId, ResourceGraph, VertexId};
 use crate::resource::jgf::Jgf;
 use crate::sched::alloc::AllocTable;
 use crate::sched::grow::{self, AddReport, GrowError};
-use crate::sched::matcher::{match_resources, MatchFail, MatchResult};
+use crate::sched::matcher::{
+    match_resources_in, MatchFail, MatchResult, MatchScratch, ScratchFootprint,
+};
 use crate::sched::pruning::{init_aggregates, PruneConfig};
 
 /// Timing breakdown of one local scheduling operation, mirroring the three
@@ -31,12 +35,40 @@ pub struct AllocOutcome {
     pub visited: usize,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum InstanceError {
-    #[error(transparent)]
-    Match(#[from] MatchFail),
-    #[error(transparent)]
-    Grow(#[from] GrowError),
+    Match(MatchFail),
+    Grow(GrowError),
+}
+
+impl std::fmt::Display for InstanceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InstanceError::Match(e) => e.fmt(f),
+            InstanceError::Grow(e) => e.fmt(f),
+        }
+    }
+}
+
+impl std::error::Error for InstanceError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            InstanceError::Match(e) => Some(e),
+            InstanceError::Grow(e) => Some(e),
+        }
+    }
+}
+
+impl From<MatchFail> for InstanceError {
+    fn from(e: MatchFail) -> InstanceError {
+        InstanceError::Match(e)
+    }
+}
+
+impl From<GrowError> for InstanceError {
+    fn from(e: GrowError) -> InstanceError {
+        InstanceError::Grow(e)
+    }
 }
 
 /// One scheduler instance.
@@ -44,6 +76,10 @@ pub struct SchedInstance {
     pub graph: ResourceGraph,
     pub allocs: AllocTable,
     pub prune: PruneConfig,
+    /// Reusable match state: one warm set of buffers per instance, so
+    /// steady-state matching never allocates in the traversal loop.
+    /// Interior mutability keeps `match_only` a `&self` probe.
+    scratch: RefCell<MatchScratch>,
 }
 
 impl SchedInstance {
@@ -54,6 +90,7 @@ impl SchedInstance {
             graph,
             allocs: AllocTable::new(),
             prune,
+            scratch: RefCell::new(MatchScratch::new()),
         }
     }
 
@@ -66,8 +103,15 @@ impl SchedInstance {
     }
 
     /// Try to match a jobspec without allocating (used for probing).
+    /// Reuses the instance's [`MatchScratch`] across calls.
     pub fn match_only(&self, spec: &JobSpec) -> Result<MatchResult, MatchFail> {
-        match_resources(&self.graph, &self.prune, spec)
+        match_resources_in(&self.graph, &self.prune, spec, &mut self.scratch.borrow_mut())
+    }
+
+    /// Capacity snapshot of the reusable match scratch (tests assert it is
+    /// stable across many matches — i.e. steady state allocates nothing).
+    pub fn scratch_footprint(&self) -> ScratchFootprint {
+        self.scratch.borrow().footprint()
     }
 
     /// `MatchAllocate`: match + allocate to a fresh job id.
@@ -273,6 +317,22 @@ mod tests {
             .next()
             .map(|a| a.job)
             .expect("parent has the boot job")
+    }
+
+    #[test]
+    fn hundred_matches_keep_scratch_capacity_stable() {
+        // the zero-allocation criterion: after one warm-up match, 100 more
+        // matches against the same instance leave every scratch buffer at
+        // its warmed capacity — the traversal loop allocates nothing.
+        let mut uids = UidGen::new();
+        let inst = SchedInstance::new(table2_graph(0, &mut uids), PruneConfig::default());
+        let spec = table1_jobspec("T1");
+        inst.match_only(&spec).unwrap();
+        let warm = inst.scratch_footprint();
+        for _ in 0..100 {
+            inst.match_only(&spec).unwrap();
+        }
+        assert_eq!(inst.scratch_footprint(), warm);
     }
 
     #[test]

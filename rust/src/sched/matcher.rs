@@ -9,11 +9,27 @@
 //! with the `ALL:core` filter a null match only visits vertices *above* the
 //! tracked type (§5.2.3: "complexity dependent on the number of high-level
 //! resources"), because insufficient subtrees are skipped without descent.
+//!
+//! §Perf: the traversal is allocation-free in steady state. All per-match
+//! state lives in a reusable [`MatchScratch`]: the tentative-selection set
+//! is a word-packed [`BitSet`] sized to the vertex arena, request types are
+//! resolved to interned [`TypeId`]s once per call (candidate checks become
+//! `u16` compares), and per-request tracked-type demands are precompiled
+//! into a dense index-addressed table — replacing a pointer-keyed
+//! `HashMap<*const ResourceReq, _>` memo whose address-identity keying was
+//! unsound the moment scratch state outlived one jobspec borrow.
 
+use std::fmt;
+
+use crate::bitmap::BitSet;
 use crate::jobspec::{JobSpec, ResourceReq};
 use crate::resource::graph::{ResourceGraph, VertexId};
-use crate::resource::types::ResourceType;
-use crate::sched::pruning::PruneConfig;
+use crate::resource::types::{TypeId, TypeTable};
+use crate::sched::pruning::{PruneConfig, TrackedSlots};
+
+/// Sentinel request-type id: the graph has never interned this type, so no
+/// vertex can match it (real ids are always below `u16::MAX`).
+const NO_TYPE: u16 = u16::MAX;
 
 /// A successful match: selected vertices in parents-before-children order
 /// (ready for JGF emission), plus traversal statistics.
@@ -24,46 +40,134 @@ pub struct MatchResult {
 }
 
 /// Why a match failed (carried up the hierarchy by MatchGrow).
-#[derive(Debug, Clone, thiserror::Error)]
+#[derive(Debug, Clone)]
 pub enum MatchFail {
-    #[error("no satisfying resources (visited {visited} vertices)")]
     NoMatch { visited: usize },
+}
+
+impl fmt::Display for MatchFail {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MatchFail::NoMatch { visited } => {
+                write!(f, "no satisfying resources (visited {visited} vertices)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MatchFail {}
+
+/// Reusable per-match state. One instance per scheduler thread (each
+/// `SchedInstance` owns one); after warm-up no match performs heap
+/// allocation in the traversal loop — buffers only ever grow.
+#[derive(Debug, Default)]
+pub struct MatchScratch {
+    /// Vertices tentatively selected in this match (they are not yet marked
+    /// in the graph, so the traversal itself must avoid double-picking).
+    selected: BitSet,
+    /// Per request node: interned type id (`NO_TYPE` when unknown).
+    req_tid: Vec<u16>,
+    /// Per request node × pruning slot: tracked-type demand of ONE
+    /// candidate (itself + nested), row-major `[node * nslots + slot]`.
+    demand: Vec<i64>,
+    /// Per request node: size of its request subtree, so a node's children
+    /// sit at consecutive `ix + 1`, `ix + 1 + subtree[ix+1]`, ... indices.
+    subtree: Vec<usize>,
+    /// Selection buffer filled during traversal.
+    out: Vec<VertexId>,
+}
+
+/// Capacity snapshot of a [`MatchScratch`] — used by tests to prove steady
+/// state performs no per-call allocation (capacities stop changing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScratchFootprint {
+    pub selected_words: usize,
+    pub req_capacity: usize,
+    pub demand_capacity: usize,
+    pub subtree_capacity: usize,
+    pub out_capacity: usize,
+}
+
+impl MatchScratch {
+    pub fn new() -> MatchScratch {
+        MatchScratch::default()
+    }
+
+    pub fn footprint(&self) -> ScratchFootprint {
+        ScratchFootprint {
+            selected_words: self.selected.words_len(),
+            req_capacity: self.req_tid.capacity(),
+            demand_capacity: self.demand.capacity(),
+            subtree_capacity: self.subtree.capacity(),
+            out_capacity: self.out.capacity(),
+        }
+    }
+}
+
+/// Compile one request node (and recursively its children) into the scratch
+/// tables. Returns the node's index. Demand of one candidate of `req` is
+/// its own contribution plus `count`-weighted child demands — the same
+/// recurrence the old per-(request, type) memo computed, now resolved once
+/// per call into dense rows.
+fn compile_req(
+    req: &ResourceReq,
+    types: &TypeTable,
+    tracked: &TrackedSlots,
+    nslots: usize,
+    req_tid: &mut Vec<u16>,
+    demand: &mut Vec<i64>,
+    subtree: &mut Vec<usize>,
+) -> usize {
+    let ix = req_tid.len();
+    let tid = types
+        .lookup_name(&req.rtype)
+        .map(|t| t.0)
+        .unwrap_or(NO_TYPE);
+    req_tid.push(tid);
+    demand.resize(demand.len() + nslots, 0);
+    subtree.push(1);
+    for sub in &req.with {
+        let cix = compile_req(sub, types, tracked, nslots, req_tid, demand, subtree);
+        subtree[ix] += subtree[cix];
+        for slot in 0..nslots {
+            let d = demand[cix * nslots + slot];
+            demand[ix * nslots + slot] += sub.count as i64 * d;
+        }
+    }
+    if tid != NO_TYPE {
+        if let Some(slot) = tracked.slot_of_tid(TypeId(tid)) {
+            demand[ix * nslots + slot] += 1;
+        }
+    }
+    ix
 }
 
 struct Ctx<'a> {
     g: &'a ResourceGraph,
-    cfg: &'a PruneConfig,
+    nslots: usize,
     visited: usize,
-    /// Vertices tentatively selected in this match (they are not yet marked
-    /// in the graph, so the traversal itself must avoid double-picking).
-    selected: Vec<bool>,
-    /// Per-request-node tracked-type demands, memoized by request identity —
-    /// `demand_of` is recursive and the traversal consults it per candidate
-    /// (§Perf: recomputing it was ~30% of a large match).
-    demands: std::collections::HashMap<*const ResourceReq, Vec<i64>>,
+    selected: &'a mut BitSet,
+    req_tid: &'a [u16],
+    demand: &'a [i64],
+    subtree: &'a [usize],
 }
 
-impl<'a> Ctx<'a> {
+impl Ctx<'_> {
+    #[inline]
     fn is_free(&self, vid: VertexId) -> bool {
-        !self.g.vertex(vid).alloc.is_allocated() && !self.selected[vid.0 as usize]
+        !self.g.vertex(vid).alloc.is_allocated() && !self.selected.get(vid.0 as usize)
     }
 
     /// Pruning check: can the subtree under `vid` possibly supply the
-    /// tracked-type demands of one candidate of `req`?
-    fn prune_ok(&mut self, vid: VertexId, req: &ResourceReq) -> bool {
-        let key = req as *const ResourceReq;
-        if !self.demands.contains_key(&key) {
-            let v: Vec<i64> = self
-                .cfg
-                .tracked
-                .iter()
-                .map(|t| demand_of(req, t))
-                .collect();
-            self.demands.insert(key, v);
-        }
-        let needs = &self.demands[&key];
-        for (t, &need) in self.cfg.tracked.iter().zip(needs) {
-            if need > 0 && self.g.vertex(vid).agg_get(t) < need {
+    /// tracked-type demands of one candidate of request node `ix`?
+    /// Array indexing on both sides — no type resolution per vertex.
+    #[inline]
+    fn prune_ok(&self, vid: VertexId, ix: usize) -> bool {
+        let v = self.g.vertex(vid);
+        let base = ix * self.nslots;
+        for slot in 0..self.nslots {
+            let need = self.demand[base + slot];
+            if need > 0 && v.agg_slot(slot) < need {
                 return false;
             }
         }
@@ -71,29 +175,24 @@ impl<'a> Ctx<'a> {
     }
 }
 
-/// Tracked-type demand of ONE candidate of `req` (itself + nested).
-fn demand_of(req: &ResourceReq, t: &ResourceType) -> i64 {
-    let own = if req.rtype == t.name() { 1 } else { 0 };
-    let nested: i64 = req
-        .with
-        .iter()
-        .map(|c| c.count as i64 * demand_of(c, t))
-        .sum();
-    own + nested
-}
-
 /// Try to satisfy `req.count` candidates within the children of `scope`
 /// (descending through intermediate container types). On success appends
 /// the selected vertices (parents-first) to `out`.
-fn satisfy(ctx: &mut Ctx, scope: VertexId, req: &ResourceReq, out: &mut Vec<VertexId>) -> bool {
+fn satisfy(
+    ctx: &mut Ctx,
+    out: &mut Vec<VertexId>,
+    scope: VertexId,
+    req: &ResourceReq,
+    ix: usize,
+) -> bool {
     let mut found = 0u64;
     let start = out.len();
-    if collect(ctx, scope, req, &mut found, out) {
+    if collect(ctx, out, scope, req, ix, &mut found) {
         true
     } else {
         // roll back tentative selections from this request level
         for &v in &out[start..] {
-            ctx.selected[v.0 as usize] = false;
+            ctx.selected.clear(v.0 as usize);
         }
         out.truncate(start);
         false
@@ -105,34 +204,37 @@ fn satisfy(ctx: &mut Ctx, scope: VertexId, req: &ResourceReq, out: &mut Vec<Vert
 /// `found == req.count`.
 fn collect(
     ctx: &mut Ctx,
+    out: &mut Vec<VertexId>,
     scope: VertexId,
     req: &ResourceReq,
+    ix: usize,
     found: &mut u64,
-    out: &mut Vec<VertexId>,
 ) -> bool {
+    let want = ctx.req_tid[ix];
     let nchild = ctx.g.children_of(scope).len();
     for i in 0..nchild {
         let child = ctx.g.children_of(scope)[i];
         ctx.visited += 1;
-        let ctype = &ctx.g.vertex(child).rtype;
-        if ctype.name() == req.rtype {
+        if ctx.g.vertex(child).tid.0 == want {
             // exclusive candidates must be free; non-exclusive ("shared")
             // requests use the vertex as scope only and never claim it
-            if (req.exclusive && !ctx.is_free(child)) || !ctx.prune_ok(child, req) {
+            if (req.exclusive && !ctx.is_free(child)) || !ctx.prune_ok(child, ix) {
                 continue;
             }
             let mark = out.len();
             if req.exclusive {
                 // tentatively select the candidate, then its nested needs
-                ctx.selected[child.0 as usize] = true;
+                ctx.selected.set(child.0 as usize);
                 out.push(child);
             }
             let mut ok = true;
+            let mut cix = ix + 1;
             for sub in &req.with {
-                if !satisfy(ctx, child, sub, out) {
+                if !satisfy(ctx, out, child, sub, cix) {
                     ok = false;
                     break;
                 }
+                cix += ctx.subtree[cix];
             }
             if ok {
                 *found += 1;
@@ -141,17 +243,17 @@ fn collect(
                 }
             } else {
                 for &v in &out[mark..] {
-                    ctx.selected[v.0 as usize] = false;
+                    ctx.selected.clear(v.0 as usize);
                 }
                 out.truncate(mark);
             }
         } else {
             // descend through an intermediate container (e.g. rack, zone) —
             // but prune if its subtree cannot host even one candidate
-            if !ctx.prune_ok(child, req) {
+            if !ctx.prune_ok(child, ix) {
                 continue;
             }
-            if collect(ctx, child, req, found, out) {
+            if collect(ctx, out, child, req, ix, found) {
                 return true;
             }
         }
@@ -159,33 +261,67 @@ fn collect(
     false
 }
 
-/// Match a jobspec against the graph. Does NOT mark allocations — callers
-/// pass the selection to [`crate::sched::alloc::AllocTable`].
-pub fn match_resources(
+/// Match a jobspec against the graph, reusing `scratch` across calls. Does
+/// NOT mark allocations — callers pass the selection to
+/// [`crate::sched::alloc::AllocTable`].
+pub fn match_resources_in(
     g: &ResourceGraph,
     cfg: &PruneConfig,
     spec: &JobSpec,
+    scratch: &mut MatchScratch,
 ) -> Result<MatchResult, MatchFail> {
     let Some(root) = g.root() else {
         return Err(MatchFail::NoMatch { visited: 0 });
     };
+    let tracked = cfg.resolve(g.types());
+    let nslots = cfg.nslots();
+
+    scratch.req_tid.clear();
+    scratch.demand.clear();
+    scratch.subtree.clear();
+    for req in &spec.resources {
+        compile_req(
+            req,
+            g.types(),
+            &tracked,
+            nslots,
+            &mut scratch.req_tid,
+            &mut scratch.demand,
+            &mut scratch.subtree,
+        );
+    }
+    scratch.selected.ensure(g.arena_len());
+    scratch.selected.clear_all();
+    scratch.out.clear();
+
+    let MatchScratch {
+        selected,
+        req_tid,
+        demand,
+        subtree,
+        out,
+    } = scratch;
     let mut ctx = Ctx {
         g,
-        cfg,
+        nslots,
         visited: 1,
-        selected: vec![false; g.arena_len()],
-        demands: std::collections::HashMap::new(),
+        selected,
+        req_tid: req_tid.as_slice(),
+        demand: demand.as_slice(),
+        subtree: subtree.as_slice(),
     };
-    let mut out = Vec::new();
+    let mut ix = 0usize;
     for req in &spec.resources {
-        if !satisfy(&mut ctx, root, req, &mut out) {
+        if !satisfy(&mut ctx, out, root, req, ix) {
             return Err(MatchFail::NoMatch {
                 visited: ctx.visited,
             });
         }
+        ix += ctx.subtree[ix];
     }
-    // order parents-before-children for JGF emission
-    let mut selection = out;
+    // order parents-before-children for JGF emission (one exact-size copy
+    // out of the reusable buffer; the traversal itself never allocates)
+    let mut selection = out.as_slice().to_vec();
     sort_topological(g, &mut selection);
     Ok(MatchResult {
         selection,
@@ -193,21 +329,23 @@ pub fn match_resources(
     })
 }
 
+/// One-shot variant constructing a throwaway scratch. Long-lived callers
+/// ([`crate::sched::SchedInstance`]) hold a scratch and use
+/// [`match_resources_in`].
+pub fn match_resources(
+    g: &ResourceGraph,
+    cfg: &PruneConfig,
+    spec: &JobSpec,
+) -> Result<MatchResult, MatchFail> {
+    let mut scratch = MatchScratch::new();
+    match_resources_in(g, cfg, spec, &mut scratch)
+}
+
 /// Order a selection parents-before-children (depth then discovery order).
-/// Depth comes from the containment path ('/' count) — O(path length)
-/// instead of an ancestor walk per sort-key evaluation.
+/// Depth is cached on the vertex (maintained by `add_child`), so the key is
+/// two integer loads — no path scanning, no side table.
 fn sort_topological(g: &ResourceGraph, selection: &mut [VertexId]) {
-    let mut keyed: Vec<(u32, VertexId)> = selection
-        .iter()
-        .map(|&v| {
-            let depth = g.vertex(v).path.bytes().filter(|&b| b == b'/').count() as u32;
-            (depth, v)
-        })
-        .collect();
-    keyed.sort_unstable_by_key(|&(d, v)| (d, v.0));
-    for (slot, (_, v)) in selection.iter_mut().zip(keyed) {
-        *slot = v;
-    }
+    selection.sort_unstable_by_key(|&v| (g.vertex(v).depth, v.0));
 }
 
 #[cfg(test)]
@@ -215,6 +353,7 @@ mod tests {
     use super::*;
     use crate::jobspec::{table1_jobspec, JobSpec};
     use crate::resource::builder::{table2_graph, ClusterSpec, UidGen};
+    use crate::resource::types::ResourceType;
     use crate::sched::alloc::AllocTable;
     use crate::sched::pruning::init_aggregates;
 
@@ -233,7 +372,7 @@ mod tests {
         // 1 node + 2 sockets + 32 cores = 35 vertices
         assert_eq!(m.selection.len(), 35);
         // parents-first: node before sockets before cores
-        assert_eq!(g.vertex(m.selection[0]).rtype.name(), "node");
+        assert_eq!(g.type_name(m.selection[0]), "node");
     }
 
     #[test]
@@ -328,5 +467,50 @@ mod tests {
         let g = ResourceGraph::new();
         let cfg = PruneConfig::default();
         assert!(match_resources(&g, &cfg, &table1_jobspec("T8")).is_err());
+    }
+
+    #[test]
+    fn unknown_request_type_fails_without_panic() {
+        let mut g = table2_graph(4, &mut UidGen::new());
+        let cfg = ready(&mut g);
+        let spec = JobSpec::new(vec![crate::jobspec::ResourceReq::new("quantum", 1)]);
+        assert!(match_resources(&g, &cfg, &spec).is_err());
+    }
+
+    /// Regression for the pointer-keyed demand memo: one scratch reused
+    /// across specs living at different (and possibly recycled) heap
+    /// addresses must never alias their demand rows.
+    #[test]
+    fn reused_scratch_is_correct_across_spec_allocations() {
+        let mut g = table2_graph(3, &mut UidGen::new());
+        let cfg = ready(&mut g);
+        let mut scratch = MatchScratch::new();
+        let spec_a = Box::new(table1_jobspec("T7"));
+        let a = match_resources_in(&g, &cfg, &spec_a, &mut scratch).unwrap();
+        drop(spec_a); // free the request nodes; the next Box may reuse them
+        let spec_b = Box::new(JobSpec::nodes_sockets_cores(1, 1, 4));
+        let b = match_resources_in(&g, &cfg, &spec_b, &mut scratch).unwrap();
+        assert_eq!(a.selection.len(), 35);
+        assert_eq!(b.selection.len(), 6);
+        // the same spec rebuilt at a fresh address reproduces the result
+        let spec_c = Box::new(table1_jobspec("T7"));
+        let c = match_resources_in(&g, &cfg, &spec_c, &mut scratch).unwrap();
+        assert_eq!(c.selection, a.selection);
+    }
+
+    /// Scratch capacities stabilize: after the first match, repeated
+    /// matching allocates nothing new in the traversal state.
+    #[test]
+    fn scratch_capacities_stabilize() {
+        let mut g = table2_graph(1, &mut UidGen::new());
+        let cfg = ready(&mut g);
+        let mut scratch = MatchScratch::new();
+        let spec = table1_jobspec("T4"); // 8 nodes
+        match_resources_in(&g, &cfg, &spec, &mut scratch).unwrap();
+        let warm = scratch.footprint();
+        for _ in 0..100 {
+            match_resources_in(&g, &cfg, &spec, &mut scratch).unwrap();
+        }
+        assert_eq!(scratch.footprint(), warm);
     }
 }

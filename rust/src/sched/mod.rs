@@ -9,5 +9,5 @@ pub mod pruning;
 
 pub use alloc::AllocTable;
 pub use instance::SchedInstance;
-pub use matcher::{match_resources, MatchFail, MatchResult};
+pub use matcher::{match_resources, match_resources_in, MatchFail, MatchResult, MatchScratch};
 pub use pruning::PruneConfig;

@@ -6,12 +6,29 @@
 //! descending. Crucially the aggregate is "a function of its subgraph"
 //! (§3), so graph edits only dirty the edited vertices' ancestors — this is
 //! what bounds `UpdateMetadata` to O(n + m + p).
+//!
+//! §Perf: each tracked type has a fixed **slot index** (its position in
+//! `PruneConfig::tracked`), and per-vertex aggregates are a dense `Vec<i64>`
+//! indexed by slot — reads and updates are array indexing instead of a
+//! linear scan over `(ResourceType, i64)` pairs. [`PruneConfig::resolve`]
+//! maps slots to the graph's interned [`TypeId`]s once per operation (an
+//! inline array, no allocation), after which every per-vertex check is an
+//! integer compare.
 
 use crate::resource::graph::{ResourceGraph, VertexId};
-use crate::resource::types::ResourceType;
+use crate::resource::types::{ResourceType, TypeId, TypeTable};
+
+/// Maximum tracked types per filter (inline-array bound; the paper's
+/// configurations track 1–3).
+pub const MAX_TRACKED: usize = 8;
+
+/// Sentinel for a tracked type with no interned id in a graph's table
+/// (no vertex of that type exists there). Never a real `TypeId`.
+const ABSENT: u16 = u16::MAX;
 
 /// Which resource types are tracked by the filter. `ALL:core` tracks cores;
-/// experiments that allocate GPUs/memory track those too.
+/// experiments that allocate GPUs/memory track those too. The position of a
+/// type in `tracked` is its aggregate **slot**.
 #[derive(Debug, Clone)]
 pub struct PruneConfig {
     pub tracked: Vec<ResourceType>,
@@ -27,6 +44,10 @@ impl Default for PruneConfig {
 
 impl PruneConfig {
     pub fn all_of(types: &[ResourceType]) -> PruneConfig {
+        assert!(
+            types.len() <= MAX_TRACKED,
+            "at most {MAX_TRACKED} tracked types"
+        );
         PruneConfig {
             tracked: types.to_vec(),
         }
@@ -35,51 +56,118 @@ impl PruneConfig {
     pub fn tracks(&self, t: &ResourceType) -> bool {
         self.tracked.contains(t)
     }
+
+    /// Number of aggregate slots.
+    pub fn nslots(&self) -> usize {
+        self.tracked.len()
+    }
+
+    /// Slot index of a tracked type.
+    pub fn slot_of(&self, t: &ResourceType) -> Option<usize> {
+        self.tracked.iter().position(|x| x == t)
+    }
+
+    /// Resolve the tracked types against a graph's intern table. Types the
+    /// table has never seen resolve to a sentinel no vertex can match.
+    pub fn resolve(&self, types: &TypeTable) -> TrackedSlots {
+        assert!(
+            self.tracked.len() <= MAX_TRACKED,
+            "at most {MAX_TRACKED} tracked types"
+        );
+        let mut s = TrackedSlots {
+            tids: [ABSENT; MAX_TRACKED],
+            len: self.tracked.len(),
+        };
+        for (i, t) in self.tracked.iter().enumerate() {
+            if let Some(tid) = types.lookup(t) {
+                s.tids[i] = tid.0;
+            }
+        }
+        s
+    }
+
+    /// Test/debug helper: free units of `t` in the subtree under `vid`
+    /// according to the cached aggregates (0 if `t` is untracked).
+    pub fn free_at(&self, g: &ResourceGraph, vid: VertexId, t: &ResourceType) -> i64 {
+        self.slot_of(t)
+            .map(|slot| g.vertex(vid).agg_slot(slot))
+            .unwrap_or(0)
+    }
+}
+
+/// Slot -> interned type id mapping for one graph. Copy, inline, no heap.
+#[derive(Debug, Clone, Copy)]
+pub struct TrackedSlots {
+    tids: [u16; MAX_TRACKED],
+    len: usize,
+}
+
+impl TrackedSlots {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Slot of an interned vertex type, if tracked. A linear scan over at
+    /// most `MAX_TRACKED` u16s — integer compares only.
+    #[inline]
+    pub fn slot_of_tid(&self, tid: TypeId) -> Option<usize> {
+        self.tids[..self.len].iter().position(|&t| t == tid.0)
+    }
 }
 
 /// (Re)initialize aggregates for the whole graph: one post-order pass.
 /// Used at instance start; incremental updates keep them fresh afterwards.
+/// Interns the tracked types so later read-only resolves always hit.
 pub fn init_aggregates(g: &mut ResourceGraph, cfg: &PruneConfig) {
+    let nslots = cfg.nslots();
+    for t in &cfg.tracked {
+        g.types_mut().intern(t);
+    }
     let Some(root) = g.root() else { return };
+    let tracked = cfg.resolve(g.types());
     let order = g.dfs(root); // preorder; reverse gives children-before-parent
     for &vid in order.iter().rev() {
-        let mut totals: Vec<(ResourceType, i64)> = cfg
-            .tracked
-            .iter()
-            .map(|t| (t.clone(), 0i64))
-            .collect();
+        let mut totals = [0i64; MAX_TRACKED];
         // own contribution
         {
             let v = g.vertex(vid);
-            if cfg.tracks(&v.rtype) && !v.alloc.is_allocated() {
-                if let Some(e) = totals.iter_mut().find(|(t, _)| *t == v.rtype) {
-                    e.1 += v.size as i64;
+            if !v.alloc.is_allocated() {
+                if let Some(slot) = tracked.slot_of_tid(v.tid) {
+                    totals[slot] += v.size as i64;
                 }
             }
         }
         // children contributions (already computed: post-order)
         for ci in 0..g.children_of(vid).len() {
             let c = g.children_of(vid)[ci];
-            for (t, acc) in totals.iter_mut() {
-                *acc += g.vertex(c).agg_get(t);
+            let child = g.vertex(c);
+            for (slot, total) in totals.iter_mut().enumerate().take(nslots) {
+                *total += child.agg_slot(slot);
             }
         }
-        g.vertex_mut(vid).agg_free = totals;
+        g.vertex_mut(vid).agg_free = totals[..nslots].to_vec();
     }
 }
 
 /// Apply a delta for one vertex becoming allocated/free: adjust the vertex
-/// itself and all ancestors. O(depth) per vertex.
+/// itself and all ancestors. O(depth) per vertex; walks parent links
+/// without materializing an ancestor list.
 pub fn bubble_delta(g: &mut ResourceGraph, vid: VertexId, cfg: &PruneConfig, delta: i64) {
-    let t = g.vertex(vid).rtype.clone();
-    if !cfg.tracks(&t) {
+    let tracked = cfg.resolve(g.types());
+    let Some(slot) = tracked.slot_of_tid(g.vertex(vid).tid) else {
         return;
-    }
+    };
+    let nslots = cfg.nslots();
     let amount = delta * g.vertex(vid).size as i64;
-    g.vertex_mut(vid).agg_add(&t, amount);
-    let ancestors = g.ancestors(vid);
-    for a in ancestors {
-        g.vertex_mut(a).agg_add(&t, amount);
+    g.vertex_mut(vid).agg_add_slot(slot, nslots, amount);
+    let mut cur = g.parent_of(vid);
+    while let Some(a) = cur {
+        g.vertex_mut(a).agg_add_slot(slot, nslots, amount);
+        cur = g.parent_of(a);
     }
 }
 
@@ -94,31 +182,33 @@ pub fn update_for_attach(
     cfg: &PruneConfig,
 ) {
     use std::collections::HashSet;
+    let nslots = cfg.nslots();
+    for t in &cfg.tracked {
+        g.types_mut().intern(t);
+    }
+    let tracked = cfg.resolve(g.types());
     let new_set: HashSet<VertexId> = new_vertices.iter().copied().collect();
     // interior pass: children-before-parents
     for &vid in new_vertices.iter().rev() {
-        let mut totals: Vec<(ResourceType, i64)> = cfg
-            .tracked
-            .iter()
-            .map(|t| (t.clone(), 0i64))
-            .collect();
+        let mut totals = [0i64; MAX_TRACKED];
         {
             let v = g.vertex(vid);
-            if cfg.tracks(&v.rtype) && !v.alloc.is_allocated() {
-                if let Some(e) = totals.iter_mut().find(|(t, _)| *t == v.rtype) {
-                    e.1 += v.size as i64;
+            if !v.alloc.is_allocated() {
+                if let Some(slot) = tracked.slot_of_tid(v.tid) {
+                    totals[slot] += v.size as i64;
                 }
             }
         }
         for ci in 0..g.children_of(vid).len() {
             let c = g.children_of(vid)[ci];
             // children of a new vertex are all new (attach adds whole
-            // subtrees), but guard anyway
-            for (t, acc) in totals.iter_mut() {
-                *acc += g.vertex(c).agg_get(t);
+            // subtrees), but the slot read is total either way
+            let child = g.vertex(c);
+            for (slot, total) in totals.iter_mut().enumerate().take(nslots) {
+                *total += child.agg_slot(slot);
             }
         }
-        g.vertex_mut(vid).agg_free = totals;
+        g.vertex_mut(vid).agg_free = totals[..nslots].to_vec();
     }
     // boundary pass: each attach root adds its totals to pre-existing
     // ancestors only
@@ -128,12 +218,15 @@ pub fn update_for_attach(
         if !is_attach_root {
             continue;
         }
-        let totals = g.vertex(vid).agg_free.clone();
+        let mut totals = [0i64; MAX_TRACKED];
+        for (slot, total) in totals.iter_mut().enumerate().take(nslots) {
+            *total = g.vertex(vid).agg_slot(slot);
+        }
         let mut cur = parent;
         while let Some(a) = cur {
-            for (t, amount) in &totals {
-                if *amount != 0 {
-                    g.vertex_mut(a).agg_add(t, *amount);
+            for (slot, &amount) in totals.iter().enumerate().take(nslots) {
+                if amount != 0 {
+                    g.vertex_mut(a).agg_add_slot(slot, nslots, amount);
                 }
             }
             cur = g.parent_of(a);
@@ -142,37 +235,44 @@ pub fn update_for_attach(
 }
 
 /// Subtract a subtree's aggregate totals from its ancestors before removal
-/// (the subtractive transformation's metadata update).
+/// (the subtractive transformation's metadata update). Walks parent links
+/// without materializing an ancestor list.
 pub fn update_for_detach(g: &mut ResourceGraph, subtree_root: VertexId, cfg: &PruneConfig) {
-    let totals = g.vertex(subtree_root).agg_free.clone();
-    let ancestors = g.ancestors(subtree_root);
-    for a in ancestors {
-        for (t, amount) in &totals {
-            if cfg.tracks(t) && *amount != 0 {
-                g.vertex_mut(a).agg_add(t, -amount);
+    let nslots = cfg.nslots();
+    let mut totals = [0i64; MAX_TRACKED];
+    for (slot, total) in totals.iter_mut().enumerate().take(nslots) {
+        *total = g.vertex(subtree_root).agg_slot(slot);
+    }
+    let mut cur = g.parent_of(subtree_root);
+    while let Some(a) = cur {
+        for (slot, &amount) in totals.iter().enumerate().take(nslots) {
+            if amount != 0 {
+                g.vertex_mut(a).agg_add_slot(slot, nslots, -amount);
             }
         }
+        cur = g.parent_of(a);
     }
 }
 
 /// Debug/test helper: verify aggregates equal a fresh recount.
 pub fn check_aggregates(g: &ResourceGraph, cfg: &PruneConfig) -> Result<(), String> {
     let Some(root) = g.root() else { return Ok(()) };
+    let tracked = cfg.resolve(g.types());
     for vid in g.dfs(root) {
-        for t in &cfg.tracked {
+        for (slot, t) in cfg.tracked.iter().enumerate() {
             let counted: i64 = g
                 .dfs(vid)
                 .iter()
                 .map(|&d| {
                     let v = g.vertex(d);
-                    if v.rtype == *t && !v.alloc.is_allocated() {
+                    if tracked.slot_of_tid(v.tid) == Some(slot) && !v.alloc.is_allocated() {
                         v.size as i64
                     } else {
                         0
                     }
                 })
                 .sum();
-            let cached = g.vertex(vid).agg_get(t);
+            let cached = g.vertex(vid).agg_slot(slot);
             if counted != cached {
                 return Err(format!(
                     "aggregate mismatch at {} for {t}: counted {counted}, cached {cached}",
@@ -190,15 +290,19 @@ mod tests {
     use crate::resource::builder::{ClusterSpec, UidGen};
     use crate::resource::graph::JobId;
 
+    fn free_cores(g: &ResourceGraph, cfg: &PruneConfig, vid: VertexId) -> i64 {
+        cfg.free_at(g, vid, &ResourceType::Core)
+    }
+
     #[test]
     fn init_counts_free_cores() {
         let mut g = ClusterSpec::new("c", 2, 2, 4).build(&mut UidGen::new());
         let cfg = PruneConfig::default();
         init_aggregates(&mut g, &cfg);
         let root = g.root().unwrap();
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 16);
+        assert_eq!(free_cores(&g, &cfg, root), 16);
         let n0 = g.lookup_path("/c0/node0").unwrap();
-        assert_eq!(g.vertex(n0).agg_get(&ResourceType::Core), 8);
+        assert_eq!(free_cores(&g, &cfg, n0), 8);
         check_aggregates(&g, &cfg).unwrap();
     }
 
@@ -211,7 +315,7 @@ mod tests {
         g.vertex_mut(core).alloc.jobs.push(JobId(1));
         bubble_delta(&mut g, core, &cfg, -1);
         let root = g.root().unwrap();
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 3);
+        assert_eq!(free_cores(&g, &cfg, root), 3);
         check_aggregates(&g, &cfg).unwrap();
     }
 
@@ -253,7 +357,7 @@ mod tests {
         }
         update_for_attach(&mut g, &new_vs, &cfg);
         let root = g.root().unwrap();
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 4);
+        assert_eq!(free_cores(&g, &cfg, root), 4);
         check_aggregates(&g, &cfg).unwrap();
     }
 
@@ -266,7 +370,7 @@ mod tests {
         update_for_detach(&mut g, n1, &cfg);
         g.remove_subtree(n1).unwrap();
         let root = g.root().unwrap();
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 4);
+        assert_eq!(free_cores(&g, &cfg, root), 4);
         check_aggregates(&g, &cfg).unwrap();
     }
 
@@ -278,7 +382,38 @@ mod tests {
         let cfg = PruneConfig::all_of(&[ResourceType::Core, ResourceType::Gpu]);
         init_aggregates(&mut g, &cfg);
         let root = g.root().unwrap();
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Core), 8);
-        assert_eq!(g.vertex(root).agg_get(&ResourceType::Gpu), 2);
+        assert_eq!(cfg.free_at(&g, root, &ResourceType::Core), 8);
+        assert_eq!(cfg.free_at(&g, root, &ResourceType::Gpu), 2);
+    }
+
+    #[test]
+    fn slots_are_positional_and_dense() {
+        let cfg = PruneConfig::all_of(&[ResourceType::Gpu, ResourceType::Core]);
+        assert_eq!(cfg.nslots(), 2);
+        assert_eq!(cfg.slot_of(&ResourceType::Gpu), Some(0));
+        assert_eq!(cfg.slot_of(&ResourceType::Core), Some(1));
+        assert_eq!(cfg.slot_of(&ResourceType::Memory), None);
+        let table = TypeTable::new();
+        let slots = cfg.resolve(&table);
+        assert_eq!(slots.slot_of_tid(TypeId::GPU), Some(0));
+        assert_eq!(slots.slot_of_tid(TypeId::CORE), Some(1));
+        assert_eq!(slots.slot_of_tid(TypeId::NODE), None);
+    }
+
+    #[test]
+    fn tracked_type_with_no_vertices_is_inert() {
+        let mut g = ClusterSpec::new("c", 1, 1, 2).build(&mut UidGen::new());
+        let cfg = PruneConfig::all_of(&[
+            ResourceType::Core,
+            ResourceType::from_name("smartnic"),
+        ]);
+        init_aggregates(&mut g, &cfg);
+        let root = g.root().unwrap();
+        assert_eq!(cfg.free_at(&g, root, &ResourceType::Core), 2);
+        assert_eq!(
+            cfg.free_at(&g, root, &ResourceType::from_name("smartnic")),
+            0
+        );
+        check_aggregates(&g, &cfg).unwrap();
     }
 }

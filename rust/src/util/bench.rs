@@ -6,6 +6,7 @@
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats::{summarize, Summary};
 
 /// Run `iters` timed repetitions of `f` after `warmup` untimed ones.
@@ -58,6 +59,64 @@ pub fn throughput(items: usize, secs: f64) -> f64 {
     items as f64 / secs
 }
 
+/// Machine-readable bench report: named rows accumulated as a run prints,
+/// then emitted as JSON so successive PRs can diff medians mechanically
+/// (the perf trajectory file, e.g. `BENCH_hotpath.json`).
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    rows: Vec<(String, Summary)>,
+}
+
+impl BenchReport {
+    pub fn new() -> BenchReport {
+        BenchReport::default()
+    }
+
+    /// Print the human row AND record it for the JSON report.
+    pub fn row(&mut self, name: &str, samples: &[f64]) -> Summary {
+        let s = print_row(name, samples);
+        self.rows.push((name.to_string(), s.clone()));
+        s
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Summary> {
+        self.rows.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(name, s)| {
+                Json::obj()
+                    .with("name", Json::from(name.as_str()))
+                    .with("n", Json::from(s.n as u64))
+                    .with("mean_s", Json::from(s.mean))
+                    .with("median_s", Json::from(s.median))
+                    .with("q1_s", Json::from(s.q1))
+                    .with("q3_s", Json::from(s.q3))
+                    .with("std_s", Json::from(s.std))
+                    .with("min_s", Json::from(s.min))
+                    .with("max_s", Json::from(s.max))
+            })
+            .collect();
+        Json::obj().with("benchmarks", Json::Arr(rows))
+    }
+
+    /// Write the JSON report to `path` (pretty-printed for diffs).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().dump_pretty())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +151,23 @@ mod tests {
         let row = report_row("my_bench", &[0.1, 0.2]);
         assert!(row.contains("my_bench"));
         assert!(row.contains("n=2"));
+    }
+
+    #[test]
+    fn bench_report_json_roundtrips() {
+        let mut r = BenchReport::new();
+        r.row("match/T1@L0", &[0.1, 0.2, 0.3]);
+        r.row("jgf/encode", &[0.5]);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.get("jgf/encode").unwrap().n, 1);
+        let doc = crate::util::json::Json::parse(&r.to_json().dump()).unwrap();
+        let rows = doc.get("benchmarks").and_then(|b| b.as_arr()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(
+            rows[0].get("name").and_then(|n| n.as_str()),
+            Some("match/T1@L0")
+        );
+        let median = rows[0].get("median_s").and_then(|m| m.as_f64()).unwrap();
+        assert!((median - 0.2).abs() < 1e-12);
     }
 }

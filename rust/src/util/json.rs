@@ -279,13 +279,24 @@ impl From<BTreeMap<String, Json>> for Json {
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json schema error: {0}")]
     Schema(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Schema(s) => write!(f, "json schema error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 fn push_indent(out: &mut String, n: usize) {
     for _ in 0..n {

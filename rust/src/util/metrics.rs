@@ -40,16 +40,19 @@ pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
 }
 
 /// Max resident set size of this process in kB, as the paper's
-/// resource-query reports. Linux getrusage returns kB directly.
+/// resource-query reports. Read from /proc/self/status (VmHWM — the same
+/// number getrusage's ru_maxrss reports on Linux) so no libc binding is
+/// needed in the offline build.
 pub fn max_rss_kb() -> u64 {
-    unsafe {
-        let mut usage: libc::rusage = std::mem::zeroed();
-        if libc::getrusage(libc::RUSAGE_SELF, &mut usage) == 0 {
-            usage.ru_maxrss as u64
-        } else {
-            0
-        }
-    }
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("VmHWM:"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|v| v.parse().ok())
+        })
+        .unwrap_or(0)
 }
 
 /// Current RSS in kB from /proc/self/statm (max RSS is sticky; experiments

@@ -154,9 +154,8 @@ fn prop_allocation_conservation() {
             );
             let free0 = {
                 let root = inst.graph.root().unwrap();
-                inst.graph
-                    .vertex(root)
-                    .agg_get(&fluxion::resource::ResourceType::Core)
+                inst.prune
+                    .free_at(&inst.graph, root, &fluxion::resource::ResourceType::Core)
             };
             let mut jobs = Vec::new();
             for &(nodes, cores) in reqs {
@@ -172,9 +171,8 @@ fn prop_allocation_conservation() {
             }
             let free1 = {
                 let root = inst.graph.root().unwrap();
-                inst.graph
-                    .vertex(root)
-                    .agg_get(&fluxion::resource::ResourceType::Core)
+                inst.prune
+                    .free_at(&inst.graph, root, &fluxion::resource::ResourceType::Core)
             };
             ensure(free0 == free1, "capacity restored after free")?;
             inst.check().map_err(|e| e.to_string())

@@ -1,0 +1,320 @@
+//! Matcher correctness against independent oracles, plus aggregate
+//! consistency under mixed dynamic sequences — the safety net under the
+//! zero-allocation hot-path refactor (interned types, slot-indexed
+//! aggregates, reusable match scratch).
+
+use std::collections::HashSet;
+
+use fluxion::jobspec::{JobSpec, ResourceReq};
+use fluxion::resource::builder::{ClusterSpec, UidGen};
+use fluxion::resource::graph::{ResourceGraph, VertexId};
+use fluxion::resource::jgf::Jgf;
+use fluxion::resource::ResourceType;
+use fluxion::sched::{match_resources, PruneConfig, SchedInstance};
+use fluxion::util::rng::Rng;
+
+// ---- brute-force oracle ---------------------------------------------------
+//
+// An independent exhaustive search: no pruning aggregates, no interned
+// types, full backtracking over every candidate combination. Restricted to
+// chain-shaped requests (each level has at most one nested request), where
+// candidate subtrees are disjoint and the search below is complete.
+
+/// All candidate vertices of `tname` reachable from `scope` by descending
+/// through other-typed vertices (the matcher's candidate semantics).
+fn oracle_candidates(g: &ResourceGraph, scope: VertexId, tname: &str, out: &mut Vec<VertexId>) {
+    for &c in g.children_of(scope) {
+        if g.type_name(c) == tname {
+            out.push(c);
+        } else {
+            oracle_candidates(g, c, tname, out);
+        }
+    }
+}
+
+fn oracle_sat_req(
+    g: &ResourceGraph,
+    taken: &mut HashSet<VertexId>,
+    trail: &mut Vec<VertexId>,
+    scope: VertexId,
+    req: &ResourceReq,
+) -> bool {
+    assert!(req.with.len() <= 1, "oracle handles chain specs only");
+    let mut cands = Vec::new();
+    oracle_candidates(g, scope, &req.rtype, &mut cands);
+    oracle_choose(g, taken, trail, &cands, 0, req.count, req)
+}
+
+/// Pick `remaining` satisfiable candidates out of `cands[i..]`, trying both
+/// taking and skipping each (complete search over subsets).
+fn oracle_choose(
+    g: &ResourceGraph,
+    taken: &mut HashSet<VertexId>,
+    trail: &mut Vec<VertexId>,
+    cands: &[VertexId],
+    i: usize,
+    remaining: u64,
+    req: &ResourceReq,
+) -> bool {
+    if remaining == 0 {
+        return true;
+    }
+    if i >= cands.len() {
+        return false;
+    }
+    let c = cands[i];
+    let free = !g.vertex(c).alloc.is_allocated() && !taken.contains(&c);
+    if !req.exclusive || free {
+        let mark = trail.len();
+        if req.exclusive {
+            taken.insert(c);
+            trail.push(c);
+        }
+        let mut ok = true;
+        for sub in &req.with {
+            if !oracle_sat_req(g, taken, trail, c, sub) {
+                ok = false;
+                break;
+            }
+        }
+        if ok && oracle_choose(g, taken, trail, cands, i + 1, remaining - 1, req) {
+            return true;
+        }
+        for v in trail.drain(mark..) {
+            taken.remove(&v);
+        }
+    }
+    oracle_choose(g, taken, trail, cands, i + 1, remaining, req)
+}
+
+fn oracle_feasible(g: &ResourceGraph, spec: &JobSpec) -> bool {
+    let Some(root) = g.root() else { return false };
+    let mut taken = HashSet::new();
+    let mut trail = Vec::new();
+    spec.resources
+        .iter()
+        .all(|req| oracle_sat_req(g, &mut taken, &mut trail, root, req))
+}
+
+/// Sanity-check a successful selection: free vertices, per-type counts
+/// matching the spec's totals.
+fn assert_selection_valid(g: &ResourceGraph, spec: &JobSpec, selection: &[VertexId]) {
+    let mut seen = HashSet::new();
+    for &v in selection {
+        assert!(!g.vertex(v).alloc.is_allocated(), "selected allocated vertex");
+        assert!(seen.insert(v), "vertex selected twice");
+    }
+    for tname in ["node", "socket", "core"] {
+        let want = spec.total_of(tname);
+        let got = selection
+            .iter()
+            .filter(|&&v| g.type_name(v) == tname)
+            .count() as u64;
+        assert_eq!(got, want, "selection {tname} count");
+    }
+}
+
+/// Matcher (pruned and unpruned) agrees with the exhaustive oracle on small
+/// random graphs with random pre-allocations.
+#[test]
+fn matcher_agrees_with_bruteforce_oracle() {
+    let mut rng = Rng::new(0x04AC1E ^ 0xF00D);
+    for round in 0..60 {
+        let nodes = 1 + rng.below(3) as usize;
+        let sockets = 1 + rng.below(2) as usize;
+        let cores = 1 + rng.below(4) as usize;
+        let mut g = ClusterSpec::new("c", nodes, sockets, cores).build(&mut UidGen::new());
+        let cfg = PruneConfig::default();
+        fluxion::sched::pruning::init_aggregates(&mut g, &cfg);
+
+        // randomly pre-allocate some cores (each its own job)
+        let mut table = fluxion::sched::AllocTable::new();
+        let all_cores: Vec<VertexId> = g
+            .iter_live()
+            .filter(|&v| g.type_name(v) == "core")
+            .collect();
+        let k = rng.below(all_cores.len() as u64 + 1) as usize;
+        let picks = rng.sample_indices(all_cores.len(), k);
+        let victims: Vec<VertexId> = picks.iter().map(|&i| all_cores[i]).collect();
+        if !victims.is_empty() {
+            table.allocate(&mut g, &cfg, victims).unwrap();
+        }
+
+        // random chain spec: nodes{sockets{cores}} with 0 meaning "start
+        // lower in the chain" (T8-style socket-rooted requests)
+        let spec = JobSpec::nodes_sockets_cores(
+            rng.below(nodes as u64 + 2),
+            1 + rng.below(sockets as u64 + 1),
+            1 + rng.below(cores as u64 + 1),
+        );
+
+        let want = oracle_feasible(&g, &spec);
+        let pruned = match_resources(&g, &cfg, &spec);
+        let unpruned = match_resources(&g, &PruneConfig { tracked: vec![] }, &spec);
+        assert_eq!(
+            pruned.is_ok(),
+            want,
+            "round {round}: pruned matcher disagrees with oracle \
+             ({nodes}x{sockets}x{cores}, spec {})",
+            spec.dump()
+        );
+        assert_eq!(
+            unpruned.is_ok(),
+            want,
+            "round {round}: unpruned matcher disagrees with oracle"
+        );
+        if let (Ok(a), Ok(b)) = (&pruned, &unpruned) {
+            assert_eq!(a.selection, b.selection, "pruning changed the selection");
+            assert_selection_valid(&g, &spec, &a.selection);
+        }
+        fluxion::sched::pruning::check_aggregates(&g, &cfg).unwrap();
+    }
+}
+
+// ---- mixed dynamic sequences ----------------------------------------------
+
+/// A donor instance that mints chain-shaped grants for the subject.
+fn mint_grant(donor: &mut SchedInstance, nodes: u64) -> Option<Jgf> {
+    let spec = JobSpec::nodes_sockets_cores(nodes, 2, 4);
+    let m = donor.match_only(&spec).ok()?;
+    let jgf = Jgf::from_selection_closed(&donor.graph, &m.selection);
+    // mark them used donor-side so successive grants are disjoint
+    let prune = donor.prune.clone();
+    donor
+        .allocs
+        .allocate(&mut donor.graph, &prune, m.selection)
+        .unwrap();
+    Some(jgf)
+}
+
+/// Aggregates and invariants stay exact under random interleavings of
+/// allocate / grow(accept_grant) / shrink(release_subtree) / free /
+/// re-match, with the instance's reusable scratch live the whole time.
+#[test]
+fn aggregates_consistent_under_mixed_sequences() {
+    for seed in [1u64, 7, 42, 1234] {
+        let mut rng = Rng::new(seed);
+        let mut uids = UidGen::new();
+        // donor owns nodes 100.. of the same namespace; subject owns 0..2
+        let mut donor = SchedInstance::new(
+            ClusterSpec::new("c", 8, 2, 4).with_node_base(100).build(&mut uids),
+            PruneConfig::default(),
+        );
+        let mut inst = SchedInstance::new(
+            ClusterSpec::new("c", 2, 2, 4).build(&mut uids),
+            PruneConfig::default(),
+        );
+        let mut jobs: Vec<fluxion::resource::graph::JobId> = Vec::new();
+        let mut grant_roots: Vec<String> = Vec::new();
+
+        for _ in 0..40 {
+            match rng.below(5) {
+                // allocate a small job
+                0 => {
+                    let spec = JobSpec::nodes_sockets_cores(
+                        rng.below(2),
+                        1 + rng.below(2),
+                        1 + rng.below(4),
+                    );
+                    if let Ok(out) = inst.match_allocate(&spec) {
+                        jobs.push(out.job);
+                    }
+                }
+                // grow: splice a donor grant, sometimes into a running job
+                1 => {
+                    if let Some(jgf) = mint_grant(&mut donor, 1 + rng.below(2)) {
+                        let job = if !jobs.is_empty() && rng.bool_with(0.5) {
+                            Some(jobs[rng.below(jobs.len() as u64) as usize])
+                        } else {
+                            None
+                        };
+                        let (report, _) = inst.accept_grant(&jgf, job).unwrap();
+                        // record attach roots for later shrinks
+                        let added: HashSet<VertexId> =
+                            report.added.iter().copied().collect();
+                        for &v in &report.added {
+                            let is_root = inst
+                                .graph
+                                .parent_of(v)
+                                .map(|p| !added.contains(&p))
+                                .unwrap_or(true);
+                            if is_root {
+                                grant_roots.push(inst.graph.vertex(v).path.clone());
+                            }
+                        }
+                    }
+                }
+                // shrink: release + detach one granted subtree
+                2 => {
+                    if !grant_roots.is_empty() {
+                        let i = rng.below(grant_roots.len() as u64) as usize;
+                        let path = grant_roots.swap_remove(i);
+                        if inst.graph.lookup_path(&path).is_some() {
+                            inst.release_subtree(&path).unwrap();
+                        }
+                    }
+                }
+                // free a running job (vertices may be partially shrunk away)
+                3 => {
+                    if !jobs.is_empty() {
+                        let i = rng.below(jobs.len() as u64) as usize;
+                        let job = jobs.swap_remove(i);
+                        inst.free_job(job).unwrap();
+                    }
+                }
+                // re-match probe through the reused scratch
+                _ => {
+                    let _ = inst.match_only(&JobSpec::nodes_sockets_cores(1, 2, 4));
+                }
+            }
+            inst.check().unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            inst.graph
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+
+        // drain: free everything, shrink remaining grants, verify the
+        // subject ends consistent and fully free
+        for job in jobs.drain(..) {
+            let _ = inst.free_job(job);
+        }
+        for path in grant_roots.drain(..) {
+            if inst.graph.lookup_path(&path).is_some() {
+                inst.release_subtree(&path).unwrap();
+            }
+        }
+        inst.check().unwrap();
+        let root = inst.graph.root().unwrap();
+        let free = inst.prune.free_at(&inst.graph, root, &ResourceType::Core);
+        let live_cores = inst
+            .graph
+            .iter_live()
+            .filter(|&v| inst.graph.type_name(v) == "core")
+            .count() as i64;
+        assert_eq!(free, live_cores, "seed {seed}: every remaining core free");
+    }
+}
+
+/// The end-to-end zero-allocation criterion from the issue: 100 matches
+/// against one instance leave the scratch footprint exactly as warmed.
+#[test]
+fn scratch_footprint_stable_over_100_matches() {
+    let inst = SchedInstance::new(
+        ClusterSpec::new("c", 16, 2, 16).build(&mut UidGen::new()),
+        PruneConfig::default(),
+    );
+    let specs = [
+        JobSpec::nodes_sockets_cores(4, 2, 16),
+        JobSpec::nodes_sockets_cores(1, 1, 4),
+        JobSpec::nodes_sockets_cores(0, 1, 16),
+    ];
+    // warm with the largest request shape
+    for spec in &specs {
+        inst.match_only(spec).unwrap();
+    }
+    let warm = inst.scratch_footprint();
+    for i in 0..100 {
+        inst.match_only(&specs[i % specs.len()]).unwrap();
+    }
+    assert_eq!(inst.scratch_footprint(), warm);
+}

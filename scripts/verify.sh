@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# One-entrypoint verify: tier-1 build + tests, then a hotpath bench smoke
+# (1 warmup / 5 iters) that also refreshes BENCH_hotpath.json at the repo
+# root. Builders and CI both invoke this.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== hotpath bench smoke (--smoke --json) =="
+cargo bench --bench hotpath -- --smoke --json
+
+echo "verify OK"
