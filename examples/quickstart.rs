@@ -1,4 +1,6 @@
-//! Quickstart: build a cluster graph, allocate a job, grow it, shrink it.
+//! Quickstart: build a cluster graph, allocate a job, grow it, shrink it —
+//! first through the named methods, then the same thing as a typed-op
+//! batch through the protocol entrypoint (`SchedOp` -> `apply_batch`).
 //!
 //! ```text
 //! cargo run --release --example quickstart
@@ -7,7 +9,7 @@
 use fluxion::jobspec::JobSpec;
 use fluxion::resource::builder::{ClusterSpec, UidGen};
 use fluxion::resource::jgf::Jgf;
-use fluxion::sched::{PruneConfig, SchedInstance};
+use fluxion::sched::{PruneConfig, SchedInstance, SchedOp, SchedReply};
 
 fn main() {
     // a 4-node cluster: 2 sockets × 8 cores each
@@ -49,4 +51,41 @@ fn main() {
     // shrink back: release everything
     let freed = sched.free_job(out.job).expect("job exists");
     println!("released {freed} vertices; scheduler consistent: {:?}", sched.check());
+
+    // the same lifecycle as one typed batch: a queue of SchedOps through
+    // one warm match scratch (identical consecutive specs compile their
+    // demand tables once). Every op's wire form is `op.to_json()` — what
+    // a remote submitter would frame over RPC.
+    let spec = JobSpec::nodes_sockets_cores(1, 2, 8);
+    let ops = vec![
+        SchedOp::Probe { spec: spec.clone() },
+        SchedOp::MatchAllocate { spec: spec.clone() },
+        SchedOp::MatchAllocate { spec: spec.clone() },
+        SchedOp::MatchAllocate { spec },
+        // over-ask: fails in place with a structured error, batch continues
+        SchedOp::MatchAllocate {
+            spec: JobSpec::nodes_sockets_cores(2, 2, 8),
+        },
+        SchedOp::Probe {
+            spec: JobSpec::nodes_sockets_cores(1, 2, 8),
+        },
+    ];
+    println!("\nbatched submission ({} ops):", ops.len());
+    for (op, reply) in ops.iter().zip(sched.apply_batch(&ops)) {
+        match reply {
+            SchedReply::Probed { vertices, .. } => {
+                println!("  {:<16} -> feasible, {vertices} vertices", op.name())
+            }
+            SchedReply::Allocated { job, subgraph, .. } => {
+                println!(
+                    "  {:<16} -> job {job:?}, {} vertices",
+                    op.name(),
+                    subgraph.nodes.len()
+                )
+            }
+            SchedReply::Error(e) => println!("  {:<16} -> {e}", op.name()),
+            other => println!("  {:<16} -> {}", op.name(), other.name()),
+        }
+    }
+    println!("scheduler consistent: {:?}", sched.check());
 }

@@ -1,19 +1,24 @@
 //! §Perf harness: micro-benchmarks of the L3 hot paths that make up a
 //! MatchGrow — match, JGF encode/decode, JSON dump/parse, AddSubgraph +
-//! UpdateMetadata, and a full RPC round trip. Used by the performance pass
-//! (EXPERIMENTS.md §Perf, PERF.md) to measure before/after each
-//! optimization.
+//! UpdateMetadata, a full typed-RPC round trip, and the `batch/` family
+//! (apply_batch queues vs one-call-at-a-time; those rows record **per-op**
+//! seconds — each sample is one whole batch divided by its queue length, so
+//! `batch/match_T1x32@L0` compares directly against `match/T1@L0`). Used by
+//! the performance pass (EXPERIMENTS.md §Perf, PERF.md) to measure
+//! before/after each optimization.
 //!
 //! Flags (after `cargo bench --bench hotpath --`):
 //!   --json    write `BENCH_hotpath.json` at the repo root (the perf
-//!             trajectory file successive PRs diff)
+//!             trajectory file successive PRs diff; scripts/verify.sh
+//!             gates `batch/*` medians against the committed copy)
 //!   --smoke   1 warmup / 5 iters per case (CI smoke via scripts/verify.sh)
 
 use fluxion::jobspec::table1_jobspec;
 use fluxion::resource::builder::{table2_graph, UidGen};
+use fluxion::resource::graph::JobId;
 use fluxion::resource::jgf::Jgf;
 use fluxion::rpc::transport::Conn;
-use fluxion::sched::{PruneConfig, SchedInstance};
+use fluxion::sched::{PruneConfig, SchedInstance, SchedOp, SchedReply};
 use fluxion::util::bench::{run_simple, run_timed, BenchReport};
 use fluxion::util::json::Json;
 
@@ -108,20 +113,93 @@ fn main() {
     );
     report.row("grow/add_update_T1", &s);
 
-    // 5. full in-proc RPC round trip carrying the T1 grant
-    let payload = jgf.to_json();
+    // 5. typed-protocol costs, split by layer:
+    //    (a) the reply codec itself — encode a `grown` reply carrying the
+    //        T1 grant to wire text, and decode it back to the typed enum
+    //        (this is what the TCP internode hop pays per message; the
+    //        in-proc transport skips it)
+    let grown = SchedReply::Grown {
+        subgraph: jgf.clone(),
+        levels: Vec::new(),
+    };
+    let s = run_simple(warm, iters, || grown.to_json().dump().len());
+    report.row("rpc/reply_encode_T1", &s);
+    let grown_text = grown.to_json().dump();
+    let s = run_simple(warm, iters, || {
+        SchedReply::from_json(&Json::parse(&grown_text).unwrap()).unwrap()
+    });
+    report.row("rpc/reply_decode_T1", &s);
+
+    //    (b) the in-proc round trip: the InProc transport moves the typed
+    //        structs over a channel WITHOUT serializing, so this row is
+    //        dispatch + payload clone + channel hop. Renamed from PR 1's
+    //        rpc/inproc_T1_grant (whose payload was a raw Json document)
+    //        to keep the cross-PR trajectory diff honest.
     let server = fluxion::rpc::transport::InProcServer::spawn(
         fluxion::rpc::transport::handler(move |req: fluxion::rpc::Request| {
-            fluxion::rpc::Response::ok(req.id, payload.clone())
+            fluxion::rpc::Response::ok(req.id, grown.clone())
         }),
     );
     let mut conn = server.connect();
-    let s = run_simple(warm, iters, || {
-        conn.call(&fluxion::rpc::Request::new(1, "grant", Json::Null))
-            .unwrap()
-    });
-    report.row("rpc/inproc_T1_grant", &s);
+    let req = fluxion::rpc::Request::new(1, SchedOp::FreeJob { job: JobId(1) });
+    let s = run_simple(warm, iters, || conn.call(&req).unwrap());
+    report.row("rpc/inproc_T1_grant_typed", &s);
     server.shutdown();
+
+    // 6. batched submission (ROADMAP "batched match"): a queue through one
+    //    warm scratch with spec-level dedup, vs. the sequential rows above.
+    //    Rows are PER-OP seconds (sample / queue length).
+    let mut binst =
+        SchedInstance::new(table2_graph(0, &mut UidGen::new()), PruneConfig::default());
+    let t1_probe_x32: Vec<SchedOp> = (0..32)
+        .map(|_| SchedOp::Probe { spec: t1.clone() })
+        .collect();
+    let s = run_simple(warm, iters, || {
+        let replies = binst.apply_batch(&t1_probe_x32);
+        assert!(replies.iter().all(|r| !r.is_error()));
+        replies.len()
+    });
+    let per_op: Vec<f64> = s.iter().map(|x| x / 32.0).collect();
+    report.row("batch/match_T1x32@L0", &per_op);
+
+    // dedup ablation: alternating specs defeat the compile amortization,
+    // isolating how much of the batch win is dedup vs. warm-scratch reuse
+    let mixed_x32: Vec<SchedOp> = (0..32)
+        .map(|i| SchedOp::Probe {
+            spec: if i % 2 == 0 { t1.clone() } else { t7.clone() },
+        })
+        .collect();
+    let s = run_simple(warm, iters, || {
+        let replies = binst.apply_batch(&mixed_x32);
+        assert!(replies.iter().all(|r| !r.is_error()));
+        replies.len()
+    });
+    let per_op: Vec<f64> = s.iter().map(|x| x / 32.0).collect();
+    report.row("batch/match_mixed32@L0", &per_op);
+
+    // mutating batch: 16 MatchAllocates then 16 FreeJobs on a fresh
+    // instance per repetition (setup excluded from timing)
+    let mut alloc_free: Vec<SchedOp> = (0..16)
+        .map(|_| SchedOp::MatchAllocate { spec: t7.clone() })
+        .collect();
+    alloc_free.extend((0..16u64).map(|i| SchedOp::FreeJob { job: JobId(i) }));
+    let s = run_timed(
+        gwarm,
+        giters,
+        || {
+            SchedInstance::new(
+                table2_graph(0, &mut UidGen::starting_at(1 << 41)),
+                PruneConfig::default(),
+            )
+        },
+        |mut inst| {
+            let replies = inst.apply_batch(&alloc_free);
+            assert!(replies.iter().all(|r| !r.is_error()));
+            replies.len()
+        },
+    );
+    let per_op: Vec<f64> = s.iter().map(|x| x / 32.0).collect();
+    report.row("batch/alloc_free_T7x16@L0", &per_op);
 
     if json {
         let path = "BENCH_hotpath.json";

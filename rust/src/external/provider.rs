@@ -29,6 +29,19 @@ pub enum ProviderError {
     Api(String),
 }
 
+impl ProviderError {
+    /// Stable machine-readable code from the typed protocol's error
+    /// vocabulary ([`crate::rpc::proto::code`]): provider failures
+    /// surfacing through a hierarchy level travel as `provider_*` codes so
+    /// callers can tell "the cloud said no" from a local `no_match`.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ProviderError::Unsatisfiable(_) => crate::rpc::proto::code::PROVIDER_UNSATISFIABLE,
+            ProviderError::Api(_) => crate::rpc::proto::code::PROVIDER_API,
+        }
+    }
+}
+
 impl std::fmt::Display for ProviderError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {

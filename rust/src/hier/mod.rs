@@ -26,12 +26,12 @@ use crate::jobspec::JobSpec;
 use crate::resource::graph::JobId;
 use crate::resource::jgf::Jgf;
 use crate::resource::ResourceGraph;
+use crate::rpc::proto::{code, RpcError, SchedOp, SchedReply};
 use crate::rpc::transport::{
     handler, Conn, InProcServer, Latency, TcpConn, TcpServer,
 };
 use crate::rpc::{Request, Response};
 use crate::sched::{PruneConfig, SchedInstance};
-use crate::util::json::Json;
 use crate::util::metrics::Timer;
 
 pub use report::{GrowReport, LevelTiming};
@@ -112,8 +112,11 @@ struct NodeState {
 impl NodeState {
     /// The match-or-escalate core shared by the RPC handler and the leaf
     /// driver. Returns the granted subgraph plus per-level timing entries
-    /// accumulated top-down.
-    fn match_grow(&mut self, spec: &JobSpec) -> Result<(Jgf, Vec<LevelTiming>), String> {
+    /// accumulated top-down. Errors keep their structured code across
+    /// levels: a parent's (or provider's) [`RpcError`] is propagated
+    /// verbatim, so the leaf can still tell `provider_unsatisfiable` from a
+    /// local `no_match` after any number of hops.
+    fn match_grow(&mut self, spec: &JobSpec) -> Result<(Jgf, Vec<LevelTiming>), RpcError> {
         // 1. local match attempt
         let t = Timer::start();
         let local = self.inst.match_only(spec);
@@ -131,13 +134,13 @@ impl NodeState {
                         self.inst
                             .allocs
                             .grow(&mut self.inst.graph, &self.inst.prune, job, m.selection)
-                            .map_err(|e| e.to_string())?;
+                            .map_err(|e| RpcError::new(code::GROW_FAILED, e.to_string()))?;
                     }
                     None => {
                         self.inst
                             .allocs
                             .allocate(&mut self.inst.graph, &self.inst.prune, m.selection)
-                            .map_err(|e| e.to_string())?;
+                            .map_err(|e| RpcError::new(code::GROW_FAILED, e.to_string()))?;
                     }
                 }
                 let upd_s = tu.elapsed_secs();
@@ -164,7 +167,9 @@ impl NodeState {
                 let (jgf, upper_levels, comms_s) = match (&mut self.parent, &mut self.external) {
                     (_, Some(provider)) => {
                         let tc = Timer::start();
-                        let grant = provider.request(spec).map_err(|e| e.to_string())?;
+                        let grant = provider
+                            .request(spec)
+                            .map_err(|e| RpcError::new(e.code(), e.to_string()))?;
                         // remember which attach roots came from the cloud,
                         // so a later shrink releases the instances here
                         let roots = attach_roots(&grant.subgraph);
@@ -177,19 +182,24 @@ impl NodeState {
                         let resp = conn
                             .call(&Request::new(
                                 self.level as u64,
-                                "matchgrow",
-                                spec.to_json(),
+                                SchedOp::MatchGrow { spec: spec.clone() },
                             ))
-                            .map_err(|e| e.to_string())?;
+                            .map_err(|e| RpcError::new(code::TRANSPORT, e.to_string()))?;
                         let rtt = tc.elapsed_secs();
-                        let doc = resp.result?;
-                        let jgf = Jgf::from_json(
-                            doc.get("subgraph").ok_or("response missing subgraph")?,
-                        )
-                        .map_err(|e| e.to_string())?;
-                        let levels = report::levels_from_json(
-                            doc.get("levels").ok_or("response missing levels")?,
-                        )?;
+                        let (jgf, levels) = match resp.reply {
+                            SchedReply::Grown { subgraph, levels } => (subgraph, levels),
+                            // the ancestor's structured error descends as-is
+                            SchedReply::Error(e) => return Err(e),
+                            other => {
+                                return Err(RpcError::new(
+                                    code::BAD_REPLY,
+                                    format!(
+                                        "parent sent unexpected '{}' reply to match_grow",
+                                        other.name()
+                                    ),
+                                ))
+                            }
+                        };
                         // pure inter-level communication time: the round
                         // trip minus the time the ancestors spent working
                         // (they escalate recursively, so the raw RTT of a
@@ -201,7 +211,10 @@ impl NodeState {
                         (jgf, levels, comms_s)
                     }
                     (None, None) => {
-                        return Err("top level: no resources and no external provider".into())
+                        return Err(RpcError::new(
+                            code::MATCH_GROW_FAILED,
+                            "top level: no resources and no external provider",
+                        ))
                     }
                 };
                 // 3. top-down: splice the grant into our graph, charge it to
@@ -210,7 +223,7 @@ impl NodeState {
                 let report = self
                     .inst
                     .accept_grant(&jgf, self.child_job)
-                    .map_err(|e| e.to_string())?;
+                    .map_err(|e| RpcError::new(code::GROW_FAILED, e.to_string()))?;
                 let add_upd_s = ta.elapsed_secs();
                 for r in attach_roots(&jgf) {
                     self.added_roots.insert(r);
@@ -236,7 +249,10 @@ impl NodeState {
     /// subtree, then ascend — unless the subtree is a cloud grant obtained
     /// through this node's own provider, in which case the instances are
     /// released here and the shrink stops (the supergraph never saw them).
-    fn shrink_return(&mut self, path: &str) -> Result<usize, String> {
+    fn shrink_return(&mut self, path: &str) -> Result<usize, RpcError> {
+        let shrink_err = |e: crate::sched::grow::GrowError| {
+            RpcError::new(code::SHRINK_FAILED, e.to_string())
+        };
         // cloud-specialized grant? delete, release instances, stop — the
         // supergraph never contained E_i
         if let Some(pos) = self
@@ -244,35 +260,49 @@ impl NodeState {
             .iter()
             .position(|(roots, _)| roots.split(',').any(|r| r == path))
         {
-            let removed = self.inst.release_subtree(path).map_err(|e| e.to_string())?;
+            let removed = self.inst.release_subtree(path).map_err(shrink_err)?;
             self.added_roots.remove(path);
             let (_, ids) = self.cloud_grants.remove(pos);
             if let Some(provider) = &mut self.external {
-                provider.release(&ids).map_err(|e| e.to_string())?;
+                provider
+                    .release(&ids)
+                    .map_err(|e| RpcError::new(e.code(), e.to_string()))?;
             }
             return Ok(removed);
         }
         if self.added_roots.remove(path) {
             // this level spliced the subgraph in dynamically: delete it and
             // keep ascending (bottom-up subtractive transformation)
-            let removed = self.inst.release_subtree(path).map_err(|e| e.to_string())?;
+            let removed = self.inst.release_subtree(path).map_err(shrink_err)?;
             if let Some(conn) = &mut self.parent {
                 let resp = conn
                     .call(&Request::new(
                         self.level as u64,
-                        "shrinkreturn",
-                        Json::obj().with("path", Json::from(path)),
+                        SchedOp::ShrinkReturn {
+                            path: path.to_string(),
+                        },
                     ))
-                    .map_err(|e| e.to_string())?;
-                resp.result?;
+                    .map_err(|e| RpcError::new(code::TRANSPORT, e.to_string()))?;
+                match resp.reply {
+                    SchedReply::Removed { .. } => {}
+                    // the ancestor's structured error descends as-is
+                    SchedReply::Error(e) => return Err(e),
+                    other => {
+                        return Err(RpcError::new(
+                            code::BAD_REPLY,
+                            format!(
+                                "parent sent unexpected '{}' reply to shrink_return",
+                                other.name()
+                            ),
+                        ))
+                    }
+                }
             }
             Ok(removed)
         } else {
             // owner level: the vertices are part of this graph's physical
             // inventory — free the child's allocation, keep the vertices
-            self.inst
-                .free_allocations_in(path)
-                .map_err(|e| e.to_string())
+            self.inst.free_allocations_in(path).map_err(shrink_err)
         }
     }
 }
@@ -428,7 +458,7 @@ impl Hierarchy {
         // ensure grants terminate at the leaf's own running job
         n.child_job = own_job;
         let total = Timer::start();
-        let (jgf, levels) = n.match_grow(spec)?;
+        let (jgf, levels) = n.match_grow(spec).map_err(|e| e.to_string())?;
         let total_s = total.elapsed_secs();
         Ok(GrowReport {
             subgraph_size: jgf.size(),
@@ -453,7 +483,7 @@ impl Hierarchy {
     pub fn shrink_from_leaf(&self, path: &str) -> Result<usize, String> {
         let leaf = self.nodes.last().expect("hierarchy has levels");
         let mut n = leaf.lock().unwrap();
-        n.shrink_return(path)
+        n.shrink_return(path).map_err(|e| e.to_string())
     }
 
     /// Restore every level to its post-boot snapshot (the "helper script
@@ -512,38 +542,61 @@ impl Drop for Hierarchy {
     }
 }
 
-/// RPC handler dispatching to a node's state.
+/// RPC handler dispatching to a node's state via the typed serve loop.
 fn node_handler(node: Arc<Mutex<NodeState>>) -> crate::rpc::transport::Handler {
     handler(move |req: Request| {
         let mut n = node.lock().expect("node poisoned");
-        match req.method.as_str() {
-            "matchgrow" => {
-                let spec = match JobSpec::from_json(&req.params) {
-                    Ok(s) => s,
-                    Err(e) => return Response::err(req.id, format!("bad jobspec: {e}")),
-                };
-                match n.match_grow(&spec) {
-                    Ok((jgf, levels)) => Response::ok(
-                        req.id,
-                        Json::obj()
-                            .with("subgraph", jgf.to_json())
-                            .with("levels", report::levels_to_json(&levels)),
-                    ),
-                    Err(e) => Response::err(req.id, e),
-                }
-            }
-            "shrinkreturn" => {
-                let Some(path) = req.params.get("path").and_then(Json::as_str) else {
-                    return Response::err(req.id, "shrinkreturn missing 'path'");
-                };
-                match n.shrink_return(path) {
-                    Ok(removed) => Response::ok(req.id, Json::from(removed as u64)),
-                    Err(e) => Response::err(req.id, e),
-                }
-            }
-            other => Response::err(req.id, format!("unknown method '{other}'")),
-        }
+        serve(&mut n, req)
     })
+}
+
+/// One exhaustive dispatch over the typed protocol: the hierarchical ops
+/// (`MatchGrow`, `ShrinkReturn`) get the level-aware treatment — escalate /
+/// propagate — and the read-only `Probe` delegates to
+/// [`SchedInstance::apply`]. Instance-MUTATING ops are refused: they would
+/// bypass this node's `added_roots`/`cloud_grants` bookkeeping (e.g. a
+/// remote `RemoveSubgraph` of a descended grant would desync a later
+/// hierarchical shrink and leak provider instances), so instance
+/// administration stays local to the owning level. Deliberately NO
+/// wildcard arm: adding a [`SchedOp`] variant is a compile error here
+/// until it is served.
+fn serve(n: &mut NodeState, req: Request) -> Response {
+    match &req.op {
+        SchedOp::MatchGrow { spec } => match n.match_grow(spec) {
+            Ok((jgf, levels)) => Response::ok(
+                req.id,
+                SchedReply::Grown {
+                    subgraph: jgf,
+                    levels,
+                },
+            ),
+            Err(e) => Response::ok(req.id, SchedReply::Error(e)),
+        },
+        SchedOp::ShrinkReturn { path } => match n.shrink_return(path) {
+            Ok(removed) => Response::ok(req.id, SchedReply::Removed { vertices: removed }),
+            Err(e) => Response::ok(req.id, SchedReply::Error(e)),
+        },
+        SchedOp::Probe { .. } => Response {
+            id: req.id,
+            reply: n.inst.apply(&req.op),
+        },
+        op @ (SchedOp::MatchAllocate { .. }
+        | SchedOp::MatchGrowLocal { .. }
+        | SchedOp::AcceptGrant { .. }
+        | SchedOp::FreeJob { .. }
+        | SchedOp::ShrinkSubtree { .. }
+        | SchedOp::RemoveSubgraph { .. }) => Response::ok(
+            req.id,
+            SchedReply::err(
+                code::UNSUPPORTED_OP,
+                format!(
+                    "'{}' mutates instance state outside the hierarchy's bookkeeping; \
+                     hierarchy links serve 'match_grow', 'shrink_return', and 'probe'",
+                    op.name()
+                ),
+            ),
+        ),
+    }
 }
 
 #[cfg(test)]

@@ -1,68 +1,13 @@
 //! Timing reports for hierarchical MatchGrow operations — the measurements
 //! behind the paper's §5.2 figures and the §6 component models:
 //! `t_MG = Σ_i t_match_i + t_comms_i + t_add_upd_i`.
+//!
+//! The per-level record itself ([`LevelTiming`]) lives in the wire-protocol
+//! module ([`crate::rpc::proto`]) — it is part of the `grown` reply's
+//! schema — and is re-exported here for hierarchy callers.
 
-use crate::util::json::{Json, JsonError};
-
-/// One level's contribution to a MatchGrow.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct LevelTiming {
-    pub level: usize,
-    /// Local match attempt time (null match unless `match_ok`).
-    pub match_s: f64,
-    pub match_ok: bool,
-    /// RPC round-trip to the parent (zero at the matching level).
-    pub comms_s: f64,
-    /// AddSubgraph + UpdateMetadata time (zero at the matching level's own
-    /// graph, which allocates rather than attaches).
-    pub add_upd_s: f64,
-    /// Vertices visited by the local matcher.
-    pub visited: usize,
-}
-
-impl LevelTiming {
-    pub fn total(&self) -> f64 {
-        self.match_s + self.comms_s + self.add_upd_s
-    }
-
-    pub fn to_json(&self) -> Json {
-        Json::obj()
-            .with("level", Json::from(self.level))
-            .with("match_s", Json::from(self.match_s))
-            .with("match_ok", Json::from(self.match_ok))
-            .with("comms_s", Json::from(self.comms_s))
-            .with("add_upd_s", Json::from(self.add_upd_s))
-            .with("visited", Json::from(self.visited))
-    }
-
-    pub fn from_json(doc: &Json) -> Result<LevelTiming, JsonError> {
-        let f = |k: &str| -> Result<f64, JsonError> {
-            doc.get(k)
-                .and_then(Json::as_f64)
-                .ok_or_else(|| JsonError::Schema(format!("timing missing '{k}'")))
-        };
-        Ok(LevelTiming {
-            level: doc.u64_field("level")? as usize,
-            match_s: f("match_s")?,
-            match_ok: doc.get("match_ok").and_then(Json::as_bool).unwrap_or(false),
-            comms_s: f("comms_s")?,
-            add_upd_s: f("add_upd_s")?,
-            visited: doc.get("visited").and_then(Json::as_u64).unwrap_or(0) as usize,
-        })
-    }
-}
-
-pub fn levels_to_json(levels: &[LevelTiming]) -> Json {
-    Json::Arr(levels.iter().map(LevelTiming::to_json).collect())
-}
-
-pub fn levels_from_json(doc: &Json) -> Result<Vec<LevelTiming>, String> {
-    doc.as_arr()
-        .ok_or("levels is not an array")?
-        .iter()
-        .map(|d| LevelTiming::from_json(d).map_err(|e| e.to_string()))
-        .collect()
-}
+// Part of the wire schema; defined with the protocol, consumed here.
+pub use crate::rpc::proto::{levels_from_json, levels_to_json, LevelTiming};
 
 /// Full report of one leaf-initiated MatchGrow: per-level timings ordered
 /// top (L0) to bottom (leaf).

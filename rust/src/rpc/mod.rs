@@ -1,98 +1,135 @@
-//! Parent↔child RPC: length-prefixed JSON messages over two transports.
+//! Parent↔child RPC: the wire form of the typed scheduler protocol.
 //!
-//! The paper transmits JGF subgraphs "between parent and child schedulers
-//! via Remote Procedure Call functionality built into the Flux RJMS
-//! framework" (§4). We reproduce the same pairwise request/response pattern
-//! with two interchangeable transports:
+//! This module header is the **compatibility contract** for anything that
+//! talks to a scheduler instance remotely (the paper transmits JGF
+//! subgraphs "between parent and child schedulers via Remote Procedure Call
+//! functionality", §4). The three layers, outermost first:
 //!
-//! - [`transport::Transport::InProc`] — an in-process duplex channel (the
-//!   paper's *intranode* levels 2–4, which share node1);
-//! - [`transport::Transport::Tcp`] — a localhost TCP socket with optional
-//!   injected per-message + per-byte latency, standing in for the paper's
-//!   IPoIB *internode* hop between level 1 and level 0 (see DESIGN.md
-//!   "Substitutions").
+//! ## 1. Framing
 //!
-//! Framing: 4-byte big-endian length + UTF-8 JSON body.
+//! Every message is one frame: a 4-byte **big-endian** length prefix
+//! followed by exactly that many bytes of UTF-8 JSON. A reader that hits
+//! EOF mid-frame reports an error; bytes of a truncated frame are never
+//! interpreted. Transports (see [`transport`]): in-process duplex channels
+//! ([`transport::InProcServer`]) for the paper's intranode levels,
+//! localhost TCP ([`transport::TcpServer`]) with injected latency for the
+//! IPoIB internode hop.
+//!
+//! ## 2. Envelope
+//!
+//! A request frame is `{"id": <u64>, "op": <op doc>}` — the `id` is echoed
+//! verbatim in the response so callers can correlate over pipelined
+//! connections. A response frame is exactly one of
+//!
+//! - `{"id": <u64>, "result": <reply doc>}` — success;
+//! - `{"id": <u64>, "error": {"code": <string>, "message": <string>}}` —
+//!   failure, with a stable machine-readable code (vocabulary:
+//!   [`proto::code`]).
+//!
+//! A response carrying **both** `result` and `error` (or neither) is
+//! malformed and rejected at decode time — ambiguity is a protocol error,
+//! not a client-side guess.
+//!
+//! ## 3. Payload: typed ops and replies
+//!
+//! The `<op doc>` / `<reply doc>` payloads are the canonical encodings of
+//! [`proto::SchedOp`] and [`proto::SchedReply`] — tagged unions keyed by
+//! `"op"` / `"reply"`. The op names, their field schemas, and the error
+//! codes are documented exhaustively in [`proto`]; *those tables, plus the
+//! envelope and framing above, are the whole protocol.* There is no
+//! stringly-typed method dispatch: an op unknown to the decoder is a
+//! `bad_request` error, and adding a variant forces every serve loop in the
+//! crate to handle it (exhaustive match, no wildcard arms).
 
+pub mod proto;
 pub mod transport;
+
+pub use proto::{RpcError, SchedOp, SchedReply};
 
 use crate::util::json::{Json, JsonError};
 
-/// A request: method name + params document.
+/// A request: correlation id + typed operation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
     pub id: u64,
-    pub method: String,
-    pub params: Json,
+    pub op: SchedOp,
 }
 
-/// A response: either a result document or an error string.
+/// A response: the echoed id + the typed reply. Protocol-level failures
+/// travel as [`SchedReply::Error`]; the envelope keeps success and error
+/// mutually exclusive on the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Response {
     pub id: u64,
-    pub result: Result<Json, String>,
+    pub reply: SchedReply,
 }
 
 impl Request {
-    pub fn new(id: u64, method: &str, params: Json) -> Request {
-        Request {
-            id,
-            method: method.to_string(),
-            params,
-        }
+    pub fn new(id: u64, op: SchedOp) -> Request {
+        Request { id, op }
     }
 
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("id", Json::from(self.id))
-            .with("method", Json::from(self.method.as_str()))
-            .with("params", self.params.clone())
+            .with("op", self.op.to_json())
     }
 
     pub fn from_json(doc: &Json) -> Result<Request, JsonError> {
         Ok(Request {
             id: doc.u64_field("id")?,
-            method: doc.str_field("method")?.to_string(),
-            params: doc.get("params").cloned().unwrap_or(Json::Null),
+            op: SchedOp::from_json(
+                doc.get("op")
+                    .ok_or_else(|| JsonError::Schema("request missing 'op'".into()))?,
+            )?,
         })
     }
 }
 
 impl Response {
-    pub fn ok(id: u64, result: Json) -> Response {
-        Response {
-            id,
-            result: Ok(result),
-        }
+    pub fn ok(id: u64, reply: SchedReply) -> Response {
+        Response { id, reply }
     }
 
-    pub fn err(id: u64, msg: impl Into<String>) -> Response {
+    pub fn err(id: u64, code: &str, message: impl Into<String>) -> Response {
         Response {
             id,
-            result: Err(msg.into()),
+            reply: SchedReply::Error(RpcError::new(code, message)),
         }
     }
 
     pub fn to_json(&self) -> Json {
-        let mut doc = Json::obj().with("id", Json::from(self.id));
-        match &self.result {
-            Ok(v) => doc.set("result", v.clone()),
-            Err(e) => doc.set("error", Json::from(e.as_str())),
-        };
-        doc
+        let doc = Json::obj().with("id", Json::from(self.id));
+        match &self.reply {
+            SchedReply::Error(e) => doc.with("error", e.to_json()),
+            reply => doc.with("result", reply.to_json()),
+        }
     }
 
     pub fn from_json(doc: &Json) -> Result<Response, JsonError> {
         let id = doc.u64_field("id")?;
-        if let Some(e) = doc.get("error").and_then(Json::as_str) {
-            Ok(Response::err(id, e))
-        } else {
-            Ok(Response::ok(
+        match (doc.get("result"), doc.get("error")) {
+            (Some(_), Some(_)) => Err(JsonError::Schema(
+                "response carries both 'result' and 'error'".into(),
+            )),
+            (None, None) => Err(JsonError::Schema(
+                "response missing 'result'/'error'".into(),
+            )),
+            (Some(r), None) => {
+                let reply = SchedReply::from_json(r)?;
+                if reply.is_error() {
+                    // an error reply must travel under the 'error' key;
+                    // anything else is an encoder bug or tampering
+                    return Err(JsonError::Schema(
+                        "error reply under 'result'".into(),
+                    ));
+                }
+                Ok(Response { id, reply })
+            }
+            (None, Some(e)) => Ok(Response {
                 id,
-                doc.get("result")
-                    .cloned()
-                    .ok_or_else(|| JsonError::Schema("response missing result/error".into()))?,
-            ))
+                reply: SchedReply::Error(RpcError::from_json(e)?),
+            }),
         }
     }
 }
@@ -121,20 +158,53 @@ pub fn read_frame(r: &mut impl std::io::Read) -> std::io::Result<Json> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::jobspec::table1_jobspec;
 
     #[test]
     fn request_roundtrip() {
-        let req = Request::new(7, "matchgrow", Json::obj().with("x", Json::from(1u64)));
-        let parsed = Request::from_json(&req.to_json()).unwrap();
+        let req = Request::new(
+            7,
+            SchedOp::MatchGrow {
+                spec: table1_jobspec("T7"),
+            },
+        );
+        let parsed = Request::from_json(&Json::parse(&req.to_json().dump()).unwrap()).unwrap();
         assert_eq!(parsed, req);
     }
 
     #[test]
     fn response_roundtrips_both_arms() {
-        let ok = Response::ok(1, Json::from("fine"));
+        let ok = Response::ok(1, SchedReply::Freed { vertices: 4 });
         assert_eq!(Response::from_json(&ok.to_json()).unwrap(), ok);
-        let err = Response::err(2, "nope");
+        let err = Response::err(2, proto::code::NO_MATCH, "nope");
         assert_eq!(Response::from_json(&err.to_json()).unwrap(), err);
+    }
+
+    #[test]
+    fn response_with_result_and_error_is_malformed() {
+        let doc = Json::obj()
+            .with("id", Json::from(3u64))
+            .with("result", SchedReply::Freed { vertices: 1 }.to_json())
+            .with(
+                "error",
+                RpcError::new(proto::code::NO_MATCH, "conflict").to_json(),
+            );
+        assert!(Response::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn response_with_neither_arm_is_malformed() {
+        let doc = Json::obj().with("id", Json::from(3u64));
+        assert!(Response::from_json(&doc).is_err());
+    }
+
+    #[test]
+    fn response_error_must_be_structured() {
+        // the legacy bare-string error shape is rejected
+        let doc = Json::obj()
+            .with("id", Json::from(1u64))
+            .with("error", Json::from("denied"));
+        assert!(Response::from_json(&doc).is_err());
     }
 
     #[test]

@@ -1,0 +1,577 @@
+//! The typed scheduler protocol: every operation any level of the hierarchy
+//! can ask of another is a [`SchedOp`], every answer a [`SchedReply`].
+//!
+//! The paper's central mechanism is that *all* levels speak the same small
+//! set of primitives — `MatchAllocate`, `MatchGrow`, `AddSubgraph` /
+//! `RemoveSubgraph`, `UpdateMetadata` (§3). This module is that contract in
+//! type form: [`crate::sched::SchedInstance::apply`] interprets the
+//! instance-local ops, [`crate::hier`] serves the hierarchical ones over
+//! RPC, and both enums carry a canonical JSON encoding so the same op is
+//! identical in-process and on the wire.
+//!
+//! ## Wire encoding
+//!
+//! An op is a JSON object tagged by `"op"`; a reply is tagged by `"reply"`.
+//! Field schemas (see each variant's doc for semantics):
+//!
+//! | `"op"`             | fields                                         |
+//! |--------------------|------------------------------------------------|
+//! | `match_allocate`   | `spec` (jobspec doc)                           |
+//! | `match_grow_local` | `job` (u64), `spec`                            |
+//! | `probe`            | `spec`                                         |
+//! | `accept_grant`     | `subgraph` (JGF doc), `job` (u64, optional)    |
+//! | `free_job`         | `job`                                          |
+//! | `shrink_subtree`   | `path` (string)                                |
+//! | `remove_subgraph`  | `path`                                         |
+//! | `match_grow`       | `spec`                                         |
+//! | `shrink_return`    | `path`                                         |
+//!
+//! | `"reply"`   | fields                                                  |
+//! |-------------|---------------------------------------------------------|
+//! | `allocated` | `job`, `subgraph`, `match_s`, `add_upd_s`, `visited`    |
+//! | `probed`    | `visited`, `vertices`                                   |
+//! | `accepted`  | `added`, `preexisting`, `add_upd_s`                     |
+//! | `freed`     | `vertices`                                              |
+//! | `removed`   | `vertices`                                              |
+//! | `grown`     | `subgraph`, `levels` (array of level-timing docs)       |
+//! | `error`     | `code` (string, see [`code`]), `message`                |
+//!
+//! Unknown tags are decode errors — there is no extensible escape hatch;
+//! extending the protocol means adding a variant, and the exhaustive
+//! matches in `SchedInstance::apply` and `hier`'s `serve` make every
+//! dispatch site a compile error until it handles the new op.
+//!
+//! Integer fields (`job`, `id`, counts) travel as JSON numbers, which this
+//! crate's [`Json`] backs with `f64`: values are exact up to `2^53 - 1`.
+//! The in-tree id generators are small sequential counters, far below that
+//! bound; remote implementers minting their own ids (shard/epoch bits)
+//! must stay within it or the codec will reject/round them.
+
+use crate::jobspec::JobSpec;
+use crate::resource::graph::JobId;
+use crate::resource::jgf::Jgf;
+use crate::util::json::{Json, JsonError};
+
+/// Stable error codes carried by [`RpcError`]. Messages are free-form and
+/// for humans; programs branch on the code.
+pub mod code {
+    /// The matcher found no satisfying free resources.
+    pub const NO_MATCH: &str = "no_match";
+    /// AddSubgraph / allocation bookkeeping failed (bad attach point,
+    /// double allocation, unknown or completed job, ...).
+    pub const GROW_FAILED: &str = "grow_failed";
+    /// A subtractive transformation (shrink/remove) failed.
+    pub const SHRINK_FAILED: &str = "shrink_failed";
+    /// A hierarchical MatchGrow could not be satisfied at any level.
+    pub const MATCH_GROW_FAILED: &str = "match_grow_failed";
+    /// The external resource provider could not satisfy the request — the
+    /// cloud said no, distinct from a local [`NO_MATCH`]
+    /// (see [`crate::external::provider::ProviderError::code`]).
+    pub const PROVIDER_UNSATISFIABLE: &str = "provider_unsatisfiable";
+    /// The external resource provider's API itself failed.
+    pub const PROVIDER_API: &str = "provider_api";
+    /// The RPC link failed (I/O error, peer gone) — distinct from a
+    /// well-formed negative answer.
+    pub const TRANSPORT: &str = "transport";
+    /// The op is valid but not serviceable by the receiver (e.g. a
+    /// hierarchical op sent to a bare `SchedInstance`).
+    pub const UNSUPPORTED_OP: &str = "unsupported_op";
+    /// The request could not be decoded (malformed JSON, unknown op tag,
+    /// missing fields).
+    pub const BAD_REQUEST: &str = "bad_request";
+    /// The peer answered with a well-formed but wrong-variant reply (a
+    /// server-side protocol violation, e.g. `freed` to a `match_grow`) —
+    /// the caller's request was fine.
+    pub const BAD_REPLY: &str = "bad_reply";
+}
+
+/// A structured protocol error: a stable machine-readable `code` plus a
+/// human-readable `message`. This is the only error shape on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RpcError {
+    pub code: String,
+    pub message: String,
+}
+
+impl RpcError {
+    pub fn new(code: &str, message: impl Into<String>) -> RpcError {
+        RpcError {
+            code: code.to_string(),
+            message: message.into(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("code", Json::from(self.code.as_str()))
+            .with("message", Json::from(self.message.as_str()))
+    }
+
+    pub fn from_json(doc: &Json) -> Result<RpcError, JsonError> {
+        Ok(RpcError {
+            code: doc.str_field("code")?.to_string(),
+            message: doc.str_field("message")?.to_string(),
+        })
+    }
+}
+
+impl std::fmt::Display for RpcError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+impl std::error::Error for RpcError {}
+
+impl From<RpcError> for String {
+    fn from(e: RpcError) -> String {
+        e.to_string()
+    }
+}
+
+/// One level's contribution to a hierarchical MatchGrow — the `levels`
+/// entries of a `grown` reply, and the measurements behind the paper's
+/// §5.2 figures and §6 component models
+/// (`t_MG = Σ_i t_match_i + t_comms_i + t_add_upd_i`).
+///
+/// Defined here (not in [`crate::hier`]) because it is part of the wire
+/// schema: this module alone pins the protocol's field layouts.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LevelTiming {
+    pub level: usize,
+    /// Local match attempt time (null match unless `match_ok`).
+    pub match_s: f64,
+    pub match_ok: bool,
+    /// RPC round-trip to the parent (zero at the matching level).
+    pub comms_s: f64,
+    /// AddSubgraph + UpdateMetadata time (zero at the matching level's own
+    /// graph, which allocates rather than attaches).
+    pub add_upd_s: f64,
+    /// Vertices visited by the local matcher.
+    pub visited: usize,
+}
+
+impl LevelTiming {
+    pub fn total(&self) -> f64 {
+        self.match_s + self.comms_s + self.add_upd_s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .with("level", Json::from(self.level))
+            .with("match_s", Json::from(self.match_s))
+            .with("match_ok", Json::from(self.match_ok))
+            .with("comms_s", Json::from(self.comms_s))
+            .with("add_upd_s", Json::from(self.add_upd_s))
+            .with("visited", Json::from(self.visited))
+    }
+
+    pub fn from_json(doc: &Json) -> Result<LevelTiming, JsonError> {
+        let f = |k: &str| -> Result<f64, JsonError> {
+            doc.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| JsonError::Schema(format!("timing missing '{k}'")))
+        };
+        Ok(LevelTiming {
+            level: doc.u64_field("level")? as usize,
+            match_s: f("match_s")?,
+            match_ok: doc.get("match_ok").and_then(Json::as_bool).unwrap_or(false),
+            comms_s: f("comms_s")?,
+            add_upd_s: f("add_upd_s")?,
+            visited: doc.get("visited").and_then(Json::as_u64).unwrap_or(0) as usize,
+        })
+    }
+}
+
+pub fn levels_to_json(levels: &[LevelTiming]) -> Json {
+    Json::Arr(levels.iter().map(LevelTiming::to_json).collect())
+}
+
+/// Decode a per-level timing trail (the `levels` field of a `grown` reply).
+pub fn levels_from_json(doc: &Json) -> Result<Vec<LevelTiming>, JsonError> {
+    doc.as_arr()
+        .ok_or_else(|| JsonError::Schema("levels is not an array".into()))?
+        .iter()
+        .map(LevelTiming::from_json)
+        .collect()
+}
+
+/// One scheduler operation — the complete request vocabulary of the system.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedOp {
+    /// The paper's `MatchAllocate`: match `spec` against the local graph and
+    /// allocate the selection to a fresh job.
+    MatchAllocate { spec: JobSpec },
+    /// Local half of `MatchGrow`: match free local resources and attach them
+    /// to the running job `job`.
+    MatchGrowLocal { job: JobId, spec: JobSpec },
+    /// Match without allocating (feasibility probe).
+    Probe { spec: JobSpec },
+    /// `AddSubgraph` + `UpdateMetadata`: splice a granted subgraph into the
+    /// local graph, optionally charging the new vertices to `job`.
+    AcceptGrant { subgraph: Jgf, job: Option<JobId> },
+    /// Release all of a job's resources.
+    FreeJob { job: JobId },
+    /// Release every allocation inside the subtree at `path`, returning the
+    /// resources to the free pool; the subtree stays attached (what the
+    /// owning level does when a shrink ascends to it).
+    ShrinkSubtree { path: String },
+    /// Subtractive transformation (§3): release the subtree's allocations,
+    /// then detach its vertices.
+    RemoveSubgraph { path: String },
+    /// Hierarchical `MatchGrow` (Algorithm 1): match locally or escalate to
+    /// the parent / external provider; the grant descends back down. Served
+    /// by a hierarchy node, not a bare instance.
+    MatchGrow { spec: JobSpec },
+    /// Hierarchical shrink ascending from a child: release the subtree at
+    /// `path` and keep propagating upward. Served by a hierarchy node.
+    ShrinkReturn { path: String },
+}
+
+impl SchedOp {
+    /// Canonical wire tag of this op.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedOp::MatchAllocate { .. } => "match_allocate",
+            SchedOp::MatchGrowLocal { .. } => "match_grow_local",
+            SchedOp::Probe { .. } => "probe",
+            SchedOp::AcceptGrant { .. } => "accept_grant",
+            SchedOp::FreeJob { .. } => "free_job",
+            SchedOp::ShrinkSubtree { .. } => "shrink_subtree",
+            SchedOp::RemoveSubgraph { .. } => "remove_subgraph",
+            SchedOp::MatchGrow { .. } => "match_grow",
+            SchedOp::ShrinkReturn { .. } => "shrink_return",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let doc = Json::obj().with("op", Json::from(self.name()));
+        match self {
+            SchedOp::MatchAllocate { spec }
+            | SchedOp::Probe { spec }
+            | SchedOp::MatchGrow { spec } => doc.with("spec", spec.to_json()),
+            SchedOp::MatchGrowLocal { job, spec } => doc
+                .with("job", Json::from(job.0))
+                .with("spec", spec.to_json()),
+            SchedOp::AcceptGrant { subgraph, job } => {
+                let mut doc = doc.with("subgraph", subgraph.to_json());
+                if let Some(j) = job {
+                    doc.set("job", Json::from(j.0));
+                }
+                doc
+            }
+            SchedOp::FreeJob { job } => doc.with("job", Json::from(job.0)),
+            SchedOp::ShrinkSubtree { path }
+            | SchedOp::RemoveSubgraph { path }
+            | SchedOp::ShrinkReturn { path } => doc.with("path", Json::from(path.as_str())),
+        }
+    }
+
+    pub fn from_json(doc: &Json) -> Result<SchedOp, JsonError> {
+        let spec = |d: &Json| -> Result<JobSpec, JsonError> {
+            JobSpec::from_json(
+                d.get("spec")
+                    .ok_or_else(|| JsonError::Schema("op missing 'spec'".into()))?,
+            )
+        };
+        let path = |d: &Json| -> Result<String, JsonError> {
+            Ok(d.str_field("path")?.to_string())
+        };
+        match doc.str_field("op")? {
+            "match_allocate" => Ok(SchedOp::MatchAllocate { spec: spec(doc)? }),
+            "match_grow_local" => Ok(SchedOp::MatchGrowLocal {
+                job: JobId(doc.u64_field("job")?),
+                spec: spec(doc)?,
+            }),
+            "probe" => Ok(SchedOp::Probe { spec: spec(doc)? }),
+            "accept_grant" => Ok(SchedOp::AcceptGrant {
+                subgraph: Jgf::from_json(
+                    doc.get("subgraph")
+                        .ok_or_else(|| JsonError::Schema("op missing 'subgraph'".into()))?,
+                )?,
+                job: match doc.get("job") {
+                    None => None,
+                    Some(j) => Some(JobId(j.as_u64().ok_or_else(|| {
+                        JsonError::Schema("'job' is not an integer".into())
+                    })?)),
+                },
+            }),
+            "free_job" => Ok(SchedOp::FreeJob {
+                job: JobId(doc.u64_field("job")?),
+            }),
+            "shrink_subtree" => Ok(SchedOp::ShrinkSubtree { path: path(doc)? }),
+            "remove_subgraph" => Ok(SchedOp::RemoveSubgraph { path: path(doc)? }),
+            "match_grow" => Ok(SchedOp::MatchGrow { spec: spec(doc)? }),
+            "shrink_return" => Ok(SchedOp::ShrinkReturn { path: path(doc)? }),
+            other => Err(JsonError::Schema(format!("unknown op '{other}'"))),
+        }
+    }
+}
+
+/// The answer to a [`SchedOp`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedReply {
+    /// `MatchAllocate` / `MatchGrowLocal` succeeded: the job now holds the
+    /// selection, returned as a JGF subgraph (the grant a child boots from).
+    Allocated {
+        job: JobId,
+        subgraph: Jgf,
+        match_s: f64,
+        add_upd_s: f64,
+        visited: usize,
+    },
+    /// `Probe` succeeded: `vertices` would be selected.
+    Probed { visited: usize, vertices: usize },
+    /// `AcceptGrant` spliced the subgraph: `added` new vertices,
+    /// `preexisting` were the identity.
+    Accepted {
+        added: usize,
+        preexisting: usize,
+        add_upd_s: f64,
+    },
+    /// `FreeJob` / `ShrinkSubtree`: `vertices` released to the free pool.
+    Freed { vertices: usize },
+    /// `RemoveSubgraph` / hierarchical `ShrinkReturn`: `vertices` removed.
+    Removed { vertices: usize },
+    /// Hierarchical `MatchGrow` grant descending: the subgraph plus the
+    /// per-level timing trail accumulated top-down.
+    Grown {
+        subgraph: Jgf,
+        levels: Vec<LevelTiming>,
+    },
+    /// The op failed; see [`code`] for the vocabulary.
+    Error(RpcError),
+}
+
+impl SchedReply {
+    /// Canonical wire tag of this reply.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedReply::Allocated { .. } => "allocated",
+            SchedReply::Probed { .. } => "probed",
+            SchedReply::Accepted { .. } => "accepted",
+            SchedReply::Freed { .. } => "freed",
+            SchedReply::Removed { .. } => "removed",
+            SchedReply::Grown { .. } => "grown",
+            SchedReply::Error(_) => "error",
+        }
+    }
+
+    /// Shorthand error constructor.
+    pub fn err(code: &str, message: impl Into<String>) -> SchedReply {
+        SchedReply::Error(RpcError::new(code, message))
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, SchedReply::Error(_))
+    }
+
+    /// The error, if this reply is one (for callers propagating failures).
+    pub fn as_error(&self) -> Option<&RpcError> {
+        match self {
+            SchedReply::Error(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let doc = Json::obj().with("reply", Json::from(self.name()));
+        match self {
+            SchedReply::Allocated {
+                job,
+                subgraph,
+                match_s,
+                add_upd_s,
+                visited,
+            } => doc
+                .with("job", Json::from(job.0))
+                .with("subgraph", subgraph.to_json())
+                .with("match_s", Json::from(*match_s))
+                .with("add_upd_s", Json::from(*add_upd_s))
+                .with("visited", Json::from(*visited)),
+            SchedReply::Probed { visited, vertices } => doc
+                .with("visited", Json::from(*visited))
+                .with("vertices", Json::from(*vertices)),
+            SchedReply::Accepted {
+                added,
+                preexisting,
+                add_upd_s,
+            } => doc
+                .with("added", Json::from(*added))
+                .with("preexisting", Json::from(*preexisting))
+                .with("add_upd_s", Json::from(*add_upd_s)),
+            SchedReply::Freed { vertices } | SchedReply::Removed { vertices } => {
+                doc.with("vertices", Json::from(*vertices))
+            }
+            SchedReply::Grown { subgraph, levels } => doc
+                .with("subgraph", subgraph.to_json())
+                .with("levels", levels_to_json(levels)),
+            SchedReply::Error(e) => {
+                // reuse RpcError's field layout so the bare-reply and
+                // envelope encodings cannot drift apart
+                let mut d = doc;
+                if let Json::Obj(fields) = e.to_json() {
+                    for (k, v) in fields {
+                        d.set(&k, v);
+                    }
+                }
+                d
+            }
+        }
+    }
+
+    pub fn from_json(doc: &Json) -> Result<SchedReply, JsonError> {
+        let f64_field = |k: &str| -> Result<f64, JsonError> {
+            doc.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| JsonError::Schema(format!("reply missing '{k}'")))
+        };
+        let usize_field = |k: &str| -> Result<usize, JsonError> {
+            Ok(doc.u64_field(k)? as usize)
+        };
+        let subgraph = || -> Result<Jgf, JsonError> {
+            Jgf::from_json(
+                doc.get("subgraph")
+                    .ok_or_else(|| JsonError::Schema("reply missing 'subgraph'".into()))?,
+            )
+        };
+        match doc.str_field("reply")? {
+            "allocated" => Ok(SchedReply::Allocated {
+                job: JobId(doc.u64_field("job")?),
+                subgraph: subgraph()?,
+                match_s: f64_field("match_s")?,
+                add_upd_s: f64_field("add_upd_s")?,
+                visited: usize_field("visited")?,
+            }),
+            "probed" => Ok(SchedReply::Probed {
+                visited: usize_field("visited")?,
+                vertices: usize_field("vertices")?,
+            }),
+            "accepted" => Ok(SchedReply::Accepted {
+                added: usize_field("added")?,
+                preexisting: usize_field("preexisting")?,
+                add_upd_s: f64_field("add_upd_s")?,
+            }),
+            "freed" => Ok(SchedReply::Freed {
+                vertices: usize_field("vertices")?,
+            }),
+            "removed" => Ok(SchedReply::Removed {
+                vertices: usize_field("vertices")?,
+            }),
+            "grown" => Ok(SchedReply::Grown {
+                subgraph: subgraph()?,
+                levels: levels_from_json(
+                    doc.get("levels")
+                        .ok_or_else(|| JsonError::Schema("reply missing 'levels'".into()))?,
+                )?,
+            }),
+            "error" => Ok(SchedReply::Error(RpcError::from_json(doc)?)),
+            other => Err(JsonError::Schema(format!("unknown reply '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobspec::table1_jobspec;
+
+    fn roundtrip_op(op: SchedOp) {
+        let doc = Json::parse(&op.to_json().dump()).unwrap();
+        assert_eq!(SchedOp::from_json(&doc).unwrap(), op);
+    }
+
+    fn roundtrip_reply(r: SchedReply) {
+        let doc = Json::parse(&r.to_json().dump()).unwrap();
+        assert_eq!(SchedReply::from_json(&doc).unwrap(), r);
+    }
+
+    #[test]
+    fn every_op_variant_roundtrips() {
+        let spec = table1_jobspec("T7");
+        roundtrip_op(SchedOp::MatchAllocate { spec: spec.clone() });
+        roundtrip_op(SchedOp::MatchGrowLocal {
+            job: JobId(3),
+            spec: spec.clone(),
+        });
+        roundtrip_op(SchedOp::Probe { spec: spec.clone() });
+        roundtrip_op(SchedOp::AcceptGrant {
+            subgraph: Jgf::default(),
+            job: Some(JobId(9)),
+        });
+        roundtrip_op(SchedOp::AcceptGrant {
+            subgraph: Jgf::default(),
+            job: None,
+        });
+        roundtrip_op(SchedOp::FreeJob { job: JobId(7) });
+        roundtrip_op(SchedOp::ShrinkSubtree {
+            path: "/c0/node1".into(),
+        });
+        roundtrip_op(SchedOp::RemoveSubgraph {
+            path: "/c0/node2".into(),
+        });
+        roundtrip_op(SchedOp::MatchGrow { spec });
+        roundtrip_op(SchedOp::ShrinkReturn {
+            path: "/c0/node3".into(),
+        });
+    }
+
+    #[test]
+    fn every_reply_variant_roundtrips() {
+        roundtrip_reply(SchedReply::Allocated {
+            job: JobId(1),
+            subgraph: Jgf::default(),
+            match_s: 0.00123,
+            add_upd_s: 4.5e-5,
+            visited: 42,
+        });
+        roundtrip_reply(SchedReply::Probed {
+            visited: 10,
+            vertices: 35,
+        });
+        roundtrip_reply(SchedReply::Accepted {
+            added: 35,
+            preexisting: 1,
+            add_upd_s: 0.25,
+        });
+        roundtrip_reply(SchedReply::Freed { vertices: 12 });
+        roundtrip_reply(SchedReply::Removed { vertices: 70 });
+        roundtrip_reply(SchedReply::Grown {
+            subgraph: Jgf::default(),
+            levels: vec![LevelTiming {
+                level: 2,
+                match_s: 0.5,
+                match_ok: false,
+                comms_s: 0.125,
+                add_upd_s: 0.0625,
+                visited: 8,
+            }],
+        });
+        roundtrip_reply(SchedReply::err(code::NO_MATCH, "no satisfying resources"));
+    }
+
+    #[test]
+    fn unknown_tags_are_rejected() {
+        let op = Json::parse(r#"{"op":"match_teleport","spec":{}}"#).unwrap();
+        assert!(SchedOp::from_json(&op).is_err());
+        let reply = Json::parse(r#"{"reply":"teleported"}"#).unwrap();
+        assert!(SchedReply::from_json(&reply).is_err());
+    }
+
+    #[test]
+    fn missing_fields_are_rejected() {
+        for text in [
+            r#"{"op":"match_allocate"}"#,
+            r#"{"op":"free_job"}"#,
+            r#"{"op":"shrink_subtree"}"#,
+            r#"{"reply":"allocated","job":1}"#,
+            r#"{"reply":"error","code":"x"}"#,
+        ] {
+            let doc = Json::parse(text).unwrap();
+            assert!(
+                SchedOp::from_json(&doc).is_err() && SchedReply::from_json(&doc).is_err(),
+                "should reject {text}"
+            );
+        }
+    }
+}

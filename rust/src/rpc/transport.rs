@@ -212,7 +212,11 @@ fn serve_conn(mut stream: TcpStream, h: Handler) {
         };
         let resp = match Request::from_json(&doc) {
             Ok(req) => (h.lock().expect("handler poisoned"))(req),
-            Err(e) => Response::err(0, format!("bad request: {e}")),
+            Err(e) => Response::err(
+                doc.u64_field("id").unwrap_or(0),
+                crate::rpc::proto::code::BAD_REQUEST,
+                format!("bad request: {e}"),
+            ),
         };
         if stream.write_all(&encode_frame(&resp.to_json())).is_err() {
             break;
@@ -223,61 +227,72 @@ fn serve_conn(mut stream: TcpStream, h: Handler) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::json::Json;
+    use crate::resource::graph::JobId;
+    use crate::rpc::proto::{code, SchedOp, SchedReply};
 
-    fn echo_handler() -> Handler {
-        handler(|req: Request| Response::ok(req.id, req.params))
+    fn free_op(job: u64) -> SchedOp {
+        SchedOp::FreeJob { job: JobId(job) }
+    }
+
+    /// Handler replying `Freed { vertices: <request id> }` — enough to see
+    /// both directions of the typed codec cross the transport.
+    fn mirror_handler() -> Handler {
+        handler(|req: Request| {
+            Response::ok(
+                req.id,
+                SchedReply::Freed {
+                    vertices: req.id as usize,
+                },
+            )
+        })
     }
 
     #[test]
     fn inproc_roundtrip() {
-        let server = InProcServer::spawn(echo_handler());
+        let server = InProcServer::spawn(mirror_handler());
         let mut conn = server.connect();
-        let resp = conn
-            .call(&Request::new(1, "echo", Json::from("hello")))
-            .unwrap();
-        assert_eq!(resp.result.unwrap().as_str(), Some("hello"));
+        let resp = conn.call(&Request::new(5, free_op(1))).unwrap();
+        assert_eq!(resp.reply, SchedReply::Freed { vertices: 5 });
         server.shutdown();
     }
 
     #[test]
     fn inproc_many_clients_share_state() {
         let counter = handler({
-            let mut n = 0u64;
+            let mut n = 0usize;
             move |req: Request| {
                 n += 1;
-                Response::ok(req.id, Json::from(n))
+                Response::ok(req.id, SchedReply::Freed { vertices: n })
             }
         });
         let server = InProcServer::spawn(counter);
         let mut c1 = server.connect();
         let mut c2 = server.connect();
-        c1.call(&Request::new(1, "inc", Json::Null)).unwrap();
-        let r = c2.call(&Request::new(2, "inc", Json::Null)).unwrap();
-        assert_eq!(r.result.unwrap().as_u64(), Some(2));
+        c1.call(&Request::new(1, free_op(1))).unwrap();
+        let r = c2.call(&Request::new(2, free_op(2))).unwrap();
+        assert_eq!(r.reply, SchedReply::Freed { vertices: 2 });
         server.shutdown();
     }
 
     #[test]
     fn tcp_roundtrip() {
-        let server = TcpServer::spawn(echo_handler()).unwrap();
+        let server = TcpServer::spawn(mirror_handler()).unwrap();
         let mut conn = TcpConn::connect(server.addr, Latency::none()).unwrap();
-        for i in 0..5 {
-            let resp = conn
-                .call(&Request::new(i, "echo", Json::from(i)))
-                .unwrap();
-            assert_eq!(resp.result.unwrap().as_u64(), Some(i));
+        for i in 0..5u64 {
+            let resp = conn.call(&Request::new(i, free_op(i))).unwrap();
+            assert_eq!(resp.id, i);
+            assert_eq!(resp.reply, SchedReply::Freed { vertices: i as usize });
         }
         server.shutdown();
     }
 
     #[test]
     fn tcp_latency_injection_slows_calls() {
-        let server = TcpServer::spawn(echo_handler()).unwrap();
+        let server = TcpServer::spawn(mirror_handler()).unwrap();
         let mut fast = TcpConn::connect(server.addr, Latency::none()).unwrap();
         let mut slow =
             TcpConn::connect(server.addr, Latency::of(2000, 0.0)).unwrap();
-        let req = Request::new(1, "echo", Json::from("x"));
+        let req = Request::new(1, free_op(1));
         let (_, fast_s) = crate::util::metrics::time_it(|| fast.call(&req).unwrap());
         let (_, slow_s) = crate::util::metrics::time_it(|| slow.call(&req).unwrap());
         assert!(slow_s > fast_s + 0.003, "fast={fast_s} slow={slow_s}");
@@ -287,12 +302,14 @@ mod tests {
     #[test]
     fn tcp_handler_error_propagates() {
         let server = TcpServer::spawn(handler(|req: Request| {
-            Response::err(req.id, "denied")
+            Response::err(req.id, code::UNSUPPORTED_OP, "no capacity")
         }))
         .unwrap();
         let mut conn = TcpConn::connect(server.addr, Latency::none()).unwrap();
-        let resp = conn.call(&Request::new(9, "x", Json::Null)).unwrap();
-        assert_eq!(resp.result.unwrap_err(), "denied");
+        let resp = conn.call(&Request::new(9, free_op(3))).unwrap();
+        let err = resp.reply.as_error().expect("error reply");
+        assert_eq!(err.code, code::UNSUPPORTED_OP);
+        assert_eq!(err.message, "no capacity");
         server.shutdown();
     }
 }

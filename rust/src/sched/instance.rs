@@ -2,19 +2,25 @@
 //!
 //! This is the unit the fully hierarchical runtime (`crate::hier`) composes:
 //! "any scheduler instance can spawn child instances ... which can recurse
-//! to an arbitrary depth" (§2.1). An instance exposes the paper's two
-//! primitives — `MatchAllocate` and the local half of `MatchGrow` — plus the
-//! subgraph add/remove entry points used when grants arrive from a parent.
+//! to an arbitrary depth" (§2.1). The entry surface is the typed protocol:
+//! [`SchedInstance::apply`] interprets any instance-local [`SchedOp`] and
+//! returns a [`SchedReply`]; [`SchedInstance::apply_batch`] runs a whole
+//! queue through one warm [`MatchScratch`], deduplicating identical
+//! jobspecs so a queue of N equal requests compiles its demand tables once.
+//! The named methods (`match_allocate`, `accept_grant`, ...) remain as thin
+//! typed wrappers over the same operations.
 
 use std::cell::RefCell;
 
 use crate::jobspec::JobSpec;
 use crate::resource::graph::{JobId, ResourceGraph, VertexId};
 use crate::resource::jgf::Jgf;
+use crate::rpc::proto::{code, SchedOp, SchedReply};
 use crate::sched::alloc::AllocTable;
 use crate::sched::grow::{self, AddReport, GrowError};
 use crate::sched::matcher::{
-    match_resources_in, MatchFail, MatchResult, MatchScratch, ScratchFootprint,
+    compile_spec_into, match_compiled, probe_compiled, MatchFail, MatchResult, MatchScratch,
+    ScratchFootprint,
 };
 use crate::sched::pruning::{init_aggregates, PruneConfig};
 
@@ -71,6 +77,30 @@ impl From<GrowError> for InstanceError {
     }
 }
 
+/// Record `spec` as the one whose compiled tables sit in the scratch;
+/// returns whether a recompile is needed (the single place the batch's
+/// dedup rule lives — all three match-family arms go through here).
+fn note_spec<'a>(compiled: &mut Option<&'a JobSpec>, spec: &'a JobSpec) -> bool {
+    let recompile = *compiled != Some(spec);
+    *compiled = Some(spec);
+    recompile
+}
+
+/// Map an allocate/grow outcome onto the protocol reply vocabulary.
+fn alloc_reply(r: Result<AllocOutcome, InstanceError>) -> SchedReply {
+    match r {
+        Ok(o) => SchedReply::Allocated {
+            job: o.job,
+            subgraph: o.subgraph,
+            match_s: o.timing.match_s,
+            add_upd_s: o.timing.add_upd_s,
+            visited: o.visited,
+        },
+        Err(InstanceError::Match(e)) => SchedReply::err(code::NO_MATCH, e.to_string()),
+        Err(InstanceError::Grow(e)) => SchedReply::err(code::GROW_FAILED, e.to_string()),
+    }
+}
+
 /// One scheduler instance.
 pub struct SchedInstance {
     pub graph: ResourceGraph,
@@ -102,10 +132,181 @@ impl SchedInstance {
         Ok(SchedInstance::new(graph, prune))
     }
 
+    /// Interpret one typed operation — the single entrypoint everything
+    /// funnels through: [`SchedInstance::apply_batch`] wraps it for queues,
+    /// and the hierarchy's RPC serve loop delegates the read-only `Probe`
+    /// here (mutating instance ops stay local to the owning level — see
+    /// `hier::serve`). Exhaustive by construction: a new [`SchedOp`]
+    /// variant does not compile until this match handles it.
+    ///
+    /// Failures come back as [`SchedReply::Error`] with a stable
+    /// [`code`] — `apply` itself never panics on bad input.
+    pub fn apply(&mut self, op: &SchedOp) -> SchedReply {
+        match op {
+            SchedOp::MatchAllocate { spec } => alloc_reply(self.match_allocate(spec)),
+            SchedOp::MatchGrowLocal { job, spec } => {
+                alloc_reply(self.match_grow_local(*job, spec))
+            }
+            SchedOp::Probe { spec } => match self.probe_batched(spec, true) {
+                Ok((vertices, visited)) => SchedReply::Probed { visited, vertices },
+                Err(e) => SchedReply::err(code::NO_MATCH, e.to_string()),
+            },
+            SchedOp::AcceptGrant { subgraph, job } => match self.accept_grant(subgraph, *job) {
+                Ok((report, add_upd_s)) => SchedReply::Accepted {
+                    added: report.added.len(),
+                    preexisting: report.preexisting,
+                    add_upd_s,
+                },
+                Err(e) => SchedReply::err(code::GROW_FAILED, e.to_string()),
+            },
+            SchedOp::FreeJob { job } => match self.free_job(*job) {
+                Ok(n) => SchedReply::Freed { vertices: n },
+                Err(e) => SchedReply::err(code::SHRINK_FAILED, e.to_string()),
+            },
+            SchedOp::ShrinkSubtree { path } => match self.free_allocations_in(path) {
+                Ok(n) => SchedReply::Freed { vertices: n },
+                Err(e) => SchedReply::err(code::SHRINK_FAILED, e.to_string()),
+            },
+            // release + detach (NOT bare `remove_subgraph`): a remote op
+            // must not strand live allocations on dead vertices
+            SchedOp::RemoveSubgraph { path } => match self.release_subtree(path) {
+                Ok(n) => SchedReply::Removed { vertices: n },
+                Err(e) => SchedReply::err(code::SHRINK_FAILED, e.to_string()),
+            },
+            SchedOp::MatchGrow { .. } | SchedOp::ShrinkReturn { .. } => SchedReply::err(
+                code::UNSUPPORTED_OP,
+                format!(
+                    "'{}' is a hierarchical op; send it to a hierarchy node (crate::hier)",
+                    op.name()
+                ),
+            ),
+        }
+    }
+
+    /// Run a queue of ops through one warm [`MatchScratch`] (the ROADMAP's
+    /// batched submission).
+    ///
+    /// Match-family ops (`MatchAllocate`, `MatchGrowLocal`, `Probe`) share
+    /// the scratch's compiled per-spec tables: a run of ops carrying an
+    /// *identical* spec compiles once and traverses N times (spec-level
+    /// dedup — submitters batching homogeneous queues get the amortization
+    /// for free). The tables depend only on the spec, the graph's type
+    /// intern table, and the prune config, so alloc-state ops (`FreeJob`,
+    /// shrinks) interleave without costing the dedup; only `AcceptGrant` —
+    /// which can intern new types — invalidates them.
+    ///
+    /// Failed ops yield [`SchedReply::Error`] *in place*; the batch never
+    /// aborts early, and replies correspond to ops index-for-index.
+    pub fn apply_batch(&mut self, ops: &[SchedOp]) -> Vec<SchedReply> {
+        let mut replies = Vec::with_capacity(ops.len());
+        // spec whose compiled tables currently sit in the scratch
+        let mut compiled: Option<&JobSpec> = None;
+        for op in ops {
+            let reply = match op {
+                SchedOp::Probe { spec } => {
+                    let recompile = note_spec(&mut compiled, spec);
+                    match self.probe_batched(spec, recompile) {
+                        Ok((vertices, visited)) => SchedReply::Probed { visited, vertices },
+                        Err(e) => SchedReply::err(code::NO_MATCH, e.to_string()),
+                    }
+                }
+                SchedOp::MatchAllocate { spec } => {
+                    let recompile = note_spec(&mut compiled, spec);
+                    alloc_reply(self.match_allocate_batched(spec, recompile, None))
+                }
+                SchedOp::MatchGrowLocal { job, spec } => {
+                    let recompile = note_spec(&mut compiled, spec);
+                    alloc_reply(self.match_allocate_batched(spec, recompile, Some(*job)))
+                }
+                op @ SchedOp::AcceptGrant { .. } => {
+                    // the only op that can intern new resource types, which
+                    // the compiled req_tid rows bake in — recompile after
+                    compiled = None;
+                    self.apply(op)
+                }
+                // alloc-state-only mutations (or instance-level no-ops):
+                // the compiled per-spec tables stay valid across these
+                op @ (SchedOp::FreeJob { .. }
+                | SchedOp::ShrinkSubtree { .. }
+                | SchedOp::RemoveSubgraph { .. }
+                | SchedOp::MatchGrow { .. }
+                | SchedOp::ShrinkReturn { .. }) => self.apply(op),
+            };
+            replies.push(reply);
+        }
+        replies
+    }
+
+    /// Match against the warm scratch, recompiling the per-spec tables only
+    /// when asked (the batch path skips recompiling for repeated specs).
+    fn match_batched(&self, spec: &JobSpec, recompile: bool) -> Result<MatchResult, MatchFail> {
+        let scratch = &mut *self.scratch.borrow_mut();
+        if recompile {
+            compile_spec_into(&self.graph, &self.prune, spec, scratch);
+        }
+        match_compiled(&self.graph, &self.prune, spec, scratch)
+    }
+
+    /// Feasibility probe against the warm scratch: `(vertices, visited)`
+    /// with no selection copy or sort — the probe path allocates nothing.
+    fn probe_batched(&self, spec: &JobSpec, recompile: bool) -> Result<(usize, usize), MatchFail> {
+        let scratch = &mut *self.scratch.borrow_mut();
+        if recompile {
+            compile_spec_into(&self.graph, &self.prune, spec, scratch);
+        }
+        probe_compiled(&self.graph, &self.prune, spec, scratch)
+    }
+
+    /// Match + allocate with explicit control over spec recompilation — the
+    /// shared core of `match_allocate`, `match_grow_local`, and the batch.
+    fn match_allocate_batched(
+        &mut self,
+        spec: &JobSpec,
+        recompile: bool,
+        job: Option<JobId>,
+    ) -> Result<AllocOutcome, InstanceError> {
+        let (m, match_s) =
+            crate::util::metrics::time_it(|| self.match_batched(spec, recompile));
+        self.finish_alloc(m?, match_s, job)
+    }
+
+    /// Allocation half of `MatchAllocate`/`MatchGrowLocal`: encode the
+    /// grant, then charge the selection to `job` (or a fresh one).
+    fn finish_alloc(
+        &mut self,
+        m: MatchResult,
+        match_s: f64,
+        job: Option<JobId>,
+    ) -> Result<AllocOutcome, InstanceError> {
+        let t = crate::util::metrics::Timer::start();
+        let subgraph = Jgf::from_selection(&self.graph, &m.selection);
+        let job = match job {
+            None => self
+                .allocs
+                .allocate(&mut self.graph, &self.prune, m.selection)
+                .expect("matcher returned free vertices"),
+            Some(j) => {
+                self.allocs
+                    .grow(&mut self.graph, &self.prune, j, m.selection)
+                    .map_err(GrowError::from)?;
+                j
+            }
+        };
+        Ok(AllocOutcome {
+            job,
+            subgraph,
+            timing: OpTiming {
+                match_s,
+                add_upd_s: t.elapsed_secs(),
+            },
+            visited: m.visited,
+        })
+    }
+
     /// Try to match a jobspec without allocating (used for probing).
     /// Reuses the instance's [`MatchScratch`] across calls.
     pub fn match_only(&self, spec: &JobSpec) -> Result<MatchResult, MatchFail> {
-        match_resources_in(&self.graph, &self.prune, spec, &mut self.scratch.borrow_mut())
+        self.match_batched(spec, true)
     }
 
     /// Capacity snapshot of the reusable match scratch (tests assert it is
@@ -116,21 +317,7 @@ impl SchedInstance {
 
     /// `MatchAllocate`: match + allocate to a fresh job id.
     pub fn match_allocate(&mut self, spec: &JobSpec) -> Result<AllocOutcome, InstanceError> {
-        let (m, match_s) = crate::util::metrics::time_it(|| self.match_only(spec));
-        let m = m?;
-        let t = crate::util::metrics::Timer::start();
-        let subgraph = Jgf::from_selection(&self.graph, &m.selection);
-        let job = self
-            .allocs
-            .allocate(&mut self.graph, &self.prune, m.selection)
-            .expect("matcher returned free vertices");
-        let add_upd_s = t.elapsed_secs();
-        Ok(AllocOutcome {
-            job,
-            subgraph,
-            timing: OpTiming { match_s, add_upd_s },
-            visited: m.visited,
-        })
+        self.match_allocate_batched(spec, true, None)
     }
 
     /// Local half of `MatchGrow`: match free local resources and attach them
@@ -142,20 +329,7 @@ impl SchedInstance {
         job: JobId,
         spec: &JobSpec,
     ) -> Result<AllocOutcome, InstanceError> {
-        let (m, match_s) = crate::util::metrics::time_it(|| self.match_only(spec));
-        let m = m?;
-        let t = crate::util::metrics::Timer::start();
-        let subgraph = Jgf::from_selection(&self.graph, &m.selection);
-        self.allocs
-            .grow(&mut self.graph, &self.prune, job, m.selection)
-            .map_err(GrowError::from)?;
-        let add_upd_s = t.elapsed_secs();
-        Ok(AllocOutcome {
-            job,
-            subgraph,
-            timing: OpTiming { match_s, add_upd_s },
-            visited: m.visited,
-        })
+        self.match_allocate_batched(spec, true, Some(job))
     }
 
     /// Splice a subgraph granted by the parent into the local graph and hand
@@ -171,9 +345,40 @@ impl SchedInstance {
         Ok((report, t.elapsed_secs()))
     }
 
-    /// Subtractive transformation: release + detach a subtree.
+    /// Detach a subtree WITHOUT touching its allocations — callers that may
+    /// hold live allocations under `path` want [`release_subtree`]
+    /// (which the `RemoveSubgraph` op maps to) instead.
+    ///
+    /// [`release_subtree`]: SchedInstance::release_subtree
     pub fn remove_subgraph(&mut self, path: &str) -> Result<usize, GrowError> {
         grow::remove_subgraph(&mut self.graph, &self.prune, path)
+    }
+
+    /// Unbind every job allocation intersecting the subtree at `path` and
+    /// return the subtree's vertices (the victim set) — the shared core of
+    /// both shrink flavors below and of the `ShrinkSubtree` op.
+    fn shrink_allocations_in(&mut self, path: &str) -> Result<Vec<VertexId>, GrowError> {
+        let root = self
+            .graph
+            .lookup_path(path)
+            .ok_or_else(|| GrowError::NoAttachPoint(path.to_string()))?;
+        let victims = self.graph.dfs(root);
+        // unbind victims from whatever jobs hold them (usually the single
+        // child job the grant descended through)
+        let mut jobs: Vec<JobId> = Vec::new();
+        for &vid in &victims {
+            for &job in &self.graph.vertex(vid).alloc.jobs {
+                if !jobs.contains(&job) {
+                    jobs.push(job);
+                }
+            }
+        }
+        for job in jobs {
+            self.allocs
+                .shrink(&mut self.graph, &self.prune, job, &victims)
+                .map_err(GrowError::from)?;
+        }
+        Ok(victims)
     }
 
     /// Release every allocation inside a subtree WITHOUT detaching it —
@@ -181,26 +386,7 @@ impl SchedInstance {
     /// resources return to its free pool. Returns the number of vertices
     /// released.
     pub fn free_allocations_in(&mut self, path: &str) -> Result<usize, GrowError> {
-        let root = self
-            .graph
-            .lookup_path(path)
-            .ok_or_else(|| grow::GrowError::NoAttachPoint(path.to_string()))?;
-        let victims = self.graph.dfs(root);
-        let mut jobs: Vec<crate::resource::graph::JobId> = Vec::new();
-        for &vid in &victims {
-            for &job in &self.graph.vertex(vid).alloc.jobs {
-                if !jobs.contains(&job) {
-                    jobs.push(job);
-                }
-            }
-        }
-        let n = victims.len();
-        for job in jobs {
-            self.allocs
-                .shrink(&mut self.graph, &self.prune, job, &victims)
-                .map_err(GrowError::from)?;
-        }
-        Ok(n)
+        Ok(self.shrink_allocations_in(path)?.len())
     }
 
     /// Release every allocation inside a subtree, then detach it — the
@@ -208,26 +394,7 @@ impl SchedInstance {
     /// hierarchy (§3: "a subtractive transformation moves from the bottom
     /// up"). Returns the number of removed vertices.
     pub fn release_subtree(&mut self, path: &str) -> Result<usize, GrowError> {
-        let root = self
-            .graph
-            .lookup_path(path)
-            .ok_or_else(|| grow::GrowError::NoAttachPoint(path.to_string()))?;
-        let victims = self.graph.dfs(root);
-        // unbind victims from whatever jobs hold them (usually the single
-        // child job the grant descended through)
-        let mut jobs: Vec<crate::resource::graph::JobId> = Vec::new();
-        for &vid in &victims {
-            for &job in &self.graph.vertex(vid).alloc.jobs {
-                if !jobs.contains(&job) {
-                    jobs.push(job);
-                }
-            }
-        }
-        for job in jobs {
-            self.allocs
-                .shrink(&mut self.graph, &self.prune, job, &victims)
-                .map_err(GrowError::from)?;
-        }
+        self.shrink_allocations_in(path)?;
         self.remove_subgraph(path)
     }
 
@@ -345,5 +512,166 @@ mod tests {
         inst.free_job(out.job).unwrap();
         assert!(inst.match_only(&spec).is_ok());
         inst.check().unwrap();
+    }
+
+    #[test]
+    fn apply_drives_full_job_lifecycle() {
+        let mut uids = UidGen::new();
+        let mut inst = SchedInstance::new(table2_graph(3, &mut uids), PruneConfig::default());
+        let spec = table1_jobspec("T7");
+        let SchedReply::Allocated { job, subgraph, .. } =
+            inst.apply(&SchedOp::MatchAllocate { spec: spec.clone() })
+        else {
+            panic!("expected Allocated");
+        };
+        assert_eq!(subgraph.nodes.len(), 35);
+        let SchedReply::Allocated { job: job2, .. } =
+            inst.apply(&SchedOp::MatchGrowLocal { job, spec: spec.clone() })
+        else {
+            panic!("expected Allocated");
+        };
+        assert_eq!(job2, job);
+        assert_eq!(
+            inst.apply(&SchedOp::FreeJob { job }),
+            SchedReply::Freed { vertices: 70 }
+        );
+        // probing after free succeeds again
+        let SchedReply::Probed { vertices, .. } = inst.apply(&SchedOp::Probe { spec }) else {
+            panic!("expected Probed");
+        };
+        assert_eq!(vertices, 35);
+        inst.check().unwrap();
+    }
+
+    #[test]
+    fn apply_rejects_hierarchical_ops_with_code() {
+        let mut uids = UidGen::new();
+        let mut inst = SchedInstance::new(table2_graph(4, &mut uids), PruneConfig::default());
+        let r = inst.apply(&SchedOp::MatchGrow {
+            spec: table1_jobspec("T8"),
+        });
+        assert_eq!(r.as_error().unwrap().code, code::UNSUPPORTED_OP);
+        let r = inst.apply(&SchedOp::ShrinkReturn { path: "/x".into() });
+        assert_eq!(r.as_error().unwrap().code, code::UNSUPPORTED_OP);
+    }
+
+    #[test]
+    fn apply_shrink_then_remove_subtree() {
+        let mut uids = UidGen::new();
+        let mut inst = SchedInstance::new(table2_graph(3, &mut uids), PruneConfig::default());
+        let spec = JobSpec::nodes_sockets_cores(2, 2, 16);
+        inst.match_allocate(&spec).unwrap();
+        let before = inst.graph.num_vertices();
+        // ShrinkSubtree frees the allocations but keeps the vertices
+        let node0 = "/cluster0/node0".to_string();
+        let r = inst.apply(&SchedOp::ShrinkSubtree {
+            path: node0.clone(),
+        });
+        assert!(matches!(r, SchedReply::Freed { vertices: 35 }), "{r:?}");
+        assert_eq!(inst.graph.num_vertices(), before);
+        inst.check().unwrap();
+        // RemoveSubgraph detaches the subtree
+        let r = inst.apply(&SchedOp::RemoveSubgraph { path: node0 });
+        assert!(matches!(r, SchedReply::Removed { vertices: 35 }), "{r:?}");
+        assert_eq!(inst.graph.num_vertices(), before - 35);
+        inst.check().unwrap();
+    }
+
+    /// Regression: the remote `RemoveSubgraph` op must release live
+    /// allocations before detaching — a bare detach would leave the alloc
+    /// table charging jobs for dead vertices.
+    #[test]
+    fn apply_remove_subgraph_releases_allocations() {
+        let mut inst =
+            SchedInstance::new(table2_graph(3, &mut UidGen::new()), PruneConfig::default());
+        inst.match_allocate(&table1_jobspec("T7")).unwrap();
+        let r = inst.apply(&SchedOp::RemoveSubgraph {
+            path: "/cluster0/node0".into(),
+        });
+        assert!(matches!(r, SchedReply::Removed { vertices: 35 }), "{r:?}");
+        inst.check().unwrap();
+    }
+
+    #[test]
+    fn batch_replies_match_sequential_application() {
+        // twin instances from the same deterministic builder: the batched
+        // queue must produce the same grants/jobs as one-at-a-time apply
+        let mut a = SchedInstance::new(table2_graph(1, &mut UidGen::new()), PruneConfig::default());
+        let mut b = SchedInstance::new(table2_graph(1, &mut UidGen::new()), PruneConfig::default());
+        let t7 = table1_jobspec("T7");
+        let mut ops: Vec<SchedOp> = (0..4)
+            .map(|_| SchedOp::MatchAllocate { spec: t7.clone() })
+            .collect();
+        ops.push(SchedOp::Probe { spec: t7.clone() });
+        ops.push(SchedOp::FreeJob { job: JobId(0) });
+        ops.push(SchedOp::Probe { spec: t7.clone() });
+
+        let batched = a.apply_batch(&ops);
+        assert_eq!(batched.len(), ops.len());
+        for (op, br) in ops.iter().zip(&batched) {
+            let sr = b.apply(op);
+            // timings differ run-to-run; compare the structural payload
+            match (br, &sr) {
+                (
+                    SchedReply::Allocated {
+                        job: j1,
+                        subgraph: g1,
+                        ..
+                    },
+                    SchedReply::Allocated {
+                        job: j2,
+                        subgraph: g2,
+                        ..
+                    },
+                ) => {
+                    assert_eq!(j1, j2);
+                    assert_eq!(g1, g2);
+                }
+                _ => assert_eq!(br, &sr),
+            }
+        }
+        a.check().unwrap();
+        b.check().unwrap();
+    }
+
+    #[test]
+    fn batch_continues_past_failed_ops() {
+        let mut uids = UidGen::new();
+        let mut inst = SchedInstance::new(table2_graph(3, &mut uids), PruneConfig::default());
+        let huge = JobSpec::nodes_sockets_cores(100, 2, 16);
+        let small = table1_jobspec("T7");
+        let ops = vec![
+            SchedOp::MatchAllocate { spec: huge.clone() },
+            SchedOp::MatchAllocate { spec: small.clone() },
+            SchedOp::MatchAllocate { spec: huge },
+            SchedOp::Probe { spec: small },
+        ];
+        let replies = inst.apply_batch(&ops);
+        assert_eq!(replies[0].as_error().unwrap().code, code::NO_MATCH);
+        assert!(matches!(replies[1], SchedReply::Allocated { .. }));
+        assert_eq!(replies[2].as_error().unwrap().code, code::NO_MATCH);
+        assert!(matches!(replies[3], SchedReply::Probed { .. }));
+        inst.check().unwrap();
+    }
+
+    #[test]
+    fn batch_keeps_scratch_capacity_stable() {
+        // batched matching inherits the zero-allocation property: one warm
+        // batch, then repeated batches leave the scratch untouched
+        let mut inst =
+            SchedInstance::new(table2_graph(0, &mut UidGen::new()), PruneConfig::default());
+        let ops: Vec<SchedOp> = (0..8)
+            .map(|_| SchedOp::Probe {
+                spec: table1_jobspec("T1"),
+            })
+            .collect();
+        for r in inst.apply_batch(&ops) {
+            assert!(!r.is_error());
+        }
+        let warm = inst.scratch_footprint();
+        for _ in 0..10 {
+            inst.apply_batch(&ops);
+        }
+        assert_eq!(inst.scratch_footprint(), warm);
     }
 }

@@ -18,6 +18,11 @@
 //! into a dense index-addressed table — replacing a pointer-keyed
 //! `HashMap<*const ResourceReq, _>` memo whose address-identity keying was
 //! unsound the moment scratch state outlived one jobspec borrow.
+//!
+//! The per-spec compile ([`compile_spec_into`]) and the traversal
+//! ([`match_compiled`]) are separate halves so batched submission
+//! ([`crate::sched::SchedInstance::apply_batch`]) can compile once per
+//! distinct spec and traverse once per op.
 
 use std::fmt;
 
@@ -261,21 +266,25 @@ fn collect(
     false
 }
 
-/// Match a jobspec against the graph, reusing `scratch` across calls. Does
-/// NOT mark allocations — callers pass the selection to
-/// [`crate::sched::alloc::AllocTable`].
-pub fn match_resources_in(
+/// Compile `spec`'s request tree into the scratch's per-spec tables
+/// (interned type ids, dense demand rows, subtree sizes) — the per-spec
+/// half of a match. [`match_compiled`] then runs any number of traversals
+/// against the compiled tables; the batch path
+/// ([`crate::sched::SchedInstance::apply_batch`]) calls this once per
+/// *distinct* spec and skips it when consecutive ops repeat the same spec.
+///
+/// The tables depend only on the spec, the graph's type intern table, and
+/// the pruning config — allocation-state changes between traversals do not
+/// invalidate them; structural edits that intern new types
+/// (`AddSubgraph`) do.
+pub fn compile_spec_into(
     g: &ResourceGraph,
     cfg: &PruneConfig,
     spec: &JobSpec,
     scratch: &mut MatchScratch,
-) -> Result<MatchResult, MatchFail> {
-    let Some(root) = g.root() else {
-        return Err(MatchFail::NoMatch { visited: 0 });
-    };
+) {
     let tracked = cfg.resolve(g.types());
     let nslots = cfg.nslots();
-
     scratch.req_tid.clear();
     scratch.demand.clear();
     scratch.subtree.clear();
@@ -290,6 +299,21 @@ pub fn match_resources_in(
             &mut scratch.subtree,
         );
     }
+}
+
+/// Traversal core shared by [`match_compiled`] and [`probe_compiled`]:
+/// run the compiled request against the graph, leaving the tentative
+/// selection in `scratch.out`. Returns visited count.
+fn traverse_compiled(
+    g: &ResourceGraph,
+    cfg: &PruneConfig,
+    spec: &JobSpec,
+    scratch: &mut MatchScratch,
+) -> Result<usize, MatchFail> {
+    let Some(root) = g.root() else {
+        return Err(MatchFail::NoMatch { visited: 0 });
+    };
+    let nslots = cfg.nslots();
     scratch.selected.ensure(g.arena_len());
     scratch.selected.clear_all();
     scratch.out.clear();
@@ -319,14 +343,51 @@ pub fn match_resources_in(
         }
         ix += ctx.subtree[ix];
     }
+    Ok(ctx.visited)
+}
+
+/// Traverse the graph against tables previously compiled from `spec` by
+/// [`compile_spec_into`] (callers must pass the *same* spec to both halves;
+/// `SchedInstance` enforces that pairing). Does NOT mark allocations —
+/// callers pass the selection to [`crate::sched::alloc::AllocTable`].
+pub fn match_compiled(
+    g: &ResourceGraph,
+    cfg: &PruneConfig,
+    spec: &JobSpec,
+    scratch: &mut MatchScratch,
+) -> Result<MatchResult, MatchFail> {
+    let visited = traverse_compiled(g, cfg, spec, scratch)?;
     // order parents-before-children for JGF emission (one exact-size copy
     // out of the reusable buffer; the traversal itself never allocates)
-    let mut selection = out.as_slice().to_vec();
+    let mut selection = scratch.out.as_slice().to_vec();
     sort_topological(g, &mut selection);
-    Ok(MatchResult {
-        selection,
-        visited: ctx.visited,
-    })
+    Ok(MatchResult { selection, visited })
+}
+
+/// Feasibility-only variant of [`match_compiled`]: returns
+/// `(selected vertex count, visited)` without the selection copy or the
+/// topological sort — probes discard the selection, so the probe path
+/// skips the only remaining per-op allocation entirely.
+pub fn probe_compiled(
+    g: &ResourceGraph,
+    cfg: &PruneConfig,
+    spec: &JobSpec,
+    scratch: &mut MatchScratch,
+) -> Result<(usize, usize), MatchFail> {
+    let visited = traverse_compiled(g, cfg, spec, scratch)?;
+    Ok((scratch.out.len(), visited))
+}
+
+/// Match a jobspec against the graph, reusing `scratch` across calls:
+/// compile, then traverse. One-spec-at-a-time entry point.
+pub fn match_resources_in(
+    g: &ResourceGraph,
+    cfg: &PruneConfig,
+    spec: &JobSpec,
+    scratch: &mut MatchScratch,
+) -> Result<MatchResult, MatchFail> {
+    compile_spec_into(g, cfg, spec, scratch);
+    match_compiled(g, cfg, spec, scratch)
 }
 
 /// One-shot variant constructing a throwaway scratch. Long-lived callers
@@ -496,6 +557,22 @@ mod tests {
         let spec_c = Box::new(table1_jobspec("T7"));
         let c = match_resources_in(&g, &cfg, &spec_c, &mut scratch).unwrap();
         assert_eq!(c.selection, a.selection);
+    }
+
+    /// The split compile/traverse halves agree with the one-shot path, and
+    /// re-traversing without recompiling (the batch dedup path) is stable.
+    #[test]
+    fn compiled_reuse_matches_fresh_compile() {
+        let mut g = table2_graph(3, &mut UidGen::new());
+        let cfg = ready(&mut g);
+        let mut scratch = MatchScratch::new();
+        let spec = table1_jobspec("T7");
+        compile_spec_into(&g, &cfg, &spec, &mut scratch);
+        let a = match_compiled(&g, &cfg, &spec, &mut scratch).unwrap();
+        let b = match_compiled(&g, &cfg, &spec, &mut scratch).unwrap();
+        assert_eq!(a.selection, b.selection);
+        let c = match_resources_in(&g, &cfg, &spec, &mut scratch).unwrap();
+        assert_eq!(a.selection, c.selection);
     }
 
     /// Scratch capacities stabilize: after the first match, repeated

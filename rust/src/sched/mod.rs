@@ -1,5 +1,9 @@
 //! The graph scheduler core: matching with pruning filters, allocation
 //! bookkeeping, and the dynamic grow/shrink transformations of paper §3.
+//!
+//! The entry surface is the typed protocol ([`crate::rpc::proto`]):
+//! [`SchedInstance::apply`] interprets one [`SchedOp`],
+//! [`SchedInstance::apply_batch`] a whole queue with spec-level dedup.
 
 pub mod alloc;
 pub mod grow;
@@ -9,5 +13,12 @@ pub mod pruning;
 
 pub use alloc::AllocTable;
 pub use instance::SchedInstance;
-pub use matcher::{match_resources, match_resources_in, MatchFail, MatchResult, MatchScratch};
+pub use matcher::{
+    compile_spec_into, match_compiled, match_resources, match_resources_in, MatchFail,
+    MatchResult, MatchScratch,
+};
 pub use pruning::PruneConfig;
+
+// Re-exported so scheduler callers get the op/reply vocabulary without
+// reaching into the rpc module (the protocol is the scheduler's API).
+pub use crate::rpc::proto::{SchedOp, SchedReply};

@@ -1,0 +1,307 @@
+//! Property tests for the typed scheduler protocol: every [`SchedOp`] /
+//! [`SchedReply`] must survive `decode(encode(x)) == x` through the full
+//! wire text (dump + reparse), the request/response envelope must reject
+//! ambiguity, and a frame stream cut mid-batch must yield exactly the
+//! complete prefix then a clean error — never garbage, never a panic.
+//!
+//! Driven by the in-repo shrink-lite property harness (`util/prop.rs`);
+//! deterministic per-variant coverage lives in `rpc::proto`'s unit tests,
+//! these push randomized structures (nested specs, escape-heavy paths,
+//! real JGF selections) through the same codec.
+
+use fluxion::hier::report::LevelTiming;
+use fluxion::jobspec::{JobSpec, ResourceReq};
+use fluxion::resource::builder::{ClusterSpec, UidGen};
+use fluxion::resource::graph::JobId;
+use fluxion::resource::jgf::Jgf;
+use fluxion::rpc::proto::{RpcError, SchedOp, SchedReply};
+use fluxion::rpc::{encode_frame, read_frame, Request, Response};
+use fluxion::util::json::Json;
+use fluxion::util::prop::{check, ensure};
+use fluxion::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Generators
+// ---------------------------------------------------------------------------
+
+fn gen_req(rng: &mut Rng, depth: usize) -> ResourceReq {
+    const TYPES: [&str; 6] = ["node", "socket", "core", "gpu", "memory", "rack"];
+    let mut r = ResourceReq::new(
+        TYPES[rng.below(TYPES.len() as u64) as usize],
+        rng.range(1, 4),
+    );
+    if rng.below(4) == 0 {
+        r = r.shared();
+    }
+    if rng.below(3) == 0 {
+        r = r.with_attr("zone", "us-east-1a");
+    }
+    if rng.below(4) == 0 {
+        r = r.with_attr("instance_type", "t2.micro");
+    }
+    if depth > 0 && rng.below(2) == 0 {
+        let kids = rng.range(1, 2);
+        for _ in 0..kids {
+            r = r.with_child(gen_req(rng, depth - 1));
+        }
+    }
+    r
+}
+
+fn gen_spec(rng: &mut Rng, size: usize) -> JobSpec {
+    let depth = (size / 8).min(3);
+    let n = rng.range(1, 2) as usize;
+    let mut spec = JobSpec::new((0..n).map(|_| gen_req(rng, depth)).collect());
+    if rng.below(3) == 0 {
+        spec = spec.with_attr("user", "alice");
+    }
+    spec
+}
+
+/// Paths deliberately include JSON-hostile characters to stress escaping.
+fn gen_path(rng: &mut Rng) -> String {
+    match rng.below(4) {
+        0 => format!("/cluster0/node{}", rng.below(128)),
+        1 => format!("/c0/node{}/socket{}", rng.below(8), rng.below(2)),
+        2 => format!("/burst/\"quoted\"/n{}", rng.below(9)),
+        _ => format!("/weird/\\back\nslash\t{}", rng.below(9)),
+    }
+}
+
+/// A real JGF document: an upward-closed prefix of a small cluster's DFS
+/// order (what `Jgf::from_selection` is fed in production).
+fn gen_jgf(rng: &mut Rng, size: usize) -> Jgf {
+    let nodes = 1 + (size / 10).min(2);
+    let g = ClusterSpec::new("c", nodes, 2, 2).build(&mut UidGen::new());
+    let all = g.dfs(g.root().unwrap());
+    let take = 1 + rng.below(all.len() as u64) as usize;
+    Jgf::from_selection(&g, &all[..take])
+}
+
+fn gen_f64(rng: &mut Rng) -> f64 {
+    match rng.below(3) {
+        0 => 0.0,
+        1 => rng.below(1000) as f64, // integer-valued (itoa fast path)
+        _ => rng.f64() * 1e-3,       // realistic op timings
+    }
+}
+
+fn gen_op(rng: &mut Rng, size: usize) -> SchedOp {
+    match rng.below(9) {
+        0 => SchedOp::MatchAllocate {
+            spec: gen_spec(rng, size),
+        },
+        1 => SchedOp::MatchGrowLocal {
+            job: JobId(rng.below(1 << 20)),
+            spec: gen_spec(rng, size),
+        },
+        2 => SchedOp::Probe {
+            spec: gen_spec(rng, size),
+        },
+        3 => SchedOp::AcceptGrant {
+            subgraph: gen_jgf(rng, size),
+            job: if rng.below(2) == 0 {
+                Some(JobId(rng.below(100)))
+            } else {
+                None
+            },
+        },
+        4 => SchedOp::FreeJob {
+            job: JobId(rng.below(1 << 20)),
+        },
+        5 => SchedOp::ShrinkSubtree {
+            path: gen_path(rng),
+        },
+        6 => SchedOp::RemoveSubgraph {
+            path: gen_path(rng),
+        },
+        7 => SchedOp::MatchGrow {
+            spec: gen_spec(rng, size),
+        },
+        _ => SchedOp::ShrinkReturn {
+            path: gen_path(rng),
+        },
+    }
+}
+
+fn gen_levels(rng: &mut Rng) -> Vec<LevelTiming> {
+    (0..rng.below(4))
+        .map(|i| LevelTiming {
+            level: i as usize,
+            match_s: gen_f64(rng),
+            match_ok: rng.below(2) == 0,
+            comms_s: gen_f64(rng),
+            add_upd_s: gen_f64(rng),
+            visited: rng.below(10_000) as usize,
+        })
+        .collect()
+}
+
+fn gen_reply(rng: &mut Rng, size: usize) -> SchedReply {
+    const CODES: [&str; 4] = ["no_match", "grow_failed", "provider_api", "shrink_failed"];
+    match rng.below(7) {
+        0 => SchedReply::Allocated {
+            job: JobId(rng.below(1 << 20)),
+            subgraph: gen_jgf(rng, size),
+            match_s: gen_f64(rng),
+            add_upd_s: gen_f64(rng),
+            visited: rng.below(10_000) as usize,
+        },
+        1 => SchedReply::Probed {
+            visited: rng.below(10_000) as usize,
+            vertices: rng.below(10_000) as usize,
+        },
+        2 => SchedReply::Accepted {
+            added: rng.below(1000) as usize,
+            preexisting: rng.below(10) as usize,
+            add_upd_s: gen_f64(rng),
+        },
+        3 => SchedReply::Freed {
+            vertices: rng.below(1000) as usize,
+        },
+        4 => SchedReply::Removed {
+            vertices: rng.below(1000) as usize,
+        },
+        5 => SchedReply::Grown {
+            subgraph: gen_jgf(rng, size),
+            levels: gen_levels(rng),
+        },
+        _ => SchedReply::Error(RpcError::new(
+            CODES[rng.below(CODES.len() as u64) as usize],
+            format!("failed at {}: \"why\"\n", gen_path(rng)),
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sched_op_roundtrips_through_wire_text() {
+    check(0xC0DE, 200, 40, gen_op, |op| {
+        let text = op.to_json().dump();
+        let doc = Json::parse(&text).map_err(|e| e.to_string())?;
+        let back = SchedOp::from_json(&doc).map_err(|e| e.to_string())?;
+        ensure(&back == op, "op changed across encode/decode")
+    });
+}
+
+#[test]
+fn prop_sched_reply_roundtrips_through_wire_text() {
+    check(0xFEED, 200, 40, gen_reply, |reply| {
+        let text = reply.to_json().dump();
+        let doc = Json::parse(&text).map_err(|e| e.to_string())?;
+        let back = SchedReply::from_json(&doc).map_err(|e| e.to_string())?;
+        ensure(&back == reply, "reply changed across encode/decode")
+    });
+}
+
+#[test]
+fn prop_request_response_envelopes_roundtrip_framed() {
+    check(
+        0xABCD,
+        150,
+        40,
+        |rng: &mut Rng, size: usize| {
+            let req = Request::new(rng.below(1 << 30), gen_op(rng, size));
+            let resp = Response {
+                id: rng.below(1 << 30),
+                reply: gen_reply(rng, size),
+            };
+            (req, resp)
+        },
+        |(req, resp)| {
+            let mut cur = std::io::Cursor::new(encode_frame(&req.to_json()));
+            let doc = read_frame(&mut cur).map_err(|e| e.to_string())?;
+            let back = Request::from_json(&doc).map_err(|e| e.to_string())?;
+            ensure(&back == req, "request changed across the frame")?;
+
+            let mut cur = std::io::Cursor::new(encode_frame(&resp.to_json()));
+            let doc = read_frame(&mut cur).map_err(|e| e.to_string())?;
+            let back = Response::from_json(&doc).map_err(|e| e.to_string())?;
+            ensure(&back == resp, "response changed across the frame")
+        },
+    );
+}
+
+/// Truncating a stream of frames mid-batch yields exactly the frames that
+/// fit before the cut, then a clean I/O error — the reader never yields a
+/// partial document and never panics.
+#[test]
+fn prop_frame_stream_truncation_mid_batch() {
+    check(
+        0xBA7C4,
+        150,
+        30,
+        |rng: &mut Rng, size: usize| {
+            let k = rng.range(1, 5) as usize;
+            let ops: Vec<SchedOp> = (0..k).map(|_| gen_op(rng, size)).collect();
+            let frames: Vec<Vec<u8>> =
+                ops.iter().map(|op| encode_frame(&op.to_json())).collect();
+            let total: usize = frames.iter().map(Vec::len).sum();
+            let cut = rng.below(total as u64 + 1) as usize;
+            (ops, frames, cut)
+        },
+        |(ops, frames, cut)| {
+            let mut stream: Vec<u8> = Vec::new();
+            for f in frames {
+                stream.extend_from_slice(f);
+            }
+            stream.truncate(*cut);
+
+            // how many whole frames survive the cut
+            let mut whole = 0usize;
+            let mut consumed = 0usize;
+            for f in frames {
+                if consumed + f.len() <= *cut {
+                    whole += 1;
+                    consumed += f.len();
+                } else {
+                    break;
+                }
+            }
+
+            let mut cur = std::io::Cursor::new(stream);
+            for op in ops.iter().take(whole) {
+                let doc = read_frame(&mut cur)
+                    .map_err(|e| format!("complete frame failed to read: {e}"))?;
+                let back = SchedOp::from_json(&doc).map_err(|e| e.to_string())?;
+                ensure(&back == op, "op changed across the framed stream")?;
+            }
+            // anything after the last whole frame must error (partial frame)
+            // or cleanly EOF (cut exactly on a boundary)
+            match read_frame(&mut cur) {
+                Err(_) => Ok(()),
+                Ok(doc) => Err(format!("decoded a frame past the cut: {doc}")),
+            }
+        },
+    );
+}
+
+/// The envelope rejects ambiguous and legacy error shapes regardless of
+/// what valid reply document is spliced in.
+#[test]
+fn prop_ambiguous_response_rejected() {
+    check(0xD0C5, 100, 30, gen_reply, |reply| {
+        let ok = Response {
+            id: 1,
+            reply: reply.clone(),
+        };
+        let mut doc = ok.to_json();
+        if doc.get("error").is_some() {
+            // error reply: splice in a result too
+            doc.set("result", Json::obj().with("reply", Json::from("freed")));
+        } else {
+            // ok reply: splice in an error too
+            doc.set(
+                "error",
+                RpcError::new("no_match", "also failed?").to_json(),
+            );
+        }
+        ensure(
+            Response::from_json(&doc).is_err(),
+            "ambiguous response was accepted",
+        )
+    });
+}

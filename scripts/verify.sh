@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # One-entrypoint verify: tier-1 build + tests, then a hotpath bench smoke
 # (1 warmup / 5 iters) that also refreshes BENCH_hotpath.json at the repo
-# root. Builders and CI both invoke this.
+# root, then a regression gate: any `batch/*` row whose median regresses
+# >20% vs the committed BENCH_hotpath.json fails the run. Builders and CI
+# both invoke this.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,6 +14,42 @@ echo "== tier-1: cargo test -q =="
 cargo test -q
 
 echo "== hotpath bench smoke (--smoke --json) =="
+baseline="$(mktemp)"
+trap 'rm -f "$baseline"' EXIT
+have_baseline=0
+if git show HEAD:BENCH_hotpath.json > "$baseline" 2>/dev/null; then
+  have_baseline=1
+fi
 cargo bench --bench hotpath -- --smoke --json
+
+if [ "$have_baseline" = 1 ]; then
+  echo "== batch/* regression gate (fail if median >20% over committed) =="
+  python3 - "$baseline" BENCH_hotpath.json <<'PYEOF'
+import json, sys
+
+def medians(path):
+    with open(path) as f:
+        return {r["name"]: r["median_s"] for r in json.load(f)["benchmarks"]}
+
+base, cur = medians(sys.argv[1]), medians(sys.argv[2])
+failed = []
+for name in sorted(cur):
+    if not name.startswith("batch/"):
+        continue
+    old, new = base.get(name), cur[name]
+    if old is None or old <= 0:
+        print(f"  {name}: no committed baseline row, skipping")
+        continue
+    ratio = new / old
+    verdict = "FAIL" if ratio > 1.20 else "ok"
+    print(f"  {name}: {old:.3e}s -> {new:.3e}s ({ratio:.2f}x) {verdict}")
+    if ratio > 1.20:
+        failed.append(name)
+if failed:
+    sys.exit(f"batch rows regressed >20% vs committed BENCH_hotpath.json: {failed}")
+PYEOF
+else
+  echo "== no committed BENCH_hotpath.json yet; skipping batch regression gate =="
+fi
 
 echo "verify OK"
