@@ -1,9 +1,12 @@
 //! §Perf harness: micro-benchmarks of the L3 hot paths that make up a
 //! MatchGrow — match, JGF encode/decode, JSON dump/parse, AddSubgraph +
-//! UpdateMetadata, a full typed-RPC round trip, and the `batch/` family
+//! UpdateMetadata, a full typed-RPC round trip, the `batch/` family
 //! (apply_batch queues vs one-call-at-a-time; those rows record **per-op**
 //! seconds — each sample is one whole batch divided by its queue length, so
-//! `batch/match_T1x32@L0` compares directly against `match/T1@L0`). Used by
+//! `batch/match_T1x32@L0` compares directly against `match/T1@L0`), the
+//! `par/` family (the same probe-heavy batch through `SchedService` worker
+//! pools of 1/2/4 vs. the sequential baseline, per-op seconds), and the
+//! `cached-probe/` pair (epoch-keyed probe cache hit vs. cold). Used by
 //! the performance pass (EXPERIMENTS.md §Perf, PERF.md) to measure
 //! before/after each optimization.
 //!
@@ -18,7 +21,7 @@ use fluxion::resource::builder::{table2_graph, UidGen};
 use fluxion::resource::graph::JobId;
 use fluxion::resource::jgf::Jgf;
 use fluxion::rpc::transport::Conn;
-use fluxion::sched::{PruneConfig, SchedInstance, SchedOp, SchedReply};
+use fluxion::sched::{PruneConfig, SchedInstance, SchedOp, SchedReply, SchedService};
 use fluxion::util::bench::{run_simple, run_timed, BenchReport};
 use fluxion::util::json::Json;
 
@@ -31,7 +34,7 @@ fn main() {
     let mut report = BenchReport::new();
 
     let mut uids = UidGen::new();
-    let inst = SchedInstance::new(table2_graph(0, &mut uids), PruneConfig::default());
+    let mut inst = SchedInstance::new(table2_graph(0, &mut uids), PruneConfig::default());
     let t1 = table1_jobspec("T1");
     let t7 = table1_jobspec("T7");
 
@@ -200,6 +203,59 @@ fn main() {
     );
     let per_op: Vec<f64> = s.iter().map(|x| x / 32.0).collect();
     report.row("batch/alloc_free_T7x16@L0", &per_op);
+
+    // 7. concurrent serving (`sched::service`): a probe-heavy batch fanned
+    //    across the worker pool vs. the sequential batch above, and the
+    //    epoch-keyed probe cache. `par/*` rows are PER-OP seconds over 32
+    //    DISTINCT heavy probe specs (33..=64 nodes on the L0 graph) —
+    //    distinct so neither the batch's spec dedup nor the result cache
+    //    shortcuts the traversals; `clear_cache` inside the timed body
+    //    (O(32) map clear, noise-level) keeps iterations cold.
+    let par_ops: Vec<SchedOp> = (0..32u64)
+        .map(|i| SchedOp::Probe {
+            spec: fluxion::jobspec::JobSpec::nodes_sockets_cores(33 + i, 2, 16),
+        })
+        .collect();
+    let mut seq_inst =
+        SchedInstance::new(table2_graph(0, &mut UidGen::new()), PruneConfig::default());
+    let s = run_simple(warm, iters, || {
+        let replies = seq_inst.apply_batch(&par_ops);
+        assert!(replies.iter().all(|r| !r.is_error()));
+        replies.len()
+    });
+    let per_op: Vec<f64> = s.iter().map(|x| x / 32.0).collect();
+    report.row("par/probe_mix32@L0/seq", &per_op);
+    for workers in [1usize, 2, 4] {
+        let svc = SchedService::with_workers(
+            SchedInstance::new(table2_graph(0, &mut UidGen::new()), PruneConfig::default()),
+            workers,
+        );
+        let s = run_simple(warm, iters, || {
+            svc.clear_cache();
+            let replies = svc.apply_batch(&par_ops);
+            assert!(replies.iter().all(|r| !r.is_error()));
+            replies.len()
+        });
+        let per_op: Vec<f64> = s.iter().map(|x| x / 32.0).collect();
+        report.row(&format!("par/probe_mix32@L0/w{workers}"), &per_op);
+    }
+
+    // cached-probe: one T1 probe through the service — cold (cache cleared
+    // every call: clear + full traversal + insert) vs. hit (answered from
+    // the epoch-keyed cache without re-traversal). The acceptance bar is
+    // hit ≥10x cheaper than cold.
+    let svc = SchedService::with_workers(
+        SchedInstance::new(table2_graph(0, &mut UidGen::new()), PruneConfig::default()),
+        2,
+    );
+    let s = run_simple(warm, iters, || {
+        svc.clear_cache();
+        assert!(!svc.probe(&t1).is_error());
+    });
+    report.row("cached-probe/cold_T1@L0", &s);
+    svc.probe(&t1); // warm the entry
+    let s = run_simple(warm, iters, || assert!(!svc.probe(&t1).is_error()));
+    report.row("cached-probe/hit_T1@L0", &s);
 
     if json {
         let path = "BENCH_hotpath.json";

@@ -28,6 +28,7 @@ pub struct BitSet {
 }
 
 impl BitSet {
+    /// An empty bitset (grows on demand via `ensure`).
     pub fn new() -> BitSet {
         BitSet::default()
     }
@@ -41,6 +42,7 @@ impl BitSet {
     }
 
     #[inline]
+    /// Whether bit `i` is set (false beyond the backing words).
     pub fn get(&self, i: usize) -> bool {
         self.words
             .get(i / 64)
@@ -55,6 +57,7 @@ impl BitSet {
     }
 
     #[inline]
+    /// Clear bit `i` (no-op beyond the backing words).
     pub fn clear(&mut self, i: usize) {
         if let Some(w) = self.words.get_mut(i / 64) {
             *w &= !(1u64 << (i % 64));
@@ -68,6 +71,7 @@ impl BitSet {
         }
     }
 
+    /// Number of set bits.
     pub fn count(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
@@ -81,15 +85,20 @@ impl BitSet {
 /// A homogeneous node-type partition with a free bitmap.
 #[derive(Debug, Clone)]
 pub struct Partition {
+    /// Partition (node-type) name.
     pub name: String,
+    /// CPUs per node.
     pub cpus_per_node: u64,
+    /// Memory per node in MiB.
     pub mem_mib_per_node: u64,
+    /// Configured node count.
     pub nodes: usize,
     /// Bit i set = node i is FREE. Word-packed, as real bitmap schedulers do.
     free: Vec<u64>,
 }
 
 impl Partition {
+    /// A fully-free partition of `nodes` identical nodes.
     pub fn new(name: &str, nodes: usize, cpus: u64, mem_mib: u64) -> Partition {
         let words = nodes.div_ceil(64);
         let mut free = vec![u64::MAX; words];
@@ -107,6 +116,7 @@ impl Partition {
         }
     }
 
+    /// Number of idle nodes.
     pub fn free_count(&self) -> usize {
         self.free.iter().map(|w| w.count_ones() as usize).sum()
     }
@@ -151,29 +161,35 @@ impl Partition {
 /// re-initializing — the rigidity the paper contrasts with graph editing.
 #[derive(Debug, Default)]
 pub struct BitmapScheduler {
+    /// All partitions, in configuration order.
     pub partitions: Vec<Partition>,
     index: HashMap<String, usize>,
 }
 
 impl BitmapScheduler {
+    /// A scheduler with no partitions.
     pub fn new() -> BitmapScheduler {
         BitmapScheduler::default()
     }
 
+    /// Append a partition.
     pub fn add_partition(&mut self, p: Partition) {
         self.index.insert(p.name.clone(), self.partitions.len());
         self.partitions.push(p);
     }
 
+    /// Look up a partition by name.
     pub fn partition(&self, name: &str) -> Option<&Partition> {
         self.index.get(name).map(|&i| &self.partitions[i])
     }
 
+    /// Mutable lookup of a partition by name.
     pub fn partition_mut(&mut self, name: &str) -> Option<&mut Partition> {
         let i = *self.index.get(name)?;
         Some(&mut self.partitions[i])
     }
 
+    /// Total configured nodes across partitions.
     pub fn total_nodes(&self) -> usize {
         self.partitions.iter().map(|p| p.nodes).sum()
     }

@@ -35,8 +35,11 @@ pub enum Mode {
 /// Result of one replay.
 #[derive(Debug, Clone)]
 pub struct ReplayResult {
+    /// Mode label ("elastic+burst", "elastic", "rigid").
     pub mode: String,
+    /// Jobs that ran to completion.
     pub jobs_completed: usize,
+    /// Virtual seconds from first arrival to last completion.
     pub makespan_s: f64,
     /// Σ queue wait (virtual seconds).
     pub total_wait_s: f64,
@@ -49,6 +52,7 @@ pub struct ReplayResult {
 }
 
 impl ReplayResult {
+    /// One formatted summary line for the comparison table.
     pub fn table(&self) -> String {
         let grow = self
             .recorder
@@ -372,6 +376,7 @@ pub fn run(cfg: &ExpConfig, spec: &WorkloadSpec) -> Vec<ReplayResult> {
     ]
 }
 
+/// Render the elastic-vs-rigid comparison (experiment E11).
 pub fn comparison_table(results: &[ReplayResult]) -> String {
     let mut out = String::from("E11 — elastic vs rigid on the ensemble trace\n");
     for r in results {

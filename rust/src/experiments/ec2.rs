@@ -15,16 +15,19 @@ use crate::util::metrics::{current_rss_kb, Recorder, Timer};
 /// E5 results: per-type creation-time distributions + overhead fractions.
 #[derive(Debug, Clone)]
 pub struct Ec2Result {
+    /// Per-type creation-time samples (`create/<type>` keys).
     pub recorder: Recorder,
     /// Mean jobspec→request mapping time as a fraction of creation time
     /// (paper: <1%).
     pub map_fraction: f64,
     /// Mean JGF encode time as a fraction of creation time (paper: ≈1.6%).
     pub encode_fraction: f64,
+    /// Number of simulated EC2 requests issued.
     pub requests_run: usize,
 }
 
 impl Ec2Result {
+    /// Render the Figure 2 creation-time table.
     pub fn figure2_table(&self) -> String {
         let mut out = String::from(
             "E5 (Fig 2) — EC2 instance creation times by type (all request sizes pooled)\n",
@@ -95,19 +98,25 @@ pub struct FleetResult {
     /// Mean request→subgraph-integrated time per fleet (paper: 6.24 s for
     /// 10×10), in unscaled (real) seconds.
     pub fleet_mean_s: f64,
+    /// Subgraph sizes of each fleet request.
     pub fleet_sizes: Vec<usize>,
     /// Static config: definitions, nodes, generate+parse+init seconds, RSS
     /// growth in kB.
     pub static_defs: usize,
+    /// Nodes in the static configuration.
     pub static_nodes: usize,
+    /// Static-config generate + parse + init seconds.
     pub static_init_s: f64,
+    /// Static-config RSS growth in kB.
     pub static_rss_kb: u64,
     /// Fluxion-side: graph size growth for the same resources, add time.
     pub dynamic_add_s: f64,
+    /// Graph-size growth from the dynamic add.
     pub dynamic_added_size: usize,
 }
 
 impl FleetResult {
+    /// Render the E6 fleet-vs-static comparison table.
     pub fn table(&self) -> String {
         format!(
             "E6 — EC2 Fleet dynamic binding vs static configuration\n\

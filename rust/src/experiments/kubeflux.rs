@@ -7,16 +7,24 @@ use crate::orchestrator::{Management, PodSpec, ReplicaSet};
 use crate::util::metrics::Recorder;
 
 #[derive(Debug, Clone)]
+/// E7 results: KubeFlux-style ReplicaSet scheduling measurements.
 pub struct KubefluxResult {
+    /// Vertices in the cluster graph after pod binding.
     pub graph_vertices: usize,
+    /// Edges in the cluster graph after pod binding.
     pub graph_edges: usize,
+    /// Mean MatchAllocate seconds per pod.
     pub ma_mean_s: f64,
+    /// Mean MatchGrow seconds per pod.
     pub mg_mean_s: f64,
+    /// Pods successfully bound to nodes.
     pub pods_bound: usize,
+    /// Raw per-operation latency samples.
     pub recorder: Recorder,
 }
 
 impl KubefluxResult {
+    /// Render the E7 summary table.
     pub fn table(&self) -> String {
         format!(
             "E7 — KubeFlux ReplicaSet scheduling (paper: MA 0.101810s, MG 0.100299s)\n\

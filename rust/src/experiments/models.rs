@@ -105,17 +105,24 @@ pub fn figure34_table(nested: &NestedResult, model: &MgModel) -> String {
 /// E9 result: component MAPEs on the held-out complex request (Table 5).
 #[derive(Debug, Clone)]
 pub struct ApplyResult {
+    /// Size of the held-out request's granted subgraph.
     pub subgraph_size: usize,
+    /// Match-component mean absolute percentage error.
     pub match_mape: f64,
+    /// Comms-component mean absolute percentage error.
     pub comms_mape: f64,
+    /// Add/update-component mean absolute percentage error.
     pub add_upd_mape: f64,
     /// Component-sum share of total measured time (paper: ≥98.2%).
     pub component_share: f64,
+    /// Eq. 6 predicted total seconds.
     pub predicted_total_s: f64,
+    /// Measured total seconds.
     pub observed_total_s: f64,
 }
 
 impl ApplyResult {
+    /// Render the Table 5 component-MAPE table.
     pub fn table(&self) -> String {
         format!(
             "E9 (Table 5) — Eq. 6 applied to the held-out GPU+memory request (size {})\n\

@@ -18,15 +18,22 @@ use crate::util::metrics::{current_rss_kb, Recorder};
 /// Results of the single-level experiment.
 #[derive(Debug, Clone)]
 pub struct SingleLevelResult {
+    /// Mean MatchAllocate match seconds.
     pub ma_match_mean_s: f64,
+    /// Mean MatchGrow local-match seconds.
     pub mg_match_mean_s: f64,
+    /// Mean MatchGrow AddSubgraph + UpdateMetadata seconds.
     pub mg_add_upd_mean_s: f64,
+    /// RSS after the MatchAllocate configuration, in kB.
     pub ma_rss_kb: u64,
+    /// RSS after the MatchGrow configuration, in kB.
     pub mg_rss_kb: u64,
+    /// Raw per-operation latency samples.
     pub recorder: Recorder,
 }
 
 impl SingleLevelResult {
+    /// Render the E1 summary table.
     pub fn table(&self) -> String {
         format!(
             "E1 single-level overhead (paper: MA 0.002871s, MG 0.002883s, add/upd 0.005592s)\n\
@@ -46,6 +53,7 @@ impl SingleLevelResult {
     }
 }
 
+/// Run experiment E1: single-level MA vs MG overhead (paper §5.1).
 pub fn run(cfg: &ExpConfig) -> SingleLevelResult {
     let mut rec = Recorder::new();
     let t7 = table1_jobspec("T7");

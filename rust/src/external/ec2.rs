@@ -29,9 +29,13 @@ use crate::util::rng::Rng;
 /// One EC2 instance type.
 #[derive(Debug, Clone, PartialEq)]
 pub struct InstanceType {
+    /// API name, e.g. `t2.xlarge`.
     pub name: &'static str,
+    /// Virtual CPUs.
     pub vcpus: u64,
+    /// Memory in GiB.
     pub mem_gib: u64,
+    /// Attached GPUs.
     pub gpus: u64,
     /// On-demand price in tenths of a cent per hour (integer for exact
     /// comparisons).
@@ -124,6 +128,7 @@ pub struct Ec2SimConfig {
     /// Multiplier on simulated provider latencies. 1.0 = realistic seconds
     /// (Fig 2 scale); tests/benches use ~1e-3.
     pub time_scale: f64,
+    /// RNG seed for latency draws and zone placement.
     pub seed: u64,
     /// Containment path the cloud subgraph attaches beneath (the
     /// requester's cluster root).
@@ -166,14 +171,19 @@ pub fn availability_zones() -> Vec<String> {
 /// A created (simulated) instance.
 #[derive(Debug, Clone)]
 pub struct Ec2Instance {
+    /// Instance id, e.g. `i-0000000003`.
     pub id: String,
+    /// The catalog type it was created as.
     pub itype: InstanceType,
+    /// Availability zone it was placed in.
     pub zone: String,
 }
 
 /// The simulated EC2 provider.
 pub struct Ec2Provider {
+    /// Simulator configuration.
     pub cfg: Ec2SimConfig,
+    /// Instance-type selection strategy (native or XLA-backed).
     pub selector: Box<dyn InstanceSelector>,
     zones: Vec<String>,
     rng: Rng,
@@ -188,12 +198,16 @@ pub struct Ec2Provider {
 /// creation; JGF encoding ≈1.6%).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Phases {
+    /// Jobspec to provider-request mapping seconds.
     pub map_s: f64,
+    /// Simulated instance-creation seconds.
     pub create_s: f64,
+    /// Response to JGF encoding seconds.
     pub encode_s: f64,
 }
 
 impl Ec2Provider {
+    /// Build a provider with the native reference selector.
     pub fn new(cfg: Ec2SimConfig) -> Ec2Provider {
         let rng = Rng::new(cfg.seed);
         Ec2Provider {
@@ -208,11 +222,13 @@ impl Ec2Provider {
         }
     }
 
+    /// Swap in a different instance-type selector (e.g. the XLA one).
     pub fn with_selector(mut self, s: Box<dyn InstanceSelector>) -> Ec2Provider {
         self.selector = s;
         self
     }
 
+    /// Instances created and not yet released.
     pub fn live_instances(&self) -> &[Ec2Instance] {
         &self.live
     }

@@ -114,10 +114,12 @@ fn build_catalog() -> Vec<InstanceType> {
 /// An EC2 Fleet request: N instances drawn from an allowed type set.
 #[derive(Debug, Clone)]
 pub struct FleetRequest {
+    /// How many instances to acquire in total.
     pub total_instances: u64,
     /// Names of allowed instance types; empty = "any" (capped to
     /// [`MAX_FLEET_TYPES`], as the paper did with 300).
     pub allowed_types: Vec<String>,
+    /// On-demand (vs. spot) capacity.
     pub on_demand: bool,
     /// Minimum distinct availability zones to spread across (the kind of
     /// global constraint the paper notes LSF likely cannot enforce).
@@ -125,6 +127,7 @@ pub struct FleetRequest {
 }
 
 impl FleetRequest {
+    /// A request for `total` instances with no type/zone constraints.
     pub fn any(total: u64) -> FleetRequest {
         FleetRequest {
             total_instances: total,
@@ -138,7 +141,8 @@ impl FleetRequest {
 /// Outcome of a fleet placement decision (before instance creation).
 #[derive(Debug, Clone)]
 pub struct FleetPlan {
-    pub picks: Vec<(InstanceType, String)>, // (type, zone)
+    /// Chosen `(instance type, availability zone)` pairs, one per instance.
+    pub picks: Vec<(InstanceType, String)>,
 }
 
 /// Decide which instances a Fleet request yields. Deterministic given the

@@ -23,9 +23,12 @@ pub struct ExternalGrant {
     pub encode_s: f64,
 }
 
+/// Why an external-provider request failed.
 #[derive(Debug)]
 pub enum ProviderError {
+    /// The provider cannot satisfy the request (a well-formed "no").
     Unsatisfiable(String),
+    /// The provider's API itself failed.
     Api(String),
 }
 
@@ -58,6 +61,7 @@ impl std::error::Error for ProviderError {}
 /// An external resource provider. Implementations: [`crate::external::ec2`]
 /// (simulated AWS EC2 + EC2 Fleet).
 pub trait ExternalProvider: Send {
+    /// Human-readable provider name (for reports and errors).
     fn name(&self) -> &str;
 
     /// Translate a jobspec into provider calls, create the resources, and

@@ -16,6 +16,16 @@
 //!
 //! Transports model the paper's testbed: L1↔L0 crosses nodes (TCP with
 //! injected IPoIB-like latency); deeper pairs share a node (in-proc).
+//!
+//! §Concurrency: each level's instance lives inside a [`SchedService`] —
+//! the read/write-partitioned concurrent server. The RPC handler routes
+//! **read-only** ops ([`SchedOp::is_read_only`], i.e. `probe`) straight to
+//! the service's cached concurrent read path *without taking the node
+//! mutex*, so capacity queries are served in parallel with (and never
+//! blocked behind) a slow hierarchical `MatchGrow` holding the node lock.
+//! Mutating ops keep the per-node mutex: they interact with the node's
+//! grant/burst bookkeeping (`added_roots`, `cloud_grants`), which must
+//! stay consistent with the instance.
 
 pub mod report;
 
@@ -31,7 +41,7 @@ use crate::rpc::transport::{
     handler, Conn, InProcServer, Latency, TcpConn, TcpServer,
 };
 use crate::rpc::{Request, Response};
-use crate::sched::{PruneConfig, SchedInstance};
+use crate::sched::{PruneConfig, SchedInstance, SchedService};
 use crate::util::metrics::Timer;
 
 pub use report::{GrowReport, LevelTiming};
@@ -49,7 +59,9 @@ pub enum LinkKind {
 /// from its parent at boot, and the link to the parent.
 #[derive(Debug, Clone, Copy)]
 pub struct LevelSpec {
+    /// Full (2-socket × 16-core) nodes requested from the parent at boot.
     pub boot_nodes: u64,
+    /// Transport of the link to the parent.
     pub link: LinkKind,
 }
 
@@ -79,7 +91,11 @@ pub fn paper_levels(internode: Latency) -> Vec<LevelSpec> {
 /// Mutable state of one hierarchy node.
 struct NodeState {
     level: usize,
-    inst: SchedInstance,
+    /// The level's scheduler instance behind its concurrent serving layer.
+    /// Probes go through the service's cached read path (also reachable
+    /// WITHOUT the node mutex — see `node_handler`); mutations take its
+    /// write side.
+    inst: SchedService,
     /// Connection to the parent (None at L0).
     parent: Option<Box<dyn Conn>>,
     /// Parent-side job id representing THIS node's child instance: grants
@@ -117,47 +133,59 @@ impl NodeState {
     /// verbatim, so the leaf can still tell `provider_unsatisfiable` from a
     /// local `no_match` after any number of hops.
     fn match_grow(&mut self, spec: &JobSpec) -> Result<(Jgf, Vec<LevelTiming>), RpcError> {
-        // 1. local match attempt
-        let t = Timer::start();
-        let local = self.inst.match_only(spec);
-        let match_s = t.elapsed_secs();
-        match local {
-            Ok(m) => {
-                // matched locally: allocate to the child's job (or a fresh
-                // one at the top when no child asked — defensive default).
-                // Closed form: missing interior ancestors ride along so a
-                // below-node-level grant (T8) can attach anywhere downstream.
-                let subgraph = Jgf::from_selection_closed(&self.inst.graph, &m.selection);
-                let tu = Timer::start();
-                match self.child_job {
-                    Some(job) => {
-                        self.inst
-                            .allocs
-                            .grow(&mut self.inst.graph, &self.inst.prune, job, m.selection)
-                            .map_err(|e| RpcError::new(code::GROW_FAILED, e.to_string()))?;
+        let child_job = self.child_job;
+        // 1. local match attempt + allocation under one write lock (the
+        //    lock is scoped so the escalation path's parent RPC below runs
+        //    WITHOUT it — concurrent probes are served during the round
+        //    trip)
+        let local: Result<(Jgf, LevelTiming), (f64, usize)> = {
+            let mut guard = self.inst.write();
+            let inst = &mut *guard;
+            // timer starts AFTER the lock is held: match_s is the paper's
+            // match metric, not lock-contention wait behind probe traffic
+            let t = Timer::start();
+            let m = inst.match_only(spec);
+            let match_s = t.elapsed_secs();
+            match m {
+                Ok(m) => {
+                    // matched locally: allocate to the child's job (or a
+                    // fresh one at the top when no child asked — defensive
+                    // default). Closed form: missing interior ancestors
+                    // ride along so a below-node-level grant (T8) can
+                    // attach anywhere downstream.
+                    let subgraph = Jgf::from_selection_closed(&inst.graph, &m.selection);
+                    let tu = Timer::start();
+                    match child_job {
+                        Some(job) => {
+                            inst.allocs
+                                .grow(&mut inst.graph, &inst.prune, job, m.selection)
+                                .map_err(|e| RpcError::new(code::GROW_FAILED, e.to_string()))?;
+                        }
+                        None => {
+                            inst.allocs
+                                .allocate(&mut inst.graph, &inst.prune, m.selection)
+                                .map_err(|e| RpcError::new(code::GROW_FAILED, e.to_string()))?;
+                        }
                     }
-                    None => {
-                        self.inst
-                            .allocs
-                            .allocate(&mut self.inst.graph, &self.inst.prune, m.selection)
-                            .map_err(|e| RpcError::new(code::GROW_FAILED, e.to_string()))?;
-                    }
+                    let timing = LevelTiming {
+                        level: self.level,
+                        match_s,
+                        match_ok: true,
+                        comms_s: 0.0,
+                        add_upd_s: tu.elapsed_secs(),
+                        visited: m.visited,
+                    };
+                    Ok((subgraph, timing))
                 }
-                let upd_s = tu.elapsed_secs();
-                let timing = LevelTiming {
-                    level: self.level,
-                    match_s,
-                    match_ok: true,
-                    comms_s: 0.0,
-                    add_upd_s: upd_s,
-                    visited: m.visited,
-                };
-                Ok((subgraph, vec![timing]))
+                Err(fail) => {
+                    let crate::sched::MatchFail::NoMatch { visited } = fail;
+                    Err((match_s, visited))
+                }
             }
-            Err(fail) => {
-                let visited = match &fail {
-                    crate::sched::MatchFail::NoMatch { visited } => *visited,
-                };
+        };
+        match local {
+            Ok((subgraph, timing)) => Ok((subgraph, vec![timing])),
+            Err((match_s, visited)) => {
                 // 2. escalate: a specialized provider at this node wins
                 //    over the parent (per-user specialization, §3);
                 //    otherwise ascend; the top level falls back to its
@@ -218,13 +246,21 @@ impl NodeState {
                     }
                 };
                 // 3. top-down: splice the grant into our graph, charge it to
-                //    the child's job (it passes through to the requester)
-                let ta = Timer::start();
-                let report = self
-                    .inst
-                    .accept_grant(&jgf, self.child_job)
-                    .map_err(|e| RpcError::new(code::GROW_FAILED, e.to_string()))?;
-                let add_upd_s = ta.elapsed_secs();
+                //    the child's job (it passes through to the requester).
+                //    Re-acquires the write side; a failed splice may still
+                //    have mutated the graph, which the epoch records — the
+                //    service's probe cache can never serve pre-splice
+                //    answers either way.
+                let (report, add_upd_s) = {
+                    let mut guard = self.inst.write();
+                    // timer starts after the lock: add_upd_s measures the
+                    // splice, not contention with concurrent probes
+                    let ta = Timer::start();
+                    let r = guard
+                        .accept_grant(&jgf, child_job)
+                        .map_err(|e| RpcError::new(code::GROW_FAILED, e.to_string()))?;
+                    (r, ta.elapsed_secs())
+                };
                 for r in attach_roots(&jgf) {
                     self.added_roots.insert(r);
                 }
@@ -260,7 +296,7 @@ impl NodeState {
             .iter()
             .position(|(roots, _)| roots.split(',').any(|r| r == path))
         {
-            let removed = self.inst.release_subtree(path).map_err(shrink_err)?;
+            let removed = self.inst.write().release_subtree(path).map_err(shrink_err)?;
             self.added_roots.remove(path);
             let (_, ids) = self.cloud_grants.remove(pos);
             if let Some(provider) = &mut self.external {
@@ -273,7 +309,7 @@ impl NodeState {
         if self.added_roots.remove(path) {
             // this level spliced the subgraph in dynamically: delete it and
             // keep ascending (bottom-up subtractive transformation)
-            let removed = self.inst.release_subtree(path).map_err(shrink_err)?;
+            let removed = self.inst.write().release_subtree(path).map_err(shrink_err)?;
             if let Some(conn) = &mut self.parent {
                 let resp = conn
                     .call(&Request::new(
@@ -302,7 +338,7 @@ impl NodeState {
         } else {
             // owner level: the vertices are part of this graph's physical
             // inventory — free the child's allocation, keep the vertices
-            self.inst.free_allocations_in(path).map_err(shrink_err)
+            self.inst.write().free_allocations_in(path).map_err(shrink_err)
         }
     }
 }
@@ -333,6 +369,11 @@ enum ServerHandle {
 /// between them are real RPC transports per their [`LevelSpec`].
 pub struct Hierarchy {
     nodes: Vec<Arc<Mutex<NodeState>>>,
+    /// Each level's `SchedService` handle, cloned out of the node at
+    /// build time so read-only traffic ([`Hierarchy::probe_at`]) never
+    /// touches the per-node mutex — the same property the transport
+    /// handlers get via `node_handler`.
+    services: Vec<SchedService>,
     servers: Vec<ServerHandle>,
 }
 
@@ -352,10 +393,14 @@ impl Hierarchy {
         external: Option<Box<dyn ExternalProvider>>,
     ) -> Result<Hierarchy, String> {
         let mut nodes = Vec::new();
+        let mut services = Vec::new();
         let mut servers = Vec::new();
+        let root_service =
+            SchedService::new(SchedInstance::new(root_graph, PruneConfig::default()));
+        services.push(root_service.clone());
         let root = Arc::new(Mutex::new(NodeState {
             level: 0,
-            inst: SchedInstance::new(root_graph, PruneConfig::default()),
+            inst: root_service,
             parent: None,
             child_job: None,
             own_job: None,
@@ -372,25 +417,27 @@ impl Hierarchy {
             // 1. boot allocation from the parent (direct call: boot is not
             //    part of any measured path)
             let boot_spec = JobSpec::nodes_sockets_cores(spec.boot_nodes, 2, 16);
-            let grant = {
+            let (grant, parent_service) = {
                 let mut p = parent.lock().unwrap();
-                let out = p.inst.match_allocate(&boot_spec).map_err(|e| {
+                let out = p.inst.write().match_allocate(&boot_spec).map_err(|e| {
                     format!("level {level} boot: parent cannot grant {} nodes: {e}", spec.boot_nodes)
                 })?;
                 p.child_job = Some(out.job);
-                out.subgraph
+                (out.subgraph, p.inst.clone())
             };
-            // 2. serve the parent over the requested transport
+            // 2. serve the parent over the requested transport (the handler
+            //    gets its own service handle so read-only ops skip the
+            //    node mutex)
             let conn: Box<dyn Conn> = match spec.link {
                 LinkKind::InProc => {
-                    let h = node_handler(parent.clone());
+                    let h = node_handler(parent.clone(), parent_service);
                     let server = InProcServer::spawn(h);
                     let conn = server.connect();
                     servers.push(ServerHandle::InProc(server));
                     Box::new(conn)
                 }
                 LinkKind::Tcp(latency) => {
-                    let h = node_handler(parent.clone());
+                    let h = node_handler(parent.clone(), parent_service);
                     let server = TcpServer::spawn(h).map_err(|e| e.to_string())?;
                     let conn =
                         TcpConn::connect(server.addr, latency).map_err(|e| e.to_string())?;
@@ -399,8 +446,11 @@ impl Hierarchy {
                 }
             };
             // 3. boot the child instance from the grant
-            let inst =
-                SchedInstance::from_jgf(&grant, PruneConfig::default()).map_err(|e| e.to_string())?;
+            let inst = SchedService::new(
+                SchedInstance::from_jgf(&grant, PruneConfig::default())
+                    .map_err(|e| e.to_string())?,
+            );
+            services.push(inst.clone());
             nodes.push(Arc::new(Mutex::new(NodeState {
                 level,
                 inst,
@@ -414,7 +464,11 @@ impl Hierarchy {
             })));
         }
 
-        let h = Hierarchy { nodes, servers };
+        let h = Hierarchy {
+            nodes,
+            services,
+            servers,
+        };
         h.saturate_and_snapshot()?;
         Ok(h)
     }
@@ -434,7 +488,7 @@ impl Hierarchy {
                 {
                     loop {
                         let spec = JobSpec::nodes_sockets_cores(nodes, sockets, cores);
-                        match n.inst.match_allocate(&spec) {
+                        match n.inst.write().match_allocate(&spec) {
                             Ok(out) => {
                                 if i == leaf_idx && n.own_job.is_none() {
                                     n.own_job = Some(out.job);
@@ -445,7 +499,11 @@ impl Hierarchy {
                     }
                 }
             }
-            n.snapshot = Some((n.inst.graph.clone(), n.inst.allocs.clone()));
+            let snapshot = {
+                let inst = n.inst.read();
+                (inst.graph.clone(), inst.allocs.clone())
+            };
+            n.snapshot = Some(snapshot);
         }
         Ok(())
     }
@@ -487,13 +545,18 @@ impl Hierarchy {
     }
 
     /// Restore every level to its post-boot snapshot (the "helper script
-    /// reinitializes the resource graphs at each level" step).
+    /// reinitializes the resource graphs at each level" step). Goes
+    /// through [`ResourceGraph::restore_from`] so the graph epoch keeps
+    /// moving forward — probe results cached against the pre-reset
+    /// timeline can never be served against the restored graph.
     pub fn reset(&self) {
         for node in &self.nodes {
-            let mut n = node.lock().unwrap();
+            let n = node.lock().unwrap();
             if let Some((g, a)) = n.snapshot.clone() {
-                n.inst.graph = g;
-                n.inst.allocs = a;
+                let mut guard = n.inst.write();
+                let inst = &mut *guard;
+                inst.graph.restore_from(&g);
+                inst.allocs = a;
             }
         }
     }
@@ -505,15 +568,24 @@ impl Hierarchy {
 
     /// Graph size (vertices + edges) at a level.
     pub fn graph_size(&self, level: usize) -> usize {
-        self.nodes[level].lock().unwrap().inst.graph.size()
+        self.nodes[level].lock().unwrap().inst.read().graph.size()
     }
 
     /// Run invariant checks on every level (tests / failure injection).
     pub fn check_all(&self) -> Result<(), String> {
         for node in &self.nodes {
-            node.lock().unwrap().inst.check()?;
+            node.lock().unwrap().inst.read().check()?;
         }
         Ok(())
+    }
+
+    /// Serve a feasibility probe at a level through its concurrent cached
+    /// read path — what a remote `probe` op hits, minus the transport.
+    /// Uses the service handle captured at build time, NOT the per-node
+    /// mutex, so it stays responsive while a multi-level `MatchGrow`
+    /// holds that lock for its whole round trip.
+    pub fn probe_at(&self, level: usize, spec: &JobSpec) -> SchedReply {
+        self.services[level].probe(spec)
     }
 
     /// Stop all servers. Called on drop as well.
@@ -543,8 +615,23 @@ impl Drop for Hierarchy {
 }
 
 /// RPC handler dispatching to a node's state via the typed serve loop.
-fn node_handler(node: Arc<Mutex<NodeState>>) -> crate::rpc::transport::Handler {
+///
+/// Read-only ops never touch the per-node mutex: they are answered by the
+/// node's [`SchedService`] (cached, concurrent read path) from a handle
+/// captured at build time, so probes stay responsive while a hierarchical
+/// `MatchGrow`/`ShrinkReturn` holds the node lock for its whole multi-level
+/// round trip.
+fn node_handler(
+    node: Arc<Mutex<NodeState>>,
+    service: SchedService,
+) -> crate::rpc::transport::Handler {
     handler(move |req: Request| {
+        if req.op.is_read_only() {
+            return Response {
+                id: req.id,
+                reply: service.apply(&req.op),
+            };
+        }
         let mut n = node.lock().expect("node poisoned");
         serve(&mut n, req)
     })
@@ -552,13 +639,15 @@ fn node_handler(node: Arc<Mutex<NodeState>>) -> crate::rpc::transport::Handler {
 
 /// One exhaustive dispatch over the typed protocol: the hierarchical ops
 /// (`MatchGrow`, `ShrinkReturn`) get the level-aware treatment — escalate /
-/// propagate — and the read-only `Probe` delegates to
-/// [`SchedInstance::apply`]. Instance-MUTATING ops are refused: they would
-/// bypass this node's `added_roots`/`cloud_grants` bookkeeping (e.g. a
-/// remote `RemoveSubgraph` of a descended grant would desync a later
-/// hierarchical shrink and leak provider instances), so instance
-/// administration stays local to the owning level. Deliberately NO
-/// wildcard arm: adding a [`SchedOp`] variant is a compile error here
+/// propagate — and the read-only `Probe` delegates to the node's
+/// [`SchedService`] concurrent cached path (the transport handler normally
+/// short-circuits it before this point; the arm keeps direct callers and
+/// the exhaustiveness guarantee honest). Instance-MUTATING ops are
+/// refused: they would bypass this node's `added_roots`/`cloud_grants`
+/// bookkeeping (e.g. a remote `RemoveSubgraph` of a descended grant would
+/// desync a later hierarchical shrink and leak provider instances), so
+/// instance administration stays local to the owning level. Deliberately
+/// NO wildcard arm: adding a [`SchedOp`] variant is a compile error here
 /// until it is served.
 fn serve(n: &mut NodeState, req: Request) -> Response {
     match &req.op {
@@ -671,6 +760,49 @@ mod tests {
         assert!(h.grow_from_leaf(&table1_jobspec("T1")).is_ok());
         assert!(h.grow_from_leaf(&table1_jobspec("T2")).is_ok()); // 32 more
         assert!(h.grow_from_leaf(&table1_jobspec("T1")).is_err()); // 64 > 24
+        h.check_all().unwrap();
+        h.shutdown();
+    }
+
+    /// Probes hit the concurrent cached read path at every level and stay
+    /// consistent across a grow (the epoch-keyed cache must never serve a
+    /// pre-grow answer after the grant splices in).
+    #[test]
+    fn probes_reflect_growth_through_cached_path() {
+        let h = paper_hierarchy();
+        let leaf = h.depth() - 1;
+        // leaf is saturated at boot: a 1-node probe fails (and is cached)
+        let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+        let before = h.probe_at(leaf, &spec);
+        assert!(before.is_error(), "{before:?}");
+        // repeat: identical answer (serveable from cache within the epoch)
+        assert_eq!(h.probe_at(leaf, &spec), before);
+        // grow a node into the leaf, then the same probe must flip: the
+        // grant's vertices arrive allocated to the leaf's own job, but the
+        // graph grew — a stale cached reply would still say "error" with
+        // the old visited count
+        let report = h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
+        assert_eq!(report.subgraph_size, 70);
+        let after = h.probe_at(leaf, &spec);
+        assert_ne!(after, before, "probe must observe the epoch change");
+        h.check_all().unwrap();
+        h.shutdown();
+    }
+
+    #[test]
+    fn reset_invalidates_cached_probes() {
+        let h = paper_hierarchy();
+        let leaf = h.depth() - 1;
+        let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+        h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
+        let grown = h.probe_at(leaf, &spec);
+        h.reset();
+        // restore_from moved the epoch forward: the post-reset probe is
+        // recomputed against the restored graph, not served from the
+        // post-grow cache entry
+        let restored = h.probe_at(leaf, &spec);
+        assert_ne!(restored, grown);
+        assert!(restored.is_error(), "leaf is saturated again: {restored:?}");
         h.check_all().unwrap();
         h.shutdown();
     }

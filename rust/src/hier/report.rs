@@ -13,7 +13,9 @@ pub use crate::rpc::proto::{levels_from_json, levels_to_json, LevelTiming};
 /// top (L0) to bottom (leaf).
 #[derive(Debug, Clone)]
 pub struct GrowReport {
+    /// Granted subgraph size (vertices + edges).
     pub subgraph_size: usize,
+    /// Per-level timing entries, top (L0) first.
     pub levels: Vec<LevelTiming>,
     /// Wall-clock total at the leaf.
     pub total_s: f64,
@@ -29,6 +31,7 @@ impl GrowReport {
         self.levels.iter().map(LevelTiming::total).sum()
     }
 
+    /// The timing entry of one hierarchy level, if it participated.
     pub fn timing_for(&self, level: usize) -> Option<&LevelTiming> {
         self.levels.iter().find(|t| t.level == level)
     }

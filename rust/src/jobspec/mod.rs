@@ -22,6 +22,7 @@ pub struct ResourceReq {
     /// Requested type name (kept as a string: requests may name types the
     /// local graph has never seen — dynamic heterogeneity).
     pub rtype: String,
+    /// How many vertices of this type to select per parent candidate.
     pub count: u64,
     /// Exclusive requests claim the matched vertex; non-exclusive requests
     /// use it only as traversal scope (Fluxion's exclusivity flag — how
@@ -34,6 +35,7 @@ pub struct ResourceReq {
 }
 
 impl ResourceReq {
+    /// An exclusive request for `count` vertices of `rtype`.
     pub fn new(rtype: &str, count: u64) -> ResourceReq {
         ResourceReq {
             rtype: rtype.to_string(),
@@ -50,16 +52,19 @@ impl ResourceReq {
         self
     }
 
+    /// Nest a requirement under each matched vertex (builder).
     pub fn with_child(mut self, child: ResourceReq) -> ResourceReq {
         self.with.push(child);
         self
     }
 
+    /// Attach an attribute constraint (builder).
     pub fn with_attr(mut self, key: &str, val: &str) -> ResourceReq {
         self.attrs.push((key.to_string(), val.to_string()));
         self
     }
 
+    /// Value of an attribute constraint, if present.
     pub fn attr(&self, key: &str) -> Option<&str> {
         self.attrs
             .iter()
@@ -79,13 +84,16 @@ impl ResourceReq {
 /// A complete job request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JobSpec {
+    /// Jobspec schema version (canonical jobspecs use 1).
     pub version: u64,
+    /// Top-level resource requests.
     pub resources: Vec<ResourceReq>,
     /// System-level attributes (duration, user, provider selection...).
     pub attrs: Vec<(String, String)>,
 }
 
 impl JobSpec {
+    /// A version-1 jobspec over the given requests.
     pub fn new(resources: Vec<ResourceReq>) -> JobSpec {
         JobSpec {
             version: 1,
@@ -94,11 +102,13 @@ impl JobSpec {
         }
     }
 
+    /// Attach a system-level attribute (builder).
     pub fn with_attr(mut self, key: &str, val: &str) -> JobSpec {
         self.attrs.push((key.to_string(), val.to_string()));
         self
     }
 
+    /// Value of a system-level attribute, if present.
     pub fn attr(&self, key: &str) -> Option<&str> {
         self.attrs
             .iter()
@@ -138,6 +148,7 @@ impl JobSpec {
         self.resources.iter().map(|r| walk(r, rtype)).sum()
     }
 
+    /// Canonical jobspec document (defaults omitted — see the module doc).
     pub fn to_json(&self) -> Json {
         fn req_to_json(r: &ResourceReq) -> Json {
             let mut o = Json::obj()
@@ -177,6 +188,7 @@ impl JobSpec {
         doc
     }
 
+    /// Decode a jobspec document.
     pub fn from_json(doc: &Json) -> Result<JobSpec, JsonError> {
         fn req_from_json(o: &Json) -> Result<ResourceReq, JsonError> {
             let mut r = ResourceReq::new(o.str_field("type")?, o.u64_field("count")?);
@@ -219,10 +231,12 @@ impl JobSpec {
         Ok(spec)
     }
 
+    /// Compact wire text of the jobspec.
     pub fn dump(&self) -> String {
         self.to_json().dump()
     }
 
+    /// Parse jobspec wire text.
     pub fn parse(text: &str) -> Result<JobSpec, JsonError> {
         JobSpec::from_json(&Json::parse(text)?)
     }

@@ -6,6 +6,28 @@
 //! (`MatchGrow`, Algorithm 1), external-provider bursting (EC2/Fleet), and a
 //! Kubernetes-orchestrator integration (KubeFlux).
 //!
+//! ## Layer map (see `ARCHITECTURE.md` at the repo root for the full tour)
+//!
+//! - [`resource`] — the dynamic resource graph: interned-type vertices, O(1)
+//!   path localization, pruning aggregates, a monotonic mutation **epoch**,
+//!   and the JGF wire format subgraphs travel in.
+//! - [`jobspec`] — the hierarchical resource-request specification.
+//! - [`sched`] — the scheduler core: pruned match traversal
+//!   ([`sched::matcher`]), allocation bookkeeping ([`sched::alloc`]),
+//!   grow/shrink transformations ([`sched::grow`]), the single-threaded
+//!   [`sched::SchedInstance`], and the concurrent serving layer
+//!   [`sched::SchedService`] (read/write-partitioned instance, per-worker
+//!   match scratches, epoch-keyed probe cache).
+//! - [`rpc`] — the typed protocol ([`rpc::proto`]: `SchedOp`/`SchedReply`),
+//!   framing, and transports (in-proc channels, TCP with injected latency).
+//! - [`hier`] — fully hierarchical scheduling: chains of instances speaking
+//!   the protocol, Algorithm 1's bottom-up/top-down `MatchGrow`, shrink
+//!   propagation, external-provider escalation.
+//! - [`external`], [`orchestrator`], [`workload`], [`perfmodel`],
+//!   [`experiments`] — cloud providers, the KubeFlux-style orchestrator
+//!   model, workload generators, the §6 performance model, and the paper's
+//!   experiment drivers.
+//!
 //! Architecture (three layers, Python never on the request path):
 //! - **L3 (this crate)** — the coordinator: resource graph, matcher,
 //!   hierarchy, RPC, external providers, baselines, experiments.
@@ -15,6 +37,11 @@
 //!
 //! The rust side loads the AOT artifacts through [`runtime`] (PJRT CPU
 //! client) and drives them from scheduling decisions.
+
+// Documentation is part of this crate's public surface: every public item
+// must carry rustdoc, and `scripts/verify.sh` builds the docs with
+// warnings-as-errors.
+#![warn(missing_docs)]
 
 pub mod util;
 

@@ -24,8 +24,11 @@ use crate::util::metrics::Timer;
 /// Fluxion jobspec).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PodSpec {
+    /// CPU request in millicores.
     pub cpu_milli: u64,
+    /// Memory request in MiB.
     pub mem_mib: u64,
+    /// GPU count.
     pub gpus: u64,
 }
 
@@ -48,23 +51,31 @@ impl PodSpec {
 /// A ReplicaSet: n identical pods.
 #[derive(Debug, Clone, Copy)]
 pub struct ReplicaSet {
+    /// Number of identical pods.
     pub replicas: usize,
+    /// The pod template.
     pub pod: PodSpec,
 }
 
 /// A pod bound to a node.
 #[derive(Debug, Clone)]
 pub struct Binding {
+    /// Index of the pod within its ReplicaSet.
     pub pod_index: usize,
+    /// Containment path of the node it landed on.
     pub node_path: String,
+    /// The allocation backing the binding.
     pub job: JobId,
+    /// Seconds the binding query took.
     pub seconds: f64,
 }
 
 /// One FluxRQ daemon: owns a partition of the cluster as its resource graph
 /// and answers binding queries with MatchAllocate / MatchGrow.
 pub struct FluxRq {
+    /// Partition name, e.g. `rq0`.
     pub name: String,
+    /// The partition's scheduler instance.
     pub inst: SchedInstance,
 }
 
@@ -131,6 +142,7 @@ fn node_path_of(subgraph: &crate::resource::jgf::Jgf) -> Option<String> {
 /// routes binding requests (round-robin, like the KubeFlux prototype's
 /// partition dispatch).
 pub struct Management {
+    /// The FluxRQ partitions, in round-robin order.
     pub rqs: Vec<FluxRq>,
     next: usize,
 }
@@ -217,6 +229,7 @@ impl Management {
         Ok((first, grows))
     }
 
+    /// Combined graph size (vertices + edges) across all partitions.
     pub fn total_graph_size(&self) -> usize {
         self.rqs.iter().map(|r| r.inst.graph.size()).sum()
     }

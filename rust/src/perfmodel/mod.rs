@@ -29,6 +29,7 @@ impl FitBackend {
         }
     }
 
+    /// Backend label for reports ("xla" or "native").
     pub fn name(&self) -> &'static str {
         match self {
             FitBackend::Xla(_) => "xla",
@@ -36,6 +37,8 @@ impl FitBackend {
         }
     }
 
+    /// Ordinary least squares through this backend (XLA falls back to
+    /// native on error or oversized samples).
     pub fn fit(&self, xs: &[f64], ys: &[f64]) -> LinFit {
         match self {
             FitBackend::Xla(reg) if xs.len() <= crate::runtime::linreg::NSAMP => {
@@ -49,8 +52,11 @@ impl FitBackend {
 /// One fitted component model plus its five-fold CV metrics — a Table 4 row.
 #[derive(Debug, Clone)]
 pub struct ComponentModel {
+    /// Component name (match / comms / add_upd).
     pub name: String,
+    /// The fitted line.
     pub fit: LinFit,
+    /// Five-fold cross-validation metrics.
     pub cv: CvResult,
 }
 
@@ -77,6 +83,7 @@ impl ComponentModel {
         }
     }
 
+    /// Predict the component cost at `n` high-level resources.
     pub fn predict(&self, n: f64) -> f64 {
         self.fit.predict(n)
     }

@@ -17,14 +17,17 @@ pub struct UidGen {
 }
 
 impl UidGen {
+    /// Start ids at 0.
     pub fn new() -> UidGen {
         UidGen { next: 0 }
     }
 
+    /// Start ids at `next` (disjoint ranges for independent graphs).
     pub fn starting_at(next: u64) -> UidGen {
         UidGen { next }
     }
 
+    /// Mint the next unique id.
     pub fn next(&mut self) -> u64 {
         let v = self.next;
         self.next += 1;
@@ -36,11 +39,17 @@ impl UidGen {
 /// optional per-socket GPUs and per-node memory (GiB vertices).
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
+    /// Cluster basename (root path is `/<name>0`).
     pub name: String,
+    /// Node count.
     pub nodes: usize,
+    /// Sockets per node.
     pub sockets_per_node: usize,
+    /// Cores per socket.
     pub cores_per_socket: usize,
+    /// GPUs per socket (0 for CPU-only clusters).
     pub gpus_per_socket: usize,
+    /// Memory vertices (GiB each) per node.
     pub mem_gib_per_node: usize,
     /// First node index (so different levels get distinct node names when
     /// carved from one cluster).
@@ -48,6 +57,7 @@ pub struct ClusterSpec {
 }
 
 impl ClusterSpec {
+    /// A CPU-only homogeneous cluster spec.
     pub fn new(name: &str, nodes: usize, sockets: usize, cores: usize) -> ClusterSpec {
         ClusterSpec {
             name: name.to_string(),
@@ -60,16 +70,19 @@ impl ClusterSpec {
         }
     }
 
+    /// Add per-socket GPUs (builder).
     pub fn with_gpus(mut self, gpus_per_socket: usize) -> ClusterSpec {
         self.gpus_per_socket = gpus_per_socket;
         self
     }
 
+    /// Add per-node memory vertices (builder).
     pub fn with_memory(mut self, mem_gib_per_node: usize) -> ClusterSpec {
         self.mem_gib_per_node = mem_gib_per_node;
         self
     }
 
+    /// Offset node naming (builder; see the `node_base` field).
     pub fn with_node_base(mut self, base: usize) -> ClusterSpec {
         self.node_base = base;
         self
@@ -89,6 +102,7 @@ impl ClusterSpec {
                 + self.mem_gib_per_node)
     }
 
+    /// Materialize the cluster graph.
     pub fn build(&self, uids: &mut UidGen) -> ResourceGraph {
         let mut g = ResourceGraph::new();
         let cluster_path = format!("/{}0", self.name);

@@ -21,6 +21,20 @@
 //! dynamic `Other` type names are stored once per graph. Vertices also cache
 //! their containment `depth` (maintained on `add_child`) so topological
 //! ordering of a selection never re-derives depth from the path string.
+//!
+//! §Concurrency: the graph carries a monotonic **epoch**
+//! ([`ResourceGraph::epoch`]) that every mutation bumps — structural edits
+//! (`add_root`,
+//! `add_child`, `remove_leaf`) and any `vertex_mut`/`types_mut` access
+//! (which is how allocation marks and pruning aggregates change). Read-only
+//! results computed against the graph (e.g. the scheduler's probe cache,
+//! `sched::service`) are keyed by the epoch they were computed at and are
+//! valid exactly while the epoch is unchanged. The epoch is deliberately
+//! conservative: it may advance more than once per logical operation, which
+//! costs a cache entry but never serves a stale answer. Restoring a
+//! snapshot must go through [`ResourceGraph::restore_from`], which moves
+//! the epoch *forward* past both timelines so a rewound counter can never
+//! alias two different graph states.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -29,11 +43,17 @@ use crate::resource::types::{ResourceType, TypeId, TypeTable};
 
 /// Stable handle to a vertex. Indexes into the graph's vertex arena.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct VertexId(pub u32);
+pub struct VertexId(
+    /// Raw arena index (always `< ResourceGraph::arena_len()`).
+    pub u32,
+);
 
 /// Job identifier for allocation metadata.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
-pub struct JobId(pub u64);
+pub struct JobId(
+    /// Raw id as minted by `AllocTable::fresh_job_id` (or a remote peer).
+    pub u64,
+);
 
 /// Allocation state of a vertex.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -43,6 +63,7 @@ pub struct AllocInfo {
 }
 
 impl AllocInfo {
+    /// Whether any job currently holds this vertex.
     pub fn is_allocated(&self) -> bool {
         !self.jobs.is_empty()
     }
@@ -53,13 +74,21 @@ impl AllocInfo {
 /// [`make_vertex`] returns one of these; `add_root`/`add_child` consume it.
 #[derive(Debug, Clone)]
 pub struct VertexProto {
+    /// Resource type (interned by the graph on insertion).
     pub rtype: ResourceType,
+    /// Basename, e.g. `core`; instance name is `basename + id`.
     pub basename: String,
+    /// Sibling index, e.g. the `3` in `core3`.
     pub id: u64,
+    /// Globally unique id (JGF `uniq_id`).
     pub uniq_id: u64,
+    /// MPI-style rank hint; -1 when not applicable.
     pub rank: i64,
+    /// Capacity units this vertex provides (1 for discrete resources).
     pub size: u64,
+    /// Unit label for `size` (empty for discrete resources).
     pub unit: String,
+    /// Containment path, e.g. `/cluster0/rack0/node3/socket0/core7`.
     pub path: String,
 }
 
@@ -79,6 +108,7 @@ pub struct Vertex {
     pub rank: i64,
     /// Capacity units this vertex provides (1 for discrete resources).
     pub size: u64,
+    /// Unit label for `size` (empty for discrete resources).
     pub unit: String,
     /// Containment path, e.g. `/cluster0/rack0/node3/socket0/core7`.
     pub path: String,
@@ -86,6 +116,7 @@ pub struct Vertex {
     /// has depth 1, matching the path's `'/'` count, so sort keys are
     /// identical to the path-derived ones they replace.
     pub depth: u32,
+    /// Allocation state: which jobs hold this vertex.
     pub alloc: AllocInfo,
     /// Pruning aggregate: free units in the subtree rooted here, one slot
     /// per tracked type of the active `PruneConfig` (dense, slot-indexed —
@@ -96,6 +127,7 @@ pub struct Vertex {
 }
 
 impl Vertex {
+    /// Instance name: `basename + id`, e.g. `core3`.
     pub fn name(&self) -> String {
         format!("{}{}", self.basename, self.id)
     }
@@ -131,14 +163,25 @@ pub struct ResourceGraph {
     root: Option<VertexId>,
     live_vertices: usize,
     live_edges: usize,
+    /// Monotonic mutation counter (see the module §Concurrency notes).
+    /// Cloning copies it, so a snapshot remembers the epoch it was taken
+    /// at; [`ResourceGraph::restore_from`] is the only sanctioned way to
+    /// swap a snapshot back in.
+    epoch: u64,
 }
 
+/// Errors returned by the graph's structural mutations.
 #[derive(Debug)]
 pub enum GraphError {
+    /// A vertex with the same containment path already exists.
     DuplicatePath(String),
+    /// No vertex at the given containment path.
     NoSuchPath(String),
+    /// The referenced vertex has been tombstoned.
     Dead(VertexId),
+    /// `add_root` on a graph that already has a root.
     RootExists,
+    /// `remove_leaf` on a vertex that still has live children.
     HasChildren(String),
 }
 
@@ -159,21 +202,30 @@ impl fmt::Display for GraphError {
 impl std::error::Error for GraphError {}
 
 impl ResourceGraph {
+    /// An empty graph (no root, epoch 0).
     pub fn new() -> ResourceGraph {
         ResourceGraph::default()
     }
 
     // ---- accessors -------------------------------------------------------
 
+    /// The root vertex, if the graph has one.
     pub fn root(&self) -> Option<VertexId> {
         self.root
     }
 
+    /// Immutable access to a vertex (live or tombstoned).
     pub fn vertex(&self, id: VertexId) -> &Vertex {
         &self.vertices[id.0 as usize]
     }
 
+    /// Mutable access to a vertex. Bumps the [epoch](ResourceGraph::epoch):
+    /// callers take `&mut Vertex` exactly to change scheduling-relevant
+    /// state (allocation marks, pruning aggregates), so any cached
+    /// read-only result must be invalidated. Conservative by design — a
+    /// no-op write costs a cache entry, never correctness.
     pub fn vertex_mut(&mut self, id: VertexId) -> &mut Vertex {
+        self.epoch += 1;
         &mut self.vertices[id.0 as usize]
     }
 
@@ -182,8 +234,31 @@ impl ResourceGraph {
         &self.types
     }
 
+    /// Mutable access to the intern table (bumps the epoch — interning is
+    /// only reachable from mutating operations).
     pub fn types_mut(&mut self) -> &mut TypeTable {
+        self.epoch += 1;
         &mut self.types
+    }
+
+    /// Monotonic mutation counter: advances on every mutation (structural
+    /// edits, allocation marks, aggregate updates). Two reads of the graph
+    /// separated by an unchanged epoch are guaranteed to observe identical
+    /// scheduling state — the invariant the scheduler's epoch-keyed probe
+    /// cache ([`crate::sched::SchedService`]) is built on.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Replace this graph's contents with a snapshot while keeping the
+    /// epoch moving **forward**: the restored graph's epoch is one past the
+    /// maximum of both timelines. A plain `*g = snapshot.clone()` would
+    /// rewind the counter and let a later mutation re-reach an epoch value
+    /// that cached results were keyed under — with different state.
+    pub fn restore_from(&mut self, snapshot: &ResourceGraph) {
+        let epoch = self.epoch.max(snapshot.epoch) + 1;
+        *self = snapshot.clone();
+        self.epoch = epoch;
     }
 
     /// Resolved resource type of a vertex.
@@ -196,14 +271,17 @@ impl ResourceGraph {
         self.types.name(self.vertex(id).tid)
     }
 
+    /// Containment parent of a vertex (`None` at the root).
     pub fn parent_of(&self, id: VertexId) -> Option<VertexId> {
         self.parent[id.0 as usize]
     }
 
+    /// Containment children of a vertex, in insertion order.
     pub fn children_of(&self, id: VertexId) -> &[VertexId] {
         &self.children[id.0 as usize]
     }
 
+    /// O(1) containment-path lookup (the localization index).
     pub fn lookup_path(&self, path: &str) -> Option<VertexId> {
         self.path_index.get(path).copied()
     }
@@ -299,6 +377,7 @@ impl ResourceGraph {
         if self.path_index.contains_key(&v.path) {
             return Err(GraphError::DuplicatePath(v.path));
         }
+        self.epoch += 1;
         let tid = self.types.intern(&v.rtype);
         let id = VertexId(self.vertices.len() as u32);
         self.path_index.insert(v.path.clone(), id);
@@ -337,6 +416,7 @@ impl ResourceGraph {
             ));
         }
         let path = self.vertices[id.0 as usize].path.clone();
+        self.epoch += 1;
         self.path_index.remove(&path);
         self.vertices[id.0 as usize].dead = true;
         self.live_vertices -= 1;
@@ -601,6 +681,74 @@ mod tests {
         assert_eq!(removed, 2);
         assert_eq!(g.num_vertices(), 1);
         assert_eq!(g.num_edges(), 0);
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn epoch_advances_on_every_mutation_kind() {
+        let (mut g, root, _, c0) = tiny();
+        let e0 = g.epoch();
+        // structural add
+        g.add_child(
+            root,
+            make_vertex(ResourceType::Node, "node", 1, 9, "/cluster0/node1"),
+        )
+        .unwrap();
+        let e1 = g.epoch();
+        assert!(e1 > e0);
+        // vertex metadata write (how allocation marks / aggregates change)
+        g.vertex_mut(c0).alloc.jobs.push(JobId(1));
+        let e2 = g.epoch();
+        assert!(e2 > e1);
+        // structural removal
+        g.remove_leaf(c0).unwrap();
+        let e3 = g.epoch();
+        assert!(e3 > e2);
+        // reads do not advance it
+        let _ = g.vertex(root);
+        let _ = g.lookup_path("/cluster0/node1");
+        let _ = g.dfs(root);
+        assert_eq!(g.epoch(), e3);
+    }
+
+    #[test]
+    fn failed_mutations_leave_state_consistent_with_epoch() {
+        // a rejected add may or may not bump (conservative is allowed), but
+        // it must never change the graph without bumping: equal epochs
+        // imply identical state.
+        let (mut g, root, _, _) = tiny();
+        let before_epoch = g.epoch();
+        let before_n = g.num_vertices();
+        let err = g.add_child(
+            root,
+            make_vertex(ResourceType::Node, "node", 0, 9, "/cluster0/node0"),
+        );
+        assert!(err.is_err());
+        if g.epoch() == before_epoch {
+            assert_eq!(g.num_vertices(), before_n);
+        }
+        g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn restore_from_moves_epoch_forward() {
+        let (mut g, root, _, c0) = tiny();
+        let snapshot = g.clone();
+        let snap_vertices = snapshot.num_vertices();
+        // diverge: mutate past the snapshot
+        g.vertex_mut(c0).alloc.jobs.push(JobId(7));
+        g.add_child(
+            root,
+            make_vertex(ResourceType::Node, "node", 1, 9, "/cluster0/node1"),
+        )
+        .unwrap();
+        let diverged = g.epoch();
+        assert!(diverged > snapshot.epoch());
+        // restore: content rewinds, epoch does not
+        g.restore_from(&snapshot);
+        assert_eq!(g.num_vertices(), snap_vertices);
+        assert!(!g.vertex(c0).alloc.is_allocated());
+        assert!(g.epoch() > diverged, "epoch must never rewind");
         g.check_invariants().unwrap();
     }
 

@@ -19,13 +19,21 @@ use crate::util::json::{Json, JsonError};
 /// One JGF node (a resource vertex in wire form).
 #[derive(Debug, Clone, PartialEq)]
 pub struct JgfNode {
+    /// Globally unique resource id.
     pub uniq_id: u64,
+    /// Resource type (carried by name on the wire).
     pub rtype: ResourceType,
+    /// Basename, e.g. `core`.
     pub basename: String,
+    /// Sibling index.
     pub id: u64,
+    /// MPI-style rank hint; -1 when not applicable.
     pub rank: i64,
+    /// Capacity units (1 for discrete resources).
     pub size: u64,
+    /// Unit label for `size` (empty for discrete resources).
     pub unit: String,
+    /// Containment path (vertex identity across instances).
     pub path: String,
 }
 
@@ -46,6 +54,7 @@ impl JgfNode {
         }
     }
 
+    /// Convert back to a vertex prototype for attachment.
     pub fn to_vertex(&self) -> VertexProto {
         let mut v = make_vertex(
             self.rtype.clone(),
@@ -76,7 +85,9 @@ impl JgfNode {
 /// containment edges `(source uniq_id, target uniq_id)`.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Jgf {
+    /// Nodes in parents-before-children order.
     pub nodes: Vec<JgfNode>,
+    /// Containment edges as `(source uniq_id, target uniq_id)` pairs.
     pub edges: Vec<(u64, u64)>,
 }
 
@@ -147,6 +158,7 @@ impl Jgf {
         Self::from_selection(g, &all)
     }
 
+    /// Canonical JGF document (`{"graph": {"nodes": ..., "edges": ...}}`).
     pub fn to_json(&self) -> Json {
         // Wire-size discipline (§Perf): default-valued fields (rank −1,
         // size 1, empty unit) and derivable ones (name = basename+id) are
@@ -195,6 +207,7 @@ impl Jgf {
         )
     }
 
+    /// Decode a JGF document.
     pub fn from_json(doc: &Json) -> Result<Jgf, JsonError> {
         let graph = doc
             .get("graph")
@@ -244,10 +257,12 @@ impl Jgf {
         Ok(jgf)
     }
 
+    /// Compact wire text of the JGF document.
     pub fn dump(&self) -> String {
         self.to_json().dump()
     }
 
+    /// Parse JGF wire text.
     pub fn parse(text: &str) -> Result<Jgf, JsonError> {
         Jgf::from_json(&Json::parse(text)?)
     }

@@ -21,14 +21,20 @@ use std::fmt;
 /// A resource vertex type. Ordering follows typical containment depth.
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum ResourceType {
+    /// Top-level cluster container.
     Cluster,
     /// Cloud availability zone — interposed between cluster and node for
     /// externally provided resources (§4: "EC2 zone vertex").
     Zone,
+    /// Rack container.
     Rack,
+    /// Compute node.
     Node,
+    /// CPU socket.
     Socket,
+    /// CPU core.
     Core,
+    /// GPU device.
     Gpu,
     /// Memory in 1 GiB units; a vertex per unit (see DESIGN.md on how this
     /// reproduces Table 3's subgraph sizes).
@@ -38,6 +44,7 @@ pub enum ResourceType {
 }
 
 impl ResourceType {
+    /// Resolve a type name (unknown names become [`ResourceType::Other`]).
     pub fn from_name(name: &str) -> ResourceType {
         match name {
             "cluster" => ResourceType::Cluster,
@@ -52,6 +59,7 @@ impl ResourceType {
         }
     }
 
+    /// Canonical lowercase name (what JGF carries on the wire).
     pub fn name(&self) -> &str {
         match self {
             ResourceType::Cluster => "cluster",
@@ -82,15 +90,24 @@ impl fmt::Display for ResourceType {
 pub struct TypeId(pub u16);
 
 impl TypeId {
+    /// Fixed id of [`ResourceType::Cluster`] in every table.
     pub const CLUSTER: TypeId = TypeId(0);
+    /// Fixed id of [`ResourceType::Zone`] in every table.
     pub const ZONE: TypeId = TypeId(1);
+    /// Fixed id of [`ResourceType::Rack`] in every table.
     pub const RACK: TypeId = TypeId(2);
+    /// Fixed id of [`ResourceType::Node`] in every table.
     pub const NODE: TypeId = TypeId(3);
+    /// Fixed id of [`ResourceType::Socket`] in every table.
     pub const SOCKET: TypeId = TypeId(4);
+    /// Fixed id of [`ResourceType::Core`] in every table.
     pub const CORE: TypeId = TypeId(5);
+    /// Fixed id of [`ResourceType::Gpu`] in every table.
     pub const GPU: TypeId = TypeId(6);
+    /// Fixed id of [`ResourceType::Memory`] in every table.
     pub const MEMORY: TypeId = TypeId(7);
 
+    /// The id as a dense array index.
     pub fn index(self) -> usize {
         self.0 as usize
     }
@@ -153,6 +170,7 @@ impl Default for TypeTable {
 }
 
 impl TypeTable {
+    /// A table pre-seeded with the built-in types at their fixed ids.
     pub fn new() -> TypeTable {
         TypeTable::default()
     }
@@ -162,14 +180,17 @@ impl TypeTable {
         self.types.len()
     }
 
+    /// Whether the table holds no types (never true after `new`).
     pub fn is_empty(&self) -> bool {
         self.types.is_empty()
     }
 
+    /// Resolve an id to its type.
     pub fn get(&self, id: TypeId) -> &ResourceType {
         &self.types[id.index()]
     }
 
+    /// Resolve an id to its canonical name.
     pub fn name(&self, id: TypeId) -> &str {
         self.types[id.index()].name()
     }

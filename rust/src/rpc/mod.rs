@@ -51,7 +51,9 @@ use crate::util::json::{Json, JsonError};
 /// A request: correlation id + typed operation.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
+    /// Correlation id, echoed verbatim in the response.
     pub id: u64,
+    /// The typed operation.
     pub op: SchedOp,
 }
 
@@ -60,21 +62,26 @@ pub struct Request {
 /// mutually exclusive on the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Response {
+    /// The request's correlation id.
     pub id: u64,
+    /// The typed reply ([`SchedReply::Error`] for failures).
     pub reply: SchedReply,
 }
 
 impl Request {
+    /// Build a request.
     pub fn new(id: u64, op: SchedOp) -> Request {
         Request { id, op }
     }
 
+    /// The request envelope: `{"id": ..., "op": {...}}`.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("id", Json::from(self.id))
             .with("op", self.op.to_json())
     }
 
+    /// Decode a request envelope.
     pub fn from_json(doc: &Json) -> Result<Request, JsonError> {
         Ok(Request {
             id: doc.u64_field("id")?,
@@ -87,10 +94,12 @@ impl Request {
 }
 
 impl Response {
+    /// A success response (or in-band error: any reply is accepted).
     pub fn ok(id: u64, reply: SchedReply) -> Response {
         Response { id, reply }
     }
 
+    /// An error response from a [`code`](proto::code) + message.
     pub fn err(id: u64, code: &str, message: impl Into<String>) -> Response {
         Response {
             id,
@@ -98,6 +107,8 @@ impl Response {
         }
     }
 
+    /// The response envelope: `{"id", "result"}` or `{"id", "error"}` —
+    /// never both (see the module contract).
     pub fn to_json(&self) -> Json {
         let doc = Json::obj().with("id", Json::from(self.id));
         match &self.reply {
@@ -106,6 +117,7 @@ impl Response {
         }
     }
 
+    /// Decode a response envelope, rejecting result/error ambiguity.
     pub fn from_json(doc: &Json) -> Result<Response, JsonError> {
         let id = doc.u64_field("id")?;
         match (doc.get("result"), doc.get("error")) {

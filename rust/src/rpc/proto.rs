@@ -89,11 +89,14 @@ pub mod code {
 /// human-readable `message`. This is the only error shape on the wire.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RpcError {
+    /// Stable machine-readable code (vocabulary: [`code`]).
     pub code: String,
+    /// Human-readable description; never branch on it.
     pub message: String,
 }
 
 impl RpcError {
+    /// Build an error from a [`code`] constant and a message.
     pub fn new(code: &str, message: impl Into<String>) -> RpcError {
         RpcError {
             code: code.to_string(),
@@ -101,12 +104,14 @@ impl RpcError {
         }
     }
 
+    /// Canonical wire encoding: `{"code": ..., "message": ...}`.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("code", Json::from(self.code.as_str()))
             .with("message", Json::from(self.message.as_str()))
     }
 
+    /// Decode the canonical wire encoding.
     pub fn from_json(doc: &Json) -> Result<RpcError, JsonError> {
         Ok(RpcError {
             code: doc.str_field("code")?.to_string(),
@@ -138,9 +143,11 @@ impl From<RpcError> for String {
 /// schema: this module alone pins the protocol's field layouts.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LevelTiming {
+    /// Hierarchy level this entry measures (0 = top).
     pub level: usize,
     /// Local match attempt time (null match unless `match_ok`).
     pub match_s: f64,
+    /// Whether the local match succeeded at this level.
     pub match_ok: bool,
     /// RPC round-trip to the parent (zero at the matching level).
     pub comms_s: f64,
@@ -152,10 +159,12 @@ pub struct LevelTiming {
 }
 
 impl LevelTiming {
+    /// Total seconds this level contributed (`match + comms + add/update`).
     pub fn total(&self) -> f64 {
         self.match_s + self.comms_s + self.add_upd_s
     }
 
+    /// Canonical wire encoding of one timing entry.
     pub fn to_json(&self) -> Json {
         Json::obj()
             .with("level", Json::from(self.level))
@@ -166,6 +175,7 @@ impl LevelTiming {
             .with("visited", Json::from(self.visited))
     }
 
+    /// Decode one timing entry.
     pub fn from_json(doc: &Json) -> Result<LevelTiming, JsonError> {
         let f = |k: &str| -> Result<f64, JsonError> {
             doc.get(k)
@@ -183,6 +193,7 @@ impl LevelTiming {
     }
 }
 
+/// Encode a per-level timing trail (the `levels` field of a `grown` reply).
 pub fn levels_to_json(levels: &[LevelTiming]) -> Json {
     Json::Arr(levels.iter().map(LevelTiming::to_json).collect())
 }
@@ -197,38 +208,134 @@ pub fn levels_from_json(doc: &Json) -> Result<Vec<LevelTiming>, JsonError> {
 }
 
 /// One scheduler operation — the complete request vocabulary of the system.
+///
+/// Each variant's doc states the success reply it maps to and the error
+/// codes its server may answer with; any op can additionally come back as
+/// [`code::UNSUPPORTED_OP`] (wrong receiver), [`code::BAD_REQUEST`]
+/// (undecodable frame), or [`code::TRANSPORT`] (link failure).
 #[derive(Debug, Clone, PartialEq)]
 pub enum SchedOp {
     /// The paper's `MatchAllocate`: match `spec` against the local graph and
     /// allocate the selection to a fresh job.
-    MatchAllocate { spec: JobSpec },
+    ///
+    /// Reply: [`SchedReply::Allocated`]. Errors: [`code::NO_MATCH`] (no
+    /// satisfying free resources), [`code::GROW_FAILED`] (allocation
+    /// bookkeeping failed).
+    MatchAllocate {
+        /// The hierarchical resource request to satisfy.
+        spec: JobSpec,
+    },
     /// Local half of `MatchGrow`: match free local resources and attach them
     /// to the running job `job`.
-    MatchGrowLocal { job: JobId, spec: JobSpec },
-    /// Match without allocating (feasibility probe).
-    Probe { spec: JobSpec },
+    ///
+    /// Reply: [`SchedReply::Allocated`] (with `job` echoed). Errors:
+    /// [`code::NO_MATCH`], [`code::GROW_FAILED`] (unknown/completed job).
+    MatchGrowLocal {
+        /// The running job to extend.
+        job: JobId,
+        /// The additional resources requested.
+        spec: JobSpec,
+    },
+    /// Match without allocating (feasibility probe). The only **read-only**
+    /// op (see [`SchedOp::is_read_only`]): concurrent servers fan probes
+    /// across a worker pool and may answer repeats from an epoch-keyed
+    /// result cache.
+    ///
+    /// Reply: [`SchedReply::Probed`]. Errors: [`code::NO_MATCH`].
+    Probe {
+        /// The request whose feasibility is being tested.
+        spec: JobSpec,
+    },
     /// `AddSubgraph` + `UpdateMetadata`: splice a granted subgraph into the
     /// local graph, optionally charging the new vertices to `job`.
-    AcceptGrant { subgraph: Jgf, job: Option<JobId> },
+    ///
+    /// Reply: [`SchedReply::Accepted`]. Errors: [`code::GROW_FAILED`] (no
+    /// attach point, duplicate vertex, unknown job — note the splice may
+    /// have partially completed; the graph epoch reflects any mutation).
+    AcceptGrant {
+        /// The granted subgraph (JGF), parents-before-children.
+        subgraph: Jgf,
+        /// Job to charge the new vertices to (`None`: add unallocated).
+        job: Option<JobId>,
+    },
     /// Release all of a job's resources.
-    FreeJob { job: JobId },
+    ///
+    /// Reply: [`SchedReply::Freed`]. Errors: [`code::SHRINK_FAILED`]
+    /// (unknown or already-completed job).
+    FreeJob {
+        /// The job to release.
+        job: JobId,
+    },
     /// Release every allocation inside the subtree at `path`, returning the
     /// resources to the free pool; the subtree stays attached (what the
     /// owning level does when a shrink ascends to it).
-    ShrinkSubtree { path: String },
+    ///
+    /// Reply: [`SchedReply::Freed`]. Errors: [`code::SHRINK_FAILED`]
+    /// (no vertex at `path`, bookkeeping failure).
+    ShrinkSubtree {
+        /// Containment path of the subtree root.
+        path: String,
+    },
     /// Subtractive transformation (§3): release the subtree's allocations,
     /// then detach its vertices.
-    RemoveSubgraph { path: String },
+    ///
+    /// Reply: [`SchedReply::Removed`]. Errors: [`code::SHRINK_FAILED`].
+    RemoveSubgraph {
+        /// Containment path of the subtree root.
+        path: String,
+    },
     /// Hierarchical `MatchGrow` (Algorithm 1): match locally or escalate to
     /// the parent / external provider; the grant descends back down. Served
     /// by a hierarchy node, not a bare instance.
-    MatchGrow { spec: JobSpec },
+    ///
+    /// Reply: [`SchedReply::Grown`]. Errors: [`code::NO_MATCH`],
+    /// [`code::GROW_FAILED`], [`code::MATCH_GROW_FAILED`] (no level could
+    /// satisfy it), [`code::PROVIDER_UNSATISFIABLE`] / [`code::PROVIDER_API`]
+    /// (external provider), [`code::BAD_REPLY`] (ancestor protocol
+    /// violation).
+    MatchGrow {
+        /// The resource request to satisfy somewhere up the hierarchy.
+        spec: JobSpec,
+    },
     /// Hierarchical shrink ascending from a child: release the subtree at
     /// `path` and keep propagating upward. Served by a hierarchy node.
-    ShrinkReturn { path: String },
+    ///
+    /// Reply: [`SchedReply::Removed`]. Errors: [`code::SHRINK_FAILED`],
+    /// [`code::PROVIDER_API`] (burst-instance release failed),
+    /// [`code::BAD_REPLY`].
+    ShrinkReturn {
+        /// Containment path of the subtree being returned.
+        path: String,
+    },
 }
 
 impl SchedOp {
+    /// Whether this op is **read-only**: it observes the resource graph
+    /// without mutating it (or the allocation table), so a server may run
+    /// it concurrently with other read-only ops against a shared graph and
+    /// answer it from an epoch-keyed result cache. This classification is
+    /// what [`crate::sched::SchedService`] partitions batches by and what
+    /// `hier`'s serve loop routes around the per-node mutex.
+    ///
+    /// Today exactly [`SchedOp::Probe`] (the count-only match); every
+    /// other op mutates graph or allocation state somewhere in the
+    /// hierarchy. A new variant added here defaults to the safe answer
+    /// (`false`) only if its arm says so explicitly — the match is
+    /// exhaustive on purpose.
+    pub fn is_read_only(&self) -> bool {
+        match self {
+            SchedOp::Probe { .. } => true,
+            SchedOp::MatchAllocate { .. }
+            | SchedOp::MatchGrowLocal { .. }
+            | SchedOp::AcceptGrant { .. }
+            | SchedOp::FreeJob { .. }
+            | SchedOp::ShrinkSubtree { .. }
+            | SchedOp::RemoveSubgraph { .. }
+            | SchedOp::MatchGrow { .. }
+            | SchedOp::ShrinkReturn { .. } => false,
+        }
+    }
+
     /// Canonical wire tag of this op.
     pub fn name(&self) -> &'static str {
         match self {
@@ -244,6 +351,8 @@ impl SchedOp {
         }
     }
 
+    /// Canonical wire encoding: a JSON object tagged by `"op"` (see the
+    /// module's field-schema table).
     pub fn to_json(&self) -> Json {
         let doc = Json::obj().with("op", Json::from(self.name()));
         match self {
@@ -267,6 +376,7 @@ impl SchedOp {
         }
     }
 
+    /// Decode an op document; unknown tags and missing fields are errors.
     pub fn from_json(doc: &Json) -> Result<SchedOp, JsonError> {
         let spec = |d: &Json| -> Result<JobSpec, JsonError> {
             JobSpec::from_json(
@@ -308,35 +418,60 @@ impl SchedOp {
     }
 }
 
-/// The answer to a [`SchedOp`].
+/// The answer to a [`SchedOp`]. Each success variant names the ops it
+/// answers; failures of any op travel as [`SchedReply::Error`].
 #[derive(Debug, Clone, PartialEq)]
 pub enum SchedReply {
     /// `MatchAllocate` / `MatchGrowLocal` succeeded: the job now holds the
     /// selection, returned as a JGF subgraph (the grant a child boots from).
     Allocated {
+        /// The job holding the selection (fresh for `MatchAllocate`,
+        /// echoed for `MatchGrowLocal`).
         job: JobId,
+        /// The selection as a JGF subgraph.
         subgraph: Jgf,
+        /// Seconds spent in the match traversal.
         match_s: f64,
+        /// Seconds spent marking the allocation / updating metadata.
         add_upd_s: f64,
+        /// Vertices visited by the match traversal.
         visited: usize,
     },
-    /// `Probe` succeeded: `vertices` would be selected.
-    Probed { visited: usize, vertices: usize },
+    /// `Probe` succeeded: `vertices` would be selected. Probes served from
+    /// a result cache repeat the originally measured counts (the values
+    /// are a function of graph state, which the epoch pins).
+    Probed {
+        /// Vertices visited by the match traversal.
+        visited: usize,
+        /// Vertices the request would select.
+        vertices: usize,
+    },
     /// `AcceptGrant` spliced the subgraph: `added` new vertices,
     /// `preexisting` were the identity.
     Accepted {
+        /// Newly created vertices.
         added: usize,
+        /// Vertices that already existed (the addition was the identity).
         preexisting: usize,
+        /// Seconds spent in AddSubgraph + UpdateMetadata.
         add_upd_s: f64,
     },
     /// `FreeJob` / `ShrinkSubtree`: `vertices` released to the free pool.
-    Freed { vertices: usize },
+    Freed {
+        /// Vertices released.
+        vertices: usize,
+    },
     /// `RemoveSubgraph` / hierarchical `ShrinkReturn`: `vertices` removed.
-    Removed { vertices: usize },
+    Removed {
+        /// Vertices detached from the graph.
+        vertices: usize,
+    },
     /// Hierarchical `MatchGrow` grant descending: the subgraph plus the
     /// per-level timing trail accumulated top-down.
     Grown {
+        /// The granted subgraph.
         subgraph: Jgf,
+        /// Per-level timing entries, topmost level first.
         levels: Vec<LevelTiming>,
     },
     /// The op failed; see [`code`] for the vocabulary.
@@ -362,6 +497,7 @@ impl SchedReply {
         SchedReply::Error(RpcError::new(code, message))
     }
 
+    /// Whether this reply is the error variant.
     pub fn is_error(&self) -> bool {
         matches!(self, SchedReply::Error(_))
     }
@@ -374,6 +510,8 @@ impl SchedReply {
         }
     }
 
+    /// Canonical wire encoding: a JSON object tagged by `"reply"` (see the
+    /// module's field-schema table).
     pub fn to_json(&self) -> Json {
         let doc = Json::obj().with("reply", Json::from(self.name()));
         match self {
@@ -420,6 +558,7 @@ impl SchedReply {
         }
     }
 
+    /// Decode a reply document; unknown tags and missing fields are errors.
     pub fn from_json(doc: &Json) -> Result<SchedReply, JsonError> {
         let f64_field = |k: &str| -> Result<f64, JsonError> {
             doc.get(k)
@@ -548,6 +687,30 @@ mod tests {
             }],
         });
         roundtrip_reply(SchedReply::err(code::NO_MATCH, "no satisfying resources"));
+    }
+
+    #[test]
+    fn only_probe_is_read_only() {
+        let spec = table1_jobspec("T8");
+        assert!(SchedOp::Probe { spec: spec.clone() }.is_read_only());
+        for op in [
+            SchedOp::MatchAllocate { spec: spec.clone() },
+            SchedOp::MatchGrowLocal {
+                job: JobId(1),
+                spec: spec.clone(),
+            },
+            SchedOp::AcceptGrant {
+                subgraph: Jgf::default(),
+                job: None,
+            },
+            SchedOp::FreeJob { job: JobId(1) },
+            SchedOp::ShrinkSubtree { path: "/x".into() },
+            SchedOp::RemoveSubgraph { path: "/x".into() },
+            SchedOp::MatchGrow { spec },
+            SchedOp::ShrinkReturn { path: "/x".into() },
+        ] {
+            assert!(!op.is_read_only(), "{} must not be read-only", op.name());
+        }
     }
 
     #[test]

@@ -5,18 +5,23 @@ use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::rpc::{encode_frame, read_frame, Request, Response};
 
-/// Shared, state-mutating request handler (one scheduler instance serves
-/// many child connections, so the state sits behind a mutex).
-pub type Handler = Arc<Mutex<dyn FnMut(Request) -> Response + Send>>;
+/// Shared request handler. Deliberately `Fn`, not `FnMut`: transports
+/// invoke it concurrently (one thread per TCP connection), so per-request
+/// serialization is the HANDLER's choice, not the transport's — e.g.
+/// `hier`'s node handler routes read-only ops to the lock-free concurrent
+/// probe path and takes its node mutex only for mutating ops. Handlers
+/// needing mutable state bring their own interior mutability.
+pub type Handler = Arc<dyn Fn(Request) -> Response + Send + Sync>;
 
-pub fn handler<F: FnMut(Request) -> Response + Send + 'static>(f: F) -> Handler {
-    Arc::new(Mutex::new(f))
+/// Wrap a closure as a shareable [`Handler`].
+pub fn handler<F: Fn(Request) -> Response + Send + Sync + 'static>(f: F) -> Handler {
+    Arc::new(f)
 }
 
 /// Synthetic link latency: `base` per message + `per_byte` nanoseconds,
@@ -25,15 +30,19 @@ pub fn handler<F: FnMut(Request) -> Response + Send + 'static>(f: F) -> Handler 
 /// ones, as in the paper's Table 4.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Latency {
+    /// Fixed cost per message.
     pub base: Duration,
+    /// Additional nanoseconds per payload byte.
     pub per_byte_ns: f64,
 }
 
 impl Latency {
+    /// Zero injected latency.
     pub fn none() -> Latency {
         Latency::default()
     }
 
+    /// Latency of `base_us` microseconds plus `per_byte_ns` ns/byte.
     pub fn of(base_us: u64, per_byte_ns: f64) -> Latency {
         Latency {
             base: Duration::from_micros(base_us),
@@ -52,6 +61,7 @@ impl Latency {
 
 /// A client connection a child holds to its parent.
 pub trait Conn: Send {
+    /// Send one request and block for its response.
     fn call(&mut self, req: &Request) -> std::io::Result<Response>;
 }
 
@@ -95,7 +105,7 @@ impl InProcServer {
             while let Ok(msg) = rx.recv() {
                 match msg {
                     InProcMsg::Call(req, reply) => {
-                        let resp = (h.lock().expect("handler poisoned"))(req);
+                        let resp = h(req);
                         let _ = reply.send(resp);
                     }
                     InProcMsg::Shutdown => break,
@@ -108,12 +118,14 @@ impl InProcServer {
         }
     }
 
+    /// A new client connection to this server.
     pub fn connect(&self) -> InProcConn {
         InProcConn {
             tx: self.tx.clone(),
         }
     }
 
+    /// Stop the server thread and join it.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(InProcMsg::Shutdown);
         if let Some(t) = self.thread.take() {
@@ -134,6 +146,7 @@ pub struct TcpConn {
 }
 
 impl TcpConn {
+    /// Connect to a server, applying `latency` per direction.
     pub fn connect(addr: SocketAddr, latency: Latency) -> std::io::Result<TcpConn> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
@@ -157,12 +170,14 @@ impl Conn for TcpConn {
 
 /// TCP server: accepts connections, one frame-loop thread each.
 pub struct TcpServer {
+    /// The bound listen address (ephemeral localhost port).
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
 }
 
 impl TcpServer {
+    /// Bind an ephemeral localhost port and serve `h` on it.
     pub fn spawn(h: Handler) -> std::io::Result<TcpServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
@@ -195,6 +210,8 @@ impl TcpServer {
         })
     }
 
+    /// Stop accepting and join the accept thread (connection threads exit
+    /// when their peers close).
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         if let Some(t) = self.accept_thread.take() {
@@ -211,7 +228,7 @@ fn serve_conn(mut stream: TcpStream, h: Handler) {
             Err(_) => break, // peer closed
         };
         let resp = match Request::from_json(&doc) {
-            Ok(req) => (h.lock().expect("handler poisoned"))(req),
+            Ok(req) => h(req),
             Err(e) => Response::err(
                 doc.u64_field("id").unwrap_or(0),
                 crate::rpc::proto::code::BAD_REQUEST,
@@ -259,10 +276,10 @@ mod tests {
     #[test]
     fn inproc_many_clients_share_state() {
         let counter = handler({
-            let mut n = 0usize;
+            let n = std::sync::atomic::AtomicUsize::new(0);
             move |req: Request| {
-                n += 1;
-                Response::ok(req.id, SchedReply::Freed { vertices: n })
+                let v = n.fetch_add(1, Ordering::SeqCst) + 1;
+                Response::ok(req.id, SchedReply::Freed { vertices: v })
             }
         });
         let server = InProcServer::spawn(counter);

@@ -9,11 +9,13 @@ use crate::util::stats::LinFit;
 /// AOT sample capacity (python/compile/kernels/linreg.py NSAMP).
 pub const NSAMP: usize = 1024;
 
+/// OLS fit/predict backed by the AOT `linreg_*` artifacts.
 pub struct XlaLinReg {
     handle: &'static XlaHandle,
 }
 
 impl XlaLinReg {
+    /// Connect to the XLA service and verify both artifacts execute.
     pub fn load() -> Result<XlaLinReg, RuntimeError> {
         let handle = XlaHandle::global();
         // probe both artifacts so missing files fail here, not mid-fit

@@ -25,9 +25,12 @@ use std::path::PathBuf;
 
 pub use service::{OutBuf, TensorF32, XlaHandle};
 
+/// Why loading or executing an AOT artifact failed.
 #[derive(Debug)]
 pub enum RuntimeError {
+    /// No artifact file at the given path (run `make artifacts`).
     MissingArtifact(PathBuf),
+    /// PJRT/XLA reported an error (or the build lacks `--cfg xla_runtime`).
     Xla(String),
 }
 
@@ -108,6 +111,7 @@ mod backend {
     /// times.
     pub struct Artifact {
         exe: xla::PjRtLoadedExecutable,
+        /// Artifact basename, e.g. `fleet_select`.
         pub name: String,
     }
 
@@ -117,6 +121,7 @@ mod backend {
             Self::load_from(&artifacts_dir().join(format!("{name}.hlo.txt")), name)
         }
 
+        /// Load and compile HLO text from an explicit path.
         pub fn load_from(path: &Path, name: &str) -> Result<Artifact, RuntimeError> {
             if !path.exists() {
                 return Err(RuntimeError::MissingArtifact(path.to_path_buf()));
@@ -193,15 +198,21 @@ mod backend {
     use super::{artifacts_dir, RuntimeError};
     use crate::runtime::service::{OutBuf, TensorF32};
 
+    /// Stub artifact handle (the `--cfg xla_runtime` build has the real
+    /// one); loading always fails, so no instance can exist.
     pub struct Artifact {
+        /// Artifact basename, e.g. `fleet_select`.
         pub name: String,
     }
 
     impl Artifact {
+        /// Load `<name>.hlo.txt` from the artifacts directory (always an
+        /// error in the stub build).
         pub fn load(name: &str) -> Result<Artifact, RuntimeError> {
             Self::load_from(&artifacts_dir().join(format!("{name}.hlo.txt")), name)
         }
 
+        /// Load from an explicit path (always an error in the stub build).
         pub fn load_from(path: &Path, _name: &str) -> Result<Artifact, RuntimeError> {
             if !path.exists() {
                 return Err(RuntimeError::MissingArtifact(path.to_path_buf()));
@@ -211,6 +222,7 @@ mod backend {
             ))
         }
 
+        /// Unreachable in practice (no stub `Artifact` can be built).
         pub fn execute_decoded(
             &self,
             _inputs: &[TensorF32],

@@ -8,14 +8,18 @@ use crate::runtime::{RuntimeError, TensorF32, XlaHandle};
 
 /// AOT shapes, fixed at lowering time (python/compile/kernels constants).
 pub const BATCH: usize = 8;
+/// Candidate-catalog capacity of the AOT kernel.
 pub const NCAND: usize = 512;
+/// Features per request/candidate: `[vcpus, mem_gib, gpus]`.
 pub const FEATS: usize = 3;
 
+/// [`InstanceSelector`] backed by the AOT `fleet_select` artifact.
 pub struct XlaSelector {
     handle: &'static XlaHandle,
 }
 
 impl XlaSelector {
+    /// Connect to the XLA service and verify the artifact executes.
     pub fn load() -> Result<XlaSelector, RuntimeError> {
         let handle = XlaHandle::global();
         // fail fast if the artifact is absent: probe with a zero batch

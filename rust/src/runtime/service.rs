@@ -15,11 +15,14 @@ use crate::runtime::{Artifact, RuntimeError};
 /// One tensor crossing the service boundary.
 #[derive(Debug, Clone)]
 pub struct TensorF32 {
+    /// Row-major element data (`dims.iter().product()` values).
     pub data: Vec<f32>,
+    /// Tensor shape.
     pub dims: Vec<i64>,
 }
 
 impl TensorF32 {
+    /// Build a tensor from row-major data and a shape.
     pub fn new(data: Vec<f32>, dims: Vec<i64>) -> TensorF32 {
         TensorF32 { data, dims }
     }
@@ -28,11 +31,14 @@ impl TensorF32 {
 /// A decoded output buffer.
 #[derive(Debug, Clone)]
 pub enum OutBuf {
+    /// 32-bit float output.
     F32(Vec<f32>),
+    /// 32-bit integer output (also carries decoded predicates).
     I32(Vec<i32>),
 }
 
 impl OutBuf {
+    /// The f32 payload, if this is an [`OutBuf::F32`].
     pub fn as_f32(&self) -> Option<&[f32]> {
         match self {
             OutBuf::F32(v) => Some(v),
@@ -40,6 +46,7 @@ impl OutBuf {
         }
     }
 
+    /// The i32 payload, if this is an [`OutBuf::I32`].
     pub fn as_i32(&self) -> Option<&[i32]> {
         match self {
             OutBuf::I32(v) => Some(v),

@@ -13,15 +13,20 @@ use crate::sched::pruning::{bubble_delta, PruneConfig};
 /// Lifecycle state of a job allocation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobState {
+    /// The job holds resources.
     Running,
+    /// The job has been freed; its record remains for id stability.
     Completed,
 }
 
 /// One job's allocation record.
 #[derive(Debug, Clone)]
 pub struct Allocation {
+    /// The job this record belongs to.
     pub job: JobId,
+    /// Vertices currently held (empty once completed).
     pub vertices: Vec<VertexId>,
+    /// Lifecycle state.
     pub state: JobState,
 }
 
@@ -32,10 +37,14 @@ pub struct AllocTable {
     next_job: u64,
 }
 
+/// Why an allocation-table operation failed.
 #[derive(Debug)]
 pub enum AllocError {
+    /// The job id is not in the table.
     NoSuchJob(JobId),
+    /// A selected vertex is already held by another job.
     AlreadyAllocated(VertexId),
+    /// The job exists but has completed.
     NotRunning(JobId),
 }
 
@@ -52,28 +61,34 @@ impl std::fmt::Display for AllocError {
 impl std::error::Error for AllocError {}
 
 impl AllocTable {
+    /// An empty table (job ids start at 0).
     pub fn new() -> AllocTable {
         AllocTable::default()
     }
 
+    /// Mint the next job id.
     pub fn fresh_job_id(&mut self) -> JobId {
         let id = JobId(self.next_job);
         self.next_job += 1;
         id
     }
 
+    /// A job's allocation record, if known.
     pub fn get(&self, job: JobId) -> Option<&Allocation> {
         self.jobs.get(&job)
     }
 
+    /// Iterate records of jobs currently holding resources.
     pub fn running_jobs(&self) -> impl Iterator<Item = &Allocation> {
         self.jobs.values().filter(|a| a.state == JobState::Running)
     }
 
+    /// Number of job records (running and completed).
     pub fn len(&self) -> usize {
         self.jobs.len()
     }
 
+    /// Whether the table has no records.
     pub fn is_empty(&self) -> bool {
         self.jobs.is_empty()
     }

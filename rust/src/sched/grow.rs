@@ -17,10 +17,14 @@ use crate::resource::jgf::Jgf;
 use crate::sched::alloc::{AllocError, AllocTable};
 use crate::sched::pruning::{update_for_attach, update_for_detach, PruneConfig};
 
+/// Why a dynamic graph transformation failed.
 #[derive(Debug)]
 pub enum GrowError {
+    /// A subgraph root's parent path is absent from this graph.
     NoAttachPoint(String),
+    /// The underlying graph edit was rejected.
     Graph(GraphError),
+    /// The allocation bookkeeping step was rejected.
     Alloc(AllocError),
 }
 
@@ -63,7 +67,9 @@ impl From<AllocError> for GrowError {
 /// "the addition is the identity if the vertices already exist").
 #[derive(Debug, Clone)]
 pub struct AddReport {
+    /// Newly created vertices, parents before children.
     pub added: Vec<VertexId>,
+    /// Vertices that already existed (identity).
     pub preexisting: usize,
 }
 

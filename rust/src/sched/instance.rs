@@ -9,8 +9,15 @@
 //! jobspecs so a queue of N equal requests compiles its demand tables once.
 //! The named methods (`match_allocate`, `accept_grant`, ...) remain as thin
 //! typed wrappers over the same operations.
-
-use std::cell::RefCell;
+//!
+//! §Concurrency: `SchedInstance` holds **no interior mutability** — its warm
+//! [`MatchScratch`] is a plain field behind `&mut self` — so the type is
+//! `Send + Sync` and can sit behind the read/write-partitioned
+//! [`crate::sched::SchedService`], where read-only probes run concurrently
+//! on pool workers that each bring their *own* scratch (via
+//! [`SchedInstance::probe_with`]) while mutating ops take the write side.
+//! This file is the single-threaded core; `sched::service` is the
+//! concurrent serving layer over it.
 
 use crate::jobspec::JobSpec;
 use crate::resource::graph::{JobId, ResourceGraph, VertexId};
@@ -28,22 +35,31 @@ use crate::sched::pruning::{init_aggregates, PruneConfig};
 /// components the paper measures (§5.2): match, add, update.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct OpTiming {
+    /// Seconds spent in the match traversal.
     pub match_s: f64,
+    /// Seconds spent in AddSubgraph + UpdateMetadata / allocation marking.
     pub add_upd_s: f64,
 }
 
 /// A successful local allocate/grow.
 #[derive(Debug, Clone)]
 pub struct AllocOutcome {
+    /// The job now holding the selection.
     pub job: JobId,
+    /// The selection as a JGF subgraph (the grant a child boots from).
     pub subgraph: Jgf,
+    /// Measured match and add/update seconds.
     pub timing: OpTiming,
+    /// Vertices visited by the match traversal.
     pub visited: usize,
 }
 
+/// Why an instance-level operation failed.
 #[derive(Debug)]
 pub enum InstanceError {
+    /// The matcher found no satisfying free resources.
     Match(MatchFail),
+    /// Allocation bookkeeping or subgraph splicing failed.
     Grow(GrowError),
 }
 
@@ -103,13 +119,27 @@ fn alloc_reply(r: Result<AllocOutcome, InstanceError>) -> SchedReply {
 
 /// One scheduler instance.
 pub struct SchedInstance {
+    /// The instance's resource graph (its purview).
     pub graph: ResourceGraph,
+    /// Allocation bookkeeping: which vertices belong to which jobs.
     pub allocs: AllocTable,
+    /// Active pruning filter configuration.
     pub prune: PruneConfig,
     /// Reusable match state: one warm set of buffers per instance, so
-    /// steady-state matching never allocates in the traversal loop.
-    /// Interior mutability keeps `match_only` a `&self` probe.
-    scratch: RefCell<MatchScratch>,
+    /// steady-state matching never allocates in the traversal loop. A
+    /// plain field (no interior mutability) keeps the type `Sync`; callers
+    /// that probe behind a shared reference bring their own scratch
+    /// ([`SchedInstance::probe_with`], how `SchedService` pool workers run).
+    scratch: MatchScratch,
+}
+
+// `SchedService` shares a `SchedInstance` across its worker pool behind an
+// `RwLock`; keep the compiler checking that nothing reintroduces interior
+// mutability (a `RefCell` here would silently fail this).
+#[allow(dead_code)]
+fn _assert_instance_is_sync() {
+    fn is_send_sync<T: Send + Sync>() {}
+    is_send_sync::<SchedInstance>();
 }
 
 impl SchedInstance {
@@ -120,7 +150,7 @@ impl SchedInstance {
             graph,
             allocs: AllocTable::new(),
             prune,
-            scratch: RefCell::new(MatchScratch::new()),
+            scratch: MatchScratch::new(),
         }
     }
 
@@ -239,22 +269,36 @@ impl SchedInstance {
 
     /// Match against the warm scratch, recompiling the per-spec tables only
     /// when asked (the batch path skips recompiling for repeated specs).
-    fn match_batched(&self, spec: &JobSpec, recompile: bool) -> Result<MatchResult, MatchFail> {
-        let scratch = &mut *self.scratch.borrow_mut();
+    fn match_batched(&mut self, spec: &JobSpec, recompile: bool) -> Result<MatchResult, MatchFail> {
         if recompile {
-            compile_spec_into(&self.graph, &self.prune, spec, scratch);
+            compile_spec_into(&self.graph, &self.prune, spec, &mut self.scratch);
         }
-        match_compiled(&self.graph, &self.prune, spec, scratch)
+        match_compiled(&self.graph, &self.prune, spec, &mut self.scratch)
     }
 
     /// Feasibility probe against the warm scratch: `(vertices, visited)`
     /// with no selection copy or sort — the probe path allocates nothing.
-    fn probe_batched(&self, spec: &JobSpec, recompile: bool) -> Result<(usize, usize), MatchFail> {
-        let scratch = &mut *self.scratch.borrow_mut();
+    fn probe_batched(&mut self, spec: &JobSpec, recompile: bool) -> Result<(usize, usize), MatchFail> {
         if recompile {
-            compile_spec_into(&self.graph, &self.prune, spec, scratch);
+            compile_spec_into(&self.graph, &self.prune, spec, &mut self.scratch);
         }
-        probe_compiled(&self.graph, &self.prune, spec, scratch)
+        probe_compiled(&self.graph, &self.prune, spec, &mut self.scratch)
+    }
+
+    /// Feasibility probe through a **caller-supplied** scratch: the
+    /// shared-reference entry point concurrent readers use
+    /// (`SchedService` pool workers each own one warm scratch and probe a
+    /// shared `&SchedInstance` in parallel). Compiles the spec every call —
+    /// per-worker table reuse is the worker's concern, not the instance's.
+    ///
+    /// Returns the same reply vocabulary as the `Probe` op: `Probed` on a
+    /// feasible spec, `Error(no_match)` otherwise.
+    pub fn probe_with(&self, spec: &JobSpec, scratch: &mut MatchScratch) -> SchedReply {
+        compile_spec_into(&self.graph, &self.prune, spec, scratch);
+        match probe_compiled(&self.graph, &self.prune, spec, scratch) {
+            Ok((vertices, visited)) => SchedReply::Probed { visited, vertices },
+            Err(e) => SchedReply::err(code::NO_MATCH, e.to_string()),
+        }
     }
 
     /// Match + allocate with explicit control over spec recompilation — the
@@ -304,15 +348,17 @@ impl SchedInstance {
     }
 
     /// Try to match a jobspec without allocating (used for probing).
-    /// Reuses the instance's [`MatchScratch`] across calls.
-    pub fn match_only(&self, spec: &JobSpec) -> Result<MatchResult, MatchFail> {
+    /// Reuses the instance's [`MatchScratch`] across calls — `&mut self`
+    /// because the scratch is a plain field; concurrent readers use
+    /// [`SchedInstance::probe_with`] with their own scratch instead.
+    pub fn match_only(&mut self, spec: &JobSpec) -> Result<MatchResult, MatchFail> {
         self.match_batched(spec, true)
     }
 
     /// Capacity snapshot of the reusable match scratch (tests assert it is
     /// stable across many matches — i.e. steady state allocates nothing).
     pub fn scratch_footprint(&self) -> ScratchFootprint {
-        self.scratch.borrow().footprint()
+        self.scratch.footprint()
     }
 
     /// `MatchAllocate`: match + allocate to a fresh job id.
@@ -492,7 +538,7 @@ mod tests {
         // matches against the same instance leave every scratch buffer at
         // its warmed capacity — the traversal loop allocates nothing.
         let mut uids = UidGen::new();
-        let inst = SchedInstance::new(table2_graph(0, &mut uids), PruneConfig::default());
+        let mut inst = SchedInstance::new(table2_graph(0, &mut uids), PruneConfig::default());
         let spec = table1_jobspec("T1");
         inst.match_only(&spec).unwrap();
         let warm = inst.scratch_footprint();
@@ -651,6 +697,69 @@ mod tests {
         assert!(matches!(replies[1], SchedReply::Allocated { .. }));
         assert_eq!(replies[2].as_error().unwrap().code, code::NO_MATCH);
         assert!(matches!(replies[3], SchedReply::Probed { .. }));
+        inst.check().unwrap();
+    }
+
+    #[test]
+    fn mutating_ops_bump_epoch_and_probes_do_not() {
+        let mut inst =
+            SchedInstance::new(table2_graph(3, &mut UidGen::new()), PruneConfig::default());
+        let spec = table1_jobspec("T7");
+        let e0 = inst.graph.epoch();
+        // probe: read-only, epoch unchanged
+        let r = inst.apply(&SchedOp::Probe { spec: spec.clone() });
+        assert!(matches!(r, SchedReply::Probed { .. }));
+        assert_eq!(inst.graph.epoch(), e0);
+        // allocate
+        let SchedReply::Allocated { job, .. } =
+            inst.apply(&SchedOp::MatchAllocate { spec: spec.clone() })
+        else {
+            panic!("expected Allocated");
+        };
+        let e1 = inst.graph.epoch();
+        assert!(e1 > e0);
+        // grow
+        inst.apply(&SchedOp::MatchGrowLocal { job, spec });
+        let e2 = inst.graph.epoch();
+        assert!(e2 > e1);
+        // free
+        inst.apply(&SchedOp::FreeJob { job });
+        let e3 = inst.graph.epoch();
+        assert!(e3 > e2);
+        // shrink + detach
+        inst.apply(&SchedOp::RemoveSubgraph {
+            path: "/cluster0/node0".into(),
+        });
+        assert!(inst.graph.epoch() > e3);
+        inst.check().unwrap();
+    }
+
+    /// The cache-strictness contract (see `sched::service`): a mutating op
+    /// that fails AFTER partially editing the graph must leave the epoch
+    /// advanced, so epoch-keyed probe results from before it can never be
+    /// served against the changed graph. `AcceptGrant` with an unknown job
+    /// is the canonical case — `run_grow` splices the subgraph, then the
+    /// allocation step fails.
+    #[test]
+    fn failed_grant_that_mutated_graph_bumps_epoch() {
+        // donor with 2 nodes mints a grant; target has 1 node
+        let mut donor =
+            SchedInstance::new(table2_graph(3, &mut UidGen::new()), PruneConfig::default());
+        let grant = donor
+            .match_only(&JobSpec::nodes_sockets_cores(2, 2, 16))
+            .map(|m| Jgf::from_selection(&donor.graph, &m.selection))
+            .unwrap();
+        let mut inst =
+            SchedInstance::new(table2_graph(4, &mut UidGen::new()), PruneConfig::default());
+        let before = inst.graph.epoch();
+        let r = inst.apply(&SchedOp::AcceptGrant {
+            subgraph: grant,
+            job: Some(JobId(999)), // unknown job: the final step fails
+        });
+        assert_eq!(r.as_error().unwrap().code, code::GROW_FAILED);
+        // the graph DID change (node1 spliced in) and the epoch says so
+        assert!(inst.graph.epoch() > before);
+        assert!(inst.graph.lookup_path("/cluster0/node1").is_some());
         inst.check().unwrap();
     }
 

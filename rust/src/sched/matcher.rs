@@ -40,14 +40,20 @@ const NO_TYPE: u16 = u16::MAX;
 /// (ready for JGF emission), plus traversal statistics.
 #[derive(Debug, Clone)]
 pub struct MatchResult {
+    /// Selected vertices, parents before children.
     pub selection: Vec<VertexId>,
+    /// Vertices visited by the traversal (the paper's match-cost metric).
     pub visited: usize,
 }
 
 /// Why a match failed (carried up the hierarchy by MatchGrow).
 #[derive(Debug, Clone)]
 pub enum MatchFail {
-    NoMatch { visited: usize },
+    /// No satisfying free resources.
+    NoMatch {
+        /// Vertices visited before giving up.
+        visited: usize,
+    },
 }
 
 impl fmt::Display for MatchFail {
@@ -86,18 +92,34 @@ pub struct MatchScratch {
 /// state performs no per-call allocation (capacities stop changing).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ScratchFootprint {
+    /// Words backing the tentative-selection bitset.
     pub selected_words: usize,
+    /// Capacity of the per-request interned-type table.
     pub req_capacity: usize,
+    /// Capacity of the dense demand table.
     pub demand_capacity: usize,
+    /// Capacity of the request-subtree-size table.
     pub subtree_capacity: usize,
+    /// Capacity of the selection output buffer.
     pub out_capacity: usize,
 }
 
+// One warm scratch per scheduler *thread*: `SchedService` pool workers each
+// own one and probe a shared graph concurrently, so the scratch must be
+// safe to move to (and keep on) another thread.
+#[allow(dead_code)]
+fn _assert_scratch_is_send() {
+    fn is_send<T: Send>() {}
+    is_send::<MatchScratch>();
+}
+
 impl MatchScratch {
+    /// An empty scratch; buffers warm up on first use and are then reused.
     pub fn new() -> MatchScratch {
         MatchScratch::default()
     }
 
+    /// Capacity snapshot (see [`ScratchFootprint`]).
     pub fn footprint(&self) -> ScratchFootprint {
         ScratchFootprint {
             selected_words: self.selected.words_len(),

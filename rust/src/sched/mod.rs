@@ -3,13 +3,17 @@
 //!
 //! The entry surface is the typed protocol ([`crate::rpc::proto`]):
 //! [`SchedInstance::apply`] interprets one [`SchedOp`],
-//! [`SchedInstance::apply_batch`] a whole queue with spec-level dedup.
+//! [`SchedInstance::apply_batch`] a whole queue with spec-level dedup, and
+//! [`SchedService`] serves either concurrently — read-only probes fan out
+//! across a worker pool (with epoch-keyed result caching) while mutating
+//! ops serialize on the write side.
 
 pub mod alloc;
 pub mod grow;
 pub mod instance;
 pub mod matcher;
 pub mod pruning;
+pub mod service;
 
 pub use alloc::AllocTable;
 pub use instance::SchedInstance;
@@ -18,6 +22,7 @@ pub use matcher::{
     MatchResult, MatchScratch,
 };
 pub use pruning::PruneConfig;
+pub use service::{CacheStats, SchedService, ServiceWriteGuard};
 
 // Re-exported so scheduler callers get the op/reply vocabulary without
 // reaching into the rpc module (the protocol is the scheduler's API).

@@ -31,6 +31,7 @@ const ABSENT: u16 = u16::MAX;
 /// type in `tracked` is its aggregate **slot**.
 #[derive(Debug, Clone)]
 pub struct PruneConfig {
+    /// Tracked types; a type's position is its aggregate slot.
     pub tracked: Vec<ResourceType>,
 }
 
@@ -43,6 +44,7 @@ impl Default for PruneConfig {
 }
 
 impl PruneConfig {
+    /// Track every listed type (`ALL:t1,t2,...` in Fluxion terms).
     pub fn all_of(types: &[ResourceType]) -> PruneConfig {
         assert!(
             types.len() <= MAX_TRACKED,
@@ -53,6 +55,7 @@ impl PruneConfig {
         }
     }
 
+    /// Whether `t` is tracked.
     pub fn tracks(&self, t: &ResourceType) -> bool {
         self.tracked.contains(t)
     }
@@ -103,10 +106,12 @@ pub struct TrackedSlots {
 }
 
 impl TrackedSlots {
+    /// Number of resolved slots.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether no types are tracked.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

@@ -1,0 +1,860 @@
+//! Concurrent scheduler serving: the read/write-partitioned instance.
+//!
+//! The paper's scalability argument (§5.2.3) is that fully hierarchical
+//! scheduling lets many instances match concurrently against bounded-size
+//! graphs — and converged-computing traffic is dominated by *feasibility
+//! probes* (capacity queries that mutate nothing). [`SchedService`] is the
+//! serving layer that exploits both facts:
+//!
+//! - **Read/write partitioning.** The single-threaded [`SchedInstance`]
+//!   sits behind an `RwLock`. Read-only ops ([`SchedOp::Probe`] — see
+//!   [`SchedOp::is_read_only`]) take the read side and run in parallel;
+//!   mutating ops take the write side, and every graph mutation advances
+//!   the graph's monotonic **epoch**
+//!   ([`crate::resource::graph::ResourceGraph::epoch`]).
+//! - **Per-worker scratch pool.** A pool of `std::thread` workers
+//!   (spawned lazily on the first batched fan-out) each owns one warm
+//!   [`MatchScratch`], and single probes use a thread-local caller
+//!   scratch — replacing the instance's single serializing scratch
+//!   (`SchedInstance`'s own scratch is now just the 1-thread special
+//!   case). [`SchedService::apply_batch`] partitions a
+//!   queue into read/write phases, fans each read phase across the pool,
+//!   and preserves reply order index-for-index with sequential
+//!   [`SchedInstance::apply_batch`].
+//! - **Epoch-keyed probe cache.** Identical probe specs within an
+//!   unchanged-graph window are answered from a result cache without
+//!   re-traversal (the ROADMAP's "cross-op result reuse"). An entry is
+//!   valid iff its recorded epoch equals the graph's current epoch, so any
+//!   mutation — *including one that fails halfway* — invalidates exactly
+//!   by bumping the epoch. See the invalidation rules below.
+//!
+//! ## Cache invalidation rules
+//!
+//! 1. Entries are keyed by the probe spec's canonical JSON and stamped
+//!    with the epoch they were computed at; a lookup only hits when the
+//!    stamp equals the current epoch (stale entries are evicted lazily).
+//! 2. Every lookup and insert happens while holding the instance lock
+//!    (read side), so the epoch cannot move between the stamp being read
+//!    and the entry being used.
+//! 3. A failed mutating op needs no special-casing: if it touched the
+//!    graph at all before failing (e.g. `AcceptGrant` splices the subgraph
+//!    and then the allocation step rejects an unknown job), the mutation
+//!    itself advanced the epoch. Ops that fail without touching the graph
+//!    leave the epoch — and therefore the still-accurate cache — alone.
+//! 4. Epochs must never rewind. Snapshot restores MUST go through
+//!    [`ResourceGraph::restore_from`](crate::resource::graph::ResourceGraph::restore_from),
+//!    which moves the epoch forward past both timelines — that is the
+//!    contract. As defense in depth, the write guard records the epoch at
+//!    entry and clears the whole cache if the counter at drop has moved
+//!    backwards (a plain `guard.graph = snapshot` swap). The one thing
+//!    this last-resort check cannot see is a contract-violating swap that
+//!    *also* manually re-advances the counter onto a previously observed
+//!    value within a single guard; `restore_from` exists precisely so no
+//!    caller ever needs to touch the field directly.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::thread::JoinHandle;
+
+use crate::jobspec::JobSpec;
+use crate::rpc::proto::{SchedOp, SchedReply};
+use crate::sched::instance::SchedInstance;
+use crate::sched::matcher::MatchScratch;
+
+/// Upper bound on cached probe entries; exceeding it clears the map (the
+/// cache is an epoch-window optimization, not a store — correctness never
+/// depends on retention).
+const CACHE_CAP: usize = 4096;
+
+/// One cached probe answer, valid only at the epoch it was computed.
+struct CacheEntry {
+    epoch: u64,
+    reply: SchedReply,
+}
+
+/// Probe-result cache guts (behind the service's cache mutex).
+struct CacheInner {
+    map: HashMap<String, CacheEntry>,
+    /// Last epoch observed by any lookup or write-guard drop; used to
+    /// detect a rewound counter (see module invalidation rule 4).
+    last_epoch: u64,
+    hits: u64,
+    misses: u64,
+    invalidations: u64,
+}
+
+impl CacheInner {
+    fn new() -> CacheInner {
+        CacheInner {
+            map: HashMap::new(),
+            last_epoch: 0,
+            hits: 0,
+            misses: 0,
+            invalidations: 0,
+        }
+    }
+
+    /// Record the current graph epoch. A value below the last observation
+    /// means the epoch rewound (a snapshot was swapped in behind the
+    /// service's back) — every entry could alias a future epoch value, so
+    /// the whole map is dropped.
+    fn observe_epoch(&mut self, epoch: u64) {
+        if epoch < self.last_epoch {
+            self.map.clear();
+            self.invalidations += 1;
+        }
+        self.last_epoch = epoch;
+    }
+
+    /// Look up a probe result valid at `epoch`; evicts a stale entry.
+    fn get(&mut self, key: &str, epoch: u64) -> Option<SchedReply> {
+        match self.map.get(key) {
+            Some(e) if e.epoch == epoch => {
+                self.hits += 1;
+                Some(e.reply.clone())
+            }
+            Some(_) => {
+                self.map.remove(key);
+                self.misses += 1;
+                None
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn insert(&mut self, key: String, epoch: u64, reply: SchedReply) {
+        if self.map.len() >= CACHE_CAP && !self.map.contains_key(&key) {
+            self.map.clear();
+            self.invalidations += 1;
+        }
+        self.map.insert(key, CacheEntry { epoch, reply });
+    }
+}
+
+/// Counters describing the probe cache's behavior (for tests, benches, and
+/// capacity planning).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache at the current epoch.
+    pub hits: u64,
+    /// Lookups that missed (absent or stale entry).
+    pub misses: u64,
+    /// Whole-map clears (explicit, capacity, or epoch-rewind defense).
+    pub invalidations: u64,
+    /// Entries currently resident (any epoch; stale ones evict lazily).
+    pub entries: usize,
+}
+
+/// Canonical cache key of a probe spec: its wire-form JSON. Structurally
+/// identical specs collide (that is the point); the encoding is the same
+/// canonical one the typed protocol uses, so key identity matches protocol
+/// identity.
+fn probe_key(spec: &JobSpec) -> String {
+    spec.dump()
+}
+
+/// One queued probe of a parallel read phase. A task is unique per spec —
+/// identical specs within one phase share a task (batch-level dedup:
+/// one traversal answers all of them).
+struct ReadTask {
+    /// Indices into the batch's reply vector this task answers.
+    slots: Vec<usize>,
+    key: String,
+    spec: JobSpec,
+}
+
+/// A read phase in flight: workers pull tasks via the atomic cursor and
+/// push `(task index, reply)` pairs; the dispatcher sleeps on `done` until
+/// every task is answered — or every worker has checked out, whichever
+/// comes first (a lost worker's tasks are then computed inline).
+struct ReadRun {
+    tasks: Vec<ReadTask>,
+    cursor: AtomicUsize,
+    results: Mutex<Vec<(usize, SchedReply)>>,
+    progress: Mutex<Progress>,
+    done: Condvar,
+}
+
+/// Wait state of one read phase (guarded by `ReadRun::progress`).
+struct Progress {
+    /// Tasks answered so far.
+    completed: usize,
+    /// Workers that have not yet checked out of this run.
+    workers: usize,
+}
+
+/// Check-out of one worker from one run, performed on drop so a panicking
+/// probe still wakes the dispatcher (which recomputes any task the worker
+/// lost) instead of hanging `apply_batch` forever.
+struct Checkout<'a>(&'a ReadRun);
+
+impl Drop for Checkout<'_> {
+    fn drop(&mut self) {
+        let mut p = lock(&self.0.progress);
+        p.workers -= 1;
+        if p.workers == 0 {
+            self.0.done.notify_all();
+        }
+    }
+}
+
+enum WorkerMsg {
+    Run(Arc<ReadRun>),
+    Shutdown,
+}
+
+/// State shared between the service handles and the pool workers.
+struct Shared {
+    inst: RwLock<SchedInstance>,
+    cache: Mutex<CacheInner>,
+}
+
+thread_local! {
+    /// Warm scratch for probes executed on the *calling* thread (single
+    /// probes and degenerate one-task phases skip the pool entirely).
+    /// Thread-local so concurrent callers traverse in parallel instead of
+    /// serializing on one shared scratch; `probe_with` recompiles per call,
+    /// so sharing one scratch across services on the same thread is fine.
+    static CALLER_SCRATCH: std::cell::RefCell<MatchScratch> =
+        std::cell::RefCell::new(MatchScratch::new());
+}
+
+/// The worker pool. Threads are spawned **lazily** on the first batched
+/// read-phase fan-out — a service that only ever serves single probes
+/// (how `hier` uses it) carries zero idle threads. Dropped (and joined)
+/// when the last service handle goes away.
+struct Pool {
+    /// Configured pool size; threads exist only after first use.
+    target: usize,
+    txs: Mutex<Vec<Sender<WorkerMsg>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Pool {
+    /// Spawn up to `target` workers if not yet running; returns the sender
+    /// list to dispatch on (length 0 only when `target` is 0).
+    fn ensure_spawned(&self, shared: &Arc<Shared>) -> Vec<Sender<WorkerMsg>> {
+        let mut txs = lock(&self.txs);
+        if txs.len() < self.target {
+            let mut handles = lock(&self.handles);
+            for i in txs.len()..self.target {
+                let (tx, rx) = channel();
+                let worker_shared = shared.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("sched-probe-{i}"))
+                    .spawn(move || worker_loop(worker_shared, rx))
+                    .expect("spawn sched probe worker");
+                txs.push(tx);
+                handles.push(handle);
+            }
+        }
+        txs.clone()
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        if let Ok(txs) = self.txs.lock() {
+            for tx in txs.iter() {
+                let _ = tx.send(WorkerMsg::Shutdown);
+            }
+        }
+        if let Ok(mut handles) = self.handles.lock() {
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Traverse `spec` against `inst` — which the caller holds a read lock on,
+/// freezing `epoch` for the whole operation (invalidation rule 2) — and
+/// record the reply in the cache stamped with that epoch. The single copy
+/// of the cache-coherence-critical sequence; every probe path (single,
+/// pool worker, inline fallback) funnels through here.
+fn probe_and_cache(
+    inst: &SchedInstance,
+    cache: &Mutex<CacheInner>,
+    key: &str,
+    spec: &JobSpec,
+    epoch: u64,
+    scratch: &mut MatchScratch,
+) -> SchedReply {
+    let reply = inst.probe_with(spec, scratch);
+    let mut c = lock(cache);
+    c.observe_epoch(epoch);
+    c.insert(key.to_string(), epoch, reply.clone());
+    reply
+}
+
+/// Worker body: one warm [`MatchScratch`] for the thread's lifetime; each
+/// run is drained under a single read lock, so every probe in it is
+/// consistent with one epoch. A panicking probe is caught so the thread
+/// survives to serve runs already queued in its channel (a dead receiver
+/// would drop them without ever checking out, hanging their dispatchers);
+/// the caught run's unfinished tasks fall through to the dispatcher's
+/// inline fallback, which re-raises the panic on the calling thread.
+fn worker_loop(shared: Arc<Shared>, rx: Receiver<WorkerMsg>) {
+    let mut scratch = MatchScratch::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Run(run) => {
+                let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let _checkout = Checkout(&run);
+                    let inst = read_lock(&shared.inst);
+                    let epoch = inst.graph.epoch();
+                    loop {
+                        let i = run.cursor.fetch_add(1, Ordering::Relaxed);
+                        let Some(task) = run.tasks.get(i) else { break };
+                        let reply = probe_and_cache(
+                            &inst,
+                            &shared.cache,
+                            &task.key,
+                            &task.spec,
+                            epoch,
+                            &mut scratch,
+                        );
+                        lock(&run.results).push((i, reply));
+                        let mut p = lock(&run.progress);
+                        p.completed += 1;
+                        if p.completed == run.tasks.len() {
+                            run.done.notify_all();
+                        }
+                    }
+                }))
+                .is_err();
+                if panicked {
+                    // the scratch may hold a half-built traversal state
+                    scratch = MatchScratch::new();
+                }
+            }
+            WorkerMsg::Shutdown => break,
+        }
+    }
+}
+
+/// Mutex lock that shrugs off poisoning: probe state is self-contained per
+/// call, so a panicked peer leaves nothing half-updated worth refusing over.
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn read_lock(l: &RwLock<SchedInstance>) -> RwLockReadGuard<'_, SchedInstance> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write_lock(l: &RwLock<SchedInstance>) -> RwLockWriteGuard<'_, SchedInstance> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write-side access to the shared instance. Dereferences to
+/// [`SchedInstance`]; on drop it re-observes the graph epoch so the probe
+/// cache can detect (and defend against) a rewound counter.
+pub struct ServiceWriteGuard<'a> {
+    guard: RwLockWriteGuard<'a, SchedInstance>,
+    cache: &'a Mutex<CacheInner>,
+    /// Epoch when the guard was taken; compared on drop.
+    entered_epoch: u64,
+}
+
+impl std::ops::Deref for ServiceWriteGuard<'_> {
+    type Target = SchedInstance;
+    fn deref(&self) -> &SchedInstance {
+        &self.guard
+    }
+}
+
+impl std::ops::DerefMut for ServiceWriteGuard<'_> {
+    fn deref_mut(&mut self) -> &mut SchedInstance {
+        &mut self.guard
+    }
+}
+
+impl Drop for ServiceWriteGuard<'_> {
+    fn drop(&mut self) {
+        // still holding the write lock here, so the observation is exact.
+        // `epoch < entered_epoch` catches a rewind even when the cache had
+        // never observed the pre-guard value (observe_epoch's own check
+        // compares against the last *cache* observation, which can lag).
+        let epoch = self.guard.graph.epoch();
+        let mut cache = lock(self.cache);
+        // only clear here when observe_epoch below won't see the rewind
+        // itself (the cache never observed the pre-guard value), so one
+        // rewind counts as exactly one invalidation
+        if epoch < self.entered_epoch && epoch >= cache.last_epoch {
+            cache.map.clear();
+            cache.invalidations += 1;
+        }
+        cache.observe_epoch(epoch);
+    }
+}
+
+/// A concurrent scheduler service: a [`SchedInstance`] behind a read/write
+/// lock, a pool of probe workers with one warm scratch each, and an
+/// epoch-keyed probe-result cache. Cloning yields another handle to the
+/// same service (handles are `Send + Sync`; the pool is joined when the
+/// last one drops).
+///
+/// Deadlock rule: never call [`SchedService::probe`],
+/// [`SchedService::apply`], or [`SchedService::apply_batch`] while holding
+/// a guard returned by [`SchedService::read`] or [`SchedService::write`]
+/// on the same thread.
+#[derive(Clone)]
+pub struct SchedService {
+    shared: Arc<Shared>,
+    pool: Arc<Pool>,
+}
+
+impl SchedService {
+    /// Wrap an instance with a default-sized worker pool (the machine's
+    /// available parallelism, clamped to `1..=8`).
+    pub fn new(inst: SchedInstance) -> SchedService {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .clamp(1, 8);
+        SchedService::with_workers(inst, workers)
+    }
+
+    /// Wrap an instance with an explicit pool size. `workers == 0` is
+    /// valid: every probe then runs on the calling thread (the sequential
+    /// special case, useful as a bench baseline). Worker threads are
+    /// spawned lazily on the first batched read-phase fan-out.
+    pub fn with_workers(inst: SchedInstance, workers: usize) -> SchedService {
+        let shared = Arc::new(Shared {
+            inst: RwLock::new(inst),
+            cache: Mutex::new(CacheInner::new()),
+        });
+        SchedService {
+            shared,
+            pool: Arc::new(Pool {
+                target: workers,
+                txs: Mutex::new(Vec::new()),
+                handles: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Configured pool size (threads exist only once a batched read phase
+    /// has fanned out).
+    pub fn workers(&self) -> usize {
+        self.pool.target
+    }
+
+    /// Shared read access to the instance (parallel with probes; excludes
+    /// writers). For probe traffic prefer [`SchedService::probe`], which
+    /// also consults the result cache.
+    pub fn read(&self) -> RwLockReadGuard<'_, SchedInstance> {
+        read_lock(&self.shared.inst)
+    }
+
+    /// Exclusive write access to the instance. All mutations MUST go
+    /// through here (or [`SchedService::apply`] and
+    /// [`SchedService::apply_batch`], which do): the guard's drop hook is
+    /// part of the
+    /// cache's epoch-rewind defense.
+    pub fn write(&self) -> ServiceWriteGuard<'_> {
+        let guard = write_lock(&self.shared.inst);
+        let entered_epoch = guard.graph.epoch();
+        ServiceWriteGuard {
+            guard,
+            cache: &self.shared.cache,
+            entered_epoch,
+        }
+    }
+
+    /// Current graph epoch (see `ResourceGraph::epoch`).
+    pub fn epoch(&self) -> u64 {
+        self.read().graph.epoch()
+    }
+
+    /// Serve one feasibility probe: cache hit within the current epoch, or
+    /// one traversal on the calling thread (inserted for the next caller).
+    pub fn probe(&self, spec: &JobSpec) -> SchedReply {
+        // hold the read lock across lookup, traversal, and insert: the
+        // epoch is frozen for the whole operation (invalidation rule 2)
+        let inst = read_lock(&self.shared.inst);
+        let epoch = inst.graph.epoch();
+        let key = probe_key(spec);
+        {
+            let mut cache = lock(&self.shared.cache);
+            cache.observe_epoch(epoch);
+            if let Some(reply) = cache.get(&key, epoch) {
+                return reply;
+            }
+        }
+        CALLER_SCRATCH.with(|s| {
+            probe_and_cache(
+                &inst,
+                &self.shared.cache,
+                &key,
+                spec,
+                epoch,
+                &mut s.borrow_mut(),
+            )
+        })
+    }
+
+    /// Interpret one typed op: read-only ops take the concurrent cached
+    /// path, everything else the write side. Reply-compatible with
+    /// [`SchedInstance::apply`].
+    pub fn apply(&self, op: &SchedOp) -> SchedReply {
+        if let SchedOp::Probe { spec } = op {
+            return self.probe(spec);
+        }
+        self.write().apply(op)
+    }
+
+    /// Run a queue of ops, partitioned into read/write phases: maximal
+    /// runs of read-only ops fan out across the worker pool (consulting
+    /// the probe cache first), maximal mutating runs execute under one
+    /// write lock via the sequential [`SchedInstance::apply_batch`]
+    /// (keeping its spec-level compile dedup). Replies correspond to ops
+    /// index-for-index, exactly as the sequential batch orders them.
+    pub fn apply_batch(&self, ops: &[SchedOp]) -> Vec<SchedReply> {
+        let mut replies: Vec<Option<SchedReply>> = vec![None; ops.len()];
+        let mut i = 0;
+        while i < ops.len() {
+            let read = ops[i].is_read_only();
+            let mut j = i + 1;
+            while j < ops.len() && ops[j].is_read_only() == read {
+                j += 1;
+            }
+            if read {
+                self.read_phase(&ops[i..j], i, &mut replies);
+            } else {
+                let mut guard = self.write();
+                for (k, reply) in guard.apply_batch(&ops[i..j]).into_iter().enumerate() {
+                    replies[i + k] = Some(reply);
+                }
+            }
+            i = j;
+        }
+        replies
+            .into_iter()
+            .map(|r| r.expect("every op in the batch is answered"))
+            .collect()
+    }
+
+    /// Execute one contiguous run of read-only ops: resolve cache hits,
+    /// dedup identical specs into shared tasks, then fan the misses across
+    /// the pool (or inline for degenerate runs). `base` is the run's
+    /// offset into `replies`.
+    fn read_phase(&self, ops: &[SchedOp], base: usize, replies: &mut [Option<SchedReply>]) {
+        // 1. cache pass under the read lock (epoch frozen); misses dedup
+        //    into one task per distinct spec
+        let mut tasks: Vec<ReadTask> = Vec::new();
+        let mut task_of_key: HashMap<String, usize> = HashMap::new();
+        {
+            let inst = read_lock(&self.shared.inst);
+            let epoch = inst.graph.epoch();
+            let mut cache = lock(&self.shared.cache);
+            cache.observe_epoch(epoch);
+            for (k, op) in ops.iter().enumerate() {
+                let SchedOp::Probe { spec } = op else {
+                    unreachable!("read phases contain only read-only ops");
+                };
+                let key = probe_key(spec);
+                if let Some(ti) = task_of_key.get(&key) {
+                    tasks[*ti].slots.push(base + k);
+                    continue;
+                }
+                match cache.get(&key, epoch) {
+                    Some(reply) => replies[base + k] = Some(reply),
+                    None => {
+                        task_of_key.insert(key.clone(), tasks.len());
+                        tasks.push(ReadTask {
+                            slots: vec![base + k],
+                            key,
+                            spec: spec.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        if tasks.is_empty() {
+            return;
+        }
+        let workers = self.workers();
+        if workers == 0 || tasks.len() == 1 {
+            for task in &tasks {
+                let reply = self.compute_task(task);
+                for &slot in &task.slots {
+                    replies[slot] = Some(reply.clone());
+                }
+            }
+            return;
+        }
+        // 2. fan out across the pool (spawned on first use); the
+        //    dispatcher holds NO lock while waiting (workers each take
+        //    their own read lock, so a queued writer can never deadlock
+        //    the phase)
+        let txs = self.pool.ensure_spawned(&self.shared);
+        let ntasks = tasks.len();
+        // never wake more workers than there are tasks — a surplus worker
+        // would only acquire the read lock, find the cursor exhausted, and
+        // check out
+        let fanout = txs.len().min(ntasks);
+        let run = Arc::new(ReadRun {
+            tasks,
+            cursor: AtomicUsize::new(0),
+            results: Mutex::new(Vec::with_capacity(ntasks)),
+            progress: Mutex::new(Progress {
+                completed: 0,
+                workers: fanout,
+            }),
+            done: Condvar::new(),
+        });
+        let mut failed_sends = 0usize;
+        for tx in txs.iter().take(fanout) {
+            if tx.send(WorkerMsg::Run(run.clone())).is_err() {
+                failed_sends += 1;
+            }
+        }
+        {
+            // wake on either "all tasks answered" (don't wait for a worker
+            // that is busy finishing someone else's run) or "all workers
+            // checked out" (a dead/panicked worker's tasks fall through to
+            // the inline fallback below)
+            let mut p = lock(&run.progress);
+            p.workers -= failed_sends;
+            while p.completed < ntasks && p.workers > 0 {
+                p = run.done.wait(p).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        let mut task_replies: Vec<Option<SchedReply>> = vec![None; ntasks];
+        for (ti, reply) in lock(&run.results).drain(..) {
+            task_replies[ti] = Some(reply);
+        }
+        for (ti, task) in run.tasks.iter().enumerate() {
+            // defense: compute any task the pool lost on this thread
+            let reply = match task_replies[ti].take() {
+                Some(r) => r,
+                None => self.compute_task(task),
+            };
+            for &slot in &task.slots {
+                replies[slot] = Some(reply.clone());
+            }
+        }
+    }
+
+    /// Probe one task on the calling thread with its thread-local scratch
+    /// (and record it in the cache).
+    fn compute_task(&self, task: &ReadTask) -> SchedReply {
+        let inst = read_lock(&self.shared.inst);
+        let epoch = inst.graph.epoch();
+        CALLER_SCRATCH.with(|s| {
+            probe_and_cache(
+                &inst,
+                &self.shared.cache,
+                &task.key,
+                &task.spec,
+                epoch,
+                &mut s.borrow_mut(),
+            )
+        })
+    }
+
+    /// Drop every cached probe result (counts as one invalidation). Benches
+    /// use this to measure the cold path honestly; correctness never needs
+    /// it.
+    pub fn clear_cache(&self) {
+        let mut cache = lock(&self.shared.cache);
+        cache.map.clear();
+        cache.invalidations += 1;
+    }
+
+    /// Snapshot of the probe cache counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        let cache = lock(&self.shared.cache);
+        CacheStats {
+            hits: cache.hits,
+            misses: cache.misses,
+            invalidations: cache.invalidations,
+            entries: cache.map.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobspec::{table1_jobspec, JobSpec};
+    use crate::resource::builder::{table2_graph, UidGen};
+    use crate::resource::graph::JobId;
+    use crate::rpc::proto::code;
+    use crate::sched::PruneConfig;
+
+    fn service(level: usize, workers: usize) -> SchedService {
+        SchedService::with_workers(
+            SchedInstance::new(table2_graph(level, &mut UidGen::new()), PruneConfig::default()),
+            workers,
+        )
+    }
+
+    #[test]
+    fn probe_hits_cache_within_epoch() {
+        let svc = service(3, 2);
+        let spec = table1_jobspec("T7");
+        let a = svc.probe(&spec);
+        assert!(matches!(a, SchedReply::Probed { .. }));
+        let b = svc.probe(&spec);
+        assert_eq!(a, b);
+        let stats = svc.cache_stats();
+        assert_eq!(stats.hits, 1);
+        assert_eq!(stats.misses, 1);
+    }
+
+    #[test]
+    fn mutation_invalidates_cached_probe() {
+        let svc = service(4, 2); // 1 node
+        let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+        assert!(matches!(svc.probe(&spec), SchedReply::Probed { .. }));
+        // allocate the only node: the cached feasibility answer is now wrong
+        let SchedReply::Allocated { job, .. } =
+            svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() })
+        else {
+            panic!("expected Allocated");
+        };
+        let r = svc.probe(&spec);
+        assert_eq!(r.as_error().unwrap().code, code::NO_MATCH);
+        // free it: feasible again (and again not served from the old entry)
+        svc.apply(&SchedOp::FreeJob { job });
+        assert!(matches!(svc.probe(&spec), SchedReply::Probed { .. }));
+        svc.read().check().unwrap();
+    }
+
+    #[test]
+    fn zero_worker_service_still_serves_batches() {
+        let svc = service(3, 0);
+        let t7 = table1_jobspec("T7");
+        let ops: Vec<SchedOp> = (0..6)
+            .map(|_| SchedOp::Probe { spec: t7.clone() })
+            .collect();
+        let replies = svc.apply_batch(&ops);
+        assert_eq!(replies.len(), 6);
+        assert!(replies.iter().all(|r| matches!(r, SchedReply::Probed { .. })));
+        // all six identical probes deduped into ONE task; one entry cached
+        assert_eq!(svc.cache_stats().entries, 1);
+        // a second identical batch is answered entirely from the cache
+        let again = svc.apply_batch(&ops);
+        assert_eq!(again, replies);
+        assert_eq!(svc.cache_stats().hits, 6);
+    }
+
+    #[test]
+    fn parallel_batch_matches_sequential_batch() {
+        let svc = service(1, 4);
+        let mut twin =
+            SchedInstance::new(table2_graph(1, &mut UidGen::new()), PruneConfig::default());
+        let t7 = table1_jobspec("T7");
+        let mut ops: Vec<SchedOp> = Vec::new();
+        // distinct probe specs exercise the fan-out path
+        for nodes in 1..=6u64 {
+            ops.push(SchedOp::Probe {
+                spec: JobSpec::nodes_sockets_cores(nodes, 2, 16),
+            });
+        }
+        ops.push(SchedOp::MatchAllocate { spec: t7.clone() });
+        ops.push(SchedOp::Probe { spec: t7.clone() });
+        ops.push(SchedOp::FreeJob { job: JobId(0) });
+        ops.push(SchedOp::Probe { spec: t7 });
+        let par = svc.apply_batch(&ops);
+        let seq = twin.apply_batch(&ops);
+        assert_eq!(par.len(), seq.len());
+        for (p, s) in par.iter().zip(&seq) {
+            match (p, s) {
+                (
+                    SchedReply::Allocated {
+                        job: j1,
+                        subgraph: g1,
+                        ..
+                    },
+                    SchedReply::Allocated {
+                        job: j2,
+                        subgraph: g2,
+                        ..
+                    },
+                ) => {
+                    assert_eq!(j1, j2);
+                    assert_eq!(g1, g2);
+                }
+                _ => assert_eq!(p, s),
+            }
+        }
+        svc.read().check().unwrap();
+        twin.check().unwrap();
+    }
+
+    #[test]
+    fn clear_cache_forces_recomputation() {
+        let svc = service(3, 1);
+        let spec = table1_jobspec("T7");
+        svc.probe(&spec);
+        svc.clear_cache();
+        svc.probe(&spec);
+        let stats = svc.cache_stats();
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 2);
+        assert!(stats.invalidations >= 1);
+    }
+
+    #[test]
+    fn write_guard_rewind_defense_clears_cache() {
+        let svc = service(3, 1);
+        let spec = table1_jobspec("T7");
+        let snapshot = svc.read().graph.clone();
+        // advance the epoch well past the snapshot's, ending in the same
+        // free state (allocate + free)
+        let SchedReply::Allocated { job, .. } =
+            svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() })
+        else {
+            panic!("expected Allocated");
+        };
+        svc.apply(&SchedOp::FreeJob { job });
+        assert!(matches!(svc.probe(&spec), SchedReply::Probed { .. }));
+        assert!(svc.cache_stats().entries >= 1);
+        {
+            // hostile restore: swap the snapshot in WITHOUT restore_from,
+            // rewinding the epoch counter
+            let mut guard = svc.write();
+            guard.graph = snapshot;
+        }
+        // the guard drop observed the rewound epoch and dropped the map
+        assert_eq!(svc.cache_stats().entries, 0);
+        // and probes still answer correctly
+        assert!(matches!(svc.probe(&spec), SchedReply::Probed { .. }));
+        svc.read().check().unwrap();
+    }
+
+    /// A clean local-match failure through the write guard (how an
+    /// escalating `hier` MatchGrow starts) must NOT wipe the cache: no
+    /// epoch movement means every entry is still accurate.
+    #[test]
+    fn clean_write_guard_use_preserves_cache_entries() {
+        let svc = service(4, 1); // 1 node
+        let spec = table1_jobspec("T7");
+        svc.probe(&spec);
+        assert_eq!(svc.cache_stats().entries, 1);
+        {
+            let mut guard = svc.write();
+            // scratch-only mutation, epoch untouched — the no-match path
+            // of hier::NodeState::match_grow
+            let _ = guard.match_only(&JobSpec::nodes_sockets_cores(64, 2, 16));
+        }
+        assert_eq!(
+            svc.cache_stats().entries,
+            1,
+            "clean guard use must not invalidate"
+        );
+        assert_eq!(svc.cache_stats().hits, 0);
+        svc.probe(&spec);
+        assert_eq!(svc.cache_stats().hits, 1, "entry still serves");
+        svc.read().check().unwrap();
+    }
+}

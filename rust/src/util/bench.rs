@@ -45,10 +45,12 @@ pub fn report_row(name: &str, samples: &[f64]) -> String {
     )
 }
 
+/// Print a section header for a bench run.
 pub fn print_header(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Print one bench row and return its summary.
 pub fn print_row(name: &str, samples: &[f64]) -> Summary {
     println!("{}", report_row(name, samples));
     summarize(samples)
@@ -68,6 +70,7 @@ pub struct BenchReport {
 }
 
 impl BenchReport {
+    /// An empty report.
     pub fn new() -> BenchReport {
         BenchReport::default()
     }
@@ -79,18 +82,23 @@ impl BenchReport {
         s
     }
 
+    /// Summary of a named row, if recorded.
     pub fn get(&self, name: &str) -> Option<&Summary> {
         self.rows.iter().find(|(n, _)| n == name).map(|(_, s)| s)
     }
 
+    /// Number of recorded rows.
     pub fn len(&self) -> usize {
         self.rows.len()
     }
 
+    /// Whether no rows were recorded.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// The report as the `BENCH_hotpath.json` document shape
+    /// (`{"benchmarks": [{name, n, mean_s, median_s, ...}]}`).
     pub fn to_json(&self) -> Json {
         let rows: Vec<Json> = self
             .rows

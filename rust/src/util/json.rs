@@ -13,10 +13,15 @@ use std::fmt;
 /// display (JGF ids and counts are integers; they must not print as `3.0`).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (see the type doc for integer handling).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
     /// Insertion-ordered object. Key lookup is linear; JGF objects are small
     /// (vertex metadata ~10 keys), so this beats hashing in practice.
@@ -24,6 +29,7 @@ pub enum Json {
 }
 
 impl Json {
+    /// An empty JSON object (builder entry point; chain with [`Json::with`]).
     pub fn obj() -> Json {
         Json::Obj(Vec::new())
     }
@@ -50,6 +56,7 @@ impl Json {
         self
     }
 
+    /// Field of an object (`None` for absent keys and non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -57,6 +64,7 @@ impl Json {
         }
     }
 
+    /// Mutable field of an object.
     pub fn get_mut(&mut self, key: &str) -> Option<&mut Json> {
         match self {
             Json::Obj(pairs) => pairs.iter_mut().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -64,6 +72,7 @@ impl Json {
         }
     }
 
+    /// The string payload, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -71,6 +80,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -78,6 +88,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload as a non-negative integer (rejects fractions).
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
@@ -85,6 +96,7 @@ impl Json {
         }
     }
 
+    /// The numeric payload as a signed integer (rejects fractions).
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Num(n) if n.fract() == 0.0 => Some(*n as i64),
@@ -92,6 +104,7 @@ impl Json {
         }
     }
 
+    /// The boolean payload, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -99,6 +112,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -106,6 +120,7 @@ impl Json {
         }
     }
 
+    /// The key/value pairs in insertion order, if this is an object.
     pub fn as_obj(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Obj(o) => Some(o),
@@ -113,6 +128,7 @@ impl Json {
         }
     }
 
+    /// Whether this value is `null`.
     pub fn is_null(&self) -> bool {
         matches!(self, Json::Null)
     }
@@ -125,6 +141,7 @@ impl Json {
             .ok_or_else(|| JsonError::Schema(format!("missing string field '{key}'")))
     }
 
+    /// Convenience: `get` + `as_u64`, for required integer fields.
     pub fn u64_field(&self, key: &str) -> Result<u64, JsonError> {
         self.get(key)
             .and_then(Json::as_u64)
@@ -146,6 +163,7 @@ impl Json {
         out
     }
 
+    /// Serialize compactly into an existing buffer.
     pub fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -212,6 +230,7 @@ impl Json {
         }
     }
 
+    /// Parse one JSON document (rejects trailing data).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser {
             bytes: text.as_bytes(),
@@ -279,9 +298,17 @@ impl From<BTreeMap<String, Json>> for Json {
     }
 }
 
+/// Why parsing or schema-directed decoding failed.
 #[derive(Debug)]
 pub enum JsonError {
-    Parse { pos: usize, msg: String },
+    /// The text is not valid JSON (byte position + reason).
+    Parse {
+        /// Byte offset of the failure.
+        pos: usize,
+        /// What the parser expected.
+        msg: String,
+    },
+    /// The JSON is valid but does not match the expected schema.
     Schema(String),
 }
 

@@ -17,16 +17,19 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start timing now.
     pub fn start() -> Timer {
         Timer {
             start: Instant::now(),
         }
     }
 
+    /// Time since `start`.
     pub fn elapsed(&self) -> Duration {
         self.start.elapsed()
     }
 
+    /// Time since `start`, in seconds.
     pub fn elapsed_secs(&self) -> f64 {
         self.elapsed().as_secs_f64()
     }
@@ -78,14 +81,17 @@ pub struct Recorder {
 }
 
 impl Recorder {
+    /// An empty recorder.
     pub fn new() -> Recorder {
         Recorder::default()
     }
 
+    /// Append one observation to a named series.
     pub fn record(&mut self, series: &str, seconds: f64) {
         self.series.entry(series.to_string()).or_default().push(seconds);
     }
 
+    /// Append many observations to a named series.
     pub fn record_all(&mut self, series: &str, xs: &[f64]) {
         self.series
             .entry(series.to_string())
@@ -93,18 +99,22 @@ impl Recorder {
             .extend_from_slice(xs);
     }
 
+    /// The observations of a series, if any were recorded.
     pub fn get(&self, series: &str) -> Option<&[f64]> {
         self.series.get(series).map(|v| v.as_slice())
     }
 
+    /// All recorded series names, sorted.
     pub fn series_names(&self) -> impl Iterator<Item = &str> {
         self.series.keys().map(String::as_str)
     }
 
+    /// Summary statistics of a series, if non-empty.
     pub fn summary(&self, series: &str) -> Option<Summary> {
         self.series.get(series).map(|v| summarize(v))
     }
 
+    /// Fold another recorder's series into this one.
     pub fn merge(&mut self, other: &Recorder) {
         for (k, v) in &other.series {
             self.series.entry(k.clone()).or_default().extend_from_slice(v);

@@ -11,7 +11,9 @@ use crate::util::rng::Rng;
 /// hint; implementors should make smaller sizes produce structurally smaller
 /// values so the shrink pass is meaningful.
 pub trait Gen {
+    /// The type of generated values.
     type Value;
+    /// Produce one arbitrary value at the given size hint.
     fn generate(&self, rng: &mut Rng, size: usize) -> Self::Value;
 }
 

@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seed a generator (same seed ⇒ same sequence).
     pub fn new(seed: u64) -> Rng {
         // SplitMix64 expansion of the seed into the xoshiro state.
         let mut x = seed.wrapping_add(0x9E3779B97F4A7C15);
@@ -27,6 +28,7 @@ impl Rng {
         }
     }
 
+    /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -102,10 +104,12 @@ impl Rng {
         -u.ln() / lambda
     }
 
+    /// Bernoulli draw with probability `p`.
     pub fn bool_with(&mut self, p: f64) -> bool {
         self.f64() < p
     }
 
+    /// Uniform choice from a non-empty slice.
     pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
         &items[self.below(items.len() as u64) as usize]
     }

@@ -10,17 +10,26 @@
 /// Five-number-style summary of a sample (used for the boxplot figures).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample size.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Sample standard deviation (n−1 denominator).
     pub std: f64,
+    /// Smallest observation.
     pub min: f64,
+    /// First quartile (type-7 interpolation).
     pub q1: f64,
+    /// Median.
     pub median: f64,
+    /// Third quartile.
     pub q3: f64,
+    /// Largest observation.
     pub max: f64,
 }
 
 impl Summary {
+    /// Interquartile range (`q3 − q1`).
     pub fn iqr(&self) -> f64 {
         self.q3 - self.q1
     }
@@ -33,6 +42,7 @@ impl Summary {
     }
 }
 
+/// Arithmetic mean (`NaN` for an empty sample).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return f64::NAN;
@@ -40,6 +50,7 @@ pub fn mean(xs: &[f64]) -> f64 {
     xs.iter().sum::<f64>() / xs.len() as f64
 }
 
+/// Sample standard deviation (n−1 denominator; 0 below two points).
 pub fn std_dev(xs: &[f64]) -> f64 {
     if xs.len() < 2 {
         return 0.0;
@@ -63,6 +74,7 @@ pub fn quantile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Full summary of a sample (sorts a copy; panics on empty input).
 pub fn summarize(xs: &[f64]) -> Summary {
     assert!(!xs.is_empty(), "summarize of empty sample");
     let mut s = xs.to_vec();
@@ -82,11 +94,14 @@ pub fn summarize(xs: &[f64]) -> Summary {
 /// Fitted simple linear model `y = beta * x + beta0`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LinFit {
+    /// Slope.
     pub beta: f64,
+    /// Intercept.
     pub beta0: f64,
 }
 
 impl LinFit {
+    /// Evaluate the model at `x`.
     pub fn predict(&self, x: f64) -> f64 {
         self.beta * x + self.beta0
     }
@@ -229,8 +244,11 @@ pub fn r2(actual: &[f64], predicted: &[f64]) -> f64 {
 /// Result of one cross-validation: per-fold metrics, averaged.
 #[derive(Debug, Clone)]
 pub struct CvResult {
+    /// Mean absolute percentage error, averaged over folds.
     pub avg_mape: f64,
+    /// Coefficient of determination, averaged over folds.
     pub avg_r2: f64,
+    /// Number of folds actually evaluated.
     pub folds: usize,
 }
 

@@ -22,12 +22,15 @@ pub enum Phase {
 /// An elastic ensemble job.
 #[derive(Debug, Clone)]
 pub struct ElasticJob {
+    /// Stable job index within the trace.
     pub id: usize,
+    /// Arrival time in trace seconds.
     pub arrival_s: f64,
     /// Base allocation in full nodes (2 sockets × 16 cores, Table 2 shape).
     pub base_nodes: u64,
     /// Hold time of the base phase before the first elastic phase.
     pub base_hold_s: f64,
+    /// Elastic phases after the base hold, in order.
     pub phases: Vec<Phase>,
 }
 
@@ -95,7 +98,9 @@ impl ElasticJob {
 /// Trace generation parameters.
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
+    /// Number of jobs in the trace.
     pub jobs: usize,
+    /// RNG seed (traces are deterministic per seed).
     pub seed: u64,
     /// Mean interarrival (exponential), in trace seconds.
     pub mean_interarrival_s: f64,

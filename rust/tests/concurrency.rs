@@ -1,0 +1,244 @@
+//! Concurrency coverage for the `SchedService` serving layer (loom-free:
+//! plain `std::thread` stress plus deterministic epoch/cache checks).
+//!
+//! The contract under test:
+//! 1. N threads probing while one thread allocates/frees — every probe
+//!    result must be consistent with SOME epoch of the graph (i.e. it is
+//!    one of the answers a quiescent graph in one of its visited states
+//!    would give; the probe cache must never serve an answer from a
+//!    different epoch's state).
+//! 2. `apply_batch`'s read/write partitioning preserves the sequential
+//!    reply order index-for-index.
+//! 3. Error-path invalidation: a mutating op that FAILS after touching the
+//!    graph (failed grow) must still advance the epoch, so no stale probe
+//!    entry survives it.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use fluxion::jobspec::JobSpec;
+use fluxion::resource::builder::{table2_graph, UidGen};
+use fluxion::resource::graph::JobId;
+use fluxion::resource::jgf::Jgf;
+use fluxion::rpc::proto::code;
+use fluxion::sched::{PruneConfig, SchedInstance, SchedOp, SchedReply, SchedService};
+
+fn service(level: usize, workers: usize) -> SchedService {
+    SchedService::with_workers(
+        SchedInstance::new(table2_graph(level, &mut UidGen::new()), PruneConfig::default()),
+        workers,
+    )
+}
+
+/// N probers race one writer that flips the graph between two known
+/// states: both nodes free and both nodes allocated. Every probe answer
+/// must match one of those two states exactly — anything else means a
+/// probe observed a torn graph or the cache served a stale epoch.
+#[test]
+fn probes_race_writer_and_stay_epoch_consistent() {
+    let svc = service(3, 4); // L3: 2 nodes
+    let one_node = JobSpec::nodes_sockets_cores(1, 2, 16);
+    let both_nodes = JobSpec::nodes_sockets_cores(2, 2, 16);
+
+    // the two legitimate answers for `one_node`, captured quiescently:
+    // free graph -> Probed{..}; fully-allocated graph -> no_match error
+    let free_answer = svc.probe(&one_node);
+    assert!(matches!(free_answer, SchedReply::Probed { .. }));
+    let job = match svc.apply(&SchedOp::MatchAllocate {
+        spec: both_nodes.clone(),
+    }) {
+        SchedReply::Allocated { job, .. } => job,
+        other => panic!("setup allocation failed: {other:?}"),
+    };
+    let full_answer = svc.probe(&one_node);
+    assert_eq!(full_answer.as_error().unwrap().code, code::NO_MATCH);
+    svc.apply(&SchedOp::FreeJob { job });
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut probers = Vec::new();
+    for _ in 0..4 {
+        let svc = svc.clone();
+        let spec = one_node.clone();
+        let free_answer = free_answer.clone();
+        let full_answer = full_answer.clone();
+        let stop = stop.clone();
+        probers.push(std::thread::spawn(move || {
+            let mut seen: HashSet<&'static str> = HashSet::new();
+            // probe-then-check-stop: even a prober scheduled only after
+            // the writer finished still validates one answer, so the
+            // `distinct >= 1` assertion below cannot fail spuriously
+            loop {
+                let r = svc.probe(&spec);
+                if r == free_answer {
+                    seen.insert("free");
+                } else if r == full_answer {
+                    seen.insert("full");
+                } else {
+                    panic!("probe answer consistent with NO epoch: {r:?}");
+                }
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            seen.len()
+        }));
+    }
+    // writer: allocate both nodes, free them, repeat
+    for _ in 0..200 {
+        let reply = svc.apply(&SchedOp::MatchAllocate {
+            spec: both_nodes.clone(),
+        });
+        let SchedReply::Allocated { job, .. } = reply else {
+            panic!("writer allocation failed: {reply:?}");
+        };
+        let freed = svc.apply(&SchedOp::FreeJob { job });
+        assert!(matches!(freed, SchedReply::Freed { .. }), "{freed:?}");
+    }
+    stop.store(true, Ordering::Relaxed);
+    for p in probers {
+        let distinct = p.join().expect("prober panicked");
+        assert!(distinct >= 1, "prober observed no valid state");
+    }
+    // quiescent again (writer ended freed): the truth must be `free`
+    assert_eq!(svc.probe(&one_node), free_answer);
+    svc.read().check().unwrap();
+    let stats = svc.cache_stats();
+    assert!(stats.hits + stats.misses > 0, "cache was never consulted");
+}
+
+/// Read/write partitioning answers a mixed batch with exactly the replies
+/// sequential application produces, index-for-index.
+#[test]
+fn partitioned_batch_preserves_sequential_reply_order() {
+    let svc = service(1, 4);
+    let mut twin =
+        SchedInstance::new(table2_graph(1, &mut UidGen::new()), PruneConfig::default());
+    let t7 = JobSpec::nodes_sockets_cores(1, 2, 16);
+    let mut ops: Vec<SchedOp> = Vec::new();
+    // read run (distinct specs -> true fan-out), write run, read run, ...
+    for nodes in 1..=5u64 {
+        ops.push(SchedOp::Probe {
+            spec: JobSpec::nodes_sockets_cores(nodes, 2, 16),
+        });
+    }
+    ops.push(SchedOp::MatchAllocate { spec: t7.clone() });
+    ops.push(SchedOp::MatchAllocate { spec: t7.clone() });
+    ops.push(SchedOp::Probe { spec: t7.clone() });
+    ops.push(SchedOp::FreeJob { job: JobId(0) });
+    ops.push(SchedOp::Probe { spec: t7.clone() });
+    ops.push(SchedOp::FreeJob { job: JobId(99) }); // fails in place
+    ops.push(SchedOp::Probe { spec: t7 });
+
+    let par = svc.apply_batch(&ops);
+    let seq = twin.apply_batch(&ops);
+    assert_eq!(par.len(), seq.len());
+    for (i, (p, s)) in par.iter().zip(&seq).enumerate() {
+        match (p, s) {
+            (
+                SchedReply::Allocated {
+                    job: j1,
+                    subgraph: g1,
+                    ..
+                },
+                SchedReply::Allocated {
+                    job: j2,
+                    subgraph: g2,
+                    ..
+                },
+            ) => {
+                assert_eq!(j1, j2, "op {i}");
+                assert_eq!(g1, g2, "op {i}");
+            }
+            _ => assert_eq!(p, s, "op {i}"),
+        }
+    }
+    svc.read().check().unwrap();
+    twin.check().unwrap();
+}
+
+/// Regression (error-path invalidation): `AcceptGrant` that splices the
+/// subgraph and THEN fails (unknown job) has mutated the graph — the epoch
+/// must advance so the pre-grow probe entry cannot be served. Before the
+/// epoch model, a result cache keyed on anything weaker (e.g. "last op
+/// succeeded") would keep answering from the pre-grow graph.
+#[test]
+fn failed_grow_invalidates_stale_probe_entries() {
+    let svc = service(4, 2); // 1 node
+    let two_nodes = JobSpec::nodes_sockets_cores(2, 2, 16);
+    // cache a negative answer: only one node exists
+    let before = svc.probe(&two_nodes);
+    assert_eq!(before.as_error().unwrap().code, code::NO_MATCH);
+    // repeat is served consistently (same epoch)
+    assert_eq!(svc.probe(&two_nodes), before);
+    let epoch_before = svc.epoch();
+
+    // mint a grant of node0+node1 from a 2-node donor; node0 is the
+    // identity, node1 splices in — then charging JobId(999) fails
+    let mut donor =
+        SchedInstance::new(table2_graph(3, &mut UidGen::new()), PruneConfig::default());
+    let grant = donor
+        .match_only(&two_nodes)
+        .map(|m| Jgf::from_selection(&donor.graph, &m.selection))
+        .unwrap();
+    let reply = svc.apply(&SchedOp::AcceptGrant {
+        subgraph: grant,
+        job: Some(JobId(999)),
+    });
+    assert_eq!(reply.as_error().unwrap().code, code::GROW_FAILED);
+
+    // the failed op mutated the graph, so the epoch moved...
+    assert!(svc.epoch() > epoch_before, "failed grow must bump the epoch");
+    // ...and the same probe now sees the spliced (free) node1: feasible.
+    // A stale cache hit would have repeated `before`.
+    let after = svc.probe(&two_nodes);
+    assert!(
+        matches!(after, SchedReply::Probed { .. }),
+        "stale probe entry served after failed grow: {after:?}"
+    );
+    svc.read().check().unwrap();
+}
+
+/// Mutating ops that fail WITHOUT touching the graph may keep the epoch —
+/// and then the cached entries they did not invalidate are still accurate.
+#[test]
+fn clean_failures_keep_accurate_cache_entries() {
+    let svc = service(4, 2);
+    let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+    let first = svc.probe(&spec);
+    assert!(matches!(first, SchedReply::Probed { .. }));
+    // freeing an unknown job fails before any graph write
+    let r = svc.apply(&SchedOp::FreeJob { job: JobId(42) });
+    assert_eq!(r.as_error().unwrap().code, code::SHRINK_FAILED);
+    // the entry (if retained) answers identically; either way the reply
+    // must equal the quiescent truth
+    assert_eq!(svc.probe(&spec), first);
+    svc.read().check().unwrap();
+}
+
+/// Many threads hammering the single-probe cached path on a static graph:
+/// all answers identical, and after the first traversal the cache absorbs
+/// (nearly) everything.
+#[test]
+fn concurrent_identical_probes_share_one_answer() {
+    let svc = service(0, 4);
+    let spec = JobSpec::nodes_sockets_cores(64, 2, 16);
+    let expected = svc.probe(&spec);
+    assert!(matches!(expected, SchedReply::Probed { .. }));
+    let mut threads = Vec::new();
+    for _ in 0..8 {
+        let svc = svc.clone();
+        let spec = spec.clone();
+        let expected = expected.clone();
+        threads.push(std::thread::spawn(move || {
+            for _ in 0..100 {
+                assert_eq!(svc.probe(&spec), expected);
+            }
+        }));
+    }
+    for t in threads {
+        t.join().expect("prober panicked");
+    }
+    let stats = svc.cache_stats();
+    assert!(stats.hits >= 800, "cache barely used: {stats:?}");
+}

@@ -205,7 +205,7 @@ fn prop_grow_shrink_identity() {
                     .build(&mut uids),
                 PruneConfig::default(),
             );
-            let donor_inst = SchedInstance::new(donor, PruneConfig::default());
+            let mut donor_inst = SchedInstance::new(donor, PruneConfig::default());
             let m = donor_inst
                 .match_only(&JobSpec::nodes_sockets_cores(nodes, sockets, cores))
                 .map_err(|e| e.to_string())?;

@@ -299,7 +299,7 @@ fn aggregates_consistent_under_mixed_sequences() {
 /// against one instance leave the scratch footprint exactly as warmed.
 #[test]
 fn scratch_footprint_stable_over_100_matches() {
-    let inst = SchedInstance::new(
+    let mut inst = SchedInstance::new(
         ClusterSpec::new("c", 16, 2, 16).build(&mut UidGen::new()),
         PruneConfig::default(),
     );

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
-# One-entrypoint verify: tier-1 build + tests, then a hotpath bench smoke
-# (1 warmup / 5 iters) that also refreshes BENCH_hotpath.json at the repo
-# root, then a regression gate: any `batch/*` row whose median regresses
-# >20% vs the committed BENCH_hotpath.json fails the run. Builders and CI
-# both invoke this.
+# One-entrypoint verify: tier-1 build + tests, a rustdoc build that treats
+# warnings as errors (missing docs, broken intra-doc links), then a hotpath
+# bench smoke (1 warmup / 5 iters) that also refreshes BENCH_hotpath.json
+# at the repo root, then a regression gate: any `batch/*` row whose median
+# regresses >20% vs the committed BENCH_hotpath.json fails the run.
+# Builders and CI both invoke this.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -12,6 +13,9 @@ cargo build --release
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+echo "== rustdoc: cargo doc --no-deps (zero warnings required) =="
+RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" cargo doc --no-deps
 
 echo "== hotpath bench smoke (--smoke --json) =="
 baseline="$(mktemp)"
