@@ -8,13 +8,19 @@
 //! pools of 1/2/4 vs. the sequential baseline, per-op seconds), and the
 //! `cached-probe/` pair (epoch-keyed probe cache hit vs. cold). Used by
 //! the performance pass (EXPERIMENTS.md §Perf, PERF.md) to measure
-//! before/after each optimization.
+//! before/after each optimization. The `shard/` family measures the
+//! intra-match sharded traversal (one T7 match split across top-level node
+//! subtrees, PERF.md PR 5) and `cached-probe/precheck_T1@L0` the
+//! count-only MatchAllocate pre-check served from the probe cache.
 //!
 //! Flags (after `cargo bench --bench hotpath --`):
-//!   --json    write `BENCH_hotpath.json` at the repo root (the perf
-//!             trajectory file successive PRs diff; scripts/verify.sh
-//!             gates `batch/*` medians against the committed copy)
-//!   --smoke   1 warmup / 5 iters per case (CI smoke via scripts/verify.sh)
+//!   --json       write `BENCH_hotpath.json` at the repo root (the perf
+//!                trajectory file successive PRs diff; scripts/verify.sh
+//!                gates `batch/*` medians against the committed copy)
+//!   --smoke      1 warmup / 5 iters per case (CI smoke via scripts/verify.sh)
+//!   --threads N  top of the `shard/*` ladder (default 4): rows are
+//!                s2, s4, ... up to N (powers of two plus N itself), and
+//!                the shard service's pool is sized to N
 
 use fluxion::jobspec::table1_jobspec;
 use fluxion::resource::builder::{table2_graph, UidGen};
@@ -29,6 +35,15 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let smoke = args.iter().any(|a| a == "--smoke");
     let json = args.iter().any(|a| a == "--json");
+    // `--threads N`: top of the shard ladder + shard pool size (default 4,
+    // the acceptance runner's core floor)
+    let threads = args
+        .iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n >= 2)
+        .unwrap_or(4);
     let (warm, iters) = if smoke { (1, 5) } else { (5, 200) };
     let (gwarm, giters) = if smoke { (1, 5) } else { (3, 100) };
     let mut report = BenchReport::new();
@@ -256,6 +271,81 @@ fn main() {
     svc.probe(&t1); // warm the entry
     let s = run_simple(warm, iters, || assert!(!svc.probe(&t1).is_error()));
     report.row("cached-probe/hit_T1@L0", &s);
+
+    // 8. intra-match sharded traversal (`shard/` family, PERF.md PR 5):
+    //    ONE T7 match whose candidate scan splits across top-level node
+    //    subtrees. Measured where sharding has headroom — a fragmented,
+    //    pruning-weak graph: every node except the last has one core
+    //    allocated, and with no tracked types the per-node aggregate
+    //    reject is unavailable, so the sequential scan walks ~35 vertices
+    //    into all 128 node subtrees before succeeding at node127 (~4.5k
+    //    visits). That is exactly the paper's wide-graph regime (§5.2.3):
+    //    when pruning CAN reject at the node vertex, the scan is already
+    //    O(high-level resources) and sharding it buys nothing — which is
+    //    why the K=1 bail exists. `seq` probes through the sequential
+    //    service path on the same graph + cache-clear discipline, so the
+    //    sN:seq ratio isolates split/merge overhead vs. scan-width win.
+    let mut frag = SchedInstance::new(
+        table2_graph(0, &mut UidGen::new()),
+        fluxion::sched::PruneConfig { tracked: vec![] },
+    );
+    let frag_victims: Vec<_> = (0..127)
+        .map(|i| {
+            frag.graph
+                .lookup_path(&format!("/cluster0/node{i}/socket0/core0"))
+                .expect("L0 core path")
+        })
+        .collect();
+    let frag_prune = frag.prune.clone();
+    frag.allocs
+        .allocate(&mut frag.graph, &frag_prune, frag_victims)
+        .expect("fragment L0");
+    let shard_svc = SchedService::with_workers(frag, threads);
+    let s = run_simple(warm, iters, || {
+        shard_svc.clear_cache();
+        assert!(!shard_svc.probe(&t7).is_error());
+    });
+    report.row("shard/match_T7@L0/seq", &s);
+    let mut ladder: Vec<usize> = Vec::new();
+    let mut k = 2usize;
+    while k <= threads {
+        ladder.push(k);
+        k *= 2;
+    }
+    if ladder.last() != Some(&threads) {
+        ladder.push(threads);
+    }
+    for &k in &ladder {
+        let s = run_simple(warm, iters, || {
+            shard_svc.clear_cache();
+            assert!(!shard_svc.probe_sharded(&t7, k).is_error());
+        });
+        report.row(&format!("shard/match_T7@L0/s{k}"), &s);
+    }
+
+    // 9. count-only pre-check admission (`cached-probe/precheck_T1@L0`):
+    //    MatchAllocate of a spec the probe cache knows is infeasible at
+    //    the current epoch — rejected without the write lock or a
+    //    traversal. Setup saturates L0 so T1 (64 nodes) is infeasible and
+    //    the negative probe answer is warm; the rejection never mutates,
+    //    so the entry stays valid across iterations. Compare against
+    //    cached-probe/hit_T1@L0 (same cache, probe-op path).
+    let pre_svc = SchedService::with_workers(
+        SchedInstance::new(table2_graph(0, &mut UidGen::new()), PruneConfig::default()),
+        2,
+    );
+    let everything = fluxion::jobspec::JobSpec::nodes_sockets_cores(128, 2, 16);
+    let SchedReply::Allocated { .. } = pre_svc.apply(&SchedOp::MatchAllocate { spec: everything })
+    else {
+        panic!("saturating L0 failed");
+    };
+    assert!(pre_svc.probe(&t1).is_error()); // warm the negative entry
+    let pre_op = SchedOp::MatchAllocate { spec: t1.clone() };
+    let s = run_simple(warm, iters, || {
+        let r = pre_svc.apply(&pre_op);
+        assert!(r.is_error());
+    });
+    report.row("cached-probe/precheck_T1@L0", &s);
 
     if json {
         let path = "BENCH_hotpath.json";

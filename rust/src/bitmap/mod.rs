@@ -76,6 +76,20 @@ impl BitSet {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
 
+    /// OR every bit of `other` into `self`, growing (never shrinking) the
+    /// backing words to cover `other`. One word-wise pass — this is the
+    /// merge primitive of the sharded match path
+    /// (`sched::matcher::run_shard` seeds each shard-local selection from
+    /// the dispatcher's already-merged set with it).
+    pub fn union_with(&mut self, other: &BitSet) {
+        if self.words.len() < other.words.len() {
+            self.words.resize(other.words.len(), 0);
+        }
+        for (w, o) in self.words.iter_mut().zip(&other.words) {
+            *w |= *o;
+        }
+    }
+
     /// Backing word count (capacity telemetry for scratch-reuse tests).
     pub fn words_len(&self) -> usize {
         self.words.len()
@@ -244,6 +258,30 @@ mod tests {
         // ensure never shrinks
         b.ensure(10);
         assert_eq!(b.words_len(), 3);
+    }
+
+    #[test]
+    fn union_with_merges_and_grows() {
+        let mut a = BitSet::new();
+        a.ensure(64);
+        a.set(3);
+        let mut b = BitSet::new();
+        b.ensure(130);
+        b.set(3);
+        b.set(129);
+        a.union_with(&b);
+        assert!(a.get(3) && a.get(129));
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.words_len(), 3, "union grows to cover the other set");
+        // union with a smaller set neither shrinks nor clears
+        let small = BitSet::new();
+        a.union_with(&small);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.words_len(), 3);
+        // self-union idempotence via an equal set
+        let c = a.clone();
+        a.union_with(&c);
+        assert_eq!(a.count(), 2);
     }
 
     #[test]

@@ -438,10 +438,15 @@ pub enum SchedReply {
         visited: usize,
     },
     /// `Probe` succeeded: `vertices` would be selected. Probes served from
-    /// a result cache repeat the originally measured counts (the values
-    /// are a function of graph state, which the epoch pins).
+    /// a result cache repeat the originally measured counts. `vertices` is
+    /// a function of graph state, which the epoch pins; `visited` is a
+    /// **cost metric of the path that computed the entry** — a sharded
+    /// traversal (`SchedService::probe_sharded`) reports an upper bound on
+    /// the sequential count, and either path may have warmed the shared
+    /// cache, so never branch on `visited` for determinism.
     Probed {
-        /// Vertices visited by the match traversal.
+        /// Vertices visited by the traversal that computed this reply
+        /// (sequential count, or the sharded upper bound — see above).
         visited: usize,
         /// Vertices the request would select.
         vertices: usize,

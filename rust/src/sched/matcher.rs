@@ -22,7 +22,25 @@
 //! The per-spec compile ([`compile_spec_into`]) and the traversal
 //! ([`match_compiled`]) are separate halves so batched submission
 //! ([`crate::sched::SchedInstance::apply_batch`]) can compile once per
-//! distinct spec and traverse once per op.
+//! distinct spec and traverse once per op. The compiled tables live in a
+//! standalone [`CompiledSpec`] inside the scratch so the sharded path can
+//! share one compile across every shard scan.
+//!
+//! §Sharding: one match's candidate scan can also be **split across the
+//! root's child subtrees** (the ROADMAP's "parallel per-node match").
+//! Pruning aggregates are a function of each subtree alone, candidates of
+//! one request level form an antichain (disjoint subtrees), and a shard
+//! never reads state outside its contiguous child range — so K shard scans
+//! ([`run_shard`]) against shard-local scratches plus a deterministic
+//! shard-order merge ([`traverse_sharded`]) select a set **bit-identical**
+//! to the sequential scan: shard k+1's surplus candidates are consumed
+//! only after shard k's are exhausted, preserving first-fit order. The
+//! executor that fans shards out is injected (`SchedService` supplies its
+//! shard worker pool; tests use [`match_resources_sharded`]'s inline
+//! loop), keeping this module thread-free. `visited` counts are the one
+//! non-identical output: surplus shards scan past the point where the
+//! sequential scan would have stopped, so the sharded cost metric is an
+//! upper bound on the sequential one.
 
 use std::fmt;
 
@@ -68,14 +86,14 @@ impl fmt::Display for MatchFail {
 
 impl std::error::Error for MatchFail {}
 
-/// Reusable per-match state. One instance per scheduler thread (each
-/// `SchedInstance` owns one); after warm-up no match performs heap
-/// allocation in the traversal loop — buffers only ever grow.
+/// The per-spec compiled tables — everything a traversal needs that depends
+/// only on (spec, graph type table, prune config), none of it on allocation
+/// state. Split out of the traversal scratch so the sharded path can share
+/// **one** compile across every shard's scan: each shard borrows the
+/// dispatcher's `CompiledSpec` read-only while running against its own
+/// shard-local traversal state.
 #[derive(Debug, Default)]
-pub struct MatchScratch {
-    /// Vertices tentatively selected in this match (they are not yet marked
-    /// in the graph, so the traversal itself must avoid double-picking).
-    selected: BitSet,
+pub struct CompiledSpec {
     /// Per request node: interned type id (`NO_TYPE` when unknown).
     req_tid: Vec<u16>,
     /// Per request node × pruning slot: tracked-type demand of ONE
@@ -84,8 +102,45 @@ pub struct MatchScratch {
     /// Per request node: size of its request subtree, so a node's children
     /// sit at consecutive `ix + 1`, `ix + 1 + subtree[ix+1]`, ... indices.
     subtree: Vec<usize>,
+}
+
+/// Reusable buffers for shard planning (see [`traverse_sharded`]): the
+/// computed contiguous child ranges plus the DFS stack used to weigh each
+/// top-level subtree. Plan state is recomputed per sharded call — it is
+/// deliberately NOT cached across calls, because one thread-local scratch
+/// serves many graphs (the same aliasing trap the PR 1 pointer-keyed memo
+/// fell into). Balance only affects speed, never the selection: the merge
+/// is order-preserving for ANY contiguous partition.
+#[derive(Debug, Default)]
+struct PlanBuf {
+    /// Contiguous `[lo, hi)` ranges over the root's child list, in order.
+    ranges: Vec<(u32, u32)>,
+    /// Reused DFS stack for subtree weighing.
+    stack: Vec<VertexId>,
+    /// Per top-level child: subtree vertex count.
+    weights: Vec<usize>,
+}
+
+/// Reusable per-match state. One instance per scheduler thread (each
+/// `SchedInstance` owns one); after warm-up no match performs heap
+/// allocation in the traversal loop — buffers only ever grow.
+#[derive(Debug, Default)]
+pub struct MatchScratch {
+    /// Vertices tentatively selected in this match (they are not yet marked
+    /// in the graph, so the traversal itself must avoid double-picking).
+    /// In a shard scan this starts as a copy of the dispatcher's merged
+    /// selection (earlier top-level requests), shard-local from there.
+    selected: BitSet,
+    /// Per-spec compiled tables (see [`CompiledSpec`]).
+    compiled: CompiledSpec,
     /// Selection buffer filled during traversal.
     out: Vec<VertexId>,
+    /// Shard scans only: `out` offset after each accepted top-level
+    /// candidate, so the merge can truncate surplus at candidate
+    /// granularity. Untouched on the sequential path.
+    ends: Vec<usize>,
+    /// Shard-planning buffers (sharded dispatcher only).
+    plan: PlanBuf,
 }
 
 /// Capacity snapshot of a [`MatchScratch`] — used by tests to prove steady
@@ -123,9 +178,9 @@ impl MatchScratch {
     pub fn footprint(&self) -> ScratchFootprint {
         ScratchFootprint {
             selected_words: self.selected.words_len(),
-            req_capacity: self.req_tid.capacity(),
-            demand_capacity: self.demand.capacity(),
-            subtree_capacity: self.subtree.capacity(),
+            req_capacity: self.compiled.req_tid.capacity(),
+            demand_capacity: self.compiled.demand.capacity(),
+            subtree_capacity: self.compiled.subtree.capacity(),
             out_capacity: self.out.capacity(),
         }
     }
@@ -177,6 +232,11 @@ struct Ctx<'a> {
     req_tid: &'a [u16],
     demand: &'a [i64],
     subtree: &'a [usize],
+    /// `out` offset after each accepted candidate of the request node at
+    /// `top_ix` — the shard merge's truncation boundaries. The sequential
+    /// path sets `top_ix = usize::MAX` so nothing is ever recorded.
+    ends: &'a mut Vec<usize>,
+    top_ix: usize,
 }
 
 impl Ctx<'_> {
@@ -214,7 +274,7 @@ fn satisfy(
 ) -> bool {
     let mut found = 0u64;
     let start = out.len();
-    if collect(ctx, out, scope, req, ix, &mut found) {
+    if collect(ctx, out, scope, req, ix, &mut found, 0, usize::MAX) {
         true
     } else {
         // roll back tentative selections from this request level
@@ -226,9 +286,12 @@ fn satisfy(
     }
 }
 
-/// DFS over `scope`'s children; candidates are vertices of the requested
-/// type, other types are descended through. Returns true once
-/// `found == req.count`.
+/// DFS over `scope`'s children restricted to the index range `[lo, hi)`
+/// (`usize::MAX` = all; recursion always descends the full child list —
+/// only a shard's *top-level* loop is range-limited); candidates are
+/// vertices of the requested type, other types are descended through.
+/// Returns true once `found == req.count`.
+#[allow(clippy::too_many_arguments)]
 fn collect(
     ctx: &mut Ctx,
     out: &mut Vec<VertexId>,
@@ -236,10 +299,13 @@ fn collect(
     req: &ResourceReq,
     ix: usize,
     found: &mut u64,
+    lo: usize,
+    hi: usize,
 ) -> bool {
     let want = ctx.req_tid[ix];
     let nchild = ctx.g.children_of(scope).len();
-    for i in 0..nchild {
+    let hi = hi.min(nchild);
+    for i in lo..hi {
         let child = ctx.g.children_of(scope)[i];
         ctx.visited += 1;
         if ctx.g.vertex(child).tid.0 == want {
@@ -265,6 +331,11 @@ fn collect(
             }
             if ok {
                 *found += 1;
+                if ix == ctx.top_ix {
+                    // shard scan: remember where this candidate's segment
+                    // ends so the merge can truncate surplus exactly here
+                    ctx.ends.push(out.len());
+                }
                 if *found == req.count {
                     return true;
                 }
@@ -280,7 +351,7 @@ fn collect(
             if !ctx.prune_ok(child, ix) {
                 continue;
             }
-            if collect(ctx, out, child, req, ix, found) {
+            if collect(ctx, out, child, req, ix, found, 0, usize::MAX) {
                 return true;
             }
         }
@@ -307,18 +378,18 @@ pub fn compile_spec_into(
 ) {
     let tracked = cfg.resolve(g.types());
     let nslots = cfg.nslots();
-    scratch.req_tid.clear();
-    scratch.demand.clear();
-    scratch.subtree.clear();
+    scratch.compiled.req_tid.clear();
+    scratch.compiled.demand.clear();
+    scratch.compiled.subtree.clear();
     for req in &spec.resources {
         compile_req(
             req,
             g.types(),
             &tracked,
             nslots,
-            &mut scratch.req_tid,
-            &mut scratch.demand,
-            &mut scratch.subtree,
+            &mut scratch.compiled.req_tid,
+            &mut scratch.compiled.demand,
+            &mut scratch.compiled.subtree,
         );
     }
 }
@@ -339,22 +410,27 @@ fn traverse_compiled(
     scratch.selected.ensure(g.arena_len());
     scratch.selected.clear_all();
     scratch.out.clear();
+    // the sequential path never reads `ends`, but the scratch is shared
+    // with the sharded path — don't leave another call's boundaries behind
+    scratch.ends.clear();
 
     let MatchScratch {
         selected,
-        req_tid,
-        demand,
-        subtree,
+        compiled,
         out,
+        ends,
+        ..
     } = scratch;
     let mut ctx = Ctx {
         g,
         nslots,
         visited: 1,
         selected,
-        req_tid: req_tid.as_slice(),
-        demand: demand.as_slice(),
-        subtree: subtree.as_slice(),
+        req_tid: compiled.req_tid.as_slice(),
+        demand: compiled.demand.as_slice(),
+        subtree: compiled.subtree.as_slice(),
+        ends,
+        top_ix: usize::MAX,
     };
     let mut ix = 0usize;
     for req in &spec.resources {
@@ -422,6 +498,301 @@ pub fn match_resources(
 ) -> Result<MatchResult, MatchFail> {
     let mut scratch = MatchScratch::new();
     match_resources_in(g, cfg, spec, &mut scratch)
+}
+
+// ---- intra-match sharding ---------------------------------------------------
+
+/// One top-level request's shard fan-out, handed to the executor: the graph,
+/// the dispatcher's compiled tables and already-merged selection (both
+/// borrowed read-only by every shard), the request node being scanned, and
+/// the contiguous child ranges. The executor must return exactly one
+/// [`ShardScan`] per range, **in range order** — the merge's first-fit
+/// guarantee depends on it.
+pub struct ShardJob<'a> {
+    /// The graph under match (read-only for the whole fan-out).
+    pub g: &'a ResourceGraph,
+    /// Pruning slot count of the active config.
+    pub nslots: usize,
+    /// Compiled per-spec tables, shared by every shard.
+    pub compiled: &'a CompiledSpec,
+    /// Merged selection of earlier top-level requests; each shard seeds its
+    /// local selection from this.
+    pub base_selected: &'a BitSet,
+    /// The top-level request node being scanned.
+    pub req: &'a ResourceReq,
+    /// Compiled index of `req` (its row base in the demand table).
+    pub ix: usize,
+    /// Contiguous `[lo, hi)` ranges over the root's children, in order.
+    pub ranges: &'a [(u32, u32)],
+}
+
+/// What one shard scan produced: up to `req.count` accepted candidates from
+/// its child range, in DFS order.
+#[derive(Debug, Clone, Default)]
+pub struct ShardScan {
+    /// Accepted top-level candidates (== `ends.len()`).
+    pub found: u64,
+    /// Shard-local tentative selection, DFS order (candidate segments
+    /// back-to-back, each candidate followed by its nested picks).
+    pub out: Vec<VertexId>,
+    /// `out` offset after each accepted candidate — the merge truncates
+    /// surplus at these boundaries.
+    pub ends: Vec<usize>,
+    /// Vertices this shard visited (cost metric; sums across shards to an
+    /// upper bound on the sequential scan's count).
+    pub visited: usize,
+}
+
+/// Partition the root's children into at most `shards` contiguous ranges
+/// balanced by subtree vertex count (one iterative DFS per child, stack
+/// reused). Never emits an empty range; emits fewer ranges than requested
+/// when the root has fewer children.
+///
+/// The weighing walk is O(total vertices) per plan — deliberate: the
+/// sharded path is opt-in for the wide-scan regime where the scan itself
+/// is O(n) and dwarfs the walk (PERF.md's cost model). In prune-strong
+/// regimes where the sequential scan is already O(root children), planning
+/// would cost more than the scan — callers belong on the K=1 sequential
+/// path there, not on a cheaper plan.
+fn plan_shards(g: &ResourceGraph, root: VertexId, shards: usize, plan: &mut PlanBuf) {
+    plan.ranges.clear();
+    let n = g.children_of(root).len();
+    if n == 0 {
+        return;
+    }
+    let k = shards.clamp(1, n);
+    if k == 1 {
+        plan.ranges.push((0, n as u32));
+        return;
+    }
+    plan.weights.clear();
+    let mut total = 0usize;
+    for i in 0..n {
+        let child = g.children_of(root)[i];
+        let mut w = 0usize;
+        plan.stack.clear();
+        plan.stack.push(child);
+        while let Some(v) = plan.stack.pop() {
+            w += 1;
+            for &cc in g.children_of(v) {
+                plan.stack.push(cc);
+            }
+        }
+        plan.weights.push(w);
+        total += w;
+    }
+    let target = total.div_ceil(k);
+    let mut lo = 0usize;
+    let mut acc = 0usize;
+    for i in 0..n {
+        acc += plan.weights[i];
+        // shards still owed after the one being built
+        let remaining_shards = k - plan.ranges.len() - 1;
+        let children_left = n - i - 1;
+        // close the current range once it carries its share — or when every
+        // remaining child is needed to keep the remaining shards non-empty
+        if remaining_shards > 0 && (acc >= target || children_left == remaining_shards) {
+            plan.ranges.push((lo as u32, (i + 1) as u32));
+            lo = i + 1;
+            acc = 0;
+        }
+    }
+    plan.ranges.push((lo as u32, n as u32));
+    debug_assert!(plan.ranges.len() <= k);
+    debug_assert_eq!(plan.ranges.last().map(|r| r.1), Some(n as u32));
+}
+
+/// Run one shard of a [`ShardJob`]: scan the child range `job.ranges[shard]`
+/// for up to `job.req.count` candidates against `scratch`'s shard-local
+/// traversal state (selection seeded from `job.base_selected`, compiled
+/// tables borrowed from the job). Identical decisions to the sequential scan
+/// restricted to that range: candidates are disjoint subtrees, so nothing a
+/// shard reads is influenced by any other shard.
+pub fn run_shard(job: &ShardJob<'_>, shard: usize, scratch: &mut MatchScratch) -> ShardScan {
+    let (lo, hi) = job.ranges[shard];
+    let root = job.g.root().expect("sharded scan requires a rooted graph");
+    let MatchScratch {
+        selected,
+        out,
+        ends,
+        ..
+    } = scratch;
+    selected.ensure(job.g.arena_len());
+    selected.clear_all();
+    selected.union_with(job.base_selected);
+    out.clear();
+    ends.clear();
+    // reborrow (not move) the scratch fields into the context so they are
+    // usable again for the copy-out below
+    let mut ctx = Ctx {
+        g: job.g,
+        nslots: job.nslots,
+        visited: 0,
+        selected: &mut *selected,
+        req_tid: &job.compiled.req_tid,
+        demand: &job.compiled.demand,
+        subtree: &job.compiled.subtree,
+        ends: &mut *ends,
+        top_ix: job.ix,
+    };
+    let mut found = 0u64;
+    // no rollback on shortfall: partial candidates are exactly what the
+    // sequential scan would have kept when reaching this range mid-request
+    collect(
+        &mut ctx,
+        out,
+        root,
+        job.req,
+        job.ix,
+        &mut found,
+        lo as usize,
+        hi as usize,
+    );
+    let visited = ctx.visited;
+    ShardScan {
+        found,
+        out: out.clone(),
+        ends: ends.clone(),
+        visited,
+    }
+}
+
+/// Sharded counterpart of the sequential traversal core behind
+/// [`match_compiled`]/[`probe_compiled`]: plan contiguous child
+/// ranges, fan each top-level request's scan out through `exec`, and merge
+/// in shard order — shard k+1's candidates are consumed only after shard
+/// k's are exhausted, so the merged selection is **bit-identical** to the
+/// sequential scan's (first-fit order preserved). Bails to the sequential
+/// path when `shards <= 1` or the plan collapses to one range (a root with
+/// one child, or none): split/merge overhead buys nothing there.
+///
+/// Caller must have compiled `spec` into `scratch` first
+/// ([`compile_spec_into`]), exactly as with [`match_compiled`].
+pub fn traverse_sharded(
+    g: &ResourceGraph,
+    cfg: &PruneConfig,
+    spec: &JobSpec,
+    scratch: &mut MatchScratch,
+    shards: usize,
+    exec: &mut dyn FnMut(&ShardJob<'_>) -> Vec<ShardScan>,
+) -> Result<usize, MatchFail> {
+    let Some(root) = g.root() else {
+        return Err(MatchFail::NoMatch { visited: 0 });
+    };
+    plan_shards(g, root, shards, &mut scratch.plan);
+    if shards <= 1 || scratch.plan.ranges.len() <= 1 {
+        return traverse_compiled(g, cfg, spec, scratch);
+    }
+    let nslots = cfg.nslots();
+    scratch.selected.ensure(g.arena_len());
+    scratch.selected.clear_all();
+    scratch.out.clear();
+    let mut visited = 1usize;
+    let mut ix = 0usize;
+    for req in &spec.resources {
+        if req.count == 0 {
+            // mirror the sequential scan, which never reports success for a
+            // zero-count request
+            return Err(MatchFail::NoMatch { visited });
+        }
+        let scans = {
+            let MatchScratch {
+                selected,
+                compiled,
+                plan,
+                ..
+            } = &*scratch;
+            let job = ShardJob {
+                g,
+                nslots,
+                compiled,
+                base_selected: selected,
+                req,
+                ix,
+                ranges: &plan.ranges,
+            };
+            exec(&job)
+        };
+        debug_assert_eq!(scans.len(), scratch.plan.ranges.len());
+        for s in &scans {
+            visited += s.visited;
+        }
+        // deterministic shard-order reduction: take whole candidates from
+        // each shard in range order until the request is satisfied
+        let mut remaining = req.count;
+        for s in &scans {
+            if remaining == 0 {
+                break;
+            }
+            let take = s.found.min(remaining);
+            if take > 0 {
+                let end = s.ends[take as usize - 1];
+                for &v in &s.out[..end] {
+                    scratch.selected.set(v.0 as usize);
+                    scratch.out.push(v);
+                }
+                remaining -= take;
+            }
+        }
+        if remaining > 0 {
+            return Err(MatchFail::NoMatch { visited });
+        }
+        ix += scratch.compiled.subtree[ix];
+    }
+    Ok(visited)
+}
+
+/// Sharded counterpart of [`probe_compiled`]: `(selected count, visited)`
+/// without the selection copy. Selection count is bit-identical to the
+/// sequential probe; `visited` is the sharded cost (an upper bound).
+pub fn probe_sharded_compiled(
+    g: &ResourceGraph,
+    cfg: &PruneConfig,
+    spec: &JobSpec,
+    scratch: &mut MatchScratch,
+    shards: usize,
+    exec: &mut dyn FnMut(&ShardJob<'_>) -> Vec<ShardScan>,
+) -> Result<(usize, usize), MatchFail> {
+    let visited = traverse_sharded(g, cfg, spec, scratch, shards, exec)?;
+    Ok((scratch.out.len(), visited))
+}
+
+/// Sharded counterpart of [`match_compiled`]: the returned selection is
+/// bit-identical to the sequential one (same set, same topological order).
+pub fn match_sharded_compiled(
+    g: &ResourceGraph,
+    cfg: &PruneConfig,
+    spec: &JobSpec,
+    scratch: &mut MatchScratch,
+    shards: usize,
+    exec: &mut dyn FnMut(&ShardJob<'_>) -> Vec<ShardScan>,
+) -> Result<MatchResult, MatchFail> {
+    let visited = traverse_sharded(g, cfg, spec, scratch, shards, exec)?;
+    let mut selection = scratch.out.as_slice().to_vec();
+    sort_topological(g, &mut selection);
+    Ok(MatchResult { selection, visited })
+}
+
+/// One-shot sharded match running every shard inline on the calling thread
+/// (one shard-local scratch reused serially) — the deterministic reference
+/// the oracle tests compare against, and the single-threaded fallback.
+/// Concurrent fan-out lives in `crate::sched::SchedService`, which supplies
+/// a pooled executor instead.
+pub fn match_resources_sharded(
+    g: &ResourceGraph,
+    cfg: &PruneConfig,
+    spec: &JobSpec,
+    shards: usize,
+) -> Result<MatchResult, MatchFail> {
+    let mut scratch = MatchScratch::new();
+    let mut shard_scratch = MatchScratch::new();
+    compile_spec_into(g, cfg, spec, &mut scratch);
+    let mut exec = |job: &ShardJob<'_>| -> Vec<ShardScan> {
+        (0..job.ranges.len())
+            .map(|s| run_shard(job, s, &mut shard_scratch))
+            .collect()
+    };
+    match_sharded_compiled(g, cfg, spec, &mut scratch, shards, &mut exec)
 }
 
 /// Order a selection parents-before-children (depth then discovery order).
@@ -595,6 +966,108 @@ mod tests {
         assert_eq!(a.selection, b.selection);
         let c = match_resources_in(&g, &cfg, &spec, &mut scratch).unwrap();
         assert_eq!(a.selection, c.selection);
+    }
+
+    /// Sharded selection is bit-identical to the sequential scan, across
+    /// shard widths, on free and fragmented graphs.
+    #[test]
+    fn sharded_selection_bit_identical_to_sequential() {
+        let mut g = table2_graph(1, &mut UidGen::new()); // 8 nodes
+        let cfg = ready(&mut g);
+        let mut t = AllocTable::new();
+        // fragment: take 2 cores of node1's socket0 and all of node3
+        let frag: Vec<_> = (0..2)
+            .map(|i| {
+                g.lookup_path(&format!("/cluster0/node1/socket0/core{i}"))
+                    .unwrap()
+            })
+            .collect();
+        t.allocate(&mut g, &cfg, frag).unwrap();
+        let node3 = g.lookup_path("/cluster0/node3").unwrap();
+        let node3_all = g.dfs(node3);
+        t.allocate(&mut g, &cfg, node3_all).unwrap();
+        for spec in [
+            table1_jobspec("T7"),
+            table1_jobspec("T6"),
+            table1_jobspec("T4"), // all 8 nodes: infeasible after node3 went
+            JobSpec::nodes_sockets_cores(0, 3, 16),
+            JobSpec::nodes_sockets_cores(5, 2, 16),
+        ] {
+            let seq = match_resources(&g, &cfg, &spec);
+            for k in [2usize, 3, 4, 8, 17] {
+                let sharded = match_resources_sharded(&g, &cfg, &spec, k);
+                match (&seq, &sharded) {
+                    (Ok(a), Ok(b)) => {
+                        assert_eq!(a.selection, b.selection, "spec {} k {k}", spec.dump())
+                    }
+                    (Err(_), Err(_)) => {}
+                    _ => panic!("feasibility diverged for {} at k {k}", spec.dump()),
+                }
+            }
+        }
+    }
+
+    /// `shards <= 1` (and single-child roots) bail to the sequential path —
+    /// including the `visited` cost metric, which the sharded path only
+    /// upper-bounds.
+    #[test]
+    fn sharded_k1_bails_to_sequential_exactly() {
+        let mut g = table2_graph(3, &mut UidGen::new());
+        let cfg = ready(&mut g);
+        let spec = table1_jobspec("T7");
+        let seq = match_resources(&g, &cfg, &spec).unwrap();
+        let k1 = match_resources_sharded(&g, &cfg, &spec, 1).unwrap();
+        assert_eq!(seq.selection, k1.selection);
+        assert_eq!(seq.visited, k1.visited, "k=1 must be the sequential scan");
+        // single root child: any k collapses to one range -> sequential
+        let mut g1 = table2_graph(4, &mut UidGen::new()); // 1 node
+        let cfg1 = ready(&mut g1);
+        let s = JobSpec::nodes_sockets_cores(1, 2, 16);
+        let seq1 = match_resources(&g1, &cfg1, &s).unwrap();
+        let k4 = match_resources_sharded(&g1, &cfg1, &s, 4).unwrap();
+        assert_eq!(seq1.selection, k4.selection);
+        assert_eq!(seq1.visited, k4.visited);
+    }
+
+    /// Multiple top-level requests: shard scans of request r must see the
+    /// merged selection of requests 1..r-1 (the base-selected seeding).
+    #[test]
+    fn sharded_multi_request_spec_propagates_selection() {
+        let mut g = table2_graph(3, &mut UidGen::new()); // 2 nodes
+        let cfg = ready(&mut g);
+        let sock = crate::jobspec::ResourceReq::new("socket", 1)
+            .with_child(crate::jobspec::ResourceReq::new("core", 16));
+        let spec = JobSpec::new(vec![
+            crate::jobspec::ResourceReq::new("node", 1).with_child(sock.clone()),
+            crate::jobspec::ResourceReq::new("node", 1).with_child(sock),
+        ]);
+        let seq = match_resources(&g, &cfg, &spec).unwrap();
+        for k in [2usize, 4] {
+            let sharded = match_resources_sharded(&g, &cfg, &spec, k).unwrap();
+            assert_eq!(seq.selection, sharded.selection, "k {k}");
+        }
+        // the two requests picked two DIFFERENT nodes
+        let nodes: Vec<_> = seq
+            .selection
+            .iter()
+            .filter(|&&v| g.type_name(v) == "node")
+            .collect();
+        assert_eq!(nodes.len(), 2);
+    }
+
+    /// Zero-count and degenerate inputs fail exactly like the sequential
+    /// scan (which never reports success for a zero-count request).
+    #[test]
+    fn sharded_degenerate_inputs_match_sequential() {
+        let mut g = table2_graph(3, &mut UidGen::new());
+        let cfg = ready(&mut g);
+        let zero = JobSpec::new(vec![crate::jobspec::ResourceReq::new("node", 0)]);
+        assert!(match_resources(&g, &cfg, &zero).is_err());
+        assert!(match_resources_sharded(&g, &cfg, &zero, 4).is_err());
+        let empty = ResourceGraph::new();
+        assert!(match_resources_sharded(&empty, &cfg, &table1_jobspec("T8"), 4).is_err());
+        let unknown = JobSpec::new(vec![crate::jobspec::ResourceReq::new("quantum", 1)]);
+        assert!(match_resources_sharded(&g, &cfg, &unknown, 2).is_err());
     }
 
     /// Scratch capacities stabilize: after the first match, repeated

@@ -18,8 +18,8 @@ pub mod service;
 pub use alloc::AllocTable;
 pub use instance::SchedInstance;
 pub use matcher::{
-    compile_spec_into, match_compiled, match_resources, match_resources_in, MatchFail,
-    MatchResult, MatchScratch,
+    compile_spec_into, match_compiled, match_resources, match_resources_in,
+    match_resources_sharded, MatchFail, MatchResult, MatchScratch,
 };
 pub use pruning::PruneConfig;
 pub use service::{CacheStats, SchedService, ServiceWriteGuard};

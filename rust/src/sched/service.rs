@@ -27,6 +27,22 @@
 //!   valid iff its recorded epoch equals the graph's current epoch, so any
 //!   mutation — *including one that fails halfway* — invalidates exactly
 //!   by bumping the epoch. See the invalidation rules below.
+//! - **Intra-match sharding.** One probe's candidate scan can split across
+//!   the root's child subtrees ([`SchedService::probe_sharded`], the
+//!   ROADMAP's "parallel per-node match"): a dedicated **shard pool** (one
+//!   warm scratch per worker, spawned lazily, never touching the instance
+//!   lock — see the deadlock note on the internal `ShardRun` type) runs
+//!   [`run_shard`] scans that merge into a selection bit-identical to the
+//!   sequential scan. [`SchedService::set_read_shards`] additionally routes
+//!   batched read phases that dedup to a *single* distinct spec through
+//!   this path, trading exact `visited`-metric reply parity for intra-op
+//!   parallelism (feasibility and vertex counts stay identical).
+//! - **Count-only pre-check admission.** `MatchAllocate`/`MatchGrowLocal`
+//!   through [`SchedService::apply`] consult the probe cache first: a spec
+//!   the cache knows is infeasible at the current epoch is rejected
+//!   without the write lock or a traversal, and a match that fails with
+//!   `no_match` (which mutates nothing, so the epoch is unchanged) is
+//!   admitted to the cache as a negative probe answer for the next caller.
 //!
 //! ## Cache invalidation rules
 //!
@@ -58,10 +74,15 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
 
-use crate::jobspec::JobSpec;
-use crate::rpc::proto::{SchedOp, SchedReply};
+use crate::bitmap::BitSet;
+use crate::jobspec::{JobSpec, ResourceReq};
+use crate::resource::graph::ResourceGraph;
+use crate::rpc::proto::{code, SchedOp, SchedReply};
 use crate::sched::instance::SchedInstance;
-use crate::sched::matcher::MatchScratch;
+use crate::sched::matcher::{
+    compile_spec_into, probe_sharded_compiled, run_shard, CompiledSpec, MatchScratch, ShardJob,
+    ShardScan,
+};
 
 /// Upper bound on cached probe entries; exceeding it clears the map (the
 /// cache is an epoch-window optimization, not a store — correctness never
@@ -188,17 +209,21 @@ struct Progress {
     workers: usize,
 }
 
-/// Check-out of one worker from one run, performed on drop so a panicking
-/// probe still wakes the dispatcher (which recomputes any task the worker
-/// lost) instead of hanging `apply_batch` forever.
-struct Checkout<'a>(&'a ReadRun);
+/// Check-out of one worker from one run (read-phase or shard fan-out),
+/// performed on drop so a panicking probe still wakes the dispatcher (which
+/// recomputes any task the worker lost) instead of hanging the caller
+/// forever.
+struct Checkout<'a> {
+    progress: &'a Mutex<Progress>,
+    done: &'a Condvar,
+}
 
 impl Drop for Checkout<'_> {
     fn drop(&mut self) {
-        let mut p = lock(&self.0.progress);
+        let mut p = lock(self.progress);
         p.workers -= 1;
         if p.workers == 0 {
-            self.0.done.notify_all();
+            self.done.notify_all();
         }
     }
 }
@@ -208,10 +233,63 @@ enum WorkerMsg {
     Shutdown,
 }
 
+/// One sharded candidate-scan fan-out in flight (see
+/// [`SchedService::probe_sharded`]). Carries **raw pointers** into the
+/// dispatcher's stack frame (graph, compiled tables, merged selection,
+/// request node) because shard workers are long-lived threads that cannot
+/// borrow from it.
+///
+/// # Safety contract
+///
+/// - Workers dereference the pointers only between claiming a shard index
+///   from `cursor` and incrementing `progress.completed` for that shard.
+/// - The dispatcher blocks in [`SchedService::shard_exec`] until
+///   `completed == ranges.len()` or `workers == 0`; past either point no
+///   worker dereferences them again (the cursor is exhausted — a late
+///   worker's first `fetch_add` returns an out-of-range index and it checks
+///   out without touching the pointers).
+/// - Every referent outlives the dispatcher's blocking wait: the graph and
+///   compiled tables sit behind the instance read guard / scratch borrow
+///   held across the call.
+///
+/// Shard workers deliberately **never acquire the instance `RwLock`**: the
+/// dispatcher already holds the read side for the whole fan-out, and Rust's
+/// lock blocks new readers while a writer is queued — a pool worker taking
+/// the read lock here could deadlock dispatcher → worker → queued writer →
+/// dispatcher. That is also why sharded scans run on a dedicated pool
+/// instead of the read-phase pool, whose workers do take the lock.
+struct ShardRun {
+    graph: *const ResourceGraph,
+    compiled: *const CompiledSpec,
+    base_selected: *const BitSet,
+    req: *const ResourceReq,
+    nslots: usize,
+    ix: usize,
+    ranges: Vec<(u32, u32)>,
+    cursor: AtomicUsize,
+    results: Mutex<Vec<Option<ShardScan>>>,
+    progress: Mutex<Progress>,
+    done: Condvar,
+}
+
+// SAFETY: the raw pointers are only dereferenced under the protocol
+// documented on the struct; all other fields are Send + Sync.
+unsafe impl Send for ShardRun {}
+unsafe impl Sync for ShardRun {}
+
+enum ShardMsg {
+    Run(Arc<ShardRun>),
+    Shutdown,
+}
+
 /// State shared between the service handles and the pool workers.
 struct Shared {
     inst: RwLock<SchedInstance>,
     cache: Mutex<CacheInner>,
+    /// Shard width for batched read phases that dedup to a single distinct
+    /// spec (1 = sequential, the default; see
+    /// [`SchedService::set_read_shards`]).
+    read_shards: AtomicUsize,
 }
 
 thread_local! {
@@ -272,6 +350,117 @@ impl Drop for Pool {
     }
 }
 
+/// The dedicated intra-match shard pool: like [`Pool`], threads spawn
+/// lazily on the first sharded fan-out and each owns one warm scratch —
+/// but these workers **never touch the instance lock** (see the deadlock
+/// note on [`ShardRun`]), so a service that never shards carries zero
+/// extra threads and one that does cannot interlock with queued writers.
+struct ShardPool {
+    /// Configured pool size; threads exist only after first use.
+    target: usize,
+    txs: Mutex<Vec<Sender<ShardMsg>>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ShardPool {
+    fn new(target: usize) -> ShardPool {
+        ShardPool {
+            target,
+            txs: Mutex::new(Vec::new()),
+            handles: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Spawn up to `target` shard workers if not yet running; returns the
+    /// sender list (length 0 only when `target` is 0).
+    fn ensure_spawned(&self) -> Vec<Sender<ShardMsg>> {
+        let mut txs = lock(&self.txs);
+        if txs.len() < self.target {
+            let mut handles = lock(&self.handles);
+            for i in txs.len()..self.target {
+                let (tx, rx) = channel();
+                let handle = std::thread::Builder::new()
+                    .name(format!("sched-shard-{i}"))
+                    .spawn(move || shard_worker_loop(rx))
+                    .expect("spawn sched shard worker");
+                txs.push(tx);
+                handles.push(handle);
+            }
+        }
+        txs.clone()
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        if let Ok(txs) = self.txs.lock() {
+            for tx in txs.iter() {
+                let _ = tx.send(ShardMsg::Shutdown);
+            }
+        }
+        if let Ok(mut handles) = self.handles.lock() {
+            for h in handles.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Shard worker body: one warm scratch for the thread's lifetime; claims
+/// shard indices off the run's cursor and scans them. Panic handling
+/// mirrors [`worker_loop`]: the thread survives (queued runs must still be
+/// checked out of), the scratch is replaced, and the lost shard falls
+/// through to the dispatcher's inline fallback.
+fn shard_worker_loop(rx: Receiver<ShardMsg>) {
+    let mut scratch = MatchScratch::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Run(run) => {
+                let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let _checkout = Checkout {
+                        progress: &run.progress,
+                        done: &run.done,
+                    };
+                    loop {
+                        let i = run.cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= run.ranges.len() {
+                            break;
+                        }
+                        // SAFETY: per the ShardRun contract — we claimed
+                        // shard `i`, so the dispatcher is still blocked
+                        // (completed < ranges.len()) and every referent is
+                        // alive until we bump `completed` below.
+                        let job = unsafe {
+                            ShardJob {
+                                g: &*run.graph,
+                                nslots: run.nslots,
+                                compiled: &*run.compiled,
+                                base_selected: &*run.base_selected,
+                                req: &*run.req,
+                                ix: run.ix,
+                                ranges: &run.ranges,
+                            }
+                        };
+                        let scan = run_shard(&job, i, &mut scratch);
+                        lock(&run.results)[i] = Some(scan);
+                        let mut p = lock(&run.progress);
+                        p.completed += 1;
+                        if p.completed == run.ranges.len() {
+                            run.done.notify_all();
+                        }
+                    }
+                }))
+                .is_err();
+                if panicked {
+                    // the scratch may hold a half-built traversal state
+                    scratch = MatchScratch::new();
+                }
+            }
+            ShardMsg::Shutdown => break,
+        }
+    }
+}
+
 /// Traverse `spec` against `inst` — which the caller holds a read lock on,
 /// freezing `epoch` for the whole operation (invalidation rule 2) — and
 /// record the reply in the cache stamped with that epoch. The single copy
@@ -305,7 +494,10 @@ fn worker_loop(shared: Arc<Shared>, rx: Receiver<WorkerMsg>) {
         match msg {
             WorkerMsg::Run(run) => {
                 let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    let _checkout = Checkout(&run);
+                    let _checkout = Checkout {
+                        progress: &run.progress,
+                        done: &run.done,
+                    };
                     let inst = read_lock(&shared.inst);
                     let epoch = inst.graph.epoch();
                     loop {
@@ -342,6 +534,36 @@ fn worker_loop(shared: Arc<Shared>, rx: Receiver<WorkerMsg>) {
 /// call, so a panicked peer leaves nothing half-updated worth refusing over.
 fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The single copy of the fan-out/wait protocol shared by read-phase and
+/// shard dispatch: send `msg()` to the first `fanout` senders (failed sends
+/// are subtracted from the run's expected-worker count so a dead channel
+/// never wedges the wait), then block until all `n` items are answered
+/// ("don't wait for a worker busy finishing someone else's run") or every
+/// reached worker has checked out (a dead/panicked worker's items fall
+/// through to the caller's inline fallback). For shard runs this wait is
+/// also the safety window of the `ShardRun` raw pointers: past either exit
+/// condition no worker dereferences them again.
+fn fan_out_and_wait<M>(
+    txs: &[Sender<M>],
+    fanout: usize,
+    n: usize,
+    progress: &Mutex<Progress>,
+    done: &Condvar,
+    mut msg: impl FnMut() -> M,
+) {
+    let mut failed_sends = 0usize;
+    for tx in txs.iter().take(fanout) {
+        if tx.send(msg()).is_err() {
+            failed_sends += 1;
+        }
+    }
+    let mut p = lock(progress);
+    p.workers -= failed_sends;
+    while p.completed < n && p.workers > 0 {
+        p = done.wait(p).unwrap_or_else(|e| e.into_inner());
+    }
 }
 
 fn read_lock(l: &RwLock<SchedInstance>) -> RwLockReadGuard<'_, SchedInstance> {
@@ -408,6 +630,9 @@ impl Drop for ServiceWriteGuard<'_> {
 pub struct SchedService {
     shared: Arc<Shared>,
     pool: Arc<Pool>,
+    /// Dedicated lock-free pool for intra-match shard scans (see
+    /// `ShardRun` for why it is separate from `pool`).
+    shard_pool: Arc<ShardPool>,
 }
 
 impl SchedService {
@@ -429,6 +654,7 @@ impl SchedService {
         let shared = Arc::new(Shared {
             inst: RwLock::new(inst),
             cache: Mutex::new(CacheInner::new()),
+            read_shards: AtomicUsize::new(1),
         });
         SchedService {
             shared,
@@ -437,6 +663,7 @@ impl SchedService {
                 txs: Mutex::new(Vec::new()),
                 handles: Mutex::new(Vec::new()),
             }),
+            shard_pool: Arc::new(ShardPool::new(workers)),
         }
     }
 
@@ -500,14 +727,218 @@ impl SchedService {
         })
     }
 
+    /// Serve one feasibility probe through the **sharded** intra-match
+    /// path: cache hit within the current epoch, or one traversal whose
+    /// candidate scan splits into up to `shards` contiguous top-level
+    /// subtree ranges fanned across the dedicated shard pool (see the
+    /// module docs). Falls back to the sequential [`SchedService::probe`]
+    /// traversal when `shards <= 1`, the pool size is 0, or the plan
+    /// collapses to one range.
+    ///
+    /// Feasibility and selected-vertex count are bit-identical to
+    /// [`SchedService::probe`]; the reported `visited` cost is the sharded
+    /// scan's (an upper bound on the sequential count, since surplus
+    /// shards scan past the sequential stopping point). Results enter the
+    /// same epoch-keyed cache either path.
+    pub fn probe_sharded(&self, spec: &JobSpec, shards: usize) -> SchedReply {
+        // hold the read lock across lookup, traversal, and insert, exactly
+        // like `probe` (invalidation rule 2)
+        let inst = read_lock(&self.shared.inst);
+        let epoch = inst.graph.epoch();
+        let key = probe_key(spec);
+        {
+            let mut cache = lock(&self.shared.cache);
+            cache.observe_epoch(epoch);
+            if let Some(reply) = cache.get(&key, epoch) {
+                return reply;
+            }
+        }
+        CALLER_SCRATCH.with(|s| {
+            self.sharded_probe_and_cache(&inst, &key, spec, epoch, shards, &mut s.borrow_mut())
+        })
+    }
+
+    /// Sharded twin of [`probe_and_cache`]: traverse through the shard
+    /// pool and record the reply at the epoch the caller's read lock
+    /// froze. The single copy of the sharded path's cache-coherence
+    /// sequence (both `probe_sharded` and the batched single-spec read
+    /// phase funnel through here).
+    fn sharded_probe_and_cache(
+        &self,
+        inst: &SchedInstance,
+        key: &str,
+        spec: &JobSpec,
+        epoch: u64,
+        shards: usize,
+        scratch: &mut MatchScratch,
+    ) -> SchedReply {
+        let reply = self.probe_sharded_locked(inst, spec, shards, scratch);
+        let mut cache = lock(&self.shared.cache);
+        cache.observe_epoch(epoch);
+        cache.insert(key.to_string(), epoch, reply.clone());
+        reply
+    }
+
+    /// Sharded traversal core, run while the caller holds the instance
+    /// read lock: compile once into the dispatcher scratch, then fan each
+    /// top-level request across the shard pool.
+    fn probe_sharded_locked(
+        &self,
+        inst: &SchedInstance,
+        spec: &JobSpec,
+        shards: usize,
+        scratch: &mut MatchScratch,
+    ) -> SchedReply {
+        if shards <= 1 || self.shard_pool.target == 0 {
+            return inst.probe_with(spec, scratch);
+        }
+        compile_spec_into(&inst.graph, &inst.prune, spec, scratch);
+        let mut exec = |job: &ShardJob<'_>| self.shard_exec(job);
+        match probe_sharded_compiled(&inst.graph, &inst.prune, spec, scratch, shards, &mut exec) {
+            Ok((vertices, visited)) => SchedReply::Probed { visited, vertices },
+            Err(e) => SchedReply::err(code::NO_MATCH, e.to_string()),
+        }
+    }
+
+    /// Execute one [`ShardJob`] across the shard pool: claim-by-cursor
+    /// dispatch, blocking wait until every shard is answered or every
+    /// worker has checked out, then an inline fallback for any shard the
+    /// pool lost (send failure or worker panic — the panic itself
+    /// re-raises here via `run_shard` reproducing it, or more typically the
+    /// shard just recomputes cleanly on this thread).
+    fn shard_exec(&self, job: &ShardJob<'_>) -> Vec<ShardScan> {
+        let n = job.ranges.len();
+        let txs = self.shard_pool.ensure_spawned();
+        let fanout = txs.len().min(n);
+        // probe_sharded_locked bails on a zero-target pool and
+        // traverse_sharded on single-range plans, and ensure_spawned panics
+        // rather than under-spawn — so there is always someone to dispatch
+        // to (the lost-worker fallback below still covers dead channels)
+        debug_assert!(fanout > 0);
+        let run = Arc::new(ShardRun {
+            graph: job.g as *const ResourceGraph,
+            compiled: job.compiled as *const CompiledSpec,
+            base_selected: job.base_selected as *const BitSet,
+            req: job.req as *const ResourceReq,
+            nslots: job.nslots,
+            ix: job.ix,
+            ranges: job.ranges.to_vec(),
+            cursor: AtomicUsize::new(0),
+            results: Mutex::new((0..n).map(|_| None).collect()),
+            progress: Mutex::new(Progress {
+                completed: 0,
+                workers: fanout,
+            }),
+            done: Condvar::new(),
+        });
+        // the wait inside is the other half of the ShardRun safety contract
+        fan_out_and_wait(&txs, fanout, n, &run.progress, &run.done, || {
+            ShardMsg::Run(run.clone())
+        });
+        let mut results = lock(&run.results);
+        let mut fallback: Option<MatchScratch> = None;
+        (0..n)
+            .map(|i| match results[i].take() {
+                Some(s) => s,
+                None => run_shard(job, i, fallback.get_or_insert_with(MatchScratch::new)),
+            })
+            .collect()
+    }
+
+    /// Configure the shard width for batched read phases
+    /// ([`SchedService::apply_batch`]): phases whose ops dedup to a
+    /// **single** distinct probe spec — where task-level fan-out has
+    /// nothing to parallelize — traverse it as `k` subtree shards instead
+    /// of one sequential scan. `k <= 1` (the default) keeps the exact PR 3
+    /// behavior, including reply parity with sequential `apply_batch` down
+    /// to the `visited` cost metric; `k > 1` keeps feasibility and vertex
+    /// counts identical but reports the sharded path's `visited`.
+    /// Multi-spec phases always use task-level fan-out regardless.
+    pub fn set_read_shards(&self, k: usize) {
+        self.shared.read_shards.store(k.max(1), Ordering::Relaxed);
+    }
+
+    /// Current batched-read shard width (see
+    /// [`SchedService::set_read_shards`]).
+    pub fn read_shards(&self) -> usize {
+        self.shared.read_shards.load(Ordering::Relaxed)
+    }
+
+    /// Count-only pre-check (cache admission): if the probe cache already
+    /// knows `spec` is infeasible at the current epoch, return that
+    /// negative answer in `Err` — the caller can skip the write lock
+    /// entirely. Otherwise returns the canonical cache key *if one was
+    /// built*, so a later `no_match` admission reuses it instead of
+    /// re-encoding the spec; the key build (the pre-check's only
+    /// allocation) is skipped entirely while the cache is empty.
+    fn precheck_infeasible(&self, spec: &JobSpec) -> Result<Option<String>, SchedReply> {
+        let inst = read_lock(&self.shared.inst);
+        let epoch = inst.graph.epoch();
+        let mut cache = lock(&self.shared.cache);
+        if cache.map.is_empty() {
+            return Ok(None);
+        }
+        cache.observe_epoch(epoch);
+        let key = probe_key(spec);
+        match cache.get(&key, epoch) {
+            Some(reply)
+                if reply
+                    .as_error()
+                    .map(|e| e.code == code::NO_MATCH)
+                    .unwrap_or(false) =>
+            {
+                Err(reply)
+            }
+            _ => Ok(Some(key)),
+        }
+    }
+
     /// Interpret one typed op: read-only ops take the concurrent cached
-    /// path, everything else the write side. Reply-compatible with
-    /// [`SchedInstance::apply`].
+    /// path; match-family mutating ops pass a count-only pre-check against
+    /// the probe cache (a spec known infeasible at the current epoch is
+    /// rejected without the write lock, and a fresh `no_match` failure —
+    /// which leaves the graph and epoch untouched — is admitted to the
+    /// cache as a negative probe answer); everything else takes the write
+    /// side. Reply-compatible with [`SchedInstance::apply`].
+    ///
+    /// The pre-check rejection is epoch-consistent rather than
+    /// write-instant-consistent: it is the answer the graph gave at the
+    /// moment the read lock was held, exactly like any probe — a writer
+    /// racing in between could have freed capacity. Callers that must
+    /// re-test under the write lock can send the op through
+    /// [`SchedService::write`] directly.
     pub fn apply(&self, op: &SchedOp) -> SchedReply {
         if let SchedOp::Probe { spec } = op {
             return self.probe(spec);
         }
-        self.write().apply(op)
+        // key built by the pre-check (when the cache had entries), reused
+        // by the admission insert below so the spec is encoded at most once
+        let mut precheck_key: Option<String> = None;
+        if let SchedOp::MatchAllocate { spec } | SchedOp::MatchGrowLocal { spec, .. } = op {
+            match self.precheck_infeasible(spec) {
+                Err(reject) => return reject,
+                Ok(key) => precheck_key = key,
+            }
+        }
+        let mut guard = self.write();
+        let reply = guard.apply(op);
+        if let SchedOp::MatchAllocate { spec } | SchedOp::MatchGrowLocal { spec, .. } = op {
+            let no_match = reply
+                .as_error()
+                .map(|e| e.code == code::NO_MATCH)
+                .unwrap_or(false);
+            if no_match {
+                // a failed match IS a count-only probe result: the match
+                // half runs before any mutation, so the epoch is unchanged
+                // and the entry is exact for the next pre-check
+                let epoch = guard.graph.epoch();
+                let key = precheck_key.take().unwrap_or_else(|| probe_key(spec));
+                let mut cache = lock(&self.shared.cache);
+                cache.observe_epoch(epoch);
+                cache.insert(key, epoch, reply.clone());
+            }
+        }
+        reply
     }
 
     /// Run a queue of ops, partitioned into read/write phases: maximal
@@ -582,8 +1013,16 @@ impl SchedService {
         }
         let workers = self.workers();
         if workers == 0 || tasks.len() == 1 {
+            // degenerate phase: task-level fan-out has nothing to spread.
+            // With `set_read_shards(k > 1)` a single-spec phase still uses
+            // the pool — as k subtree shards *within* the one traversal.
+            let shards = self.read_shards();
             for task in &tasks {
-                let reply = self.compute_task(task);
+                let reply = if shards > 1 && self.shard_pool.target > 0 {
+                    self.compute_task_sharded(task, shards)
+                } else {
+                    self.compute_task(task)
+                };
                 for &slot in &task.slots {
                     replies[slot] = Some(reply.clone());
                 }
@@ -610,23 +1049,9 @@ impl SchedService {
             }),
             done: Condvar::new(),
         });
-        let mut failed_sends = 0usize;
-        for tx in txs.iter().take(fanout) {
-            if tx.send(WorkerMsg::Run(run.clone())).is_err() {
-                failed_sends += 1;
-            }
-        }
-        {
-            // wake on either "all tasks answered" (don't wait for a worker
-            // that is busy finishing someone else's run) or "all workers
-            // checked out" (a dead/panicked worker's tasks fall through to
-            // the inline fallback below)
-            let mut p = lock(&run.progress);
-            p.workers -= failed_sends;
-            while p.completed < ntasks && p.workers > 0 {
-                p = run.done.wait(p).unwrap_or_else(|e| e.into_inner());
-            }
-        }
+        fan_out_and_wait(&txs, fanout, ntasks, &run.progress, &run.done, || {
+            WorkerMsg::Run(run.clone())
+        });
         let mut task_replies: Vec<Option<SchedReply>> = vec![None; ntasks];
         for (ti, reply) in lock(&run.results).drain(..) {
             task_replies[ti] = Some(reply);
@@ -655,6 +1080,24 @@ impl SchedService {
                 &task.key,
                 &task.spec,
                 epoch,
+                &mut s.borrow_mut(),
+            )
+        })
+    }
+
+    /// Probe one task through the sharded intra-match path (the batched
+    /// read phases' single-spec case) and record it in the cache at the
+    /// epoch frozen by this thread's read lock.
+    fn compute_task_sharded(&self, task: &ReadTask, shards: usize) -> SchedReply {
+        let inst = read_lock(&self.shared.inst);
+        let epoch = inst.graph.epoch();
+        CALLER_SCRATCH.with(|s| {
+            self.sharded_probe_and_cache(
+                &inst,
+                &task.key,
+                &task.spec,
+                epoch,
+                shards,
                 &mut s.borrow_mut(),
             )
         })
@@ -830,6 +1273,155 @@ mod tests {
         // and probes still answer correctly
         assert!(matches!(svc.probe(&spec), SchedReply::Probed { .. }));
         svc.read().check().unwrap();
+    }
+
+    /// Sharded probes agree with sequential probes on feasibility and
+    /// selected-vertex count (the bit-identical selection surfaced through
+    /// the probe reply), for widths below, at, and above the pool size —
+    /// and enter the same cache.
+    #[test]
+    fn probe_sharded_matches_sequential_feasibility_and_count() {
+        let svc = service(1, 4); // 8 nodes
+        for nodes in 1..=8u64 {
+            let spec = JobSpec::nodes_sockets_cores(nodes, 2, 16);
+            let seq = svc.probe(&spec);
+            let SchedReply::Probed { vertices, .. } = seq else {
+                panic!("expected Probed, got {seq:?}");
+            };
+            for shards in [2usize, 4, 8, 32] {
+                svc.clear_cache();
+                let sh = svc.probe_sharded(&spec, shards);
+                let SchedReply::Probed {
+                    vertices: shv,
+                    visited,
+                } = sh
+                else {
+                    panic!("expected Probed, got {sh:?}");
+                };
+                assert_eq!(shv, vertices, "nodes {nodes} shards {shards}");
+                assert!(visited >= 1);
+            }
+        }
+        // infeasible spec: both paths reject
+        let too_big = JobSpec::nodes_sockets_cores(9, 2, 16);
+        svc.clear_cache();
+        assert_eq!(
+            svc.probe_sharded(&too_big, 4).as_error().unwrap().code,
+            svc.probe(&too_big).as_error().unwrap().code,
+        );
+        // a sharded result is cached: the next (sequential) probe hits it
+        svc.clear_cache();
+        let spec = JobSpec::nodes_sockets_cores(3, 2, 16);
+        let first = svc.probe_sharded(&spec, 4);
+        let hits0 = svc.cache_stats().hits;
+        assert_eq!(svc.probe(&spec), first, "cache shared across paths");
+        assert_eq!(svc.cache_stats().hits, hits0 + 1);
+        svc.read().check().unwrap();
+    }
+
+    /// `shards <= 1` (or a zero-size pool) bails to the sequential path
+    /// with exact reply parity, `visited` included.
+    #[test]
+    fn probe_sharded_k1_is_the_sequential_reply() {
+        let svc = service(1, 4);
+        let spec = table1_jobspec("T7");
+        let seq = svc.probe(&spec);
+        svc.clear_cache();
+        assert_eq!(svc.probe_sharded(&spec, 1), seq);
+        let svc0 = service(1, 0);
+        assert_eq!(svc0.probe_sharded(&spec, 4), seq);
+    }
+
+    /// Count-only pre-check admission: a `MatchAllocate` whose spec the
+    /// cache knows is infeasible at the current epoch is rejected from the
+    /// cache, without the write lock or a traversal.
+    #[test]
+    fn infeasible_match_allocate_rejected_from_cache() {
+        let svc = service(4, 1); // 1 node
+        let spec = JobSpec::nodes_sockets_cores(2, 2, 16); // needs 2 nodes
+        let probed = svc.probe(&spec);
+        assert_eq!(probed.as_error().unwrap().code, code::NO_MATCH);
+        let hits0 = svc.cache_stats().hits;
+        let r = svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() });
+        assert_eq!(r.as_error().unwrap().code, code::NO_MATCH);
+        assert_eq!(
+            svc.cache_stats().hits,
+            hits0 + 1,
+            "rejection must come from the cache"
+        );
+        // a feasible spec still allocates normally (a Probed cache entry
+        // must never short-circuit the real match)
+        let ok_spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+        assert!(matches!(svc.probe(&ok_spec), SchedReply::Probed { .. }));
+        let ok = svc.apply(&SchedOp::MatchAllocate { spec: ok_spec });
+        assert!(matches!(ok, SchedReply::Allocated { .. }), "{ok:?}");
+        svc.read().check().unwrap();
+    }
+
+    /// A fresh `no_match` MatchAllocate failure (clean: no mutation, no
+    /// epoch movement) is admitted to the probe cache, so the repeat — and
+    /// an actual probe — are both served without re-traversal; capacity
+    /// changes invalidate it through the epoch as usual.
+    #[test]
+    fn failed_match_allocate_admits_negative_probe_entry() {
+        let svc = service(4, 1); // 1 node
+        let spec = JobSpec::nodes_sockets_cores(2, 2, 16);
+        assert_eq!(svc.cache_stats().entries, 0);
+        let r = svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() });
+        assert_eq!(r.as_error().unwrap().code, code::NO_MATCH);
+        assert_eq!(svc.cache_stats().entries, 1, "failure admitted");
+        let hits0 = svc.cache_stats().hits;
+        assert_eq!(svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() }), r);
+        assert_eq!(svc.probe(&spec), r);
+        assert_eq!(svc.cache_stats().hits, hits0 + 2);
+        // grow the graph's capacity story: allocate + free bumps the epoch,
+        // so the stale negative entry cannot be served again
+        let one = JobSpec::nodes_sockets_cores(1, 2, 16);
+        let SchedReply::Allocated { job, .. } = svc.apply(&SchedOp::MatchAllocate { spec: one })
+        else {
+            panic!("expected Allocated");
+        };
+        svc.apply(&SchedOp::FreeJob { job });
+        let again = svc.apply(&SchedOp::MatchAllocate { spec });
+        assert_eq!(again.as_error().unwrap().code, code::NO_MATCH);
+        svc.read().check().unwrap();
+    }
+
+    /// With `set_read_shards`, batched read phases that dedup to a single
+    /// spec go through the sharded scan — feasibility and vertex counts
+    /// stay identical to the sequential batch, index-for-index.
+    #[test]
+    fn read_shards_batch_keeps_feasibility_parity() {
+        let svc = service(1, 4);
+        svc.set_read_shards(4);
+        assert_eq!(svc.read_shards(), 4);
+        let mut twin =
+            SchedInstance::new(table2_graph(1, &mut UidGen::new()), PruneConfig::default());
+        let t7 = table1_jobspec("T7");
+        let ops = vec![
+            SchedOp::Probe { spec: t7.clone() }, // single-spec read phase
+            SchedOp::MatchAllocate { spec: t7.clone() },
+            SchedOp::Probe { spec: t7.clone() }, // again, post-write
+            SchedOp::FreeJob { job: JobId(0) },
+            SchedOp::Probe { spec: t7 },
+        ];
+        let par = svc.apply_batch(&ops);
+        let seq = twin.apply_batch(&ops);
+        assert_eq!(par.len(), seq.len());
+        for (i, (p, s)) in par.iter().zip(&seq).enumerate() {
+            match (p, s) {
+                (
+                    SchedReply::Probed { vertices: a, .. },
+                    SchedReply::Probed { vertices: b, .. },
+                ) => assert_eq!(a, b, "op {i}"),
+                (SchedReply::Allocated { job: j1, .. }, SchedReply::Allocated { job: j2, .. }) => {
+                    assert_eq!(j1, j2, "op {i}")
+                }
+                _ => assert_eq!(p, s, "op {i}"),
+            }
+        }
+        svc.read().check().unwrap();
+        twin.check().unwrap();
     }
 
     /// A clean local-match failure through the write guard (how an

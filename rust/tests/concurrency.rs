@@ -216,6 +216,80 @@ fn clean_failures_keep_accurate_cache_entries() {
     svc.read().check().unwrap();
 }
 
+/// Sharded matches racing concurrent sequential probes and a writer that
+/// flips the graph between two known states. Every answer — from either
+/// probe path, cached or computed — must be consistent with one of those
+/// states. Replies are classified on (feasibility, vertex count) because
+/// that is the sharded path's contract: selection/count bit-identical,
+/// `visited` an upper bound (and the shared cache may legitimately hand a
+/// sharded-computed reply to a sequential prober, or vice versa).
+#[test]
+fn sharded_matches_race_concurrent_probes() {
+    let svc = service(1, 4); // L1: 8 nodes
+    let one_node = JobSpec::nodes_sockets_cores(1, 2, 16);
+    let all_nodes = JobSpec::nodes_sockets_cores(8, 2, 16);
+
+    // quiescent truths for `one_node`: feasible with 35 vertices, or NO_MATCH
+    let classify = |r: &SchedReply| -> &'static str {
+        match r {
+            SchedReply::Probed { vertices: 35, .. } => "free",
+            SchedReply::Probed { vertices, .. } => panic!("impossible vertex count {vertices}"),
+            other => {
+                assert_eq!(
+                    other.as_error().expect("probe error").code,
+                    code::NO_MATCH,
+                    "unexpected reply {other:?}"
+                );
+                "full"
+            }
+        }
+    };
+    assert_eq!(classify(&svc.probe(&one_node)), "free");
+    assert_eq!(classify(&svc.probe_sharded(&one_node, 4)), "free");
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let mut threads = Vec::new();
+    for sharded in [true, true, false, false] {
+        let svc = svc.clone();
+        let spec = one_node.clone();
+        let stop = stop.clone();
+        threads.push(std::thread::spawn(move || loop {
+            let r = if sharded {
+                svc.probe_sharded(&spec, 4)
+            } else {
+                svc.probe(&spec)
+            };
+            // classification panics inside the thread on any answer that
+            // matches neither quiescent state
+            match r {
+                SchedReply::Probed { vertices, .. } => assert_eq!(vertices, 35),
+                other => assert_eq!(other.as_error().expect("probe error").code, code::NO_MATCH),
+            }
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+        }));
+    }
+    for _ in 0..100 {
+        let SchedReply::Allocated { job, .. } = svc.apply(&SchedOp::MatchAllocate {
+            spec: all_nodes.clone(),
+        }) else {
+            panic!("writer allocation failed");
+        };
+        let freed = svc.apply(&SchedOp::FreeJob { job });
+        assert!(matches!(freed, SchedReply::Freed { .. }), "{freed:?}");
+    }
+    stop.store(true, Ordering::Relaxed);
+    for t in threads {
+        t.join().expect("prober panicked");
+    }
+    // quiescent again (writer ended freed): both paths agree on the truth
+    svc.clear_cache();
+    assert_eq!(classify(&svc.probe_sharded(&one_node, 4)), "free");
+    assert_eq!(classify(&svc.probe(&one_node)), "free");
+    svc.read().check().unwrap();
+}
+
 /// Many threads hammering the single-probe cached path on a static graph:
 /// all answers identical, and after the first traversal the cache absorbs
 /// (nearly) everything.

@@ -10,7 +10,7 @@ use fluxion::resource::builder::{ClusterSpec, UidGen};
 use fluxion::resource::graph::{ResourceGraph, VertexId};
 use fluxion::resource::jgf::Jgf;
 use fluxion::resource::ResourceType;
-use fluxion::sched::{match_resources, PruneConfig, SchedInstance};
+use fluxion::sched::{match_resources, match_resources_sharded, PruneConfig, SchedInstance};
 use fluxion::util::rng::Rng;
 
 // ---- brute-force oracle ---------------------------------------------------
@@ -168,6 +168,130 @@ fn matcher_agrees_with_bruteforce_oracle() {
             assert_selection_valid(&g, &spec, &a.selection);
         }
         fluxion::sched::pruning::check_aggregates(&g, &cfg).unwrap();
+    }
+}
+
+// ---- sharded-vs-sequential selection equality -------------------------------
+
+/// The sharded scan's selection is bit-identical to the sequential scan's
+/// on random graphs with random pre-allocations, for shard widths below,
+/// at, and above the root's child count (K > children exercises range
+/// clamping; allocation-saturated subtrees exercise empty shards that
+/// contribute zero candidates). K = 1 is the explicit sequential bail.
+#[test]
+fn sharded_selection_equals_sequential_on_random_graphs() {
+    let mut rng = Rng::new(0x5AAD ^ 0xF00D);
+    for round in 0..60 {
+        let nodes = 1 + rng.below(6) as usize;
+        let sockets = 1 + rng.below(3) as usize;
+        let cores = 1 + rng.below(4) as usize;
+        let mut g = ClusterSpec::new("c", nodes, sockets, cores).build(&mut UidGen::new());
+        let cfg = PruneConfig::default();
+        fluxion::sched::pruning::init_aggregates(&mut g, &cfg);
+
+        // random pre-allocations, node-heavy so whole subtrees go empty
+        let mut table = fluxion::sched::AllocTable::new();
+        let all_cores: Vec<VertexId> = g
+            .iter_live()
+            .filter(|&v| g.type_name(v) == "core")
+            .collect();
+        let k = rng.below(all_cores.len() as u64 + 1) as usize;
+        let picks = rng.sample_indices(all_cores.len(), k);
+        let victims: Vec<VertexId> = picks.iter().map(|&i| all_cores[i]).collect();
+        if !victims.is_empty() {
+            table.allocate(&mut g, &cfg, victims).unwrap();
+        }
+
+        let spec = JobSpec::nodes_sockets_cores(
+            rng.below(nodes as u64 + 2),
+            1 + rng.below(sockets as u64 + 1),
+            1 + rng.below(cores as u64 + 1),
+        );
+        let seq = match_resources(&g, &cfg, &spec);
+        for shards in [1usize, 2, 4, 7] {
+            let sharded = match_resources_sharded(&g, &cfg, &spec, shards);
+            match (&seq, &sharded) {
+                (Ok(a), Ok(b)) => assert_eq!(
+                    a.selection,
+                    b.selection,
+                    "round {round} K {shards} ({nodes}x{sockets}x{cores}, spec {})",
+                    spec.dump()
+                ),
+                (Err(_), Err(_)) => {}
+                _ => panic!(
+                    "round {round} K {shards}: feasibility diverged for {}",
+                    spec.dump()
+                ),
+            }
+        }
+        fluxion::sched::pruning::check_aggregates(&g, &cfg).unwrap();
+    }
+}
+
+/// Targeted empty-shard coverage: with whole node subtrees saturated, the
+/// shards covering them contribute zero candidates and the merge must pull
+/// everything from the shard holding the free tail — still bit-identical,
+/// including when K exceeds the root's child count.
+#[test]
+fn sharded_selection_survives_empty_and_clamped_shards() {
+    let mut g = ClusterSpec::new("c", 3, 2, 4).build(&mut UidGen::new());
+    let cfg = PruneConfig::default();
+    fluxion::sched::pruning::init_aggregates(&mut g, &cfg);
+    let mut table = fluxion::sched::AllocTable::new();
+    // saturate node0 and node1 entirely: their shards are empty of candidates
+    for n in 0..2 {
+        let sub = g.dfs(g.lookup_path(&format!("/c0/node{n}")).unwrap());
+        table.allocate(&mut g, &cfg, sub).unwrap();
+    }
+    for spec in [
+        JobSpec::nodes_sockets_cores(1, 2, 4),
+        JobSpec::nodes_sockets_cores(0, 2, 4), // socket-rooted (T8 shape)
+        JobSpec::nodes_sockets_cores(2, 1, 1), // needs 2 nodes: infeasible
+    ] {
+        let seq = match_resources(&g, &cfg, &spec);
+        for shards in [2usize, 3, 7, 64] {
+            let sharded = match_resources_sharded(&g, &cfg, &spec, shards);
+            match (&seq, &sharded) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.selection, b.selection, "K {shards} spec {}", spec.dump())
+                }
+                (Err(_), Err(_)) => {}
+                _ => panic!("K {shards}: feasibility diverged for {}", spec.dump()),
+            }
+        }
+    }
+}
+
+/// Non-exclusive (shared-scope) and multi-top-level-request specs through
+/// the sharded path: the merged selection of request r seeds request r+1's
+/// shard scans, and shared candidates contribute scope, not selection.
+#[test]
+fn sharded_selection_handles_shared_and_multi_request_specs() {
+    let mut g = ClusterSpec::new("c", 4, 2, 4).build(&mut UidGen::new());
+    let cfg = PruneConfig::default();
+    fluxion::sched::pruning::init_aggregates(&mut g, &cfg);
+    let shared_spec = JobSpec::new(vec![ResourceReq::new("node", 2)
+        .shared()
+        .with_child(ResourceReq::new("socket", 1).with_child(ResourceReq::new("core", 2)))]);
+    let multi_spec = JobSpec::new(vec![
+        ResourceReq::new("node", 1)
+            .with_child(ResourceReq::new("socket", 2).with_child(ResourceReq::new("core", 4))),
+        ResourceReq::new("node", 2)
+            .with_child(ResourceReq::new("socket", 1).with_child(ResourceReq::new("core", 1))),
+    ]);
+    for spec in [shared_spec, multi_spec] {
+        // (no assert_selection_valid here: its per-type totals assume
+        // exclusive requests, and the first spec's nodes are scope-only)
+        let seq = match_resources(&g, &cfg, &spec).unwrap();
+        for shards in [2usize, 3, 4, 9] {
+            let sharded = match_resources_sharded(&g, &cfg, &spec, shards).unwrap();
+            assert_eq!(
+                seq.selection,
+                sharded.selection,
+                "K {shards} spec {}",
+                spec.dump()
+            );
+        }
     }
 }
 

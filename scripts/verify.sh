@@ -2,9 +2,11 @@
 # One-entrypoint verify: tier-1 build + tests, a rustdoc build that treats
 # warnings as errors (missing docs, broken intra-doc links), then a hotpath
 # bench smoke (1 warmup / 5 iters) that also refreshes BENCH_hotpath.json
-# at the repo root, then a regression gate: any `batch/*` row whose median
-# regresses >20% vs the committed BENCH_hotpath.json fails the run.
-# Builders and CI both invoke this.
+# at the repo root, a concurrency/sharding report (printed, not gated), and
+# a regression gate: any `batch/*` row whose median regresses >20% vs the
+# committed BENCH_hotpath.json fails the run. Builders and CI both invoke
+# this. On the FIRST toolchain-equipped run there is no committed baseline:
+# the bench still writes BENCH_hotpath.json — commit it to arm the gate.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,6 +27,38 @@ if git show HEAD:BENCH_hotpath.json > "$baseline" 2>/dev/null; then
   have_baseline=1
 fi
 cargo bench --bench hotpath -- --smoke --json
+
+echo "== concurrency report (informational, not gated) =="
+python3 - BENCH_hotpath.json <<'PYEOF'
+import json, sys
+
+with open(sys.argv[1]) as f:
+    med = {r["name"]: r["median_s"] for r in json.load(f)["benchmarks"]}
+
+def ratio(a, b):
+    return med[a] / med[b] if a in med and b in med and med[b] > 0 else None
+
+print("  par/* ladder (per-op, vs sequential batch):")
+for name in sorted(n for n in med if n.startswith("par/")):
+    r = ratio(name, "par/probe_mix32@L0/seq")
+    extra = f"  ({r:.2f}x of seq)" if r is not None else ""
+    print(f"    {name}: {med[name]:.3e}s{extra}")
+
+print("  shard/* ladder (one sharded T7 match, vs sequential scan):")
+for name in sorted(n for n in med if n.startswith("shard/")):
+    r = ratio(name, "shard/match_T7@L0/seq")
+    extra = f"  ({r:.2f}x of seq)" if r is not None else ""
+    print(f"    {name}: {med[name]:.3e}s{extra}")
+r = ratio("shard/match_T7@L0/s4", "shard/match_T7@L0/seq")
+if r is not None:
+    verdict = "sharding wins" if r < 1.0 else "sharding NOT winning here"
+    print(f"  seq-vs-s4: s4 is {r:.2f}x of seq -> {verdict} (reported, not gated)")
+
+for name in ("cached-probe/hit_T1@L0", "cached-probe/precheck_T1@L0"):
+    r = ratio(name, "cached-probe/cold_T1@L0")
+    if r is not None:
+        print(f"  {name}: {med[name]:.3e}s ({r:.2f}x of cold)")
+PYEOF
 
 if [ "$have_baseline" = 1 ]; then
   echo "== batch/* regression gate (fail if median >20% over committed) =="
@@ -53,7 +87,13 @@ if failed:
     sys.exit(f"batch rows regressed >20% vs committed BENCH_hotpath.json: {failed}")
 PYEOF
 else
-  echo "== no committed BENCH_hotpath.json yet; skipping batch regression gate =="
+  echo "=============================================================="
+  echo "== BASELINE BOOTSTRAP: no committed BENCH_hotpath.json yet. =="
+  echo "== This run just wrote one. COMMIT IT to arm the batch/*    =="
+  echo "== >20% regression gate:                                    =="
+  echo "==     git add BENCH_hotpath.json && git commit             =="
+  echo "== (until then the gate is skipped on every run)            =="
+  echo "=============================================================="
 fi
 
 echo "verify OK"
