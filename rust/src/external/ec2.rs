@@ -135,6 +135,12 @@ pub struct Ec2SimConfig {
     pub attach_under: String,
     /// Interpose zone vertices between cluster and nodes (§4).
     pub zone_vertices: bool,
+    /// Deadline budget for one creation request (in *scaled* time, i.e.
+    /// after `time_scale` is applied). A request whose simulated creation
+    /// would exceed it fails with [`ProviderError::Api`] **before any
+    /// instance is created** — the failure is atomic, so retrying cannot
+    /// orphan instances. `None` (the default) waits creation out.
+    pub request_deadline: Option<Duration>,
 }
 
 impl Default for Ec2SimConfig {
@@ -144,6 +150,7 @@ impl Default for Ec2SimConfig {
             seed: 0xEC2,
             attach_under: "/cluster0".to_string(),
             zone_vertices: true,
+            request_deadline: None,
         }
     }
 }
@@ -235,8 +242,11 @@ impl Ec2Provider {
 
     /// Simulated instance-creation latency: lognormal, per-family mean,
     /// effectively independent of count (AWS parallelizes creation) — the
-    /// Fig 2 shape. Returns the *sleep actually performed*.
-    fn simulate_creation(&mut self, itype_names: &[&str]) -> f64 {
+    /// Fig 2 shape. Returns the *sleep actually performed*, or — when the
+    /// draw exceeds [`Ec2SimConfig::request_deadline`] — sleeps out the
+    /// deadline budget and fails WITHOUT creating anything (the caller's
+    /// atomicity guarantee: a timed-out request never orphans instances).
+    fn simulate_creation(&mut self, itype_names: &[&str]) -> Result<f64, ProviderError> {
         // family base means (seconds, unscaled)
         let mu_of = |name: &str| -> f64 {
             if name.starts_with("g3") {
@@ -252,8 +262,19 @@ impl Ec2Provider {
             .map(|n| mu_of(n))
             .fold(0.0f64, f64::max);
         let secs = self.rng.lognormal(worst.ln(), 0.10) * self.cfg.time_scale;
+        if let Some(deadline) = self.cfg.request_deadline {
+            if secs > deadline.as_secs_f64() {
+                // model the caller waiting out its budget, then giving up
+                std::thread::sleep(deadline);
+                return Err(ProviderError::Api(format!(
+                    "timeout: instance creation would take {secs:.3}s, exceeding the \
+                     {:.3}s request deadline (no instances were created)",
+                    deadline.as_secs_f64()
+                )));
+            }
+        }
         std::thread::sleep(Duration::from_secs_f64(secs));
-        secs
+        Ok(secs)
     }
 
     /// Map a jobspec to concrete (type, count) pairs: explicit
@@ -352,7 +373,9 @@ impl Ec2Provider {
         wanted: &[(InstanceType, u64)],
     ) -> Result<(Vec<Ec2Instance>, Jgf, f64, f64), ProviderError> {
         let names: Vec<&str> = wanted.iter().map(|(t, _)| t.name).collect();
-        let create_s = self.simulate_creation(&names);
+        // `?` BEFORE any instance is recorded: a deadline failure here is
+        // atomic by construction
+        let create_s = self.simulate_creation(&names)?;
         let mut created = Vec::new();
         for (itype, count) in wanted {
             for _ in 0..*count {
@@ -607,6 +630,63 @@ mod tests {
         p.release(&grant.instance_ids).unwrap();
         assert!(p.live_instances().is_empty());
         assert!(p.release(&grant.instance_ids).is_err());
+    }
+
+    #[test]
+    fn creation_deadline_fails_atomically() {
+        let mut p = Ec2Provider::new(Ec2SimConfig {
+            time_scale: 1e-4,
+            // any lognormal draw exceeds a zero budget
+            request_deadline: Some(Duration::ZERO),
+            ..Ec2SimConfig::default()
+        });
+        let spec = JobSpec::new(vec![ResourceReq::new("node", 2)
+            .with_attr("instance_type", "t2.small")]);
+        let err = p.request(&spec).unwrap_err();
+        assert!(matches!(err, ProviderError::Api(_)), "{err:?}");
+        assert!(err.to_string().contains("timeout"), "{err}");
+        // atomic failure: nothing was created, nothing to orphan
+        assert!(p.live_instances().is_empty());
+        // the same provider serves again once the budget allows
+        p.cfg.request_deadline = Some(Duration::from_secs(60));
+        let grant = p.request(&spec).unwrap();
+        assert_eq!(grant.instance_ids.len(), 2);
+    }
+
+    #[test]
+    fn retrying_provider_recovers_from_transient_api_faults() {
+        use crate::fault::{
+            Backoff, FaultInjector, FaultRates, FaultyProvider, ProviderFault, RetryPolicy,
+            RetryingProvider,
+        };
+        let inj = FaultInjector::new(3, FaultRates::none());
+        inj.push_provider_fault(ProviderFault::Api);
+        inj.push_provider_fault(ProviderFault::Api);
+        let faulty = FaultyProvider::new(provider(), inj.clone());
+        let mut p = RetryingProvider::new(
+            faulty,
+            RetryPolicy {
+                max_attempts: 3,
+                backoff: Backoff {
+                    base: Duration::from_millis(1),
+                    ..Backoff::default()
+                },
+                ..RetryPolicy::default()
+            },
+        );
+        let spec = JobSpec::new(vec![ResourceReq::new("node", 1)
+            .with_attr("instance_type", "t2.micro")]);
+        // two injected API failures, third attempt delivers
+        let grant = p.request(&spec).unwrap();
+        assert_eq!(grant.instance_ids.len(), 1);
+        assert_eq!(inj.stats().provider_api, 2);
+        // a well-formed "no" is NOT retried: one more scripted fault would
+        // have masked it if the retry loop re-rolled on Unsatisfiable
+        inj.push_provider_fault(ProviderFault::Unsatisfiable);
+        inj.push_provider_fault(ProviderFault::Api);
+        let err = p.request(&spec).unwrap_err();
+        assert!(matches!(err, ProviderError::Unsatisfiable(_)), "{err:?}");
+        assert_eq!(inj.stats().provider_api, 2, "no retry after unsatisfiable");
     }
 
     #[test]

@@ -1,0 +1,961 @@
+//! Fault injection + fault-tolerance primitives for hierarchy serving.
+//!
+//! The paper's model only holds value if the hierarchy stays correct while
+//! the hierarchy itself misbehaves: member instances appear and vanish
+//! mid-run (Flux Operator), and at converged-computing scale transient
+//! provider/API failures are the steady state (CMS SI). This module carries
+//! both halves of that story:
+//!
+//! - **Injection** — a deterministic, seeded harness ([`FaultInjector`])
+//!   that wraps the RPC client side ([`FaultyConn`]), the server side
+//!   ([`chaos_handler`]), and external providers ([`FaultyProvider`]) to
+//!   drop, delay, truncate, or corrupt frames and to fail or spot-reclaim
+//!   grants — either by seeded rates or on an explicit scripted schedule.
+//!   Same seed + same call sequence ⇒ byte-for-byte the same fault
+//!   schedule ([`crate::util::rng::Rng`] underneath).
+//! - **Tolerance** — the policies the serving stack defends itself with:
+//!   bounded retry with exponential backoff + deterministic jitter
+//!   ([`RetryPolicy`], [`Backoff`], [`RetryConn`], [`RetryingProvider`])
+//!   and the quarantine circuit breaker ([`CircuitBreaker`]) that
+//!   `hier` attaches to every parent link.
+//!
+//! ## Retry semantics (at-most-once for mutations)
+//!
+//! [`RetryConn`] transparently retries only requests whose op is
+//! **read-only** ([`crate::rpc::proto::SchedOp::is_read_only`]): a timed-out
+//! `match_grow` may have committed on the peer, so re-sending it could
+//! double-allocate. Mutating-op transport failures surface to the caller,
+//! whose circuit breaker decides whether the level is still worth talking
+//! to. The same split holds for providers: [`RetryingProvider`] retries
+//! [`ProviderError::Api`] (transient, and providers fail atomically — see
+//! its doc) but never [`ProviderError::Unsatisfiable`] (a well-formed "no"
+//! that retrying cannot change).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::external::provider::{ExternalGrant, ExternalProvider, ProviderError};
+use crate::jobspec::JobSpec;
+use crate::rpc::transport::{Conn, Handler};
+use crate::rpc::{Request, Response};
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Fault vocabulary
+// ---------------------------------------------------------------------------
+
+/// What happens to one RPC call (client side) or one served request
+/// (server side).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FrameFault {
+    /// No fault: the call proceeds normally.
+    Deliver,
+    /// The frame vanishes: the caller observes a timeout
+    /// (`ErrorKind::TimedOut`); server-side it models a stalled peer.
+    Drop,
+    /// The frame is held for the given duration, then delivered.
+    Delay(Duration),
+    /// The frame is cut mid-body: the caller observes
+    /// `ErrorKind::UnexpectedEof` (framing rejects partial bodies).
+    Truncate,
+    /// The frame arrives with flipped bytes: the caller observes
+    /// `ErrorKind::InvalidData` (the JSON layer rejects it).
+    Corrupt,
+}
+
+/// What happens to one external-provider request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ProviderFault {
+    /// No fault: the request goes through to the wrapped provider.
+    Deliver,
+    /// The provider API fails transiently ([`ProviderError::Api`]); nothing
+    /// is created.
+    Api,
+    /// The provider answers a well-formed "no"
+    /// ([`ProviderError::Unsatisfiable`]).
+    Unsatisfiable,
+    /// The request *succeeds* on the wrapped provider, then the capacity is
+    /// reclaimed before the grant reaches the caller (spot interruption):
+    /// the created instances are released on the inner provider and the
+    /// caller sees [`ProviderError::Api`]. No orphaned `instance_ids`.
+    Reclaim,
+}
+
+/// Per-fault-class probabilities for rate-driven injection. All rates are
+/// independent probabilities in `[0, 1]`, drawn cumulatively from a single
+/// uniform sample per decision (so their sum should stay ≤ 1).
+#[derive(Debug, Clone, Copy)]
+pub struct FaultRates {
+    /// Probability a frame is dropped ([`FrameFault::Drop`]).
+    pub drop: f64,
+    /// Probability a frame is delayed by [`FaultRates::delay_for`].
+    pub delay: f64,
+    /// Injected delay duration for [`FrameFault::Delay`] draws.
+    pub delay_for: Duration,
+    /// Probability a frame is truncated.
+    pub truncate: f64,
+    /// Probability a frame is corrupted.
+    pub corrupt: f64,
+    /// Probability a provider request fails with [`ProviderFault::Api`].
+    pub provider_api: f64,
+    /// Probability a provider request fails with
+    /// [`ProviderFault::Unsatisfiable`].
+    pub provider_unsat: f64,
+    /// Probability a provider grant is spot-reclaimed mid-request.
+    pub provider_reclaim: f64,
+}
+
+impl FaultRates {
+    /// All-zero rates: every decision is [`FrameFault::Deliver`] /
+    /// [`ProviderFault::Deliver`] unless a script overrides it.
+    pub fn none() -> FaultRates {
+        FaultRates {
+            drop: 0.0,
+            delay: 0.0,
+            delay_for: Duration::ZERO,
+            truncate: 0.0,
+            corrupt: 0.0,
+            provider_api: 0.0,
+            provider_unsat: 0.0,
+            provider_reclaim: 0.0,
+        }
+    }
+}
+
+impl Default for FaultRates {
+    fn default() -> FaultRates {
+        FaultRates::none()
+    }
+}
+
+/// Counters of every decision an injector has made. Cheap `Copy` snapshot —
+/// tests assert on these to prove faults actually fired.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultStats {
+    /// Frame decisions that delivered normally.
+    pub delivered: u64,
+    /// Frames dropped.
+    pub dropped: u64,
+    /// Frames delayed.
+    pub delayed: u64,
+    /// Frames truncated.
+    pub truncated: u64,
+    /// Frames corrupted.
+    pub corrupted: u64,
+    /// Provider requests failed with an API error.
+    pub provider_api: u64,
+    /// Provider requests answered unsatisfiable.
+    pub provider_unsat: u64,
+    /// Provider grants spot-reclaimed.
+    pub provider_reclaims: u64,
+}
+
+struct InjectorState {
+    rng: Rng,
+    rates: FaultRates,
+    frame_script: VecDeque<FrameFault>,
+    provider_script: VecDeque<ProviderFault>,
+    stats: FaultStats,
+}
+
+/// Deterministic, seeded fault source. Cloneable handle (`Arc` inside): the
+/// same injector can drive a [`FaultyConn`], a [`chaos_handler`], and a
+/// [`FaultyProvider`] while tests keep a handle for scripting and stats.
+///
+/// Decisions come from an explicit script first (FIFO, pushed via
+/// [`FaultInjector::push_frame_fault`] / `push_provider_fault`), then from
+/// the seeded [`FaultRates`]. With rates of zero and an empty script every
+/// decision is `Deliver` — the wrappers become transparent.
+#[derive(Clone)]
+pub struct FaultInjector {
+    state: Arc<Mutex<InjectorState>>,
+}
+
+impl FaultInjector {
+    /// Build an injector with a seed and rate table.
+    pub fn new(seed: u64, rates: FaultRates) -> FaultInjector {
+        FaultInjector {
+            state: Arc::new(Mutex::new(InjectorState {
+                rng: Rng::new(seed),
+                rates,
+                frame_script: VecDeque::new(),
+                provider_script: VecDeque::new(),
+                stats: FaultStats::default(),
+            })),
+        }
+    }
+
+    /// Queue an explicit frame fault; scripts win over rates, FIFO.
+    pub fn push_frame_fault(&self, f: FrameFault) {
+        self.lock().frame_script.push_back(f);
+    }
+
+    /// Queue an explicit provider fault; scripts win over rates, FIFO.
+    pub fn push_provider_fault(&self, f: ProviderFault) {
+        self.lock().provider_script.push_back(f);
+    }
+
+    /// Decide the fate of one frame (script first, then rates) and record
+    /// it in the stats.
+    pub fn frame_fault(&self) -> FrameFault {
+        let mut s = self.lock();
+        let fault = match s.frame_script.pop_front() {
+            Some(f) => f,
+            None => {
+                // one uniform draw, cumulative thresholds: deterministic
+                // and keeps the per-class rates independent of draw order
+                let r = s.rng.f64();
+                let FaultRates {
+                    drop,
+                    delay,
+                    delay_for,
+                    truncate,
+                    corrupt,
+                    ..
+                } = s.rates;
+                if r < drop {
+                    FrameFault::Drop
+                } else if r < drop + truncate {
+                    FrameFault::Truncate
+                } else if r < drop + truncate + corrupt {
+                    FrameFault::Corrupt
+                } else if r < drop + truncate + corrupt + delay {
+                    FrameFault::Delay(delay_for)
+                } else {
+                    FrameFault::Deliver
+                }
+            }
+        };
+        match fault {
+            FrameFault::Deliver => s.stats.delivered += 1,
+            FrameFault::Drop => s.stats.dropped += 1,
+            FrameFault::Delay(_) => s.stats.delayed += 1,
+            FrameFault::Truncate => s.stats.truncated += 1,
+            FrameFault::Corrupt => s.stats.corrupted += 1,
+        }
+        fault
+    }
+
+    /// Decide the fate of one provider request (script first, then rates)
+    /// and record it in the stats.
+    pub fn provider_fault(&self) -> ProviderFault {
+        let mut s = self.lock();
+        let fault = match s.provider_script.pop_front() {
+            Some(f) => f,
+            None => {
+                let r = s.rng.f64();
+                let FaultRates {
+                    provider_api,
+                    provider_unsat,
+                    provider_reclaim,
+                    ..
+                } = s.rates;
+                if r < provider_api {
+                    ProviderFault::Api
+                } else if r < provider_api + provider_unsat {
+                    ProviderFault::Unsatisfiable
+                } else if r < provider_api + provider_unsat + provider_reclaim {
+                    ProviderFault::Reclaim
+                } else {
+                    ProviderFault::Deliver
+                }
+            }
+        };
+        match fault {
+            ProviderFault::Deliver => {}
+            ProviderFault::Api => s.stats.provider_api += 1,
+            ProviderFault::Unsatisfiable => s.stats.provider_unsat += 1,
+            ProviderFault::Reclaim => s.stats.provider_reclaims += 1,
+        }
+        fault
+    }
+
+    /// Snapshot of every decision made so far.
+    pub fn stats(&self) -> FaultStats {
+        self.lock().stats
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, InjectorState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client-side frame injection
+// ---------------------------------------------------------------------------
+
+/// A [`Conn`] wrapper that consults a [`FaultInjector`] before each call.
+///
+/// Faults are *simulated at the client boundary*: a `Drop` returns
+/// `ErrorKind::TimedOut` immediately (the caller's deadline outcome without
+/// the wall-clock wait — keeps chaos soaks fast and their fault schedule
+/// independent of real timing), `Truncate`/`Corrupt` return the error the
+/// framing/JSON layers would produce, and `Delay` sleeps, then forwards.
+/// Pair with [`chaos_handler`] when a test needs the *real* read-timeout
+/// machinery to fire instead.
+pub struct FaultyConn {
+    inner: Box<dyn Conn>,
+    injector: FaultInjector,
+}
+
+impl FaultyConn {
+    /// Wrap a connection with an injector.
+    pub fn new(inner: Box<dyn Conn>, injector: FaultInjector) -> FaultyConn {
+        FaultyConn { inner, injector }
+    }
+}
+
+impl Conn for FaultyConn {
+    fn call(&mut self, req: &Request) -> std::io::Result<Response> {
+        use std::io::{Error, ErrorKind};
+        match self.injector.frame_fault() {
+            FrameFault::Deliver => self.inner.call(req),
+            FrameFault::Delay(d) => {
+                std::thread::sleep(d);
+                self.inner.call(req)
+            }
+            FrameFault::Drop => Err(Error::new(
+                ErrorKind::TimedOut,
+                "injected: frame dropped, deadline exceeded",
+            )),
+            FrameFault::Truncate => Err(Error::new(
+                ErrorKind::UnexpectedEof,
+                "injected: frame truncated mid-body",
+            )),
+            FrameFault::Corrupt => Err(Error::new(
+                ErrorKind::InvalidData,
+                "injected: frame corrupted",
+            )),
+        }
+    }
+}
+
+/// Wrap a server-side [`Handler`] with latency-class fault injection: a
+/// `Delay(d)` draw sleeps `d` before handling; a `Drop` draw sleeps
+/// `stall` (modeling a hung peer — with `stall` beyond the client's read
+/// deadline, the client's *real* timeout machinery fires). Byte-level
+/// faults (`Truncate`/`Corrupt`) cannot be expressed through the typed
+/// handler and are treated as `Deliver`; inject those client-side with
+/// [`FaultyConn`].
+pub fn chaos_handler(h: Handler, injector: FaultInjector, stall: Duration) -> Handler {
+    crate::rpc::transport::handler(move |req: Request| {
+        match injector.frame_fault() {
+            FrameFault::Delay(d) => std::thread::sleep(d),
+            FrameFault::Drop => std::thread::sleep(stall),
+            FrameFault::Deliver | FrameFault::Truncate | FrameFault::Corrupt => {}
+        }
+        h(req)
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Provider injection
+// ---------------------------------------------------------------------------
+
+/// An [`ExternalProvider`] wrapper that consults a [`FaultInjector`] before
+/// each request. Generic (not boxed) so tests keep concrete access to the
+/// wrapped provider via [`FaultyProvider::inner`] — e.g. to assert
+/// `live_instances()` is empty after a reclaim.
+///
+/// `Reclaim` is the interesting case: the request **succeeds** on the inner
+/// provider, then the instances are immediately released there and the
+/// caller sees an [`ProviderError::Api`] — the spot-interruption shape.
+/// Because the release happens before the error surfaces, a reclaim can
+/// never orphan `instance_ids`.
+pub struct FaultyProvider<P: ExternalProvider> {
+    inner: P,
+    injector: FaultInjector,
+}
+
+impl<P: ExternalProvider> FaultyProvider<P> {
+    /// Wrap a provider with an injector.
+    pub fn new(inner: P, injector: FaultInjector) -> FaultyProvider<P> {
+        FaultyProvider { inner, injector }
+    }
+
+    /// The wrapped provider (for test assertions on its internal state).
+    pub fn inner(&self) -> &P {
+        &self.inner
+    }
+}
+
+impl<P: ExternalProvider> ExternalProvider for FaultyProvider<P> {
+    fn name(&self) -> &str {
+        "faulty"
+    }
+
+    fn request(&mut self, spec: &JobSpec) -> Result<ExternalGrant, ProviderError> {
+        match self.injector.provider_fault() {
+            ProviderFault::Deliver => self.inner.request(spec),
+            ProviderFault::Api => Err(ProviderError::Api(
+                "injected: provider API failure".into(),
+            )),
+            ProviderFault::Unsatisfiable => Err(ProviderError::Unsatisfiable(
+                "injected: provider out of capacity".into(),
+            )),
+            ProviderFault::Reclaim => {
+                let grant = self.inner.request(spec)?;
+                // release before erroring: the reclaim leaves no orphans
+                self.inner.release(&grant.instance_ids)?;
+                Err(ProviderError::Api(format!(
+                    "injected: spot capacity reclaimed mid-grant ({} instances returned)",
+                    grant.instance_ids.len()
+                )))
+            }
+        }
+    }
+
+    fn release(&mut self, instance_ids: &[String]) -> Result<(), ProviderError> {
+        // releases pass through un-faulted: failing them would leak
+        // bookkeeping in the *caller*, which is not the failure mode this
+        // harness models (request-path faults are)
+        self.inner.release(instance_ids)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backoff + retry policies
+// ---------------------------------------------------------------------------
+
+/// Exponential backoff with bounded deterministic jitter:
+/// `delay(n) = min(base · factor^n, max) · (1 ± jitter)`, the jitter drawn
+/// from the caller's seeded [`Rng`] so retry timing reproduces run to run.
+#[derive(Debug, Clone, Copy)]
+pub struct Backoff {
+    /// First retry delay (attempt 0).
+    pub base: Duration,
+    /// Multiplier per attempt.
+    pub factor: f64,
+    /// Cap on the exponential term.
+    pub max: Duration,
+    /// Relative jitter half-width in `[0, 1]` (0.2 ⇒ ±20%).
+    pub jitter: f64,
+}
+
+impl Backoff {
+    /// Delay before retry number `attempt` (0-based), jittered via `rng`.
+    pub fn delay(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self.base.as_secs_f64() * self.factor.powi(attempt.min(63) as i32);
+        let capped = exp.min(self.max.as_secs_f64());
+        let j = 1.0 + self.jitter * (2.0 * rng.f64() - 1.0);
+        Duration::from_secs_f64((capped * j).max(0.0))
+    }
+}
+
+impl Default for Backoff {
+    fn default() -> Backoff {
+        Backoff {
+            base: Duration::from_millis(10),
+            factor: 2.0,
+            max: Duration::from_secs(1),
+            jitter: 0.2,
+        }
+    }
+}
+
+/// Bounded-retry policy for RPC calls and provider requests.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts including the first (1 = no retries).
+    pub max_attempts: u32,
+    /// Backoff shape between attempts.
+    pub backoff: Backoff,
+    /// Retry *mutating* ops too. Default `false`: a timed-out mutation may
+    /// have committed on the peer (at-most-once), so only turn this on for
+    /// idempotent custom protocols.
+    pub retry_mutating: bool,
+    /// Seed for the jitter stream (deterministic retry timing).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 3,
+            backoff: Backoff::default(),
+            retry_mutating: false,
+            seed: 0xB0FF,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// A policy that never retries (single attempt, no backoff).
+    pub fn no_retry() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 1,
+            ..RetryPolicy::default()
+        }
+    }
+}
+
+/// A [`Conn`] wrapper applying a [`RetryPolicy`]: transport failures on
+/// **read-only** requests are retried with backoff; mutating requests get
+/// exactly one attempt (unless `retry_mutating`) and surface their error to
+/// the caller — see the module doc on at-most-once semantics.
+pub struct RetryConn {
+    inner: Box<dyn Conn>,
+    policy: RetryPolicy,
+    rng: Rng,
+}
+
+impl RetryConn {
+    /// Wrap a connection with a retry policy.
+    pub fn new(inner: Box<dyn Conn>, policy: RetryPolicy) -> RetryConn {
+        let rng = Rng::new(policy.seed);
+        RetryConn { inner, policy, rng }
+    }
+}
+
+impl Conn for RetryConn {
+    fn call(&mut self, req: &Request) -> std::io::Result<Response> {
+        let retryable = req.op.is_read_only() || self.policy.retry_mutating;
+        let attempts = if retryable {
+            self.policy.max_attempts.max(1)
+        } else {
+            1
+        };
+        let mut last_err = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.policy.backoff.delay(attempt - 1, &mut self.rng));
+            }
+            match self.inner.call(req) {
+                Ok(resp) => return Ok(resp),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one attempt"))
+    }
+}
+
+/// An [`ExternalProvider`] wrapper applying a [`RetryPolicy`] to requests:
+/// [`ProviderError::Api`] failures (transient by contract) are retried with
+/// backoff; [`ProviderError::Unsatisfiable`] — a well-formed "no" — is
+/// returned immediately.
+///
+/// Retrying after an `Api` failure is safe only because providers fail
+/// **atomically**: anything created before the error must be released
+/// before it surfaces ([`crate::external::ec2::Ec2Provider`] creates
+/// nothing before its failure points; [`FaultyProvider`]'s reclaim releases
+/// before erroring). A provider that can orphan instances on `Api` must
+/// not be wrapped in this.
+pub struct RetryingProvider<P: ExternalProvider> {
+    inner: P,
+    policy: RetryPolicy,
+    rng: Rng,
+}
+
+impl<P: ExternalProvider> RetryingProvider<P> {
+    /// Wrap a provider with a retry policy.
+    pub fn new(inner: P, policy: RetryPolicy) -> RetryingProvider<P> {
+        let rng = Rng::new(policy.seed);
+        RetryingProvider { inner, policy, rng }
+    }
+
+    /// The wrapped provider (for test assertions on its internal state).
+    pub fn inner(&self) -> &P {
+        &self.inner
+    }
+}
+
+impl<P: ExternalProvider> ExternalProvider for RetryingProvider<P> {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn request(&mut self, spec: &JobSpec) -> Result<ExternalGrant, ProviderError> {
+        let attempts = self.policy.max_attempts.max(1);
+        let mut last_err = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.policy.backoff.delay(attempt - 1, &mut self.rng));
+            }
+            match self.inner.request(spec) {
+                Ok(grant) => return Ok(grant),
+                Err(e @ ProviderError::Unsatisfiable(_)) => return Err(e),
+                Err(e @ ProviderError::Api(_)) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one attempt"))
+    }
+
+    fn release(&mut self, instance_ids: &[String]) -> Result<(), ProviderError> {
+        self.inner.release(instance_ids)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Panic containment
+// ---------------------------------------------------------------------------
+
+/// Best-effort extraction of a panic payload's message (`panic!` with a
+/// string literal or a formatted `String`; anything else reports opaquely).
+/// Shared by every containment site that turns a caught unwind into a typed
+/// [`crate::rpc::proto::code::PANIC`] error.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Quarantine circuit breaker
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum BreakerState {
+    Closed,
+    Open { until: Instant },
+    HalfOpen,
+}
+
+/// The quarantine state machine `hier` attaches to each parent link:
+///
+/// ```text
+///            failure (count >= threshold)
+///   Closed ─────────────────────────────▶ Open {until: now + cooldown}
+///     ▲                                      │
+///     │ success                              │ cooldown elapses
+///     │                                      ▼ (admit() grants ONE trial)
+///     └────────────────────────────────── HalfOpen
+///                 ▲        │
+///                 └────────┘ trial failure reopens immediately
+/// ```
+///
+/// `Closed` admits everything; `Open` refuses ([`CircuitBreaker::admit`]
+/// returns `false`) until the cooldown elapses, at which point the breaker
+/// turns `HalfOpen` and admits a trial; a trial success closes it (a
+/// *restore*), a trial failure reopens it for another cooldown without
+/// waiting for the threshold.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: Duration,
+    failures: u32,
+    state: BreakerState,
+    trips: u64,
+    restores: u64,
+}
+
+impl CircuitBreaker {
+    /// Open after `threshold` consecutive failures; re-probe after
+    /// `cooldown`. `threshold` is clamped to ≥ 1.
+    pub fn new(threshold: u32, cooldown: Duration) -> CircuitBreaker {
+        CircuitBreaker {
+            threshold: threshold.max(1),
+            cooldown,
+            failures: 0,
+            state: BreakerState::Closed,
+            trips: 0,
+            restores: 0,
+        }
+    }
+
+    /// May a call go out now? `Open` with an unexpired cooldown refuses;
+    /// an expired cooldown flips to `HalfOpen` and admits the trial.
+    pub fn admit(&mut self) -> bool {
+        match self.state {
+            BreakerState::Closed | BreakerState::HalfOpen => true,
+            BreakerState::Open { until } => {
+                if Instant::now() >= until {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a healthy round trip (any well-formed reply, including a
+    /// structured error — the *link* worked). Closes the breaker; counts a
+    /// restore when it was recovering.
+    pub fn record_success(&mut self) {
+        if matches!(self.state, BreakerState::HalfOpen) {
+            self.restores += 1;
+        }
+        self.failures = 0;
+        self.state = BreakerState::Closed;
+    }
+
+    /// Record a transport-level failure (timeout, disconnect). Trips to
+    /// `Open` at the threshold, or immediately when a half-open trial
+    /// fails.
+    pub fn record_failure(&mut self) {
+        self.failures += 1;
+        let reopen =
+            matches!(self.state, BreakerState::HalfOpen) || self.failures >= self.threshold;
+        if reopen {
+            self.state = BreakerState::Open {
+                until: Instant::now() + self.cooldown,
+            };
+            self.trips += 1;
+        }
+    }
+
+    /// Is the breaker currently refusing traffic (open, cooldown pending)?
+    pub fn is_open(&self) -> bool {
+        matches!(self.state, BreakerState::Open { until } if Instant::now() < until)
+    }
+
+    /// Current state as a stable string: `"closed"`, `"open"`, or
+    /// `"half-open"` (an expired-cooldown `Open` reports `"half-open"` —
+    /// the next [`CircuitBreaker::admit`] would grant a trial).
+    pub fn state_name(&self) -> &'static str {
+        match self.state {
+            BreakerState::Closed => "closed",
+            BreakerState::HalfOpen => "half-open",
+            BreakerState::Open { until } => {
+                if Instant::now() >= until {
+                    "half-open"
+                } else {
+                    "open"
+                }
+            }
+        }
+    }
+
+    /// Time until the cooldown expires (`None` unless open-and-pending).
+    pub fn retry_in(&self) -> Option<Duration> {
+        match self.state {
+            BreakerState::Open { until } => {
+                let now = Instant::now();
+                (now < until).then(|| until - now)
+            }
+            _ => None,
+        }
+    }
+
+    /// How many times the breaker has tripped open.
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// How many times a half-open trial restored the link.
+    pub fn restores(&self) -> u64 {
+        self.restores
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::resource::graph::JobId;
+    use crate::rpc::proto::{SchedOp, SchedReply};
+    use crate::rpc::transport::{handler, InProcServer};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn probe_req(id: u64) -> Request {
+        Request::new(
+            id,
+            SchedOp::Probe {
+                spec: JobSpec::nodes_sockets_cores(1, 1, 1),
+            },
+        )
+    }
+
+    fn mutate_req(id: u64) -> Request {
+        Request::new(id, SchedOp::FreeJob { job: JobId(1) })
+    }
+
+    fn counting_server() -> (InProcServer, Arc<AtomicUsize>) {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c2 = calls.clone();
+        let server = InProcServer::spawn(handler(move |req: Request| {
+            c2.fetch_add(1, Ordering::SeqCst);
+            Response::ok(req.id, SchedReply::Freed { vertices: 1 })
+        }));
+        (server, calls)
+    }
+
+    #[test]
+    fn injector_is_deterministic_per_seed() {
+        let rates = FaultRates {
+            drop: 0.2,
+            delay: 0.2,
+            delay_for: Duration::from_millis(1),
+            truncate: 0.1,
+            corrupt: 0.1,
+            ..FaultRates::none()
+        };
+        let a = FaultInjector::new(7, rates);
+        let b = FaultInjector::new(7, rates);
+        let seq_a: Vec<FrameFault> = (0..64).map(|_| a.frame_fault()).collect();
+        let seq_b: Vec<FrameFault> = (0..64).map(|_| b.frame_fault()).collect();
+        assert_eq!(seq_a, seq_b);
+        assert_eq!(a.stats(), b.stats());
+        // with these rates, 64 draws virtually surely include faults
+        let s = a.stats();
+        assert!(s.dropped + s.delayed + s.truncated + s.corrupted > 0);
+    }
+
+    #[test]
+    fn script_wins_over_rates() {
+        let inj = FaultInjector::new(1, FaultRates::none());
+        inj.push_frame_fault(FrameFault::Corrupt);
+        inj.push_frame_fault(FrameFault::Drop);
+        assert_eq!(inj.frame_fault(), FrameFault::Corrupt);
+        assert_eq!(inj.frame_fault(), FrameFault::Drop);
+        assert_eq!(inj.frame_fault(), FrameFault::Deliver);
+    }
+
+    #[test]
+    fn faulty_conn_maps_faults_to_io_errors() {
+        let (server, _) = counting_server();
+        let inj = FaultInjector::new(1, FaultRates::none());
+        inj.push_frame_fault(FrameFault::Drop);
+        inj.push_frame_fault(FrameFault::Truncate);
+        inj.push_frame_fault(FrameFault::Corrupt);
+        let mut conn = FaultyConn::new(Box::new(server.connect()), inj);
+        use std::io::ErrorKind;
+        assert_eq!(conn.call(&probe_req(1)).unwrap_err().kind(), ErrorKind::TimedOut);
+        assert_eq!(
+            conn.call(&probe_req(2)).unwrap_err().kind(),
+            ErrorKind::UnexpectedEof
+        );
+        assert_eq!(
+            conn.call(&probe_req(3)).unwrap_err().kind(),
+            ErrorKind::InvalidData
+        );
+        // script exhausted: delivers
+        assert!(conn.call(&probe_req(4)).is_ok());
+        server.shutdown();
+    }
+
+    #[test]
+    fn retry_conn_retries_read_only_until_success() {
+        let (server, calls) = counting_server();
+        let inj = FaultInjector::new(1, FaultRates::none());
+        inj.push_frame_fault(FrameFault::Drop);
+        inj.push_frame_fault(FrameFault::Drop);
+        // third attempt delivers
+        let faulty = FaultyConn::new(Box::new(server.connect()), inj);
+        let mut conn = RetryConn::new(
+            Box::new(faulty),
+            RetryPolicy {
+                max_attempts: 3,
+                backoff: Backoff {
+                    base: Duration::from_millis(1),
+                    ..Backoff::default()
+                },
+                ..RetryPolicy::default()
+            },
+        );
+        let resp = conn.call(&probe_req(1)).expect("third attempt succeeds");
+        assert_eq!(resp.id, 1);
+        assert_eq!(calls.load(Ordering::SeqCst), 1, "inner handler ran once");
+        server.shutdown();
+    }
+
+    #[test]
+    fn retry_conn_is_bounded() {
+        let (server, calls) = counting_server();
+        let inj = FaultInjector::new(1, FaultRates::none());
+        for _ in 0..10 {
+            inj.push_frame_fault(FrameFault::Drop);
+        }
+        let faulty = FaultyConn::new(Box::new(server.connect()), inj);
+        let mut conn = RetryConn::new(
+            Box::new(faulty),
+            RetryPolicy {
+                max_attempts: 3,
+                backoff: Backoff {
+                    base: Duration::from_millis(1),
+                    ..Backoff::default()
+                },
+                ..RetryPolicy::default()
+            },
+        );
+        assert!(conn.call(&probe_req(1)).is_err());
+        assert_eq!(calls.load(Ordering::SeqCst), 0, "all attempts dropped");
+        server.shutdown();
+    }
+
+    #[test]
+    fn retry_conn_never_retries_mutating_ops() {
+        let (server, calls) = counting_server();
+        let inj = FaultInjector::new(1, FaultRates::none());
+        inj.push_frame_fault(FrameFault::Drop);
+        let faulty = FaultyConn::new(Box::new(server.connect()), inj);
+        let mut conn = RetryConn::new(Box::new(faulty), RetryPolicy::default());
+        // a mutating op's transport failure surfaces after ONE attempt even
+        // though the policy would allow 3
+        assert!(conn.call(&mutate_req(1)).is_err());
+        assert_eq!(calls.load(Ordering::SeqCst), 0);
+        // the next (fault-free) mutating call works
+        assert!(conn.call(&mutate_req(2)).is_ok());
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_within_jitter() {
+        let b = Backoff {
+            base: Duration::from_millis(10),
+            factor: 2.0,
+            max: Duration::from_secs(1),
+            jitter: 0.2,
+        };
+        let mut rng = Rng::new(5);
+        for attempt in 0..6u32 {
+            let nominal = 0.010 * 2f64.powi(attempt as i32);
+            let d = b.delay(attempt, &mut rng).as_secs_f64();
+            assert!(
+                d >= nominal * 0.8 - 1e-9 && d <= nominal * 1.2 + 1e-9,
+                "attempt {attempt}: {d} vs nominal {nominal}"
+            );
+        }
+        // and the cap binds eventually
+        let mut rng = Rng::new(5);
+        assert!(b.delay(30, &mut rng).as_secs_f64() <= 1.2);
+    }
+
+    #[test]
+    fn backoff_is_deterministic_per_seed() {
+        let b = Backoff::default();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        for attempt in 0..8u32 {
+            assert_eq!(b.delay(attempt, &mut r1), b.delay(attempt, &mut r2));
+        }
+    }
+
+    #[test]
+    fn breaker_trips_half_opens_and_restores() {
+        let mut b = CircuitBreaker::new(2, Duration::from_millis(20));
+        assert_eq!(b.state_name(), "closed");
+        assert!(b.admit());
+        b.record_failure();
+        assert_eq!(b.state_name(), "closed", "below threshold");
+        b.record_failure();
+        assert_eq!(b.state_name(), "open");
+        assert!(!b.admit(), "open refuses");
+        assert!(b.retry_in().is_some());
+        assert_eq!(b.trips(), 1);
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(b.state_name(), "half-open");
+        assert!(b.admit(), "cooldown elapsed: trial admitted");
+        b.record_success();
+        assert_eq!(b.state_name(), "closed");
+        assert_eq!(b.restores(), 1);
+    }
+
+    #[test]
+    fn breaker_half_open_failure_reopens_immediately() {
+        let mut b = CircuitBreaker::new(3, Duration::from_millis(10));
+        for _ in 0..3 {
+            b.record_failure();
+        }
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.admit());
+        b.record_failure(); // trial fails: straight back to open
+        assert_eq!(b.state_name(), "open");
+        assert_eq!(b.trips(), 2);
+    }
+}

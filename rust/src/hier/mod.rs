@@ -26,19 +26,37 @@
 //! Mutating ops keep the per-node mutex: they interact with the node's
 //! grant/burst bookkeeping (`added_roots`, `cloud_grants`), which must
 //! stay consistent with the instance.
+//!
+//! §Fault tolerance: every parent link is built with a [`LinkPolicy`] —
+//! per-call deadline, bounded retry ([`crate::fault::RetryConn`], read-only
+//! ops only), and a quarantine [`CircuitBreaker`]: a link that repeatedly
+//! times out or disconnects is refused outright with a structured
+//! [`code::LEVEL_UNAVAILABLE`] error (no hanging on a link known bad) until
+//! a cooldown elapses and a half-open trial probe ([`Hierarchy::maintain`])
+//! restores it. [`Hierarchy::probe_up`] routes feasibility probes around
+//! quarantined levels. Mutating handlers run under `catch_unwind` so a
+//! panicking op answers with a typed [`code::PANIC`] error instead of
+//! poisoning the node mutex (the internal `lock_node` helper tolerates the
+//! poison either way). [`LinkPolicy::chaos`] threads deterministic fault injection
+//! through every link for soak tests.
 
 pub mod report;
 
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::external::provider::ExternalProvider;
+use crate::fault::{
+    chaos_handler, panic_message, CircuitBreaker, FaultInjector, FaultRates, FaultyConn,
+    RetryConn, RetryPolicy,
+};
 use crate::jobspec::JobSpec;
 use crate::resource::graph::JobId;
 use crate::resource::jgf::Jgf;
 use crate::resource::ResourceGraph;
 use crate::rpc::proto::{code, RpcError, SchedOp, SchedReply};
 use crate::rpc::transport::{
-    handler, Conn, InProcServer, Latency, TcpConn, TcpServer,
+    handler, Conn, InProcServer, Latency, TcpConn, TcpServer, DEFAULT_DEADLINE,
 };
 use crate::rpc::{Request, Response};
 use crate::sched::{PruneConfig, SchedInstance, SchedService};
@@ -88,6 +106,96 @@ pub fn paper_levels(internode: Latency) -> Vec<LevelSpec> {
     ]
 }
 
+/// Deterministic fault injection for a hierarchy's links: one master seed
+/// from which every link derives an independent client-side and
+/// server-side [`FaultInjector`] stream (same config ⇒ byte-for-byte the
+/// same fault schedule, the chaos soak's reproducibility contract).
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosConfig {
+    /// Master seed; link `l` draws from seeds `seed ^ (2l+1)` (client) and
+    /// `seed ^ (2l+2)` (server).
+    pub seed: u64,
+    /// Rates for the client-side injectors ([`FaultyConn`] wrapping each
+    /// parent connection). Client-side drops fail *instantly* with a
+    /// timeout, keeping soak schedules independent of wall-clock timing.
+    pub client_rates: FaultRates,
+    /// Rates for the server-side injectors ([`chaos_handler`] wrapping each
+    /// level's handler). Server-side drops stall the handler for
+    /// [`ChaosConfig::stall`], exercising the client's *real* read-timeout
+    /// machinery — at the cost of timing-dependent schedules.
+    pub server_rates: FaultRates,
+    /// How long a server-side `Drop` stalls (set it beyond the link
+    /// deadline so the client actually times out).
+    pub stall: Duration,
+}
+
+impl ChaosConfig {
+    /// Client-side-only injection — the deterministic configuration chaos
+    /// soaks use (server rates zero, so no real stalls ever overlap ops).
+    pub fn client_only(seed: u64, rates: FaultRates) -> ChaosConfig {
+        ChaosConfig {
+            seed,
+            client_rates: rates,
+            server_rates: FaultRates::none(),
+            stall: Duration::from_millis(50),
+        }
+    }
+}
+
+/// Fault-tolerance policy applied to every parent link when a hierarchy is
+/// built ([`Hierarchy::build_with_policy`]). The default is what
+/// [`Hierarchy::build`] uses: 5 s deadline, 3 read-only retry attempts
+/// with exponential backoff, quarantine after 3 consecutive link failures
+/// with a 250 ms half-open cooldown, no fault injection.
+#[derive(Debug, Clone)]
+pub struct LinkPolicy {
+    /// Per-call deadline budget on parent links (`None` = block forever,
+    /// the pre-fault-tolerance behavior).
+    pub deadline: Option<Duration>,
+    /// Bounded-retry policy wrapped around every parent connection
+    /// (read-only ops only — see [`RetryConn`] on at-most-once semantics).
+    pub retry: RetryPolicy,
+    /// Consecutive transport failures before a parent link is quarantined.
+    pub breaker_threshold: u32,
+    /// Cooldown before a quarantined link half-opens for a trial call.
+    pub breaker_cooldown: Duration,
+    /// Optional deterministic fault injection on every link.
+    pub chaos: Option<ChaosConfig>,
+}
+
+impl Default for LinkPolicy {
+    fn default() -> LinkPolicy {
+        LinkPolicy {
+            deadline: Some(DEFAULT_DEADLINE),
+            retry: RetryPolicy::default(),
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_millis(250),
+            chaos: None,
+        }
+    }
+}
+
+/// The structured refusal a quarantined parent link answers with.
+fn level_unavailable(level: usize, breaker: &CircuitBreaker) -> RpcError {
+    let hint = breaker
+        .retry_in()
+        .map(|d| format!("; half-open re-probe in ~{}ms", d.as_millis()))
+        .unwrap_or_default();
+    RpcError::new(
+        code::LEVEL_UNAVAILABLE,
+        format!("level {level}: parent link quarantined (breaker open{hint})"),
+    )
+}
+
+/// Poison-tolerant node lock. A panic that unwound while a transport
+/// thread held the node mutex is already contained into a typed reply by
+/// `node_handler`; the poison flag it leaves must not turn every later op
+/// into a second panic — the instance beneath has its own rollback
+/// protection ([`crate::sched::SchedService::mutate_contained`] semantics).
+fn lock_node(node: &Mutex<NodeState>) -> std::sync::MutexGuard<'_, NodeState> {
+    node.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Mutable state of one hierarchy node.
 struct NodeState {
     level: usize,
@@ -123,6 +231,11 @@ struct NodeState {
     /// roots releases the instances here and stops ascending (the
     /// supergraph never contained them — per-user specialization, §3).
     cloud_grants: Vec<(String, Vec<String>)>,
+    /// Quarantine breaker guarding this node's PARENT link (idle at L0):
+    /// transport failures trip it open; an open breaker refuses ascents
+    /// with [`code::LEVEL_UNAVAILABLE`] until a half-open trial restores
+    /// it.
+    breaker: CircuitBreaker,
 }
 
 impl NodeState {
@@ -206,13 +319,32 @@ impl NodeState {
                         (grant.subgraph, Vec::new(), tc.elapsed_secs())
                     }
                     (Some(conn), _) => {
+                        // quarantine gate: an open breaker refuses the
+                        // ascent outright — a structured error beats
+                        // waiting out a deadline on a link known bad
+                        if !self.breaker.admit() {
+                            return Err(level_unavailable(self.level, &self.breaker));
+                        }
                         let tc = Timer::start();
-                        let resp = conn
-                            .call(&Request::new(
-                                self.level as u64,
-                                SchedOp::MatchGrow { spec: spec.clone() },
-                            ))
-                            .map_err(|e| RpcError::new(code::TRANSPORT, e.to_string()))?;
+                        let called = conn.call(&Request::new(
+                            self.level as u64,
+                            SchedOp::MatchGrow { spec: spec.clone() },
+                        ));
+                        let resp = match called {
+                            Ok(resp) => {
+                                // any well-formed reply — structured errors
+                                // included — proves the LINK is healthy
+                                self.breaker.record_success();
+                                resp
+                            }
+                            Err(e) => {
+                                self.breaker.record_failure();
+                                return Err(RpcError::from_io(
+                                    &format!("level {}: match_grow ascent failed", self.level),
+                                    &e,
+                                ));
+                            }
+                        };
                         let rtt = tc.elapsed_secs();
                         let (jgf, levels) = match resp.reply {
                             SchedReply::Grown { subgraph, levels } => (subgraph, levels),
@@ -306,19 +438,36 @@ impl NodeState {
             }
             return Ok(removed);
         }
-        if self.added_roots.remove(path) {
+        if self.added_roots.contains(path) {
             // this level spliced the subgraph in dynamically: delete it and
-            // keep ascending (bottom-up subtractive transformation)
+            // keep ascending (bottom-up subtractive transformation). The
+            // quarantine gate comes FIRST — a refused ascent must leave
+            // this level's graph and bookkeeping untouched.
+            if self.parent.is_some() && !self.breaker.admit() {
+                return Err(level_unavailable(self.level, &self.breaker));
+            }
+            self.added_roots.remove(path);
             let removed = self.inst.write().release_subtree(path).map_err(shrink_err)?;
             if let Some(conn) = &mut self.parent {
-                let resp = conn
-                    .call(&Request::new(
-                        self.level as u64,
-                        SchedOp::ShrinkReturn {
-                            path: path.to_string(),
-                        },
-                    ))
-                    .map_err(|e| RpcError::new(code::TRANSPORT, e.to_string()))?;
+                let called = conn.call(&Request::new(
+                    self.level as u64,
+                    SchedOp::ShrinkReturn {
+                        path: path.to_string(),
+                    },
+                ));
+                let resp = match called {
+                    Ok(resp) => {
+                        self.breaker.record_success();
+                        resp
+                    }
+                    Err(e) => {
+                        self.breaker.record_failure();
+                        return Err(RpcError::from_io(
+                            &format!("level {}: shrink_return ascent failed", self.level),
+                            &e,
+                        ));
+                    }
+                };
                 match resp.reply {
                     SchedReply::Removed { .. } => {}
                     // the ancestor's structured error descends as-is
@@ -375,6 +524,9 @@ pub struct Hierarchy {
     /// handlers get via `node_handler`.
     services: Vec<SchedService>,
     servers: Vec<ServerHandle>,
+    /// Per-level `(client, server)` fault injectors when built with
+    /// [`LinkPolicy::chaos`] (index = level; level 0 has no parent link).
+    injectors: Vec<(Option<FaultInjector>, Option<FaultInjector>)>,
 }
 
 impl Hierarchy {
@@ -392,9 +544,24 @@ impl Hierarchy {
         levels: &[LevelSpec],
         external: Option<Box<dyn ExternalProvider>>,
     ) -> Result<Hierarchy, String> {
+        Self::build_with_policy(root_graph, levels, external, LinkPolicy::default())
+    }
+
+    /// Like [`Hierarchy::build_with_external`] but with an explicit
+    /// fault-tolerance [`LinkPolicy`] applied to every parent link:
+    /// deadline, bounded retry, quarantine breaker, and (optionally)
+    /// deterministic fault injection.
+    pub fn build_with_policy(
+        root_graph: ResourceGraph,
+        levels: &[LevelSpec],
+        external: Option<Box<dyn ExternalProvider>>,
+        policy: LinkPolicy,
+    ) -> Result<Hierarchy, String> {
         let mut nodes = Vec::new();
         let mut services = Vec::new();
         let mut servers = Vec::new();
+        let mut injectors: Vec<(Option<FaultInjector>, Option<FaultInjector>)> =
+            vec![(None, None)];
         let root_service =
             SchedService::new(SchedInstance::new(root_graph, PruneConfig::default()));
         services.push(root_service.clone());
@@ -408,6 +575,7 @@ impl Hierarchy {
             snapshot: None,
             added_roots: std::collections::HashSet::new(),
             cloud_grants: Vec::new(),
+            breaker: CircuitBreaker::new(policy.breaker_threshold, policy.breaker_cooldown),
         }));
         nodes.push(root);
 
@@ -418,33 +586,61 @@ impl Hierarchy {
             //    part of any measured path)
             let boot_spec = JobSpec::nodes_sockets_cores(spec.boot_nodes, 2, 16);
             let (grant, parent_service) = {
-                let mut p = parent.lock().unwrap();
+                let mut p = lock_node(&parent);
                 let out = p.inst.write().match_allocate(&boot_spec).map_err(|e| {
                     format!("level {level} boot: parent cannot grant {} nodes: {e}", spec.boot_nodes)
                 })?;
                 p.child_job = Some(out.job);
                 (out.subgraph, p.inst.clone())
             };
+            // per-link injectors: each link derives independent client and
+            // server streams from the master seed, so one link's draw
+            // count never perturbs another's schedule
+            let (client_inj, server_inj) = match &policy.chaos {
+                Some(c) => (
+                    Some(FaultInjector::new(
+                        c.seed ^ (level as u64 * 2 + 1),
+                        c.client_rates,
+                    )),
+                    Some(FaultInjector::new(
+                        c.seed ^ (level as u64 * 2 + 2),
+                        c.server_rates,
+                    )),
+                ),
+                None => (None, None),
+            };
             // 2. serve the parent over the requested transport (the handler
             //    gets its own service handle so read-only ops skip the
-            //    node mutex)
-            let conn: Box<dyn Conn> = match spec.link {
+            //    node mutex), with server-side chaos outside the real
+            //    handler when configured
+            let h = node_handler(parent.clone(), parent_service);
+            let h = match (&server_inj, &policy.chaos) {
+                (Some(inj), Some(c)) => chaos_handler(h, inj.clone(), c.stall),
+                _ => h,
+            };
+            let base: Box<dyn Conn> = match spec.link {
                 LinkKind::InProc => {
-                    let h = node_handler(parent.clone(), parent_service);
                     let server = InProcServer::spawn(h);
-                    let conn = server.connect();
+                    let conn = server.connect_with_deadline(policy.deadline);
                     servers.push(ServerHandle::InProc(server));
                     Box::new(conn)
                 }
                 LinkKind::Tcp(latency) => {
-                    let h = node_handler(parent.clone(), parent_service);
                     let server = TcpServer::spawn(h).map_err(|e| e.to_string())?;
-                    let conn =
-                        TcpConn::connect(server.addr, latency).map_err(|e| e.to_string())?;
+                    let conn = TcpConn::connect_with(server.addr, latency, policy.deadline)
+                        .map_err(|e| e.to_string())?;
                     servers.push(ServerHandle::Tcp(server));
                     Box::new(conn)
                 }
             };
+            // wrap inside-out: faults fire at the link boundary, retries
+            // sit above them (a retried probe re-rolls the fault dice)
+            let base: Box<dyn Conn> = match &client_inj {
+                Some(inj) => Box::new(FaultyConn::new(base, inj.clone())),
+                None => base,
+            };
+            let conn: Box<dyn Conn> = Box::new(RetryConn::new(base, policy.retry.clone()));
+            injectors.push((client_inj, server_inj));
             // 3. boot the child instance from the grant
             let inst = SchedService::new(
                 SchedInstance::from_jgf(&grant, PruneConfig::default())
@@ -461,6 +657,7 @@ impl Hierarchy {
                 snapshot: None,
                 added_roots: std::collections::HashSet::new(),
                 cloud_grants: Vec::new(),
+                breaker: CircuitBreaker::new(policy.breaker_threshold, policy.breaker_cooldown),
             })));
         }
 
@@ -468,9 +665,23 @@ impl Hierarchy {
             nodes,
             services,
             servers,
+            injectors,
         };
         h.saturate_and_snapshot()?;
         Ok(h)
+    }
+
+    /// The client-side [`FaultInjector`] of a level's parent link, when the
+    /// hierarchy was built with [`LinkPolicy::chaos`] (level 0 has none).
+    /// Tests use this to script faults and read stats.
+    pub fn client_injector(&self, level: usize) -> Option<FaultInjector> {
+        self.injectors.get(level).and_then(|(c, _)| c.clone())
+    }
+
+    /// The server-side [`FaultInjector`] of a level's parent link, when the
+    /// hierarchy was built with [`LinkPolicy::chaos`] (level 0 has none).
+    pub fn server_injector(&self, level: usize) -> Option<FaultInjector> {
+        self.injectors.get(level).and_then(|(_, s)| s.clone())
     }
 
     /// Fully allocate every level's remaining free resources to local jobs
@@ -479,7 +690,7 @@ impl Hierarchy {
     fn saturate_and_snapshot(&self) -> Result<(), String> {
         let leaf_idx = self.nodes.len() - 1;
         for (i, node) in self.nodes.iter().enumerate() {
-            let mut n = node.lock().unwrap();
+            let mut n = lock_node(node);
             if i > 0 {
                 // node-level saturation, then socket-level (the leaf may
                 // have had a socket granted away), then core-level
@@ -511,7 +722,7 @@ impl Hierarchy {
     /// Issue a `MatchGrow` from the leaf (the paper's helper-script step).
     pub fn grow_from_leaf(&self, spec: &JobSpec) -> Result<GrowReport, String> {
         let leaf = self.nodes.last().expect("hierarchy has levels");
-        let mut n = leaf.lock().unwrap();
+        let mut n = lock_node(leaf);
         let own_job = n.own_job;
         // ensure grants terminate at the leaf's own running job
         n.child_job = own_job;
@@ -531,7 +742,7 @@ impl Hierarchy {
     /// are managed independently of the top-level scheduler, and shrinks of
     /// burst subgraphs stop at this level.
     pub fn set_external(&self, level: usize, provider: Box<dyn ExternalProvider>) {
-        self.nodes[level].lock().unwrap().external = Some(provider);
+        lock_node(&self.nodes[level]).external = Some(provider);
     }
 
     /// Shrink: remove the subtree at `path` from the leaf and propagate the
@@ -540,7 +751,7 @@ impl Hierarchy {
     /// removed at the leaf.
     pub fn shrink_from_leaf(&self, path: &str) -> Result<usize, String> {
         let leaf = self.nodes.last().expect("hierarchy has levels");
-        let mut n = leaf.lock().unwrap();
+        let mut n = lock_node(leaf);
         n.shrink_return(path).map_err(|e| e.to_string())
     }
 
@@ -549,9 +760,23 @@ impl Hierarchy {
     /// through [`ResourceGraph::restore_from`] so the graph epoch keeps
     /// moving forward — probe results cached against the pre-reset
     /// timeline can never be served against the restored graph.
+    ///
+    /// Burst bookkeeping is reset too: instances obtained from each node's
+    /// own provider are released back to it (best effort — the snapshot
+    /// predates every grant, so after the rollback nothing references
+    /// them), and `added_roots`/`cloud_grants` are cleared. Without this a
+    /// reset would orphan provider instances.
     pub fn reset(&self) {
         for node in &self.nodes {
-            let n = node.lock().unwrap();
+            let mut n = lock_node(node);
+            let grants: Vec<(String, Vec<String>)> = n.cloud_grants.drain(..).collect();
+            if let Some(provider) = &mut n.external {
+                for (_, ids) in &grants {
+                    // best effort: a failed release cannot block the reset
+                    let _ = provider.release(ids);
+                }
+            }
+            n.added_roots.clear();
             if let Some((g, a)) = n.snapshot.clone() {
                 let mut guard = n.inst.write();
                 let inst = &mut *guard;
@@ -568,15 +793,85 @@ impl Hierarchy {
 
     /// Graph size (vertices + edges) at a level.
     pub fn graph_size(&self, level: usize) -> usize {
-        self.nodes[level].lock().unwrap().inst.read().graph.size()
+        lock_node(&self.nodes[level]).inst.read().graph.size()
     }
 
     /// Run invariant checks on every level (tests / failure injection).
     pub fn check_all(&self) -> Result<(), String> {
         for node in &self.nodes {
-            node.lock().unwrap().inst.read().check()?;
+            lock_node(node).inst.read().check()?;
         }
         Ok(())
+    }
+
+    /// Quarantine state of a level's parent link: `"closed"`, `"open"`, or
+    /// `"half-open"`. The root has no parent link and always reports
+    /// `"closed"`.
+    pub fn parent_link_state(&self, level: usize) -> &'static str {
+        lock_node(&self.nodes[level]).breaker.state_name()
+    }
+
+    /// One tick of link maintenance: every level whose parent-link breaker
+    /// has finished its cooldown sends a half-open trial probe through the
+    /// real link — a well-formed reply restores the level (quarantine
+    /// lifts), a transport failure re-opens it for another cooldown. Call
+    /// periodically (chaos soaks call it between ops). Returns
+    /// `(level, state)` for every level below the root, observed after any
+    /// trial.
+    pub fn maintain(&self) -> Vec<(usize, &'static str)> {
+        let mut states = Vec::new();
+        for (level, node) in self.nodes.iter().enumerate().skip(1) {
+            let mut n = lock_node(node);
+            if n.parent.is_some() && n.breaker.state_name() == "half-open" && n.breaker.admit() {
+                let req = Request::new(
+                    level as u64,
+                    SchedOp::Probe {
+                        spec: JobSpec::nodes_sockets_cores(1, 1, 1),
+                    },
+                );
+                let trial = n
+                    .parent
+                    .as_mut()
+                    .expect("checked parent.is_some above")
+                    .call(&req);
+                match trial {
+                    Ok(_) => n.breaker.record_success(),
+                    Err(_) => n.breaker.record_failure(),
+                }
+            }
+            states.push((level, n.breaker.state_name()));
+        }
+        states
+    }
+
+    /// Feasibility probe that routes around quarantine: ascend from the
+    /// leaf consulting each level's concurrent cached probe path (exactly
+    /// [`Hierarchy::probe_at`]), returning the first feasible
+    /// `(level, reply)` — or the root's (infeasible) reply if nothing
+    /// matches. The walk stops with [`code::LEVEL_UNAVAILABLE`] if it hits
+    /// an open parent-link breaker first: every level above a quarantined
+    /// link is unreachable from the leaf, so a feasible answer from up
+    /// there would be unactionable.
+    pub fn probe_up(&self, spec: &JobSpec) -> Result<(usize, SchedReply), RpcError> {
+        let mut level = self.depth() - 1;
+        loop {
+            let reply = self.probe_at(level, spec);
+            if matches!(reply, SchedReply::Probed { .. }) {
+                return Ok((level, reply));
+            }
+            if level == 0 {
+                return Ok((0, reply));
+            }
+            {
+                let n = lock_node(&self.nodes[level]);
+                // non-mutating check on purpose: routing a probe must not
+                // consume the breaker's half-open trial admission
+                if n.breaker.is_open() {
+                    return Err(level_unavailable(level, &n.breaker));
+                }
+            }
+            level -= 1;
+        }
     }
 
     /// Serve a feasibility probe at a level through its concurrent cached
@@ -605,9 +900,8 @@ impl Hierarchy {
 
     fn shutdown_inner(&mut self) {
         for node in &self.nodes {
-            if let Ok(mut n) = node.lock() {
-                n.parent = None; // drop client conns first
-            }
+            let mut n = lock_node(node);
+            n.parent = None; // drop client conns first
         }
         for s in self.servers.drain(..) {
             match s {
@@ -642,8 +936,31 @@ fn node_handler(
                 reply: service.apply(&req.op),
             };
         }
-        let mut n = node.lock().expect("node poisoned");
-        serve(&mut n, req)
+        let id = req.id;
+        let op_name = req.op.name();
+        // panic containment: an unwinding mutating op must answer with a
+        // typed error, not kill the transport thread mid-request (the
+        // caller would see a disconnect and could never tell why). The
+        // node mutex is poisoned by the unwind; `lock_node` tolerates
+        // that, and the instance beneath is protected by the service's
+        // own write-path rollback.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut n = lock_node(&node);
+            serve(&mut n, req)
+        }));
+        match outcome {
+            Ok(resp) => resp,
+            Err(payload) => Response::ok(
+                id,
+                SchedReply::err(
+                    code::PANIC,
+                    format!(
+                        "op '{op_name}' panicked in the hierarchy handler ({})",
+                        panic_message(payload.as_ref())
+                    ),
+                ),
+            ),
+        }
     })
 }
 
@@ -860,6 +1177,100 @@ mod tests {
         let report = h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
         assert_eq!(report.levels.len(), 2);
         assert!(report.levels[0].match_ok);
+        h.shutdown();
+    }
+
+    /// A policy build with zero-rate chaos behaves exactly like the plain
+    /// build (the wrappers are transparent), exposes the injectors, and
+    /// reports every link closed.
+    #[test]
+    fn policy_build_with_idle_chaos_grows_normally() {
+        let root = table2_graph(3, &mut UidGen::new()); // 2 nodes
+        let levels = [LevelSpec {
+            boot_nodes: 1,
+            link: LinkKind::InProc,
+        }];
+        let h = Hierarchy::build_with_policy(
+            root,
+            &levels,
+            None,
+            LinkPolicy {
+                chaos: Some(ChaosConfig::client_only(42, FaultRates::none())),
+                ..LinkPolicy::default()
+            },
+        )
+        .unwrap();
+        assert!(h.client_injector(1).is_some());
+        assert!(h.server_injector(1).is_some());
+        assert!(h.client_injector(0).is_none(), "root has no parent link");
+        assert_eq!(h.parent_link_state(0), "closed");
+        assert_eq!(h.parent_link_state(1), "closed");
+        let report = h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
+        assert_eq!(report.levels.len(), 2);
+        // the grow's escalation frame passed through the injector
+        assert!(h.client_injector(1).unwrap().stats().delivered > 0);
+        h.check_all().unwrap();
+        h.shutdown();
+    }
+
+    /// The quarantine lifecycle end to end: scripted frame drops trip the
+    /// breaker, the quarantined link fast-fails with the structured code
+    /// (consuming no fault schedule), probe routing refuses the
+    /// unreachable upper levels, and a `maintain` half-open trial restores
+    /// the link after the cooldown.
+    #[test]
+    fn quarantined_link_fast_fails_then_recovers() {
+        use crate::fault::FrameFault;
+        let root = table2_graph(3, &mut UidGen::new()); // 2 nodes
+        let levels = [LevelSpec {
+            boot_nodes: 1,
+            link: LinkKind::InProc,
+        }];
+        let h = Hierarchy::build_with_policy(
+            root,
+            &levels,
+            None,
+            LinkPolicy {
+                breaker_threshold: 2,
+                // generous cooldown: the assertions between trip and
+                // restore must run well inside it even on a loaded machine
+                breaker_cooldown: Duration::from_millis(200),
+                chaos: Some(ChaosConfig::client_only(7, FaultRates::none())),
+                ..LinkPolicy::default()
+            },
+        )
+        .unwrap();
+        let inj = h.client_injector(1).unwrap();
+        let spec = table1_jobspec("T7"); // leaf is saturated: must escalate
+        // two scripted drops = two transport failures = threshold reached
+        // (match_grow is mutating, so the retry layer does NOT re-roll)
+        inj.push_frame_fault(FrameFault::Drop);
+        let e1 = h.grow_from_leaf(&spec).unwrap_err();
+        assert!(e1.starts_with(code::TIMEOUT), "{e1}");
+        inj.push_frame_fault(FrameFault::Drop);
+        let e2 = h.grow_from_leaf(&spec).unwrap_err();
+        assert!(e2.starts_with(code::TIMEOUT), "{e2}");
+        assert_eq!(h.parent_link_state(1), "open");
+        // quarantined: fast structured refusal, no link traffic
+        let delivered_before = inj.stats().delivered;
+        let e3 = h.grow_from_leaf(&spec).unwrap_err();
+        assert!(e3.starts_with(code::LEVEL_UNAVAILABLE), "{e3}");
+        assert_eq!(inj.stats().delivered, delivered_before);
+        // probe routing: the leaf is saturated and everything above is
+        // unreachable — the walk surfaces the quarantine
+        let probe_spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+        let routed = h.probe_up(&probe_spec).unwrap_err();
+        assert_eq!(routed.code, code::LEVEL_UNAVAILABLE);
+        // cooldown elapses: maintain's half-open trial probe restores it
+        std::thread::sleep(Duration::from_millis(250));
+        let states = h.maintain();
+        assert_eq!(states, vec![(1, "closed")]);
+        // restored: probes route up again and the grow goes through
+        let (level, reply) = h.probe_up(&probe_spec).unwrap();
+        assert_eq!(level, 0, "free capacity lives at the root");
+        assert!(matches!(reply, SchedReply::Probed { .. }));
+        h.grow_from_leaf(&spec).unwrap();
+        h.check_all().unwrap();
         h.shutdown();
     }
 }

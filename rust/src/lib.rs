@@ -22,7 +22,11 @@
 //!   framing, and transports (in-proc channels, TCP with injected latency).
 //! - [`hier`] — fully hierarchical scheduling: chains of instances speaking
 //!   the protocol, Algorithm 1's bottom-up/top-down `MatchGrow`, shrink
-//!   propagation, external-provider escalation.
+//!   propagation, external-provider escalation, and per-link quarantine
+//!   (circuit breakers with half-open re-probe).
+//! - [`fault`] — deterministic fault injection (seeded frame/provider fault
+//!   schedules) and the tolerance policies the stack runs with: bounded
+//!   retry + backoff, and the quarantine circuit breaker.
 //! - [`external`], [`orchestrator`], [`workload`], [`perfmodel`],
 //!   [`experiments`] — cloud providers, the KubeFlux-style orchestrator
 //!   model, workload generators, the §6 performance model, and the paper's
@@ -49,6 +53,7 @@ pub mod resource;
 pub mod jobspec;
 pub mod sched;
 pub mod rpc;
+pub mod fault;
 pub mod hier;
 pub mod external;
 pub mod bitmap;

@@ -71,8 +71,28 @@ pub mod code {
     /// The external resource provider's API itself failed.
     pub const PROVIDER_API: &str = "provider_api";
     /// The RPC link failed (I/O error, peer gone) — distinct from a
-    /// well-formed negative answer.
+    /// well-formed negative answer. The finer-grained [`TIMEOUT`] and
+    /// [`DISCONNECTED`] are preferred where the I/O error kind allows
+    /// (see [`super::RpcError::from_io`]); `transport` is the residual.
     pub const TRANSPORT: &str = "transport";
+    /// The call exceeded its deadline budget (read timeout, injected drop).
+    /// For a mutating op this means *outcome unknown*: the peer may have
+    /// committed — callers must not blindly re-send (at-most-once).
+    pub const TIMEOUT: &str = "timeout";
+    /// The peer vanished mid-call (connection reset, broken pipe, EOF
+    /// inside a frame). Like [`TIMEOUT`], a mutating op's outcome is
+    /// unknown.
+    pub const DISCONNECTED: &str = "disconnected";
+    /// The target hierarchy level is quarantined: its link tripped the
+    /// circuit breaker after repeated timeouts/disconnects and is refusing
+    /// traffic until a half-open re-probe restores it. Structured fast-fail
+    /// — the caller did not wait a deadline to learn this.
+    pub const LEVEL_UNAVAILABLE: &str = "level_unavailable";
+    /// The op panicked inside the serving layer. The instance was rolled
+    /// back to its pre-op snapshot (graph epoch advanced, caches
+    /// invalidated); the lock is NOT poisoned and the service keeps
+    /// serving.
+    pub const PANIC: &str = "panic";
     /// The op is valid but not serviceable by the receiver (e.g. a
     /// hierarchical op sent to a bare `SchedInstance`).
     pub const UNSUPPORTED_OP: &str = "unsupported_op";
@@ -117,6 +137,27 @@ impl RpcError {
             code: doc.str_field("code")?.to_string(),
             message: doc.str_field("message")?.to_string(),
         })
+    }
+
+    /// Classify an I/O failure on an RPC link into the typed vocabulary:
+    /// timeout kinds map to [`code::TIMEOUT`] (`WouldBlock` included —
+    /// POSIX read timeouts surface as either), peer-gone kinds to
+    /// [`code::DISCONNECTED`], everything else to the residual
+    /// [`code::TRANSPORT`]. `context` prefixes the message (e.g. which
+    /// link failed); it never affects the code.
+    pub fn from_io(context: &str, e: &std::io::Error) -> RpcError {
+        use std::io::ErrorKind as K;
+        let code = match e.kind() {
+            K::TimedOut | K::WouldBlock => code::TIMEOUT,
+            K::BrokenPipe
+            | K::ConnectionReset
+            | K::ConnectionAborted
+            | K::ConnectionRefused
+            | K::UnexpectedEof
+            | K::NotConnected => code::DISCONNECTED,
+            _ => code::TRANSPORT,
+        };
+        RpcError::new(code, format!("{context}: {e}"))
     }
 }
 
@@ -724,6 +765,25 @@ mod tests {
         assert!(SchedOp::from_json(&op).is_err());
         let reply = Json::parse(r#"{"reply":"teleported"}"#).unwrap();
         assert!(SchedReply::from_json(&reply).is_err());
+    }
+
+    #[test]
+    fn from_io_classifies_error_kinds() {
+        use std::io::{Error, ErrorKind};
+        let cases = [
+            (ErrorKind::TimedOut, code::TIMEOUT),
+            (ErrorKind::WouldBlock, code::TIMEOUT),
+            (ErrorKind::BrokenPipe, code::DISCONNECTED),
+            (ErrorKind::ConnectionReset, code::DISCONNECTED),
+            (ErrorKind::UnexpectedEof, code::DISCONNECTED),
+            (ErrorKind::InvalidData, code::TRANSPORT),
+            (ErrorKind::Other, code::TRANSPORT),
+        ];
+        for (kind, want) in cases {
+            let e = RpcError::from_io("link L2->L1", &Error::new(kind, "boom"));
+            assert_eq!(e.code, want, "{kind:?}");
+            assert!(e.message.starts_with("link L2->L1: "), "{}", e.message);
+        }
     }
 
     #[test]

@@ -1,15 +1,35 @@
 //! RPC transports: in-process duplex channels (intranode) and TCP with
 //! injected latency (standing in for the paper's IPoIB internode hop).
+//!
+//! Both transports carry a per-call **deadline budget**: a call either
+//! resolves within it or fails with `ErrorKind::TimedOut` — no call blocks
+//! forever on a stalled peer. After any failed call a [`TcpConn`] drops its
+//! stream and reconnects on the next call (a timed-out request may still
+//! get a late response; reusing the stream would desync request/response
+//! correlation). Retry/backoff policy lives above the transport, in
+//! [`crate::fault::RetryConn`].
 
 use std::io::Write;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::rpc::{encode_frame, read_frame, Request, Response};
+
+/// Default per-call deadline budget ([`TcpConn::connect`] and
+/// [`InProcServer::connect`] apply it): generous against any simulated
+/// latency in the tree, small enough that a hung peer is a bounded wait.
+pub const DEFAULT_DEADLINE: Duration = Duration::from_secs(5);
+
+/// Correlation-id sentinel for error responses to requests whose own id
+/// could not be decoded. Real ids are small sequential counters (and the
+/// JSON codec rejects anything above 2^53), so the sentinel can never
+/// collide with — or silently alias — a real in-flight request the way a
+/// `0` fallback would.
+pub const UNKNOWN_REQUEST_ID: u64 = u64::MAX;
 
 /// Shared request handler. Deliberately `Fn`, not `FnMut`: transports
 /// invoke it concurrently (one thread per TCP connection), so per-request
@@ -74,9 +94,14 @@ enum InProcMsg {
     Shutdown,
 }
 
-/// Client half of the in-process transport.
+/// Client half of the in-process transport. Each call uses a fresh reply
+/// channel, so a deadline miss cannot desync later calls: the late reply
+/// lands in a dropped receiver.
 pub struct InProcConn {
     tx: Sender<InProcMsg>,
+    /// Per-call deadline; `None` blocks indefinitely (legacy behavior,
+    /// opt-in via [`InProcServer::connect_with_deadline`]).
+    deadline: Option<Duration>,
 }
 
 impl Conn for InProcConn {
@@ -85,9 +110,20 @@ impl Conn for InProcConn {
         self.tx
             .send(InProcMsg::Call(req.clone(), reply_tx))
             .map_err(|_| std::io::Error::new(std::io::ErrorKind::BrokenPipe, "server gone"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| std::io::Error::new(std::io::ErrorKind::BrokenPipe, "server gone"))
+        match self.deadline {
+            None => reply_rx
+                .recv()
+                .map_err(|_| std::io::Error::new(std::io::ErrorKind::BrokenPipe, "server gone")),
+            Some(d) => reply_rx.recv_timeout(d).map_err(|e| match e {
+                RecvTimeoutError::Timeout => std::io::Error::new(
+                    std::io::ErrorKind::TimedOut,
+                    format!("no reply within the {d:?} deadline budget"),
+                ),
+                RecvTimeoutError::Disconnected => {
+                    std::io::Error::new(std::io::ErrorKind::BrokenPipe, "server gone")
+                }
+            }),
+        }
     }
 }
 
@@ -118,10 +154,18 @@ impl InProcServer {
         }
     }
 
-    /// A new client connection to this server.
+    /// A new client connection to this server with the
+    /// [`DEFAULT_DEADLINE`] call budget.
     pub fn connect(&self) -> InProcConn {
+        self.connect_with_deadline(Some(DEFAULT_DEADLINE))
+    }
+
+    /// A new client connection with an explicit per-call deadline
+    /// (`None` = block indefinitely).
+    pub fn connect_with_deadline(&self, deadline: Option<Duration>) -> InProcConn {
         InProcConn {
             tx: self.tx.clone(),
+            deadline,
         }
     }
 
@@ -140,17 +184,63 @@ impl InProcServer {
 
 /// Client half over TCP. Latency is applied per direction on the client so
 /// measured round-trips include the simulated link cost.
+///
+/// Every call runs under a read-timeout **deadline budget** (socket
+/// `SO_RCVTIMEO`): a stalled peer costs at most one deadline, never an
+/// infinite block. A failed call (timeout, disconnect, undecodable frame)
+/// drops the stream; the next call reconnects on a fresh one — a late
+/// response to an abandoned request must never be read as the answer to a
+/// newer one.
 pub struct TcpConn {
-    stream: TcpStream,
+    addr: SocketAddr,
     latency: Latency,
+    deadline: Option<Duration>,
+    stream: Option<TcpStream>,
 }
 
 impl TcpConn {
-    /// Connect to a server, applying `latency` per direction.
+    /// Connect to a server with the [`DEFAULT_DEADLINE`] call budget,
+    /// applying `latency` per direction.
     pub fn connect(addr: SocketAddr, latency: Latency) -> std::io::Result<TcpConn> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true)?;
-        Ok(TcpConn { stream, latency })
+        TcpConn::connect_with(addr, latency, Some(DEFAULT_DEADLINE))
+    }
+
+    /// Connect with an explicit per-call deadline (`None` = block
+    /// indefinitely — legacy behavior, discouraged outside benches).
+    pub fn connect_with(
+        addr: SocketAddr,
+        latency: Latency,
+        deadline: Option<Duration>,
+    ) -> std::io::Result<TcpConn> {
+        let mut conn = TcpConn {
+            addr,
+            latency,
+            deadline,
+            stream: None,
+        };
+        conn.ensure_stream()?;
+        Ok(conn)
+    }
+
+    fn ensure_stream(&mut self) -> std::io::Result<&mut TcpStream> {
+        if self.stream.is_none() {
+            let stream = TcpStream::connect(self.addr)?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(self.deadline)?;
+            self.stream = Some(stream);
+        }
+        Ok(self.stream.as_mut().expect("just ensured"))
+    }
+}
+
+/// POSIX surfaces a read timeout as either `WouldBlock` or `TimedOut`
+/// depending on platform; normalize to `TimedOut` so callers branch on one
+/// kind.
+fn normalize_timeout(e: std::io::Error) -> std::io::Error {
+    if e.kind() == std::io::ErrorKind::WouldBlock {
+        std::io::Error::new(std::io::ErrorKind::TimedOut, e)
+    } else {
+        e
     }
 }
 
@@ -158,8 +248,21 @@ impl Conn for TcpConn {
     fn call(&mut self, req: &Request) -> std::io::Result<Response> {
         let frame = encode_frame(&req.to_json());
         self.latency.apply(frame.len());
-        self.stream.write_all(&frame)?;
-        let doc = read_frame(&mut self.stream)?;
+        let io: std::io::Result<crate::util::json::Json> = (|| {
+            let stream = self.ensure_stream()?;
+            stream.write_all(&frame)?;
+            read_frame(stream)
+        })();
+        let doc = match io {
+            Ok(doc) => doc,
+            Err(e) => {
+                // stream state is unknown (half-written frame, response
+                // still in flight, or mid-frame garbage): drop it so the
+                // next call starts clean on a fresh connection
+                self.stream = None;
+                return Err(normalize_timeout(e));
+            }
+        };
         let resp = Response::from_json(&doc)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
         // response-direction latency (frame length approximated by re-encode)
@@ -177,16 +280,20 @@ pub struct TcpServer {
 }
 
 impl TcpServer {
-    /// Bind an ephemeral localhost port and serve `h` on it.
+    /// Bind an ephemeral localhost port and serve `h` on it. All listener
+    /// setup (bind, addr, nonblocking mode) happens before the accept
+    /// thread spawns, so every setup failure surfaces as this function's
+    /// `Err` — nothing panics inside a detached thread.
     pub fn spawn(h: Handler) -> std::io::Result<TcpServer> {
         let listener = TcpListener::bind("127.0.0.1:0")?;
         let addr = listener.local_addr()?;
+        // nonblocking BEFORE the thread: a failure here used to be an
+        // .expect() inside the accept thread — a panic the caller could
+        // neither see nor handle, with the server left permanently wedged
+        listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let accept_thread = std::thread::spawn(move || {
-            listener
-                .set_nonblocking(true)
-                .expect("nonblocking listener");
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
@@ -229,8 +336,12 @@ fn serve_conn(mut stream: TcpStream, h: Handler) {
         };
         let resp = match Request::from_json(&doc) {
             Ok(req) => h(req),
+            // undecodable request: echo its id when the envelope carried
+            // one; otherwise answer under the UNKNOWN_REQUEST_ID sentinel —
+            // a 0 fallback would alias a real request 0 and hand its caller
+            // someone else's bad_request error
             Err(e) => Response::err(
-                doc.u64_field("id").unwrap_or(0),
+                doc.u64_field("id").unwrap_or(UNKNOWN_REQUEST_ID),
                 crate::rpc::proto::code::BAD_REQUEST,
                 format!("bad request: {e}"),
             ),
@@ -313,6 +424,82 @@ mod tests {
         let (_, fast_s) = crate::util::metrics::time_it(|| fast.call(&req).unwrap());
         let (_, slow_s) = crate::util::metrics::time_it(|| slow.call(&req).unwrap());
         assert!(slow_s > fast_s + 0.003, "fast={fast_s} slow={slow_s}");
+        server.shutdown();
+    }
+
+    /// A handler that stalls only its FIRST request (long enough to blow a
+    /// small deadline), then answers instantly.
+    fn stall_once_handler(stall: Duration) -> Handler {
+        handler({
+            let first = AtomicBool::new(true);
+            move |req: Request| {
+                if first.swap(false, Ordering::SeqCst) {
+                    std::thread::sleep(stall);
+                }
+                Response::ok(req.id, SchedReply::Freed { vertices: req.id as usize })
+            }
+        })
+    }
+
+    #[test]
+    fn tcp_call_times_out_on_stalled_peer_then_recovers() {
+        let server = TcpServer::spawn(stall_once_handler(Duration::from_millis(400))).unwrap();
+        let mut conn =
+            TcpConn::connect_with(server.addr, Latency::none(), Some(Duration::from_millis(50)))
+                .unwrap();
+        let t = std::time::Instant::now();
+        let err = conn.call(&Request::new(1, free_op(1))).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+        assert!(
+            t.elapsed() < Duration::from_millis(350),
+            "deadline bounded the wait: {:?}",
+            t.elapsed()
+        );
+        // next call reconnects on a fresh stream — and must NOT be handed
+        // the late response to request 1
+        let resp = conn.call(&Request::new(2, free_op(2))).unwrap();
+        assert_eq!(resp.id, 2);
+        assert_eq!(resp.reply, SchedReply::Freed { vertices: 2 });
+        server.shutdown();
+    }
+
+    #[test]
+    fn inproc_call_times_out_on_stalled_server_then_recovers() {
+        let server = InProcServer::spawn(stall_once_handler(Duration::from_millis(300)));
+        let mut conn = server.connect_with_deadline(Some(Duration::from_millis(40)));
+        let err = conn.call(&Request::new(1, free_op(1))).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+        // the server thread is single-threaded and still sleeping; wait it
+        // out — once awake, the late reply goes to a dropped receiver and
+        // the next call gets ITS OWN answer
+        std::thread::sleep(Duration::from_millis(320));
+        let resp = conn.call(&Request::new(2, free_op(2))).unwrap();
+        assert_eq!(resp.id, 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn undecodable_request_answers_with_sentinel_id_not_zero() {
+        let server = TcpServer::spawn(mirror_handler()).unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        // a frame with no id and no op: undecodable as a Request
+        let garbage = crate::util::json::Json::obj()
+            .with("not_an_envelope", crate::util::json::Json::from(true));
+        stream.write_all(&encode_frame(&garbage)).unwrap();
+        let doc = read_frame(&mut stream).unwrap();
+        let resp = Response::from_json(&doc).unwrap();
+        assert_eq!(resp.id, UNKNOWN_REQUEST_ID, "sentinel, never request 0");
+        let err = resp.reply.as_error().expect("bad_request error");
+        assert_eq!(err.code, code::BAD_REQUEST);
+        // a malformed request whose envelope DOES carry an id echoes it
+        let with_id = crate::util::json::Json::obj()
+            .with("id", crate::util::json::Json::from(41u64))
+            .with("op", crate::util::json::Json::obj());
+        stream.write_all(&encode_frame(&with_id)).unwrap();
+        let doc = read_frame(&mut stream).unwrap();
+        let resp = Response::from_json(&doc).unwrap();
+        assert_eq!(resp.id, 41);
+        assert_eq!(resp.reply.as_error().unwrap().code, code::BAD_REQUEST);
         server.shutdown();
     }
 

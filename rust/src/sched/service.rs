@@ -69,15 +69,16 @@
 //!    caller ever needs to touch the field directly.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
 
 use crate::bitmap::BitSet;
+use crate::fault::panic_message;
 use crate::jobspec::{JobSpec, ResourceReq};
 use crate::resource::graph::ResourceGraph;
-use crate::rpc::proto::{code, SchedOp, SchedReply};
+use crate::rpc::proto::{code, RpcError, SchedOp, SchedReply};
 use crate::sched::instance::SchedInstance;
 use crate::sched::matcher::{
     compile_spec_into, probe_sharded_compiled, run_shard, CompiledSpec, MatchScratch, ShardJob,
@@ -290,6 +291,11 @@ struct Shared {
     /// spec (1 = sequential, the default; see
     /// [`SchedService::set_read_shards`]).
     read_shards: AtomicUsize,
+    /// Panic containment on the write path (on by default): mutating ops
+    /// run under `catch_unwind` with a pre-op snapshot, and a panic rolls
+    /// the instance back instead of poisoning the lock. See
+    /// [`SchedService::set_write_rollback`].
+    write_rollback: AtomicBool,
 }
 
 thread_local! {
@@ -570,6 +576,39 @@ fn read_lock(l: &RwLock<SchedInstance>) -> RwLockReadGuard<'_, SchedInstance> {
     l.read().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Run one mutation under `catch_unwind` with a pre-op snapshot of the
+/// graph and allocation table. On panic the instance is rolled back to the
+/// snapshot (via [`ResourceGraph::restore_from`], which advances the epoch
+/// past both timelines — so every cached probe result is invalidated) and
+/// the panic surfaces as a typed [`code::PANIC`] error instead of
+/// unwinding through the caller's lock guard.
+///
+/// The `AssertUnwindSafe` is justified by the rollback itself: whatever
+/// torn state the closure left behind is overwritten before anyone can
+/// observe it.
+fn contained<R>(
+    inst: &mut SchedInstance,
+    what: &str,
+    f: impl FnOnce(&mut SchedInstance) -> R,
+) -> Result<R, RpcError> {
+    let graph_snapshot = inst.graph.clone();
+    let allocs_snapshot = inst.allocs.clone();
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut *inst))) {
+        Ok(v) => Ok(v),
+        Err(payload) => {
+            inst.graph.restore_from(&graph_snapshot);
+            inst.allocs = allocs_snapshot;
+            Err(RpcError::new(
+                code::PANIC,
+                format!(
+                    "{what} panicked ({}); instance rolled back to pre-op snapshot",
+                    panic_message(payload.as_ref())
+                ),
+            ))
+        }
+    }
+}
+
 fn write_lock(l: &RwLock<SchedInstance>) -> RwLockWriteGuard<'_, SchedInstance> {
     l.write().unwrap_or_else(|e| e.into_inner())
 }
@@ -655,6 +694,7 @@ impl SchedService {
             inst: RwLock::new(inst),
             cache: Mutex::new(CacheInner::new()),
             read_shards: AtomicUsize::new(1),
+            write_rollback: AtomicBool::new(true),
         });
         SchedService {
             shared,
@@ -698,6 +738,38 @@ impl SchedService {
     /// Current graph epoch (see `ResourceGraph::epoch`).
     pub fn epoch(&self) -> u64 {
         self.read().graph.epoch()
+    }
+
+    /// Toggle write-path panic containment (on by default). When on,
+    /// mutating ops through [`SchedService::apply`] /
+    /// [`SchedService::apply_batch`] run under `catch_unwind` with a
+    /// pre-op snapshot of the graph and allocation table: a panicking op
+    /// rolls the instance back and answers with [`code::PANIC`] instead of
+    /// poisoning the write lock. The snapshot is one graph + table clone
+    /// per mutating op (or per write *phase* in a batch) — turn it off for
+    /// tight mutation benchmarks where that clone dominates.
+    ///
+    /// Off, a panic unwinds through the guard: the lock helpers here are
+    /// poison-tolerant (`into_inner`), so the service keeps serving, but
+    /// the half-mutated state is whatever the op left behind.
+    pub fn set_write_rollback(&self, on: bool) {
+        self.shared.write_rollback.store(on, Ordering::Relaxed);
+    }
+
+    /// Run an arbitrary mutation under the same panic containment as
+    /// [`SchedService::apply`]: pre-op snapshot, `catch_unwind`, rollback +
+    /// typed [`code::PANIC`] error on unwind. This is the sanctioned way to
+    /// mutate the instance directly when the closure might panic (and the
+    /// hook chaos tests use to inject a genuine write-path panic).
+    ///
+    /// Runs regardless of the [`SchedService::set_write_rollback`] toggle —
+    /// callers reaching for this method are asking for containment.
+    pub fn mutate_contained<R>(
+        &self,
+        f: impl FnOnce(&mut SchedInstance) -> R,
+    ) -> Result<R, RpcError> {
+        let mut guard = self.write();
+        contained(&mut guard, "contained mutation", f)
     }
 
     /// Serve one feasibility probe: cache hit within the current epoch, or
@@ -921,7 +993,14 @@ impl SchedService {
             }
         }
         let mut guard = self.write();
-        let reply = guard.apply(op);
+        let reply = if self.shared.write_rollback.load(Ordering::Relaxed) {
+            match contained(&mut guard, op.name(), |inst| inst.apply(op)) {
+                Ok(reply) => reply,
+                Err(e) => SchedReply::Error(e),
+            }
+        } else {
+            guard.apply(op)
+        };
         if let SchedOp::MatchAllocate { spec } | SchedOp::MatchGrowLocal { spec, .. } = op {
             let no_match = reply
                 .as_error()
@@ -960,8 +1039,28 @@ impl SchedService {
                 self.read_phase(&ops[i..j], i, &mut replies);
             } else {
                 let mut guard = self.write();
-                for (k, reply) in guard.apply_batch(&ops[i..j]).into_iter().enumerate() {
-                    replies[i + k] = Some(reply);
+                if self.shared.write_rollback.load(Ordering::Relaxed) {
+                    match contained(&mut guard, "write phase", |inst| inst.apply_batch(&ops[i..j]))
+                    {
+                        Ok(phase) => {
+                            for (k, reply) in phase.into_iter().enumerate() {
+                                replies[i + k] = Some(reply);
+                            }
+                        }
+                        Err(e) => {
+                            // the whole phase rolled back together, so every
+                            // op in it — including ones that had succeeded
+                            // before the panic — reports the same outcome
+                            let reply = SchedReply::Error(e);
+                            for slot in replies[i..j].iter_mut() {
+                                *slot = Some(reply.clone());
+                            }
+                        }
+                    }
+                } else {
+                    for (k, reply) in guard.apply_batch(&ops[i..j]).into_iter().enumerate() {
+                        replies[i + k] = Some(reply);
+                    }
                 }
             }
             i = j;
@@ -1232,6 +1331,79 @@ mod tests {
         }
         svc.read().check().unwrap();
         twin.check().unwrap();
+    }
+
+    #[test]
+    fn panicking_mutation_rolls_back_and_never_poisons() {
+        let svc = service(3, 2);
+        let spec = table1_jobspec("T7");
+        let epoch_before = svc.epoch();
+        // seed one allocation so the rollback has real state to restore
+        let SchedReply::Allocated { job, .. } =
+            svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() })
+        else {
+            panic!("expected Allocated");
+        };
+        // a contained panic that first tears the allocation table — the
+        // exact state a mid-op panic could leave behind
+        let err = svc
+            .mutate_contained(|inst| -> () {
+                inst.allocs = crate::sched::AllocTable::new();
+                panic!("injected write-path panic");
+            })
+            .unwrap_err();
+        assert_eq!(err.code, code::PANIC);
+        assert!(err.message.contains("injected write-path panic"));
+        // rollback went through restore_from: the epoch advanced (cache
+        // invalidated), never rewound
+        assert!(svc.epoch() > epoch_before);
+        // the write lock is not poisoned: the instance still serves reads
+        // and writes, the torn table was restored, and the oracle passes
+        assert!(matches!(svc.probe(&spec), SchedReply::Probed { .. }));
+        assert!(matches!(
+            svc.apply(&SchedOp::FreeJob { job }),
+            SchedReply::Freed { .. }
+        ));
+        svc.read().check().unwrap();
+    }
+
+    #[test]
+    fn batch_write_phase_panic_fails_whole_phase_and_rolls_back() {
+        let svc = service(3, 1);
+        let spec = table1_jobspec("T7");
+        let epoch_before = svc.epoch();
+        // a panic inside a contained mutation answers with PANIC and leaves
+        // the service able to run a full mixed batch afterwards
+        let err = svc
+            .mutate_contained(|_| -> () { panic!("boom") })
+            .unwrap_err();
+        assert_eq!(err.code, code::PANIC);
+        assert!(svc.epoch() > epoch_before);
+        let ops = vec![
+            SchedOp::Probe { spec: spec.clone() },
+            SchedOp::MatchAllocate { spec: spec.clone() },
+            SchedOp::Probe { spec },
+        ];
+        let replies = svc.apply_batch(&ops);
+        assert!(matches!(replies[0], SchedReply::Probed { .. }));
+        assert!(matches!(replies[1], SchedReply::Allocated { .. }));
+        svc.read().check().unwrap();
+    }
+
+    #[test]
+    fn write_rollback_can_be_disabled() {
+        let svc = service(3, 1);
+        svc.set_write_rollback(false);
+        let spec = table1_jobspec("T7");
+        // mutations still work on the uncontained path
+        let SchedReply::Allocated { job, .. } =
+            svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() })
+        else {
+            panic!("expected Allocated");
+        };
+        svc.apply(&SchedOp::FreeJob { job });
+        svc.set_write_rollback(true);
+        svc.read().check().unwrap();
     }
 
     #[test]

@@ -10,6 +10,18 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# --chaos-smoke: run ONLY the seeded chaos soak (fault injection, link
+# quarantine/recovery, oracle after every op) and exit. The seed is fixed
+# for reproducibility; override with CHAOS_SEED=<int> (decimal or 0x-hex)
+# to replay a specific schedule.
+if [ "${1:-}" = "--chaos-smoke" ]; then
+  export CHAOS_SEED="${CHAOS_SEED:-0x5EED}"
+  echo "== chaos smoke: cargo test --release --test chaos (CHAOS_SEED=$CHAOS_SEED) =="
+  cargo test --release --test chaos -- --nocapture
+  echo "chaos smoke OK"
+  exit 0
+fi
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
