@@ -1,0 +1,219 @@
+//! §Serving harness: open-loop latency-percentile soak against the live
+//! serving stack (`BENCH_serving.json`).
+//!
+//! Replays deterministic seeded op traces (`workload::optrace`) through
+//! `serving::run_scenario` and reports client-side arrival-to-completion
+//! latency percentiles per scenario and per op kind. Row families:
+//!
+//!   serve/{probe_heavy,balanced,churn}@L0/r{rate}
+//!       the three standing mixes against a 128-node `SchedService`,
+//!       across an offered-rate ladder (open loop: when the target
+//!       saturates, queueing delay lands in the percentiles — the
+//!       coordinated-omission-safe convention)
+//!   serve/depth@L{0..3}
+//!       one balanced mix across the Table 2 graph-size sweep
+//!   serve/retry_storm@L4
+//!       pure-allocate pressure against a single-node instance with
+//!       immediate re-issues (3 per failure) — the saturation storm
+//!   serve/hier3, serve/hier3_chaos
+//!       a 3-level hierarchy (8-node root) replayed single-threaded,
+//!       without and with seeded link-fault injection, so the same seed
+//!       reports percentiles clean vs. faulty in one run
+//!
+//! Every scenario also prints issued/error/retry/breaker-trip totals, and
+//! per-kind `name/kind` rows ride along in the JSON.
+//!
+//! Flags (after `cargo bench --bench serving --`):
+//!   --json       write `BENCH_serving.json` at the repo root (the serving
+//!                latency trajectory file; non-gating — see PERF.md)
+//!   --smoke      short traces (~0.25 s per scenario; CI smoke via
+//!                `scripts/verify.sh --serving-smoke`)
+//!   --rate R     replace the service rate ladder with the single rate R
+//!   --clients N  client threads per service scenario (default 4)
+//!   --ops N      hard cap on ops per scenario (default 400000)
+
+use std::time::Duration;
+
+use fluxion::fault::FaultRates;
+use fluxion::hier::{ChaosConfig, LevelSpec, LinkKind};
+use fluxion::serving::{run_scenario, Scenario};
+use fluxion::util::bench::BenchReport;
+use fluxion::workload::optrace::{OpMix, OpTraceSpec};
+
+fn flag_val<T: std::str::FromStr>(args: &[String], flag: &str) -> Option<T> {
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse::<T>().ok())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json = args.iter().any(|a| a == "--json");
+    let clients: usize = flag_val(&args, "--clients").unwrap_or(4);
+    let ops_cap: usize = flag_val(&args, "--ops").unwrap_or(400_000);
+    let rate_override: Option<f64> = flag_val(&args, "--rate");
+
+    // open-loop sizing: each (mix, rate) run lasts ~target_s, so the op
+    // count scales with the offered rate instead of stretching wall-clock
+    let target_s = if smoke { 0.25 } else { 4.0 };
+    let rates: Vec<f64> = match rate_override {
+        Some(r) => vec![r],
+        None if smoke => vec![20_000.0],
+        None => vec![2_000.0, 20_000.0, 100_000.0],
+    };
+    let seed = 0x5E21CE;
+    let mut report = BenchReport::new();
+    let mut results = Vec::new();
+
+    // 1. mix × rate ladder on the 128-node L0 service
+    let mixes = [
+        ("probe_heavy", OpMix::probe_heavy()),
+        ("balanced", OpMix::balanced()),
+        ("churn", OpMix::churn()),
+    ];
+    for (mix_name, mix) in &mixes {
+        for &rate in &rates {
+            let ops = ((rate * target_s) as usize).clamp(1_000, ops_cap);
+            let trace = OpTraceSpec {
+                ops,
+                seed,
+                rate_ops_per_sec: rate,
+                mix: *mix,
+                tenants: 8,
+                nodes: (1, 4),
+            };
+            let name = format!("serve/{mix_name}@L0/r{rate:.0}");
+            let r = run_scenario(&Scenario::service(&name, trace, clients, 0, clients));
+            r.report_rows(&mut report);
+            print_totals(&r);
+            results.push(r);
+        }
+    }
+
+    // 2. hierarchy-depth sweep: the same balanced mix against each Table 2
+    //    graph size (per-op cost grows with graph size; the percentiles
+    //    show how far each level can be pushed at a fixed offered rate)
+    let depth_rate = if smoke { 10_000.0 } else { 20_000.0 };
+    for level in 0..=3usize {
+        let ops = ((depth_rate * target_s) as usize).clamp(1_000, ops_cap);
+        let trace = OpTraceSpec {
+            ops,
+            seed,
+            rate_ops_per_sec: depth_rate,
+            mix: OpMix::balanced(),
+            tenants: 8,
+            nodes: (1, 2),
+        };
+        let name = format!("serve/depth@L{level}");
+        let r = run_scenario(&Scenario::service(&name, trace, clients, level, clients));
+        r.report_rows(&mut report);
+        print_totals(&r);
+        results.push(r);
+    }
+
+    // 3. allocate-retry storm against a saturated single-node instance:
+    //    every op asks for 2 nodes of a 1-node graph and re-issues 3 times
+    let storm_ops = if smoke { 2_000 } else { 50_000 };
+    let storm = Scenario::service(
+        "serve/retry_storm@L4",
+        OpTraceSpec {
+            ops: storm_ops,
+            seed,
+            rate_ops_per_sec: if smoke { 10_000.0 } else { 20_000.0 },
+            mix: OpMix::allocate_only(),
+            tenants: 8,
+            nodes: (2, 4),
+        },
+        clients,
+        4,
+        clients,
+    )
+    .with_retries(3);
+    let r = run_scenario(&storm);
+    r.report_rows(&mut report);
+    print_totals(&r);
+    results.push(r);
+
+    // 4. 3-level hierarchy (Table 2: 8-node root, 4-node L1, 2-node L2),
+    //    clean and under seeded link chaos — same trace seed, so the pair
+    //    isolates what fault injection does to the tail
+    let hier_levels = || {
+        vec![
+            LevelSpec {
+                boot_nodes: 4,
+                link: LinkKind::InProc,
+            },
+            LevelSpec {
+                boot_nodes: 2,
+                link: LinkKind::InProc,
+            },
+        ]
+    };
+    let hier_trace = OpTraceSpec {
+        ops: if smoke { 40 } else { 300 },
+        seed,
+        rate_ops_per_sec: if smoke { 150.0 } else { 100.0 },
+        mix: OpMix::balanced(),
+        tenants: 4,
+        nodes: (1, 2),
+    };
+    let r = run_scenario(&Scenario::hierarchy(
+        "serve/hier3",
+        hier_trace.clone(),
+        1,
+        hier_levels(),
+        None,
+    ));
+    r.report_rows(&mut report);
+    print_totals(&r);
+    results.push(r);
+
+    let chaos = ChaosConfig::client_only(
+        seed ^ 0xC4A05,
+        FaultRates {
+            drop: 0.02,
+            delay: 0.05,
+            delay_for: Duration::from_micros(200),
+            ..FaultRates::none()
+        },
+    );
+    let r = run_scenario(&Scenario::hierarchy(
+        "serve/hier3_chaos",
+        hier_trace,
+        1,
+        hier_levels(),
+        Some(chaos),
+    ));
+    r.report_rows(&mut report);
+    print_totals(&r);
+    results.push(r);
+
+    let total_ops: usize = results.iter().map(|r| r.planned).sum();
+    println!(
+        "\n{} scenarios, {} ops total, {} report rows",
+        results.len(),
+        total_ops,
+        report.len()
+    );
+
+    if json {
+        let path = "BENCH_serving.json";
+        report.write_json(path).expect("write serving report");
+        println!("wrote {path} ({} rows)", report.len());
+    }
+}
+
+fn print_totals(r: &fluxion::serving::ScenarioResult) {
+    println!(
+        "  ({}: issued={} errors={} retries={} breaker_trips={} offered={:.0}/s attained={:.0}/s)",
+        r.name,
+        r.planned,
+        r.errors(),
+        r.retries(),
+        r.breaker_trips(),
+        r.offered_ops_per_sec,
+        r.attained_ops_per_sec
+    );
+}

@@ -60,6 +60,7 @@ use crate::rpc::transport::{
 };
 use crate::rpc::{Request, Response};
 use crate::sched::{PruneConfig, SchedInstance, SchedService};
+use crate::telemetry::TelemetrySnapshot;
 use crate::util::metrics::Timer;
 
 pub use report::{GrowReport, LevelTiming};
@@ -338,7 +339,11 @@ impl NodeState {
                                 resp
                             }
                             Err(e) => {
+                                let trips = self.breaker.trips();
                                 self.breaker.record_failure();
+                                if self.breaker.trips() > trips {
+                                    self.inst.telemetry().note_breaker_trip();
+                                }
                                 return Err(RpcError::from_io(
                                     &format!("level {}: match_grow ascent failed", self.level),
                                     &e,
@@ -461,7 +466,11 @@ impl NodeState {
                         resp
                     }
                     Err(e) => {
+                        let trips = self.breaker.trips();
                         self.breaker.record_failure();
+                        if self.breaker.trips() > trips {
+                            self.inst.telemetry().note_breaker_trip();
+                        }
                         return Err(RpcError::from_io(
                             &format!("level {}: shrink_return ascent failed", self.level),
                             &e,
@@ -811,6 +820,16 @@ impl Hierarchy {
         lock_node(&self.nodes[level]).breaker.state_name()
     }
 
+    /// Serving-telemetry snapshot of a level's [`SchedService`]: per-op-kind
+    /// latency histograms, throughput windows, cache stats, and the
+    /// breaker-trip counter (incremented when that level's parent link — or
+    /// a half-open trial in [`Hierarchy::maintain`] — trips into
+    /// quarantine). Uses the service handle, not the node mutex, so it is
+    /// safe to call while a `MatchGrow` is in flight.
+    pub fn telemetry_snapshot_at(&self, level: usize) -> TelemetrySnapshot {
+        self.services[level].telemetry_snapshot()
+    }
+
     /// One tick of link maintenance: every level whose parent-link breaker
     /// has finished its cooldown sends a half-open trial probe through the
     /// real link — a well-formed reply restores the level (quarantine
@@ -836,7 +855,13 @@ impl Hierarchy {
                     .call(&req);
                 match trial {
                     Ok(_) => n.breaker.record_success(),
-                    Err(_) => n.breaker.record_failure(),
+                    Err(_) => {
+                        let trips = n.breaker.trips();
+                        n.breaker.record_failure();
+                        if n.breaker.trips() > trips {
+                            n.inst.telemetry().note_breaker_trip();
+                        }
+                    }
                 }
             }
             states.push((level, n.breaker.state_name()));

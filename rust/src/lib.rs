@@ -27,6 +27,14 @@
 //! - [`fault`] — deterministic fault injection (seeded frame/provider fault
 //!   schedules) and the tolerance policies the stack runs with: bounded
 //!   retry + backoff, and the quarantine circuit breaker.
+//! - [`telemetry`] — lock-cheap serving observability: per-op-kind
+//!   log-bucketed latency histograms (p50/p95/p99/max), throughput windows,
+//!   and cache/pre-check/retry/breaker/rollback counters, threaded through
+//!   [`sched::SchedService`] and [`hier`].
+//! - [`serving`] — the open-loop traffic harness: deterministic seeded
+//!   multi-tenant op streams ([`workload::optrace`]) replayed from N client
+//!   threads against a service or hierarchy, reported as percentile rows
+//!   (`BENCH_serving.json` via `cargo bench --bench serving`).
 //! - [`external`], [`orchestrator`], [`workload`], [`perfmodel`],
 //!   [`experiments`] — cloud providers, the KubeFlux-style orchestrator
 //!   model, workload generators, the §6 performance model, and the paper's
@@ -54,7 +62,9 @@ pub mod jobspec;
 pub mod sched;
 pub mod rpc;
 pub mod fault;
+pub mod telemetry;
 pub mod hier;
+pub mod serving;
 pub mod external;
 pub mod bitmap;
 pub mod orchestrator;

@@ -43,6 +43,12 @@
 //!   without the write lock or a traversal, and a match that fails with
 //!   `no_match` (which mutates nothing, so the epoch is unchanged) is
 //!   admitted to the cache as a negative probe answer for the next caller.
+//! - **Per-op telemetry.** Every public op path records one latency sample
+//!   into lock-free per-kind histograms ([`crate::telemetry`]) — a batched
+//!   phase amortizes its wall time across its ops — plus counters for
+//!   pre-check rejections and panic-containment rollbacks.
+//!   [`SchedService::telemetry_snapshot`] folds the probe-cache stats in;
+//!   the raw [`SchedInstance`] stays uninstrumented.
 //!
 //! ## Cache invalidation rules
 //!
@@ -73,6 +79,7 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::bitmap::BitSet;
 use crate::fault::panic_message;
@@ -84,6 +91,7 @@ use crate::sched::matcher::{
     compile_spec_into, probe_sharded_compiled, run_shard, CompiledSpec, MatchScratch, ShardJob,
     ShardScan,
 };
+use crate::telemetry::{Telemetry, TelemetrySnapshot, KIND_PROBE};
 
 /// Upper bound on cached probe entries; exceeding it clears the map (the
 /// cache is an epoch-window optimization, not a store — correctness never
@@ -296,6 +304,11 @@ struct Shared {
     /// the instance back instead of poisoning the lock. See
     /// [`SchedService::set_write_rollback`].
     write_rollback: AtomicBool,
+    /// Per-op serving telemetry (latency histograms + counters). Recording
+    /// is lock-free and allocation-free, so it rides every public op path;
+    /// the raw [`SchedInstance`] — which the gated `batch/*` hotpath rows
+    /// drive directly — carries none of it.
+    telemetry: Telemetry,
 }
 
 thread_local! {
@@ -695,6 +708,7 @@ impl SchedService {
             cache: Mutex::new(CacheInner::new()),
             read_shards: AtomicUsize::new(1),
             write_rollback: AtomicBool::new(true),
+            telemetry: Telemetry::new(),
         });
         SchedService {
             shared,
@@ -769,12 +783,29 @@ impl SchedService {
         f: impl FnOnce(&mut SchedInstance) -> R,
     ) -> Result<R, RpcError> {
         let mut guard = self.write();
-        contained(&mut guard, "contained mutation", f)
+        let res = contained(&mut guard, "contained mutation", f);
+        if res.is_err() {
+            self.shared.telemetry.note_rollback();
+        }
+        res
     }
 
     /// Serve one feasibility probe: cache hit within the current epoch, or
     /// one traversal on the calling thread (inserted for the next caller).
+    /// Records one `probe` latency sample in the service telemetry.
     pub fn probe(&self, spec: &JobSpec) -> SchedReply {
+        let t = Instant::now();
+        let reply = self.probe_impl(spec);
+        self.shared
+            .telemetry
+            .record_kind(KIND_PROBE, t.elapsed(), reply.as_error().is_some());
+        reply
+    }
+
+    /// Probe core, shared by [`SchedService::probe`] and the `Probe` arm of
+    /// [`SchedService::apply`] (which records under its own timer — the
+    /// split keeps one op from counting twice).
+    fn probe_impl(&self, spec: &JobSpec) -> SchedReply {
         // hold the read lock across lookup, traversal, and insert: the
         // epoch is frozen for the whole operation (invalidation rule 2)
         let inst = read_lock(&self.shared.inst);
@@ -813,6 +844,17 @@ impl SchedService {
     /// shards scan past the sequential stopping point). Results enter the
     /// same epoch-keyed cache either path.
     pub fn probe_sharded(&self, spec: &JobSpec, shards: usize) -> SchedReply {
+        let t = Instant::now();
+        let reply = self.probe_sharded_impl(spec, shards);
+        self.shared
+            .telemetry
+            .record_kind(KIND_PROBE, t.elapsed(), reply.as_error().is_some());
+        reply
+    }
+
+    /// Sharded-probe core (untimed; [`SchedService::probe_sharded`] wraps
+    /// it with the telemetry record).
+    fn probe_sharded_impl(&self, spec: &JobSpec, shards: usize) -> SchedReply {
         // hold the read lock across lookup, traversal, and insert, exactly
         // like `probe` (invalidation rule 2)
         let inst = read_lock(&self.shared.inst);
@@ -980,15 +1022,29 @@ impl SchedService {
     /// re-test under the write lock can send the op through
     /// [`SchedService::write`] directly.
     pub fn apply(&self, op: &SchedOp) -> SchedReply {
+        let t = Instant::now();
+        let reply = self.apply_impl(op);
+        self.shared
+            .telemetry
+            .record(op, t.elapsed(), reply.as_error().is_some());
+        reply
+    }
+
+    /// Untimed [`SchedService::apply`] core (the wrapper records exactly
+    /// one telemetry sample per op, whichever path answers it).
+    fn apply_impl(&self, op: &SchedOp) -> SchedReply {
         if let SchedOp::Probe { spec } = op {
-            return self.probe(spec);
+            return self.probe_impl(spec);
         }
         // key built by the pre-check (when the cache had entries), reused
         // by the admission insert below so the spec is encoded at most once
         let mut precheck_key: Option<String> = None;
         if let SchedOp::MatchAllocate { spec } | SchedOp::MatchGrowLocal { spec, .. } = op {
             match self.precheck_infeasible(spec) {
-                Err(reject) => return reject,
+                Err(reject) => {
+                    self.shared.telemetry.note_precheck_rejection();
+                    return reject;
+                }
                 Ok(key) => precheck_key = key,
             }
         }
@@ -996,7 +1052,10 @@ impl SchedService {
         let reply = if self.shared.write_rollback.load(Ordering::Relaxed) {
             match contained(&mut guard, op.name(), |inst| inst.apply(op)) {
                 Ok(reply) => reply,
-                Err(e) => SchedReply::Error(e),
+                Err(e) => {
+                    self.shared.telemetry.note_rollback();
+                    SchedReply::Error(e)
+                }
             }
         } else {
             guard.apply(op)
@@ -1035,6 +1094,7 @@ impl SchedService {
             while j < ops.len() && ops[j].is_read_only() == read {
                 j += 1;
             }
+            let t = Instant::now();
             if read {
                 self.read_phase(&ops[i..j], i, &mut replies);
             } else {
@@ -1048,6 +1108,7 @@ impl SchedService {
                             }
                         }
                         Err(e) => {
+                            self.shared.telemetry.note_rollback();
                             // the whole phase rolled back together, so every
                             // op in it — including ones that had succeeded
                             // before the panic — reports the same outcome
@@ -1063,12 +1124,29 @@ impl SchedService {
                     }
                 }
             }
+            self.record_phase(&ops[i..j], &replies[i..j], t.elapsed());
             i = j;
         }
         replies
             .into_iter()
             .map(|r| r.expect("every op in the batch is answered"))
             .collect()
+    }
+
+    /// Record one batch phase into the telemetry: the phase's wall time is
+    /// amortized equally across its ops (per-op attribution inside one
+    /// shared-lock phase is not observable; amortizing keeps every kind's
+    /// totals and the throughput windows exact).
+    fn record_phase(&self, ops: &[SchedOp], replies: &[Option<SchedReply>], elapsed: Duration) {
+        debug_assert!(!ops.is_empty());
+        let per = elapsed.checked_div(ops.len() as u32).unwrap_or(elapsed);
+        for (op, slot) in ops.iter().zip(replies) {
+            let err = slot
+                .as_ref()
+                .map(|r| r.as_error().is_some())
+                .unwrap_or(false);
+            self.shared.telemetry.record(op, per, err);
+        }
     }
 
     /// Execute one contiguous run of read-only ops: resolve cache hits,
@@ -1220,6 +1298,28 @@ impl SchedService {
             invalidations: cache.invalidations,
             entries: cache.map.len(),
         }
+    }
+
+    /// Live handle to the service's serving telemetry: per-op-kind latency
+    /// histograms plus the retry/breaker/rollback counters that layers
+    /// above the service (the hierarchy's link breakers, the RPC retry
+    /// path, the serving harness) stamp in.
+    pub fn telemetry(&self) -> &Telemetry {
+        &self.shared.telemetry
+    }
+
+    /// Telemetry snapshot with the **authoritative** probe-cache counters
+    /// stamped in from [`SchedService::cache_stats`] (the cache counts its
+    /// own hits/misses under its mutex; the lock-free telemetry never
+    /// duplicates that bookkeeping on the op path).
+    pub fn telemetry_snapshot(&self) -> TelemetrySnapshot {
+        let mut snap = self.shared.telemetry.snapshot();
+        let c = self.cache_stats();
+        snap.cache_hits = c.hits;
+        snap.cache_misses = c.misses;
+        snap.cache_invalidations = c.invalidations;
+        snap.cache_entries = c.entries as u64;
+        snap
     }
 }
 
@@ -1417,6 +1517,51 @@ mod tests {
         assert_eq!(stats.hits, 0);
         assert_eq!(stats.misses, 2);
         assert!(stats.invalidations >= 1);
+    }
+
+    #[test]
+    fn telemetry_counts_every_public_path_once() {
+        let svc = service(3, 2);
+        let spec = table1_jobspec("T7");
+        // 2 probes (one cached), 1 allocate, 1 free — via mixed paths
+        svc.probe(&spec);
+        let replies = svc.apply_batch(&[
+            SchedOp::Probe { spec: spec.clone() },
+            SchedOp::MatchAllocate { spec: spec.clone() },
+        ]);
+        let SchedReply::Allocated { job, .. } = &replies[1] else {
+            panic!("expected Allocated");
+        };
+        svc.apply(&SchedOp::FreeJob { job: *job });
+        let snap = svc.telemetry_snapshot();
+        assert_eq!(snap.kind("probe").unwrap().ops, 2);
+        assert_eq!(snap.kind("match_allocate").unwrap().ops, 1);
+        assert_eq!(snap.kind("free_job").unwrap().ops, 1);
+        assert_eq!(snap.ops_total(), 4);
+        assert_eq!(snap.errors_total(), 0);
+        // authoritative cache stats are stamped into the snapshot
+        let c = svc.cache_stats();
+        assert_eq!(snap.cache_hits, c.hits);
+        assert_eq!(snap.cache_misses, c.misses);
+        // a contained panic shows up as one rollback
+        let _ = svc.mutate_contained(|_| -> () { panic!("boom") });
+        assert_eq!(svc.telemetry_snapshot().rollbacks, 1);
+        svc.read().check().unwrap();
+    }
+
+    #[test]
+    fn telemetry_counts_precheck_rejections() {
+        let svc = service(4, 1); // 1 node
+        let spec = JobSpec::nodes_sockets_cores(2, 2, 16);
+        // seed the negative cache entry, then get pre-check-rejected
+        assert!(svc.probe(&spec).as_error().is_some());
+        let r = svc.apply(&SchedOp::MatchAllocate { spec });
+        assert_eq!(r.as_error().unwrap().code, code::NO_MATCH);
+        let snap = svc.telemetry_snapshot();
+        assert_eq!(snap.precheck_rejections, 1);
+        // the rejected op still recorded one match_allocate sample (errored)
+        let ma = snap.kind("match_allocate").unwrap();
+        assert_eq!((ma.ops, ma.errors), (1, 1));
     }
 
     #[test]

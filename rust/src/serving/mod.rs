@@ -1,0 +1,659 @@
+//! Open-loop serving harness: replay deterministic multi-tenant op traces
+//! ([`crate::workload::optrace`]) against a live [`SchedService`] or a full
+//! [`Hierarchy`], measuring per-op latency from **scheduled arrival** to
+//! completion.
+//!
+//! The harness is the load side of the serving-telemetry story: the target
+//! carries its own [`crate::telemetry::Telemetry`] (service-side view), and
+//! the harness keeps a second, client-side [`Telemetry`] keyed by the five
+//! workload kinds ([`OP_KIND_NAMES`]). Latency is measured open-loop:
+//! arrivals are fixed up front by the trace, and an op that starts late
+//! (because the target is saturated) charges its queueing delay to the
+//! measured latency instead of silently stretching the schedule — the
+//! coordinated-omission-safe convention.
+//!
+//! ## Determinism contract
+//!
+//! [`run_scenario`] replays [`generate_ops`] output, which is a pure
+//! function of the [`OpTraceSpec`]: two runs of the same scenario issue the
+//! **identical op stream**, so [`ScenarioResult::issued_by_kind`] and the
+//! harness per-kind `ops` totals are byte-equal across reruns. Latencies,
+//! and (for multi-client or chaos runs) success/error splits, legitimately
+//! vary with thread interleaving and wall-clock — the contract is over
+//! *issued* counts, not outcomes.
+//!
+//! ## Targets
+//!
+//! - [`Target::Service`]: one concurrent [`SchedService`] on a Table 2
+//!   graph, hit by `clients` threads (the plan is partitioned round-robin
+//!   by op index). `SchedService` is `Send + Sync` (clone-per-thread), so
+//!   this is the multi-threaded saturation path.
+//! - [`Target::Hierarchy`]: a full hierarchy (optionally with seeded
+//!   [`ChaosConfig`] fault injection on every link) replayed from a
+//!   **single** dispatcher thread — a `Hierarchy` owns in-proc server
+//!   handles whose channel senders predate `Sender: Sync`, so it is never
+//!   shared across threads. Per-level service telemetry is still collected
+//!   ([`ScenarioResult::services`]).
+//!
+//! ## Op mapping
+//!
+//! | [`OpKind`]  | Service target                      | Hierarchy target |
+//! |-------------|-------------------------------------|------------------|
+//! | `Probe`     | [`SchedService::probe`]             | [`Hierarchy::probe_up`] |
+//! | `Allocate`  | `MatchAllocate` (job recorded)      | [`Hierarchy::grow_from_leaf`] (roots recorded) |
+//! | `Grow`      | `MatchGrowLocal` on newest live job | [`Hierarchy::grow_from_leaf`] |
+//! | `Shrink`    | `FreeJob` oldest live job           | [`Hierarchy::shrink_from_leaf`] oldest grant |
+//! | `Free`      | `FreeJob` newest live job           | [`Hierarchy::shrink_from_leaf`] newest grant |
+//!
+//! A `Grow` with no live job uses the sentinel `JobId(u64::MAX)` (a
+//! deterministic `GROW_FAILED`), and a `Shrink`/`Free` with nothing live
+//! counts as an error without touching the target — issued counts stay
+//! plan-determined either way. `Allocate`/`Grow` failures are re-issued up
+//! to [`Scenario::allocate_retries`] times back-to-back (the retry-storm
+//! knob), each re-issue counted via [`Telemetry::note_retry`]; the op still
+//! records exactly **one** harness latency sample covering all attempts.
+
+use std::time::{Duration, Instant};
+
+use crate::hier::{ChaosConfig, Hierarchy, LevelSpec, LinkPolicy};
+use crate::jobspec::JobSpec;
+use crate::resource::builder::{table2_graph, UidGen};
+use crate::resource::graph::JobId;
+use crate::rpc::proto::{SchedOp, SchedReply};
+use crate::sched::{PruneConfig, SchedInstance, SchedService};
+use crate::telemetry::{HistogramSnapshot, Telemetry, TelemetrySnapshot};
+use crate::util::bench::BenchReport;
+use crate::util::json::Json;
+use crate::workload::optrace::{
+    count_by_kind, generate_ops, OpKind, OpTraceSpec, PlannedOp, OP_KINDS, OP_KIND_NAMES,
+};
+
+/// What a scenario replays its trace against.
+#[derive(Debug, Clone)]
+pub enum Target {
+    /// One concurrent [`SchedService`] over the Table 2 level-`level`
+    /// graph, hit by [`Scenario::clients`] threads.
+    Service {
+        /// Table 2 level of the backing graph (0 = 128 nodes … 4 = 1 node).
+        level: usize,
+        /// Probe worker-pool size of the service.
+        workers: usize,
+    },
+    /// A full [`Hierarchy`] replayed from a single dispatcher thread
+    /// ([`Scenario::clients`] is ignored — see the module docs on why the
+    /// hierarchy is never shared across threads).
+    Hierarchy {
+        /// Table 2 level of the **root** graph.
+        root_level: usize,
+        /// Levels below the root (boot sizes + links).
+        levels: Vec<LevelSpec>,
+        /// Optional deterministic fault injection on every parent link;
+        /// when set, the replay loop also ticks [`Hierarchy::maintain`]
+        /// every 64 ops so quarantined links get their half-open trials.
+        chaos: Option<ChaosConfig>,
+    },
+}
+
+/// One named serving experiment: a trace, a target, and load-shape knobs.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Row-name prefix in reports (e.g. `serve/balanced@L0/r5000`).
+    pub name: String,
+    /// The deterministic op trace to replay.
+    pub trace: OpTraceSpec,
+    /// Client threads issuing ops (Service target only; min 1).
+    pub clients: usize,
+    /// What to replay against.
+    pub target: Target,
+    /// Immediate re-issues of a failed `Allocate`/`Grow` (0 = no retry);
+    /// drives the allocate-retry-storm scenarios.
+    pub allocate_retries: u32,
+}
+
+impl Scenario {
+    /// A scenario against a [`Target::Service`].
+    pub fn service(
+        name: &str,
+        trace: OpTraceSpec,
+        clients: usize,
+        level: usize,
+        workers: usize,
+    ) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            trace,
+            clients,
+            target: Target::Service { level, workers },
+            allocate_retries: 0,
+        }
+    }
+
+    /// A scenario against a [`Target::Hierarchy`].
+    pub fn hierarchy(
+        name: &str,
+        trace: OpTraceSpec,
+        root_level: usize,
+        levels: Vec<LevelSpec>,
+        chaos: Option<ChaosConfig>,
+    ) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            trace,
+            clients: 1,
+            target: Target::Hierarchy {
+                root_level,
+                levels,
+                chaos,
+            },
+            allocate_retries: 0,
+        }
+    }
+
+    /// Builder: set [`Scenario::allocate_retries`].
+    pub fn with_retries(mut self, retries: u32) -> Scenario {
+        self.allocate_retries = retries;
+        self
+    }
+}
+
+/// Everything a scenario run measured.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    /// The scenario's name.
+    pub name: String,
+    /// Planned (= issued) ops.
+    pub planned: usize,
+    /// Issued ops per kind, indexed by [`OpKind::index`] — identical
+    /// across reruns of the same spec (the determinism contract).
+    pub issued_by_kind: [u64; OP_KINDS],
+    /// Wall-clock of the replay, seconds.
+    pub wall_s: f64,
+    /// Offered load of the trace (ops / last scheduled arrival).
+    pub offered_ops_per_sec: f64,
+    /// Attained throughput (ops / wall-clock) — below offered when the
+    /// target saturates and the open-loop schedule slips.
+    pub attained_ops_per_sec: f64,
+    /// Client-side telemetry keyed by the five workload kinds
+    /// ([`OP_KIND_NAMES`]): arrival-to-completion latency per kind.
+    pub harness: TelemetrySnapshot,
+    /// Server-side telemetry — one snapshot for a Service target, one per
+    /// level (root first) for a Hierarchy target.
+    pub services: Vec<TelemetrySnapshot>,
+}
+
+impl ScenarioResult {
+    /// Ops that finished with an error reply (harness view).
+    pub fn errors(&self) -> u64 {
+        self.harness.errors_total()
+    }
+
+    /// Allocate/grow re-issues beyond each op's first attempt.
+    pub fn retries(&self) -> u64 {
+        self.harness.retries
+    }
+
+    /// Circuit-breaker trips summed over every target level.
+    pub fn breaker_trips(&self) -> u64 {
+        self.services.iter().map(|s| s.breaker_trips).sum()
+    }
+
+    /// All five kinds' latency distributions merged into one histogram
+    /// (the scenario's headline percentiles).
+    pub fn overall_hist(&self) -> HistogramSnapshot {
+        let mut kinds = self.harness.kinds.iter();
+        let mut merged = kinds
+            .next()
+            .map(|k| k.hist.clone())
+            .unwrap_or_else(empty_hist);
+        for k in kinds {
+            merged.merge(&k.hist);
+        }
+        merged
+    }
+
+    /// Append this result to a bench report: one headline row named after
+    /// the scenario (with `p50_s`/`p95_s`/`p99_s`/`ops_per_sec`/`errors`
+    /// extras), plus one `name/kind` row per kind that recorded ops.
+    pub fn report_rows(&self, report: &mut BenchReport) {
+        let overall = self.overall_hist();
+        report.row_summary(
+            &self.name,
+            overall.to_summary(),
+            &[
+                ("p50_s", overall.quantile_s(0.50)),
+                ("p95_s", overall.quantile_s(0.95)),
+                ("p99_s", overall.quantile_s(0.99)),
+                ("ops_per_sec", self.attained_ops_per_sec),
+                ("errors", self.errors() as f64),
+            ],
+        );
+        for k in &self.harness.kinds {
+            if k.ops == 0 {
+                continue;
+            }
+            report.row_summary(
+                &format!("{}/{}", self.name, k.name),
+                k.hist.to_summary(),
+                &[
+                    ("p50_s", k.hist.quantile_s(0.50)),
+                    ("p95_s", k.hist.quantile_s(0.95)),
+                    ("p99_s", k.hist.quantile_s(0.99)),
+                    ("ops", k.ops as f64),
+                    ("errors", k.errors as f64),
+                ],
+            );
+        }
+    }
+
+    /// The result as a JSON document (scenario metadata + issued counts +
+    /// the harness telemetry export).
+    pub fn to_json(&self) -> Json {
+        let issued = OP_KIND_NAMES
+            .iter()
+            .zip(self.issued_by_kind.iter())
+            .fold(Json::obj(), |j, (name, n)| j.with(name, Json::from(*n)));
+        Json::obj()
+            .with("name", Json::from(self.name.as_str()))
+            .with("planned", Json::from(self.planned as u64))
+            .with("wall_s", Json::from(self.wall_s))
+            .with("offered_ops_per_sec", Json::from(self.offered_ops_per_sec))
+            .with(
+                "attained_ops_per_sec",
+                Json::from(self.attained_ops_per_sec),
+            )
+            .with("errors", Json::from(self.errors()))
+            .with("retries", Json::from(self.retries()))
+            .with("breaker_trips", Json::from(self.breaker_trips()))
+            .with("issued_by_kind", issued)
+            .with("harness", self.harness.to_json())
+    }
+}
+
+/// `HistogramSnapshot` of a histogram that never recorded (snapshot
+/// buckets are private, so snapshotting a fresh histogram is the way to
+/// mint one).
+fn empty_hist() -> HistogramSnapshot {
+    crate::telemetry::LatencyHistogram::new().snapshot()
+}
+
+/// Replay a scenario and collect every measurement. See the module docs
+/// for the op mapping and the determinism contract.
+pub fn run_scenario(sc: &Scenario) -> ScenarioResult {
+    let plan = generate_ops(&sc.trace);
+    let issued_by_kind = count_by_kind(&plan);
+    let harness = Telemetry::with_kinds(&OP_KIND_NAMES);
+    let (wall_s, services) = match &sc.target {
+        Target::Service { level, workers } => {
+            run_service(sc, &plan, &harness, *level, *workers)
+        }
+        Target::Hierarchy {
+            root_level,
+            levels,
+            chaos,
+        } => run_hierarchy(sc, &plan, &harness, *root_level, levels, *chaos),
+    };
+    let offered_ops_per_sec = plan
+        .last()
+        .map(|op| plan.len() as f64 / (op.at_ns as f64 * 1e-9))
+        .unwrap_or(0.0);
+    ScenarioResult {
+        name: sc.name.clone(),
+        planned: plan.len(),
+        issued_by_kind,
+        wall_s,
+        offered_ops_per_sec,
+        attained_ops_per_sec: plan.len() as f64 / wall_s.max(1e-9),
+        harness: harness.snapshot(),
+        services,
+    }
+}
+
+/// Sleep (coarse) then spin (fine) until `at_ns` nanoseconds after
+/// `start`. Returns immediately when the schedule has already slipped past
+/// the target — the open-loop late-start case the latency then captures.
+fn wait_until(start: Instant, at_ns: u64) {
+    let target = Duration::from_nanos(at_ns);
+    loop {
+        let elapsed = start.elapsed();
+        if elapsed >= target {
+            return;
+        }
+        let remaining = target - elapsed;
+        if remaining > Duration::from_millis(1) {
+            std::thread::sleep(remaining - Duration::from_millis(1));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Record one completed op into the harness telemetry: latency runs from
+/// the op's *scheduled* arrival to now.
+fn record_op(harness: &Telemetry, start: Instant, op: &PlannedOp, error: bool) {
+    let done_ns = start.elapsed().as_nanos() as u64;
+    let latency = Duration::from_nanos(done_ns.saturating_sub(op.at_ns));
+    harness.record_kind(op.kind.index(), latency, error);
+}
+
+fn run_service(
+    sc: &Scenario,
+    plan: &[PlannedOp],
+    harness: &Telemetry,
+    level: usize,
+    workers: usize,
+) -> (f64, Vec<TelemetrySnapshot>) {
+    let svc = SchedService::with_workers(
+        SchedInstance::new(table2_graph(level, &mut UidGen::new()), PruneConfig::default()),
+        workers,
+    );
+    let clients = sc.clients.max(1);
+    let retries = sc.allocate_retries;
+    let tenants = sc.trace.tenants;
+    let start = Instant::now();
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let svc = svc.clone();
+            scope.spawn(move || {
+                // per-thread live-job tracking: each tenant's list only
+                // sees this thread's slice of the plan, which is all
+                // grow/shrink/free need to exercise real lifecycles
+                let mut live: Vec<Vec<JobId>> = vec![Vec::new(); tenants];
+                for op in plan.iter().skip(c).step_by(clients) {
+                    wait_until(start, op.at_ns);
+                    let error = service_op(&svc, harness, &mut live, op, retries);
+                    record_op(harness, start, op, error);
+                }
+            });
+        }
+    });
+    let wall_s = start.elapsed().as_secs_f64();
+    (wall_s, vec![svc.telemetry_snapshot()])
+}
+
+/// Issue one planned op against a service; returns whether it errored.
+fn service_op(
+    svc: &SchedService,
+    harness: &Telemetry,
+    live: &mut [Vec<JobId>],
+    op: &PlannedOp,
+    retries: u32,
+) -> bool {
+    let spec = JobSpec::nodes_sockets_cores(op.nodes, 2, 16);
+    match op.kind {
+        OpKind::Probe => svc.probe(&spec).as_error().is_some(),
+        OpKind::Allocate => {
+            let mut failed = true;
+            for attempt in 0..=retries {
+                if let SchedReply::Allocated { job, .. } =
+                    svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() })
+                {
+                    live[op.tenant].push(job);
+                    failed = false;
+                    break;
+                }
+                if attempt < retries {
+                    harness.note_retry();
+                }
+            }
+            failed
+        }
+        OpKind::Grow => {
+            // sentinel job on an empty tenant: a deterministic
+            // GROW_FAILED, keeping issued counts plan-determined
+            let job = live[op.tenant].last().copied().unwrap_or(JobId(u64::MAX));
+            let mut failed = true;
+            for attempt in 0..=retries {
+                if !svc
+                    .apply(&SchedOp::MatchGrowLocal {
+                        job,
+                        spec: spec.clone(),
+                    })
+                    .as_error()
+                    .is_some()
+                {
+                    failed = false;
+                    break;
+                }
+                if attempt < retries {
+                    harness.note_retry();
+                }
+            }
+            failed
+        }
+        OpKind::Shrink => match pop_oldest(&mut live[op.tenant]) {
+            Some(job) => svc.apply(&SchedOp::FreeJob { job }).as_error().is_some(),
+            None => true,
+        },
+        OpKind::Free => match live[op.tenant].pop() {
+            Some(job) => svc.apply(&SchedOp::FreeJob { job }).as_error().is_some(),
+            None => true,
+        },
+    }
+}
+
+fn pop_oldest<T>(v: &mut Vec<T>) -> Option<T> {
+    if v.is_empty() {
+        None
+    } else {
+        Some(v.remove(0))
+    }
+}
+
+fn run_hierarchy(
+    sc: &Scenario,
+    plan: &[PlannedOp],
+    harness: &Telemetry,
+    root_level: usize,
+    levels: &[LevelSpec],
+    chaos: Option<ChaosConfig>,
+) -> (f64, Vec<TelemetrySnapshot>) {
+    let root = table2_graph(root_level, &mut UidGen::new());
+    let policy = LinkPolicy {
+        chaos,
+        ..LinkPolicy::default()
+    };
+    let hier =
+        Hierarchy::build_with_policy(root, levels, None, policy).expect("hierarchy builds");
+    // per tenant: a stack of grant root-path sets (one entry per
+    // successful leaf grow), released oldest-first on Shrink, newest-first
+    // on Free
+    let mut live: Vec<Vec<Vec<String>>> = vec![Vec::new(); sc.trace.tenants];
+    let start = Instant::now();
+    for (i, op) in plan.iter().enumerate() {
+        wait_until(start, op.at_ns);
+        let spec = JobSpec::nodes_sockets_cores(op.nodes, 2, 16);
+        let error = match op.kind {
+            OpKind::Probe => hier
+                .probe_up(&spec)
+                .map(|(_, reply)| reply.as_error().is_some())
+                .unwrap_or(true),
+            OpKind::Allocate | OpKind::Grow => {
+                let mut failed = true;
+                for attempt in 0..=sc.allocate_retries {
+                    match hier.grow_from_leaf(&spec) {
+                        Ok(report) => {
+                            live[op.tenant].push(report.roots);
+                            failed = false;
+                            break;
+                        }
+                        Err(_) => {
+                            if attempt < sc.allocate_retries {
+                                harness.note_retry();
+                            }
+                        }
+                    }
+                }
+                failed
+            }
+            OpKind::Shrink => release_grant(&hier, pop_oldest(&mut live[op.tenant])),
+            OpKind::Free => release_grant(&hier, live[op.tenant].pop()),
+        };
+        record_op(harness, start, op, error);
+        if chaos.is_some() && i % 64 == 63 {
+            hier.maintain();
+        }
+    }
+    let wall_s = start.elapsed().as_secs_f64();
+    let services = (0..hier.depth())
+        .map(|l| hier.telemetry_snapshot_at(l))
+        .collect();
+    hier.shutdown();
+    (wall_s, services)
+}
+
+/// Shrink every root path of one recorded grant back out of the leaf;
+/// `None` (nothing live) counts as an error.
+fn release_grant(hier: &Hierarchy, roots: Option<Vec<String>>) -> bool {
+    match roots {
+        None => true,
+        Some(paths) => {
+            let mut error = false;
+            for path in paths {
+                if hier.shrink_from_leaf(&path).is_err() {
+                    error = true;
+                }
+            }
+            error
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hier::LinkKind;
+    use crate::workload::optrace::OpMix;
+
+    fn fast_trace(ops: usize, mix: OpMix) -> OpTraceSpec {
+        OpTraceSpec {
+            ops,
+            seed: 0x5E21CE,
+            rate_ops_per_sec: 200_000.0, // pacing stays under ~ops/200k s
+            mix,
+            tenants: 3,
+            nodes: (1, 2),
+        }
+    }
+
+    #[test]
+    fn service_scenario_counts_every_planned_op() {
+        let sc = Scenario::service(
+            "serve/test@L1",
+            fast_trace(400, OpMix::balanced()),
+            2,
+            1,
+            2,
+        );
+        let r = run_scenario(&sc);
+        assert_eq!(r.planned, 400);
+        assert_eq!(r.harness.ops_total(), 400);
+        for (k, name) in OP_KIND_NAMES.iter().enumerate() {
+            assert_eq!(
+                r.harness.kind(name).unwrap().ops,
+                r.issued_by_kind[k],
+                "kind {name}"
+            );
+        }
+        assert_eq!(r.services.len(), 1);
+        // the service-side telemetry saw real traffic too
+        assert!(r.services[0].ops_total() > 0);
+        assert!(r.attained_ops_per_sec > 0.0);
+    }
+
+    #[test]
+    fn rerun_reissues_identical_per_kind_counts() {
+        let mk = || {
+            Scenario::service("serve/rerun", fast_trace(300, OpMix::churn()), 1, 2, 2)
+        };
+        let a = run_scenario(&mk());
+        let b = run_scenario(&mk());
+        assert_eq!(a.issued_by_kind, b.issued_by_kind);
+        for name in OP_KIND_NAMES.iter() {
+            assert_eq!(
+                a.harness.kind(name).unwrap().ops,
+                b.harness.kind(name).unwrap().ops
+            );
+        }
+        // single client, no chaos: outcomes are deterministic too
+        assert_eq!(a.errors(), b.errors());
+    }
+
+    #[test]
+    fn retry_storm_counts_retries_exactly() {
+        // level 4 = a single node; 2-node allocs can never match, so every
+        // Allocate exhausts its retry budget
+        let sc = Scenario::service(
+            "serve/storm@L4",
+            OpTraceSpec {
+                ops: 60,
+                nodes: (2, 2),
+                mix: OpMix::allocate_only(),
+                ..fast_trace(60, OpMix::allocate_only())
+            },
+            1,
+            4,
+            1,
+        )
+        .with_retries(2);
+        let r = run_scenario(&sc);
+        assert_eq!(r.issued_by_kind[OpKind::Allocate.index()], 60);
+        assert_eq!(r.retries(), 120, "2 re-issues per failed allocate");
+        assert_eq!(r.errors(), 60);
+    }
+
+    #[test]
+    fn hierarchy_scenario_collects_per_level_telemetry() {
+        let sc = Scenario::hierarchy(
+            "serve/hier",
+            OpTraceSpec {
+                ops: 40,
+                rate_ops_per_sec: 50_000.0,
+                ..fast_trace(40, OpMix::balanced())
+            },
+            2, // root: 4 nodes
+            vec![
+                LevelSpec {
+                    boot_nodes: 2,
+                    link: LinkKind::InProc,
+                },
+                LevelSpec {
+                    boot_nodes: 1,
+                    link: LinkKind::InProc,
+                },
+            ],
+            None,
+        );
+        let r = run_scenario(&sc);
+        assert_eq!(r.harness.ops_total(), 40);
+        assert_eq!(r.services.len(), 3, "one snapshot per level");
+        assert_eq!(r.planned as u64, {
+            let total: u64 = r.issued_by_kind.iter().sum();
+            total
+        });
+    }
+
+    #[test]
+    fn report_rows_carry_percentile_extras() {
+        let sc = Scenario::service(
+            "serve/rows@L2",
+            fast_trace(200, OpMix::probe_heavy()),
+            1,
+            2,
+            2,
+        );
+        let r = run_scenario(&sc);
+        let mut report = BenchReport::new();
+        r.report_rows(&mut report);
+        assert!(report.get("serve/rows@L2").is_some());
+        let p99 = report.get_extra("serve/rows@L2", "p99_s").unwrap();
+        let p50 = report.get_extra("serve/rows@L2", "p50_s").unwrap();
+        assert!(p99 >= p50 && p50 > 0.0);
+        assert!(report.get_extra("serve/rows@L2/probe", "ops").unwrap() > 0.0);
+        // JSON export of the result round-trips
+        let doc = Json::parse(&r.to_json().dump()).unwrap();
+        assert_eq!(
+            doc.get("planned").and_then(|v| v.as_f64()),
+            Some(200.0)
+        );
+    }
+}

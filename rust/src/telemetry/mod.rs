@@ -1,0 +1,799 @@
+//! Lock-cheap serving telemetry: per-op-kind latency histograms + counters.
+//!
+//! The serving layer ([`crate::sched::SchedService`], [`crate::hier`]) needs
+//! latency observability that costs nothing on the op path: recording one
+//! latency is two `Instant` reads plus a handful of `Relaxed` atomic
+//! increments — no locks, no allocation, O(1) bucket arithmetic — so the
+//! gated `batch/*` hotpath rows (which run on the raw
+//! [`crate::sched::SchedInstance`] anyway) cannot regress from it.
+//!
+//! Three pieces:
+//!
+//! - [`LatencyHistogram`] — an HDR-style **log-linear** histogram: exact
+//!   buckets below 16 ns, then 16 sub-buckets per power-of-two octave up to
+//!   `u64::MAX` ns (≤ 6.25 % relative error), each bucket an `AtomicU64`.
+//!   Quantiles (p50/p95/p99/…) are reconstructed from bucket midpoints at
+//!   snapshot time, clamped into the exact recorded `[min, max]`.
+//! - [`Telemetry`] — a set of histograms keyed by op kind (the nine
+//!   [`SchedOp`] wire names by default, or any caller-supplied kind list),
+//!   plus global counters (cache hits/misses, pre-check rejections,
+//!   retries, breaker trips, rollbacks) and sustained-throughput windows.
+//! - [`TelemetrySnapshot`] — a point-in-time copy with percentile
+//!   accessors and a JSON export ([`TelemetrySnapshot::to_json`]) that the
+//!   serving bench folds into `BENCH_serving.json` rows.
+//!
+//! Built on [`crate::util::stats`] ([`Summary`] synthesis for bench rows)
+//! and the same zero-external-deps discipline as
+//! [`crate::util::metrics`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::rpc::proto::SchedOp;
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Sub-bucket resolution: 2^4 = 16 linear sub-buckets per octave, giving a
+/// worst-case relative error of 1/16 = 6.25 % on reconstructed quantiles.
+const SUB_BITS: u32 = 4;
+/// Sub-buckets per octave.
+const SUB: usize = 1 << SUB_BITS;
+/// Total bucket count: `SUB` exact buckets for values `< SUB`, then `SUB`
+/// sub-buckets for each of the `64 - SUB_BITS` octaves up to `u64::MAX`.
+pub const BUCKETS: usize = SUB * (64 - SUB_BITS as usize) + SUB;
+
+/// Bucket index of a nanosecond value (O(1): a leading-zeros count and two
+/// shifts). Values below `2 * SUB` map to exact single-value buckets.
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let sub = ((v >> (msb - SUB_BITS)) as usize) & (SUB - 1);
+    SUB * (msb - SUB_BITS) as usize + SUB + sub
+}
+
+/// Inclusive `[lo, hi]` value range of a bucket — the inverse of
+/// [`bucket_index`] (every `v` in the returned range maps back to `index`).
+pub fn bucket_bounds(index: usize) -> (u64, u64) {
+    assert!(index < BUCKETS, "bucket index {index} out of range");
+    if index < SUB {
+        return (index as u64, index as u64);
+    }
+    let octave = ((index - SUB) / SUB) as u32;
+    let sub = (index % SUB) as u64;
+    let lo = ((SUB as u64) + sub) << octave;
+    let hi = lo + (1u64 << octave) - 1;
+    (lo, hi)
+}
+
+/// A concurrent log-linear latency histogram in nanoseconds. Recording is
+/// wait-free: one bucket `fetch_add` plus count/sum/min/max updates, all
+/// `Relaxed` (per-op ordering is irrelevant to a distribution).
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+    /// `u64::MAX` until the first record.
+    min_ns: AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// An empty histogram (allocates its bucket array once, up front — the
+    /// record path never allocates).
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Record one latency.
+    pub fn record(&self, latency: Duration) {
+        let ns = u64::try_from(latency.as_nanos()).unwrap_or(u64::MAX);
+        self.record_ns(ns);
+    }
+
+    /// Record one latency given directly in nanoseconds.
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of the distribution. Concurrent recording keeps
+    /// the snapshot *approximately* consistent (bucket loads are not one
+    /// atomic transaction); totals are re-derived from the copied buckets
+    /// so the snapshot is internally consistent with itself.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let buckets: Vec<u64> = self
+            .buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let count = buckets.iter().sum();
+        HistogramSnapshot {
+            count,
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+            min_ns: match self.min_ns.load(Ordering::Relaxed) {
+                u64::MAX => 0,
+                v => v,
+            },
+            buckets,
+        }
+    }
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram::new()
+    }
+}
+
+/// A point-in-time copy of a [`LatencyHistogram`]: quantile reconstruction,
+/// [`Summary`] synthesis for bench rows, JSON export.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Samples recorded (sum of bucket counts at snapshot time).
+    pub count: u64,
+    /// Sum of all recorded values, in nanoseconds.
+    pub sum_ns: u64,
+    /// Largest recorded value (exact, not bucket-quantized).
+    pub max_ns: u64,
+    /// Smallest recorded value (exact; 0 when empty).
+    pub min_ns: u64,
+    buckets: Vec<u64>,
+}
+
+impl HistogramSnapshot {
+    /// The quantile `q ∈ [0, 1]` reconstructed from bucket midpoints and
+    /// clamped into the exact recorded `[min, max]` range. Returns 0 for an
+    /// empty snapshot — never panics, never NaN.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        // 1-based rank of the target observation, nearest-rank style
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let (lo, hi) = bucket_bounds(i);
+                let mid = lo + (hi - lo) / 2;
+                return mid.clamp(self.min_ns, self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    /// [`Self::quantile_ns`] in seconds.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        self.quantile_ns(q) as f64 * 1e-9
+    }
+
+    /// Median latency in nanoseconds.
+    pub fn p50_ns(&self) -> u64 {
+        self.quantile_ns(0.50)
+    }
+
+    /// 95th-percentile latency in nanoseconds.
+    pub fn p95_ns(&self) -> u64 {
+        self.quantile_ns(0.95)
+    }
+
+    /// 99th-percentile latency in nanoseconds.
+    pub fn p99_ns(&self) -> u64 {
+        self.quantile_ns(0.99)
+    }
+
+    /// Mean latency in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Synthesize a [`Summary`] (in **seconds**, the bench-row unit) from
+    /// the bucketed distribution: quartiles from bucket midpoints, mean
+    /// from the exact sum, std approximated from bucket midpoints. An empty
+    /// snapshot yields the all-zero `n = 0` summary — no NaN anywhere.
+    pub fn to_summary(&self) -> Summary {
+        if self.count == 0 {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                q1: 0.0,
+                median: 0.0,
+                q3: 0.0,
+                max: 0.0,
+            };
+        }
+        let mean_s = self.mean_ns() * 1e-9;
+        let mut var_acc = 0.0f64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let (lo, hi) = bucket_bounds(i);
+            let mid_s = (lo + (hi - lo) / 2) as f64 * 1e-9;
+            var_acc += c as f64 * (mid_s - mean_s) * (mid_s - mean_s);
+        }
+        let std = if self.count > 1 {
+            (var_acc / (self.count - 1) as f64).sqrt()
+        } else {
+            0.0
+        };
+        Summary {
+            n: self.count as usize,
+            mean: mean_s,
+            std,
+            min: self.min_ns as f64 * 1e-9,
+            q1: self.quantile_s(0.25),
+            median: self.quantile_s(0.50),
+            q3: self.quantile_s(0.75),
+            max: self.max_ns as f64 * 1e-9,
+        }
+    }
+
+    /// Merge another snapshot's distribution into this one (exact: buckets
+    /// add, min/max/sum/count combine). Used to aggregate per-level or
+    /// per-phase snapshots into one report row.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        let self_empty = self.count == 0;
+        let other_empty = other.count == 0;
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.max_ns = self.max_ns.max(other.max_ns);
+        // min_ns is 0 for an empty side, which would wrongly win the min
+        self.min_ns = match (self_empty, other_empty) {
+            (true, true) => 0,
+            (true, false) => other.min_ns,
+            (false, true) => self.min_ns,
+            (false, false) => self.min_ns.min(other.min_ns),
+        };
+    }
+}
+
+/// Stable wire names of the nine [`SchedOp`] kinds, in [`kind_index`]
+/// order — the default kind set of [`Telemetry::new`].
+pub static KIND_NAMES: [&str; 9] = [
+    "match_allocate",
+    "match_grow_local",
+    "probe",
+    "accept_grant",
+    "free_job",
+    "shrink_subtree",
+    "remove_subgraph",
+    "match_grow",
+    "shrink_return",
+];
+
+/// Index of the `probe` kind in [`KIND_NAMES`] (the one read-only op; the
+/// service's probe paths record under it directly).
+pub const KIND_PROBE: usize = 2;
+
+/// The [`KIND_NAMES`] index of an op (total over all nine kinds).
+pub fn kind_index(op: &SchedOp) -> usize {
+    match op {
+        SchedOp::MatchAllocate { .. } => 0,
+        SchedOp::MatchGrowLocal { .. } => 1,
+        SchedOp::Probe { .. } => 2,
+        SchedOp::AcceptGrant { .. } => 3,
+        SchedOp::FreeJob { .. } => 4,
+        SchedOp::ShrinkSubtree { .. } => 5,
+        SchedOp::RemoveSubgraph { .. } => 6,
+        SchedOp::MatchGrow { .. } => 7,
+        SchedOp::ShrinkReturn { .. } => 8,
+    }
+}
+
+/// Per-kind series: one histogram plus op/error counters.
+struct KindStats {
+    hist: LatencyHistogram,
+    ops: AtomicU64,
+    errors: AtomicU64,
+}
+
+/// Sustained-throughput windows: ops are counted into fixed-width time
+/// slots from the telemetry's start instant; the last slot absorbs
+/// overflow so recording never fails (a soak longer than the horizon just
+/// blurs its tail window).
+struct RateWindows {
+    window_ms: u64,
+    slots: Vec<AtomicU64>,
+}
+
+impl RateWindows {
+    fn new(window_ms: u64, max_windows: usize) -> RateWindows {
+        RateWindows {
+            window_ms: window_ms.max(1),
+            slots: (0..max_windows.max(1)).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    fn record(&self, elapsed_ms: u64) {
+        let idx = ((elapsed_ms / self.window_ms) as usize).min(self.slots.len() - 1);
+        self.slots[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self, elapsed_ms: u64) -> ThroughputSnapshot {
+        let complete = ((elapsed_ms / self.window_ms) as usize).min(self.slots.len());
+        let total_all: u64 = self.slots.iter().map(|s| s.load(Ordering::Relaxed)).sum();
+        let per_window_to_per_sec = 1000.0 / self.window_ms as f64;
+        let mut peak = 0u64;
+        let mut in_complete = 0u64;
+        for s in self.slots.iter().take(complete) {
+            let v = s.load(Ordering::Relaxed);
+            peak = peak.max(v);
+            in_complete += v;
+        }
+        let sustained = if complete > 0 {
+            in_complete as f64 / (complete as f64 * self.window_ms as f64 / 1000.0)
+        } else if elapsed_ms > 0 {
+            total_all as f64 / (elapsed_ms as f64 / 1000.0)
+        } else {
+            0.0
+        };
+        ThroughputSnapshot {
+            window_ms: self.window_ms,
+            windows_complete: complete,
+            peak_window_ops_per_sec: peak as f64 * per_window_to_per_sec,
+            sustained_ops_per_sec: sustained,
+        }
+    }
+}
+
+/// Point-in-time throughput figures derived from the rate windows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThroughputSnapshot {
+    /// Window width the series was counted at.
+    pub window_ms: u64,
+    /// Fully elapsed windows at snapshot time (partial tail excluded).
+    pub windows_complete: usize,
+    /// Busiest complete window, scaled to ops/sec (0 if none complete).
+    pub peak_window_ops_per_sec: f64,
+    /// Mean rate over the complete windows (falls back to total/elapsed
+    /// when the run is shorter than one window).
+    pub sustained_ops_per_sec: f64,
+}
+
+/// Default rate-window width.
+const DEFAULT_WINDOW_MS: u64 = 250;
+/// Default rate-window horizon (250 ms × 2400 = 10 minutes).
+const DEFAULT_MAX_WINDOWS: usize = 2400;
+
+/// Serving telemetry: per-kind latency histograms + op/error counters,
+/// global counters, and throughput windows. All recording is lock-free and
+/// allocation-free; `&Telemetry` is shared freely across threads.
+pub struct Telemetry {
+    names: &'static [&'static str],
+    kinds: Vec<KindStats>,
+    start: Instant,
+    rate: RateWindows,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    precheck_rejections: AtomicU64,
+    retries: AtomicU64,
+    breaker_trips: AtomicU64,
+    rollbacks: AtomicU64,
+}
+
+impl Telemetry {
+    /// Telemetry over the nine [`SchedOp`] kinds ([`KIND_NAMES`]) with the
+    /// default 250 ms / 10 min rate windows.
+    pub fn new() -> Telemetry {
+        Telemetry::with_kinds(&KIND_NAMES)
+    }
+
+    /// Telemetry over a caller-supplied kind list (the serving harness uses
+    /// its five workload kinds); indices into `names` are the
+    /// [`Telemetry::record_kind`] keys.
+    pub fn with_kinds(names: &'static [&'static str]) -> Telemetry {
+        Telemetry {
+            names,
+            kinds: (0..names.len())
+                .map(|_| KindStats {
+                    hist: LatencyHistogram::new(),
+                    ops: AtomicU64::new(0),
+                    errors: AtomicU64::new(0),
+                })
+                .collect(),
+            start: Instant::now(),
+            rate: RateWindows::new(DEFAULT_WINDOW_MS, DEFAULT_MAX_WINDOWS),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            precheck_rejections: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            breaker_trips: AtomicU64::new(0),
+            rollbacks: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one completed op by its [`kind_index`]. Only valid for the
+    /// default kind set.
+    pub fn record(&self, op: &SchedOp, latency: Duration, error: bool) {
+        self.record_kind(kind_index(op), latency, error);
+    }
+
+    /// Record one completed op under kind `kind` (an index into the kind
+    /// list this telemetry was built with).
+    pub fn record_kind(&self, kind: usize, latency: Duration, error: bool) {
+        let k = &self.kinds[kind];
+        k.hist.record(latency);
+        k.ops.fetch_add(1, Ordering::Relaxed);
+        if error {
+            k.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let elapsed_ms = u64::try_from(self.start.elapsed().as_millis()).unwrap_or(u64::MAX);
+        self.rate.record(elapsed_ms);
+    }
+
+    /// Total ops recorded across every kind.
+    pub fn ops_total(&self) -> u64 {
+        self.kinds.iter().map(|k| k.ops.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Ops recorded under one kind index.
+    pub fn ops_of(&self, kind: usize) -> u64 {
+        self.kinds[kind].ops.load(Ordering::Relaxed)
+    }
+
+    /// Count one probe-cache hit (stamped in by the service at snapshot
+    /// time or noted live by a harness).
+    pub fn note_cache_hit(&self) {
+        self.cache_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one probe-cache miss.
+    pub fn note_cache_miss(&self) {
+        self.cache_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one count-only pre-check rejection (a `MatchAllocate` /
+    /// `MatchGrowLocal` turned away from the cache without the write lock).
+    pub fn note_precheck_rejection(&self) {
+        self.precheck_rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one retry (re-issue of a failed op; the harness and the RPC
+    /// retry layers call this, the service itself never retries).
+    pub fn note_retry(&self) {
+        self.retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one circuit-breaker trip (Closed/HalfOpen → Open transition on
+    /// a hierarchy link).
+    pub fn note_breaker_trip(&self) {
+        self.breaker_trips.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one panic-containment rollback on the write path.
+    pub fn note_rollback(&self) {
+        self.rollbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of every series. Cache counters here are the
+    /// *noted* ones; [`crate::sched::SchedService::telemetry_snapshot`]
+    /// overwrites them with the authoritative cache stats.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        let elapsed = self.start.elapsed();
+        let elapsed_ms = u64::try_from(elapsed.as_millis()).unwrap_or(u64::MAX);
+        TelemetrySnapshot {
+            uptime_s: elapsed.as_secs_f64(),
+            kinds: self
+                .names
+                .iter()
+                .zip(&self.kinds)
+                .map(|(name, k)| KindSnapshot {
+                    name,
+                    ops: k.ops.load(Ordering::Relaxed),
+                    errors: k.errors.load(Ordering::Relaxed),
+                    hist: k.hist.snapshot(),
+                })
+                .collect(),
+            throughput: self.rate.snapshot(elapsed_ms),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_invalidations: 0,
+            cache_entries: 0,
+            precheck_rejections: self.precheck_rejections.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
+            rollbacks: self.rollbacks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Telemetry {
+        Telemetry::new()
+    }
+}
+
+/// One kind's series at snapshot time.
+#[derive(Debug, Clone)]
+pub struct KindSnapshot {
+    /// Kind name (a [`KIND_NAMES`] entry, or a harness kind).
+    pub name: &'static str,
+    /// Ops recorded under this kind.
+    pub ops: u64,
+    /// Of those, how many answered with an error reply.
+    pub errors: u64,
+    /// The latency distribution.
+    pub hist: HistogramSnapshot,
+}
+
+/// Point-in-time copy of a [`Telemetry`]: per-kind distributions, global
+/// counters, throughput, JSON export.
+#[derive(Debug, Clone)]
+pub struct TelemetrySnapshot {
+    /// Seconds since the telemetry was created.
+    pub uptime_s: f64,
+    /// Every kind's series (kinds with `ops == 0` included; JSON export
+    /// skips them).
+    pub kinds: Vec<KindSnapshot>,
+    /// Throughput over the rate windows.
+    pub throughput: ThroughputSnapshot,
+    /// Probe-cache hits (authoritative when stamped by the service).
+    pub cache_hits: u64,
+    /// Probe-cache misses.
+    pub cache_misses: u64,
+    /// Probe-cache whole-map clears.
+    pub cache_invalidations: u64,
+    /// Probe-cache resident entries at snapshot time.
+    pub cache_entries: u64,
+    /// Count-only pre-check rejections.
+    pub precheck_rejections: u64,
+    /// Retries (harness / RPC layer re-issues).
+    pub retries: u64,
+    /// Circuit-breaker trips on hierarchy links.
+    pub breaker_trips: u64,
+    /// Panic-containment rollbacks on the write path.
+    pub rollbacks: u64,
+}
+
+impl TelemetrySnapshot {
+    /// Total ops across every kind.
+    pub fn ops_total(&self) -> u64 {
+        self.kinds.iter().map(|k| k.ops).sum()
+    }
+
+    /// Total error replies across every kind.
+    pub fn errors_total(&self) -> u64 {
+        self.kinds.iter().map(|k| k.errors).sum()
+    }
+
+    /// The series of a kind by name, if present.
+    pub fn kind(&self, name: &str) -> Option<&KindSnapshot> {
+        self.kinds.iter().find(|k| k.name == name)
+    }
+
+    /// The snapshot as a JSON document:
+    /// `{uptime_s, throughput: {...}, counters: {...}, kinds: [...]}` with
+    /// per-kind `ops`, `errors`, and `p50_s`/`p95_s`/`p99_s`/`mean_s`/
+    /// `max_s` percentile fields (kinds that recorded nothing are omitted).
+    pub fn to_json(&self) -> Json {
+        let kinds: Vec<Json> = self
+            .kinds
+            .iter()
+            .filter(|k| k.ops > 0)
+            .map(|k| {
+                Json::obj()
+                    .with("name", Json::from(k.name))
+                    .with("ops", Json::from(k.ops))
+                    .with("errors", Json::from(k.errors))
+                    .with("mean_s", Json::from(k.hist.mean_ns() * 1e-9))
+                    .with("p50_s", Json::from(k.hist.quantile_s(0.50)))
+                    .with("p95_s", Json::from(k.hist.quantile_s(0.95)))
+                    .with("p99_s", Json::from(k.hist.quantile_s(0.99)))
+                    .with("max_s", Json::from(k.hist.max_ns as f64 * 1e-9))
+            })
+            .collect();
+        Json::obj()
+            .with("uptime_s", Json::from(self.uptime_s))
+            .with(
+                "throughput",
+                Json::obj()
+                    .with("window_ms", Json::from(self.throughput.window_ms))
+                    .with(
+                        "windows_complete",
+                        Json::from(self.throughput.windows_complete as u64),
+                    )
+                    .with(
+                        "peak_window_ops_per_sec",
+                        Json::from(self.throughput.peak_window_ops_per_sec),
+                    )
+                    .with(
+                        "sustained_ops_per_sec",
+                        Json::from(self.throughput.sustained_ops_per_sec),
+                    ),
+            )
+            .with(
+                "counters",
+                Json::obj()
+                    .with("cache_hits", Json::from(self.cache_hits))
+                    .with("cache_misses", Json::from(self.cache_misses))
+                    .with("cache_invalidations", Json::from(self.cache_invalidations))
+                    .with("cache_entries", Json::from(self.cache_entries))
+                    .with("precheck_rejections", Json::from(self.precheck_rejections))
+                    .with("retries", Json::from(self.retries))
+                    .with("breaker_trips", Json::from(self.breaker_trips))
+                    .with("rollbacks", Json::from(self.rollbacks)),
+            )
+            .with("kinds", Json::Arr(kinds))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_round_trips_bounds() {
+        // every bucket's own bounds map back to it, across the full range
+        for index in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(index);
+            assert_eq!(bucket_index(lo), index, "lo of bucket {index}");
+            assert_eq!(bucket_index(hi), index, "hi of bucket {index}");
+        }
+        // adjacent buckets tile the u64 range with no gaps
+        for index in 0..BUCKETS - 1 {
+            let (_, hi) = bucket_bounds(index);
+            let (lo_next, _) = bucket_bounds(index + 1);
+            assert_eq!(hi + 1, lo_next, "gap after bucket {index}");
+        }
+        assert_eq!(bucket_bounds(0).0, 0);
+        assert_eq!(bucket_bounds(BUCKETS - 1).1, u64::MAX);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..32u64 {
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            assert_eq!((lo, hi), (v, v), "value {v} must be exact");
+        }
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        // reconstructed midpoint is within 6.25 % of any recorded value
+        for v in [100u64, 1_000, 10_000, 123_456, 7_654_321, 1 << 40] {
+            let (lo, hi) = bucket_bounds(bucket_index(v));
+            assert!(lo <= v && v <= hi);
+            let width = (hi - lo + 1) as f64;
+            assert!(width / lo as f64 <= 1.0 / 16.0 + 1e-9, "value {v}");
+        }
+    }
+
+    #[test]
+    fn quantiles_from_known_distribution() {
+        let h = LatencyHistogram::new();
+        for i in 1..=100u64 {
+            h.record_ns(i * 1_000); // 1 µs .. 100 µs
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.min_ns, 1_000);
+        assert_eq!(s.max_ns, 100_000);
+        let p50 = s.p50_ns();
+        assert!(
+            (p50 as f64 - 50_000.0).abs() / 50_000.0 < 0.07,
+            "p50 {p50}"
+        );
+        let p99 = s.p99_ns();
+        assert!(
+            (p99 as f64 - 99_000.0).abs() / 99_000.0 < 0.07,
+            "p99 {p99}"
+        );
+        assert!(s.quantile_ns(1.0) == 100_000, "q1.0 clamps to exact max");
+        assert_eq!(s.quantile_ns(0.0), 1_000, "q0.0 clamps to exact min");
+    }
+
+    #[test]
+    fn empty_snapshot_is_nan_free() {
+        let s = LatencyHistogram::new().snapshot();
+        assert_eq!(s.quantile_ns(0.5), 0);
+        assert_eq!(s.mean_ns(), 0.0);
+        let sum = s.to_summary();
+        assert_eq!(sum.n, 0);
+        assert!(sum.mean == 0.0 && sum.std == 0.0 && sum.max == 0.0);
+    }
+
+    #[test]
+    fn summary_synthesis_matches_distribution() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000u64 {
+            h.record_ns(i * 100);
+        }
+        let sum = h.snapshot().to_summary();
+        assert_eq!(sum.n, 1000);
+        assert!((sum.mean - 50.05e-6).abs() / 50.05e-6 < 0.01, "{}", sum.mean);
+        assert!((sum.median - 50e-6).abs() / 50e-6 < 0.07, "{}", sum.median);
+        assert!(sum.min <= sum.q1 && sum.q1 <= sum.median);
+        assert!(sum.median <= sum.q3 && sum.q3 <= sum.max);
+    }
+
+    #[test]
+    fn merge_adds_distributions() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        a.record_ns(1_000);
+        b.record_ns(9_000);
+        let mut s = a.snapshot();
+        s.merge(&b.snapshot());
+        assert_eq!(s.count, 2);
+        assert_eq!(s.min_ns, 1_000);
+        assert_eq!(s.max_ns, 9_000);
+    }
+
+    #[test]
+    fn telemetry_kinds_and_counters() {
+        let t = Telemetry::new();
+        let spec = crate::jobspec::JobSpec::nodes_sockets_cores(1, 2, 16);
+        let op = SchedOp::Probe { spec };
+        t.record(&op, Duration::from_micros(3), false);
+        t.record(&op, Duration::from_micros(5), true);
+        t.note_retry();
+        t.note_breaker_trip();
+        t.note_rollback();
+        t.note_precheck_rejection();
+        let s = t.snapshot();
+        assert_eq!(s.ops_total(), 2);
+        assert_eq!(s.errors_total(), 1);
+        let probe = s.kind("probe").unwrap();
+        assert_eq!(probe.ops, 2);
+        assert_eq!(probe.hist.count, 2);
+        assert_eq!(s.retries, 1);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.rollbacks, 1);
+        assert_eq!(s.precheck_rejections, 1);
+        // JSON export includes only the recorded kind
+        let doc = crate::util::json::Json::parse(&s.to_json().dump()).unwrap();
+        let kinds = doc.get("kinds").and_then(|k| k.as_arr()).unwrap();
+        assert_eq!(kinds.len(), 1);
+        assert_eq!(kinds[0].get("name").and_then(|n| n.as_str()), Some("probe"));
+        assert!(kinds[0].get("p99_s").and_then(|p| p.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let t = std::sync::Arc::new(Telemetry::with_kinds(&["a", "b"]));
+        let threads: Vec<_> = (0..4)
+            .map(|ti| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        t.record_kind((ti % 2) as usize, Duration::from_nanos(i + 1), false);
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        let s = t.snapshot();
+        assert_eq!(s.ops_total(), 4000);
+        assert_eq!(s.kinds[0].hist.count + s.kinds[1].hist.count, 4000);
+    }
+}

@@ -61,12 +61,22 @@ pub fn throughput(items: usize, secs: f64) -> f64 {
     items as f64 / secs
 }
 
+/// One recorded report row: the summary plus optional named extra fields
+/// (percentiles, ops/sec) carried into the JSON object.
+#[derive(Debug)]
+struct Row {
+    name: String,
+    summary: Summary,
+    extras: Vec<(String, f64)>,
+}
+
 /// Machine-readable bench report: named rows accumulated as a run prints,
 /// then emitted as JSON so successive PRs can diff medians mechanically
-/// (the perf trajectory file, e.g. `BENCH_hotpath.json`).
+/// (the perf trajectory files, e.g. `BENCH_hotpath.json` and
+/// `BENCH_serving.json`).
 #[derive(Debug, Default)]
 pub struct BenchReport {
-    rows: Vec<(String, Summary)>,
+    rows: Vec<Row>,
 }
 
 impl BenchReport {
@@ -78,13 +88,51 @@ impl BenchReport {
     /// Print the human row AND record it for the JSON report.
     pub fn row(&mut self, name: &str, samples: &[f64]) -> Summary {
         let s = print_row(name, samples);
-        self.rows.push((name.to_string(), s.clone()));
+        self.rows.push(Row {
+            name: name.to_string(),
+            summary: s.clone(),
+            extras: Vec::new(),
+        });
+        s
+    }
+
+    /// Record a row from an already-computed [`Summary`] (e.g. synthesized
+    /// from a telemetry latency histogram, where raw per-op samples are
+    /// never stored) plus named extra JSON fields — the serving report uses
+    /// `p50_s`/`p95_s`/`p99_s`/`ops_per_sec`/`errors`. Prints a human row
+    /// with the extras appended.
+    pub fn row_summary(&mut self, name: &str, s: Summary, extras: &[(&str, f64)]) -> Summary {
+        let mut line = format!(
+            "{:<36} n={:<7} mean={:>10.3e}s median={:>10.3e}s",
+            name, s.n, s.mean, s.median
+        );
+        for (k, v) in extras {
+            line.push_str(&format!(" {k}={v:.3e}"));
+        }
+        println!("{line}");
+        self.rows.push(Row {
+            name: name.to_string(),
+            summary: s.clone(),
+            extras: extras.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
         s
     }
 
     /// Summary of a named row, if recorded.
     pub fn get(&self, name: &str) -> Option<&Summary> {
-        self.rows.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+        self.rows
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| &r.summary)
+    }
+
+    /// An extra field of a named row, if recorded with one.
+    pub fn get_extra(&self, name: &str, key: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|r| r.name == name)
+            .and_then(|r| r.extras.iter().find(|(k, _)| k == key))
+            .map(|(_, v)| *v)
     }
 
     /// Number of recorded rows.
@@ -98,14 +146,17 @@ impl BenchReport {
     }
 
     /// The report as the `BENCH_hotpath.json` document shape
-    /// (`{"benchmarks": [{name, n, mean_s, median_s, ...}]}`).
+    /// (`{"benchmarks": [{name, n, mean_s, median_s, ...}]}`); rows
+    /// recorded with extras carry those keys too (the `BENCH_serving.json`
+    /// percentile fields).
     pub fn to_json(&self) -> Json {
         let rows: Vec<Json> = self
             .rows
             .iter()
-            .map(|(name, s)| {
-                Json::obj()
-                    .with("name", Json::from(name.as_str()))
+            .map(|row| {
+                let s = &row.summary;
+                let base = Json::obj()
+                    .with("name", Json::from(row.name.as_str()))
                     .with("n", Json::from(s.n as u64))
                     .with("mean_s", Json::from(s.mean))
                     .with("median_s", Json::from(s.median))
@@ -113,7 +164,10 @@ impl BenchReport {
                     .with("q3_s", Json::from(s.q3))
                     .with("std_s", Json::from(s.std))
                     .with("min_s", Json::from(s.min))
-                    .with("max_s", Json::from(s.max))
+                    .with("max_s", Json::from(s.max));
+                row.extras
+                    .iter()
+                    .fold(base, |j, (k, v)| j.with(k.as_str(), Json::from(*v)))
             })
             .collect();
         Json::obj().with("benchmarks", Json::Arr(rows))
@@ -159,6 +213,27 @@ mod tests {
         let row = report_row("my_bench", &[0.1, 0.2]);
         assert!(row.contains("my_bench"));
         assert!(row.contains("n=2"));
+    }
+
+    #[test]
+    fn row_summary_extras_reach_json() {
+        let mut r = BenchReport::new();
+        let s = summarize(&[0.001, 0.002, 0.003]);
+        r.row_summary(
+            "serve/mix@L0/r1000",
+            s,
+            &[("p99_s", 0.0029), ("ops_per_sec", 950.0)],
+        );
+        assert_eq!(r.get_extra("serve/mix@L0/r1000", "p99_s"), Some(0.0029));
+        assert_eq!(r.get_extra("serve/mix@L0/r1000", "nope"), None);
+        let doc = crate::util::json::Json::parse(&r.to_json().dump()).unwrap();
+        let rows = doc.get("benchmarks").and_then(|b| b.as_arr()).unwrap();
+        assert_eq!(
+            rows[0].get("ops_per_sec").and_then(|v| v.as_f64()),
+            Some(950.0)
+        );
+        // base schema fields still present alongside extras
+        assert!(rows[0].get("median_s").is_some());
     }
 
     #[test]

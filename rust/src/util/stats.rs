@@ -61,9 +61,15 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 
 /// Linear-interpolated quantile (type-7, what numpy/scikit default to —
 /// keeps our Table 4 numbers comparable to the paper's toolchain).
+///
+/// Defined on degenerate inputs: an empty sample yields `0.0` (never NaN,
+/// never a panic — telemetry snapshots quantile whatever they have) and a
+/// single element is every quantile of itself.
 pub fn quantile(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
     assert!((0.0..=1.0).contains(&q));
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let h = (sorted.len() - 1) as f64 * q;
     let lo = h.floor() as usize;
     let hi = h.ceil() as usize;
@@ -74,9 +80,23 @@ pub fn quantile(sorted: &[f64], q: f64) -> f64 {
     }
 }
 
-/// Full summary of a sample (sorts a copy; panics on empty input).
+/// Full summary of a sample (sorts a copy). An empty sample yields the
+/// all-zero `n = 0` summary — NaN-free, so report rows built from
+/// zero-length series (an idle op kind, a scenario that issued nothing)
+/// stay printable and JSON-clean.
 pub fn summarize(xs: &[f64]) -> Summary {
-    assert!(!xs.is_empty(), "summarize of empty sample");
+    if xs.is_empty() {
+        return Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            q1: 0.0,
+            median: 0.0,
+            q3: 0.0,
+            max: 0.0,
+        };
+    }
     let mut s = xs.to_vec();
     s.sort_by(|a, b| a.partial_cmp(b).unwrap());
     Summary {
@@ -317,6 +337,51 @@ mod tests {
         assert!((quantile(&s, 0.5) - 2.5).abs() < 1e-12);
         assert_eq!(quantile(&s, 0.0), 1.0);
         assert_eq!(quantile(&s, 1.0), 4.0);
+    }
+
+    #[test]
+    fn quantile_degenerate_inputs_are_nan_free() {
+        assert_eq!(quantile(&[], 0.5), 0.0);
+        assert_eq!(quantile(&[], 0.99), 0.0);
+        // a single element is every quantile of itself
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert_eq!(quantile(&[7.5], q), 7.5);
+        }
+    }
+
+    #[test]
+    fn quantile_p99_tail_small_samples() {
+        // type-7 interpolation at the tail: h = (n-1)·q sits between the
+        // last two order statistics for small n
+        let five = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert!((quantile(&five, 0.99) - 4.96).abs() < 1e-12);
+        let two = [10.0, 20.0];
+        assert!((quantile(&two, 0.99) - 19.9).abs() < 1e-12);
+        let three = [0.0, 1.0, 100.0];
+        // h = 2·0.99 = 1.98 → 1.0 + 0.98·(100−1)
+        assert!((quantile(&three, 0.99) - 98.02).abs() < 1e-12);
+        // p99 below the max, p100 exactly the max
+        assert!(quantile(&five, 0.99) < 5.0);
+        assert_eq!(quantile(&five, 1.0), 5.0);
+    }
+
+    #[test]
+    fn summarize_degenerate_inputs_are_nan_free() {
+        let empty = summarize(&[]);
+        assert_eq!(empty.n, 0);
+        for v in [
+            empty.mean, empty.std, empty.min, empty.q1, empty.median, empty.q3, empty.max,
+        ] {
+            assert_eq!(v, 0.0);
+        }
+        assert_eq!(empty.iqr(), 0.0);
+        let (lo, hi) = empty.whiskers();
+        assert!(!lo.is_nan() && !hi.is_nan());
+        let one = summarize(&[3.25]);
+        assert_eq!(one.n, 1);
+        assert_eq!(one.std, 0.0);
+        assert_eq!((one.min, one.median, one.max), (3.25, 3.25, 3.25));
+        assert_eq!((one.q1, one.q3), (3.25, 3.25));
     }
 
     #[test]

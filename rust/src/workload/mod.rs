@@ -7,6 +7,13 @@
 //! (analysis/reduction). This module generates deterministic traces with
 //! that shape; `experiments::e2e` replays them against the hierarchical
 //! scheduler and against a rigid (allocate-peak-up-front) baseline.
+//!
+//! The [`optrace`] submodule generates the other trace family: open-loop
+//! per-op request streams (probe/allocate/grow/shrink/free mixes with
+//! exponential interarrivals) that the serving harness ([`crate::serving`])
+//! replays against a live `SchedService` or `Hierarchy`.
+
+pub mod optrace;
 
 use crate::util::rng::Rng;
 

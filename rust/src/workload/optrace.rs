@@ -1,0 +1,311 @@
+//! Deterministic open-loop multi-tenant **op traces** for the serving
+//! harness ([`crate::serving`]).
+//!
+//! Where the sibling elastic-workflow generator models whole job lifetimes,
+//! this module generates the *request stream* a scheduler front door sees:
+//! a seeded sequence of probe/allocate/grow/shrink/free ops with
+//! exponential interarrival times at a configured offered rate. The stream
+//! is **open-loop**: arrival times are fixed up front and never adapt to
+//! how fast the target serves, so queueing delay under saturation shows up
+//! in the measured latencies instead of silently throttling the load (the
+//! coordinated-omission trap).
+//!
+//! Generation is a pure function of the spec ([`generate_ops`]): same seed
+//! ⇒ identical `Vec<PlannedOp>`, which is what makes harness reruns
+//! byte-comparable and the issued-per-kind counters replayable.
+
+use crate::util::rng::Rng;
+
+/// The five workload op kinds a tenant issues against the serving front
+/// door. They map onto [`crate::rpc::proto::SchedOp`]s at replay time
+/// (see [`crate::serving`] for the exact mapping per target).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Read-only feasibility probe.
+    Probe,
+    /// New allocation (`MatchAllocate` / a leaf-escalated grow).
+    Allocate,
+    /// Grow an existing allocation (`MatchGrowLocal`).
+    Grow,
+    /// Release the *oldest* live allocation this tenant holds.
+    Shrink,
+    /// Release the *newest* live allocation this tenant holds.
+    Free,
+}
+
+/// Number of [`OpKind`] variants.
+pub const OP_KINDS: usize = 5;
+
+/// Kind names in [`OpKind::index`] order (the harness telemetry's kind
+/// list).
+pub static OP_KIND_NAMES: [&str; OP_KINDS] =
+    ["probe", "allocate", "grow", "shrink", "free"];
+
+impl OpKind {
+    /// Stable index of this kind (into [`OP_KIND_NAMES`]).
+    pub fn index(&self) -> usize {
+        match self {
+            OpKind::Probe => 0,
+            OpKind::Allocate => 1,
+            OpKind::Grow => 2,
+            OpKind::Shrink => 3,
+            OpKind::Free => 4,
+        }
+    }
+
+    /// Stable wire-ish name of this kind.
+    pub fn name(&self) -> &'static str {
+        OP_KIND_NAMES[self.index()]
+    }
+}
+
+/// Relative weights of the five op kinds in a trace. Weights are integers
+/// so mixes are exactly reproducible; they need not sum to anything in
+/// particular.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OpMix {
+    /// Weight of [`OpKind::Probe`].
+    pub probe: u32,
+    /// Weight of [`OpKind::Allocate`].
+    pub allocate: u32,
+    /// Weight of [`OpKind::Grow`].
+    pub grow: u32,
+    /// Weight of [`OpKind::Shrink`].
+    pub shrink: u32,
+    /// Weight of [`OpKind::Free`].
+    pub free: u32,
+}
+
+impl OpMix {
+    /// Converged-computing front-door traffic: dominated by feasibility
+    /// probes (the paper's capacity queries), light churn.
+    pub fn probe_heavy() -> OpMix {
+        OpMix {
+            probe: 90,
+            allocate: 6,
+            grow: 0,
+            shrink: 0,
+            free: 4,
+        }
+    }
+
+    /// Balanced read/write traffic.
+    pub fn balanced() -> OpMix {
+        OpMix {
+            probe: 50,
+            allocate: 20,
+            grow: 10,
+            shrink: 5,
+            free: 15,
+        }
+    }
+
+    /// Allocation-churn traffic: mostly mutations (the write-lock
+    /// worst case).
+    pub fn churn() -> OpMix {
+        OpMix {
+            probe: 10,
+            allocate: 35,
+            grow: 15,
+            shrink: 10,
+            free: 30,
+        }
+    }
+
+    /// Pure allocate pressure — the retry-storm mix against a saturated
+    /// instance (every op contends for capacity that is not there).
+    pub fn allocate_only() -> OpMix {
+        OpMix {
+            probe: 0,
+            allocate: 100,
+            grow: 0,
+            shrink: 0,
+            free: 0,
+        }
+    }
+
+    fn total(&self) -> u64 {
+        self.probe as u64
+            + self.allocate as u64
+            + self.grow as u64
+            + self.shrink as u64
+            + self.free as u64
+    }
+
+    /// Draw one kind according to the weights.
+    fn draw(&self, rng: &mut Rng) -> OpKind {
+        let total = self.total();
+        assert!(total > 0, "OpMix with all-zero weights");
+        let mut v = rng.below(total);
+        for (kind, w) in [
+            (OpKind::Probe, self.probe as u64),
+            (OpKind::Allocate, self.allocate as u64),
+            (OpKind::Grow, self.grow as u64),
+            (OpKind::Shrink, self.shrink as u64),
+            (OpKind::Free, self.free as u64),
+        ] {
+            if v < w {
+                return kind;
+            }
+            v -= w;
+        }
+        unreachable!("draw below total covers all weights")
+    }
+}
+
+/// Parameters of one deterministic op trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpTraceSpec {
+    /// Ops in the trace.
+    pub ops: usize,
+    /// RNG seed (same seed ⇒ identical trace).
+    pub seed: u64,
+    /// Offered open-loop arrival rate, ops per second (exponential
+    /// interarrivals with this mean rate).
+    pub rate_ops_per_sec: f64,
+    /// Kind weights.
+    pub mix: OpMix,
+    /// Tenants round-tripping through the front door (each op carries a
+    /// tenant tag; per-tenant live allocations back grow/shrink/free).
+    pub tenants: usize,
+    /// Inclusive node-count range for probe/allocate/grow requests.
+    pub nodes: (u64, u64),
+}
+
+impl Default for OpTraceSpec {
+    fn default() -> OpTraceSpec {
+        OpTraceSpec {
+            ops: 10_000,
+            seed: 0x5E21CE,
+            rate_ops_per_sec: 5_000.0,
+            mix: OpMix::balanced(),
+            tenants: 4,
+            nodes: (1, 4),
+        }
+    }
+}
+
+/// One op of the planned stream: what to issue, when (nanoseconds from
+/// trace start), how big, and for whom.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlannedOp {
+    /// Scheduled arrival, nanoseconds from trace start.
+    pub at_ns: u64,
+    /// Workload kind.
+    pub kind: OpKind,
+    /// Requested full nodes (probe/allocate/grow; ignored by
+    /// shrink/free).
+    pub nodes: u64,
+    /// Issuing tenant index in `0..spec.tenants`.
+    pub tenant: usize,
+}
+
+/// Generate the deterministic op stream of a spec: exponential
+/// interarrivals at `rate_ops_per_sec`, kinds drawn from the mix, node
+/// counts uniform in `nodes`, tenants uniform. Pure in the spec — two
+/// calls with equal specs return equal vectors.
+pub fn generate_ops(spec: &OpTraceSpec) -> Vec<PlannedOp> {
+    assert!(spec.tenants >= 1, "need at least one tenant");
+    assert!(
+        spec.rate_ops_per_sec > 0.0,
+        "offered rate must be positive"
+    );
+    assert!(spec.nodes.0 >= 1 && spec.nodes.0 <= spec.nodes.1);
+    let mut rng = Rng::new(spec.seed);
+    let mut t_ns = 0u64;
+    let mut out = Vec::with_capacity(spec.ops);
+    for _ in 0..spec.ops {
+        let gap_s = rng.exponential(spec.rate_ops_per_sec);
+        t_ns = t_ns.saturating_add((gap_s * 1e9) as u64);
+        out.push(PlannedOp {
+            at_ns: t_ns,
+            kind: spec.mix.draw(&mut rng),
+            nodes: rng.range(spec.nodes.0, spec.nodes.1),
+            tenant: rng.below(spec.tenants as u64) as usize,
+        });
+    }
+    out
+}
+
+/// Issued-op counts per kind, indexed by [`OpKind::index`] — the
+/// plan-determined totals the harness determinism contract is stated over.
+pub fn count_by_kind(ops: &[PlannedOp]) -> [u64; OP_KINDS] {
+    let mut counts = [0u64; OP_KINDS];
+    for op in ops {
+        counts[op.kind.index()] += 1;
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_identical_stream() {
+        let spec = OpTraceSpec::default();
+        assert_eq!(generate_ops(&spec), generate_ops(&spec));
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let a = OpTraceSpec::default();
+        let b = OpTraceSpec {
+            seed: a.seed + 1,
+            ..a.clone()
+        };
+        assert_ne!(generate_ops(&a), generate_ops(&b));
+    }
+
+    #[test]
+    fn arrivals_monotone_and_rate_plausible() {
+        let spec = OpTraceSpec {
+            ops: 20_000,
+            rate_ops_per_sec: 10_000.0,
+            ..OpTraceSpec::default()
+        };
+        let ops = generate_ops(&spec);
+        for w in ops.windows(2) {
+            assert!(w[0].at_ns <= w[1].at_ns);
+        }
+        // mean interarrival ≈ 100 µs at 10k ops/s
+        let span_s = ops.last().unwrap().at_ns as f64 * 1e-9;
+        let rate = ops.len() as f64 / span_s;
+        assert!(
+            (rate - 10_000.0).abs() / 10_000.0 < 0.05,
+            "observed rate {rate}"
+        );
+    }
+
+    #[test]
+    fn mix_weights_respected() {
+        let spec = OpTraceSpec {
+            ops: 50_000,
+            mix: OpMix::probe_heavy(),
+            ..OpTraceSpec::default()
+        };
+        let counts = count_by_kind(&generate_ops(&spec));
+        let total: u64 = counts.iter().sum();
+        assert_eq!(total, 50_000);
+        let probe_frac = counts[OpKind::Probe.index()] as f64 / total as f64;
+        assert!(
+            (probe_frac - 0.90).abs() < 0.02,
+            "probe fraction {probe_frac}"
+        );
+        assert_eq!(counts[OpKind::Grow.index()], 0, "zero-weight kind");
+    }
+
+    #[test]
+    fn fields_in_bounds() {
+        let spec = OpTraceSpec {
+            ops: 2_000,
+            tenants: 3,
+            nodes: (2, 5),
+            ..OpTraceSpec::default()
+        };
+        for op in generate_ops(&spec) {
+            assert!(op.tenant < 3);
+            assert!((2..=5).contains(&op.nodes));
+        }
+    }
+}

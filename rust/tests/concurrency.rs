@@ -290,6 +290,67 @@ fn sharded_matches_race_concurrent_probes() {
     svc.read().check().unwrap();
 }
 
+/// Telemetry counters under probe-vs-writer contention: every recorded
+/// total must equal the number of ops actually issued — lock-free Relaxed
+/// counters may not lose or double-count an op no matter the interleaving.
+#[test]
+fn telemetry_counters_stay_exact_under_contention() {
+    let svc = service(3, 4); // L3: 2 nodes
+    let one_node = JobSpec::nodes_sockets_cores(1, 2, 16);
+    let both_nodes = JobSpec::nodes_sockets_cores(2, 2, 16);
+    const PROBERS: u64 = 4;
+    const PROBES_EACH: u64 = 500;
+    const WRITE_CYCLES: u64 = 100;
+
+    let mut threads = Vec::new();
+    for _ in 0..PROBERS {
+        let svc = svc.clone();
+        let spec = one_node.clone();
+        threads.push(std::thread::spawn(move || {
+            for _ in 0..PROBES_EACH {
+                // feasible or NO_MATCH depending on the writer's phase —
+                // either way it must be recorded exactly once
+                let _ = svc.probe(&spec);
+            }
+        }));
+    }
+    // sole mutator: allocations cannot fail, so error totals stay exact too
+    for _ in 0..WRITE_CYCLES {
+        let SchedReply::Allocated { job, .. } = svc.apply(&SchedOp::MatchAllocate {
+            spec: both_nodes.clone(),
+        }) else {
+            panic!("writer allocation failed");
+        };
+        let freed = svc.apply(&SchedOp::FreeJob { job });
+        assert!(matches!(freed, SchedReply::Freed { .. }), "{freed:?}");
+    }
+    for t in threads {
+        t.join().expect("prober panicked");
+    }
+
+    let snap = svc.telemetry_snapshot();
+    assert_eq!(snap.kind("probe").unwrap().ops, PROBERS * PROBES_EACH);
+    assert_eq!(snap.kind("match_allocate").unwrap().ops, WRITE_CYCLES);
+    assert_eq!(snap.kind("match_allocate").unwrap().errors, 0);
+    assert_eq!(snap.kind("free_job").unwrap().ops, WRITE_CYCLES);
+    assert_eq!(snap.kind("free_job").unwrap().errors, 0);
+    assert_eq!(
+        snap.ops_total(),
+        PROBERS * PROBES_EACH + 2 * WRITE_CYCLES,
+        "telemetry lost or double-counted ops under contention"
+    );
+    // histogram mass equals the op count: no sample was dropped either
+    assert_eq!(
+        snap.kind("probe").unwrap().hist.count,
+        PROBERS * PROBES_EACH
+    );
+    // cache counters come stamped from the authoritative probe cache
+    let stats = svc.cache_stats();
+    assert_eq!(snap.cache_hits, stats.hits);
+    assert_eq!(snap.cache_misses, stats.misses);
+    svc.read().check().unwrap();
+}
+
 /// Many threads hammering the single-probe cached path on a static graph:
 /// all answers identical, and after the first traversal the cache absorbs
 /// (nearly) everything.

@@ -1,0 +1,184 @@
+//! Integration coverage for the serving harness + telemetry stack:
+//! deterministic replay (the BENCH_serving reproducibility contract),
+//! histogram bucket round-trips at the public API boundary, chaos-wired
+//! hierarchy runs, and the report-row schema `BENCH_serving.json` is
+//! built from.
+
+use std::time::Duration;
+
+use fluxion::fault::FaultRates;
+use fluxion::hier::{ChaosConfig, LevelSpec, LinkKind};
+use fluxion::serving::{run_scenario, Scenario};
+use fluxion::telemetry::{bucket_bounds, bucket_index, LatencyHistogram, BUCKETS};
+use fluxion::util::bench::BenchReport;
+use fluxion::util::json::Json;
+use fluxion::workload::optrace::{
+    count_by_kind, generate_ops, OpMix, OpTraceSpec, OP_KIND_NAMES,
+};
+
+fn quick_trace(ops: usize, mix: OpMix) -> OpTraceSpec {
+    OpTraceSpec {
+        ops,
+        seed: 0xD15EA5E,
+        rate_ops_per_sec: 150_000.0,
+        mix,
+        tenants: 4,
+        nodes: (1, 2),
+    }
+}
+
+/// Same seed ⇒ the identical planned op stream, op for op — the property
+/// every other determinism claim rests on.
+#[test]
+fn same_seed_replays_identical_op_stream() {
+    let spec = quick_trace(5_000, OpMix::balanced());
+    let a = generate_ops(&spec);
+    let b = generate_ops(&spec);
+    assert_eq!(a, b);
+    assert_eq!(count_by_kind(&a), count_by_kind(&b));
+    // and the stream is non-trivial: several kinds present
+    let active = count_by_kind(&a).iter().filter(|&&c| c > 0).count();
+    assert!(active >= 4, "balanced mix should hit >=4 kinds");
+}
+
+/// Re-running a multi-client scenario reproduces the issued-per-kind
+/// counters exactly (latencies and — across interleavings — success/error
+/// splits may differ; issued counts must not).
+#[test]
+fn seeded_rerun_reproduces_issued_counters() {
+    let mk = || {
+        Scenario::service(
+            "serve/it/rerun@L1",
+            quick_trace(600, OpMix::churn()),
+            4,
+            1,
+            4,
+        )
+    };
+    let a = run_scenario(&mk());
+    let b = run_scenario(&mk());
+    assert_eq!(a.issued_by_kind, b.issued_by_kind);
+    assert_eq!(a.planned, b.planned);
+    for name in OP_KIND_NAMES.iter() {
+        assert_eq!(
+            a.harness.kind(name).unwrap().ops,
+            b.harness.kind(name).unwrap().ops,
+            "kind {name} issued-count drifted across reruns"
+        );
+    }
+    // every planned op was recorded exactly once on both runs
+    assert_eq!(a.harness.ops_total(), 600);
+    assert_eq!(b.harness.ops_total(), 600);
+}
+
+/// Bucket round-trip at the public boundary: for a spread of latencies,
+/// recording a duration and reading the histogram back keeps the value
+/// inside its reported bucket bounds (≤6.25% relative error by design).
+#[test]
+fn histogram_buckets_round_trip_recorded_latencies() {
+    let h = LatencyHistogram::new();
+    let values_ns: Vec<u64> = (0..60)
+        .map(|i| 3u64.saturating_pow(i).min(u64::MAX / 2))
+        .chain([0, 1, 15, 16, 31, 32, 1_000, 1_000_000, 123_456_789])
+        .collect();
+    for &v in &values_ns {
+        h.record(Duration::from_nanos(v));
+        let idx = bucket_index(v);
+        assert!(idx < BUCKETS);
+        let (lo, hi) = bucket_bounds(idx);
+        assert!(
+            (lo..=hi).contains(&v),
+            "{v} escaped its bucket [{lo}, {hi}]"
+        );
+    }
+    let snap = h.snapshot();
+    assert_eq!(snap.count, values_ns.len() as u64);
+    assert_eq!(snap.max_ns, *values_ns.iter().max().unwrap());
+    assert_eq!(snap.min_ns, *values_ns.iter().min().unwrap());
+    // quantiles are clamped into the observed range and ordered
+    let p50 = snap.quantile_ns(0.50);
+    let p99 = snap.quantile_ns(0.99);
+    assert!(snap.min_ns <= p50 && p50 <= p99 && p99 <= snap.max_ns);
+}
+
+/// A chaos-wired hierarchy scenario completes, records every planned op,
+/// and surfaces per-level service telemetry (the clean/faulty pairing the
+/// bench reports relies on this path).
+#[test]
+fn hierarchy_chaos_scenario_records_every_op() {
+    let trace = OpTraceSpec {
+        ops: 48,
+        rate_ops_per_sec: 2_000.0,
+        ..quick_trace(48, OpMix::balanced())
+    };
+    let chaos = ChaosConfig::client_only(
+        0xC4A05,
+        FaultRates {
+            drop: 0.05,
+            delay: 0.05,
+            delay_for: Duration::from_micros(100),
+            ..FaultRates::none()
+        },
+    );
+    let sc = Scenario::hierarchy(
+        "serve/it/hier_chaos",
+        trace,
+        2, // 4-node root
+        vec![
+            LevelSpec {
+                boot_nodes: 2,
+                link: LinkKind::InProc,
+            },
+            LevelSpec {
+                boot_nodes: 1,
+                link: LinkKind::InProc,
+            },
+        ],
+        Some(chaos),
+    );
+    let r = run_scenario(&sc);
+    assert_eq!(r.harness.ops_total(), 48, "an op went unrecorded");
+    assert_eq!(r.services.len(), 3, "one telemetry snapshot per level");
+    assert!(r.errors() <= 48);
+    let issued: u64 = r.issued_by_kind.iter().sum();
+    assert_eq!(issued, 48);
+    // wall-clock and throughput are sane (finite, positive)
+    assert!(r.wall_s > 0.0 && r.wall_s.is_finite());
+    assert!(r.attained_ops_per_sec > 0.0);
+}
+
+/// The report rows a scenario emits carry the `BENCH_serving.json` schema:
+/// base Summary fields plus `p50_s`/`p95_s`/`p99_s`/`ops_per_sec`/`errors`
+/// extras, valid JSON end to end.
+#[test]
+fn report_rows_match_bench_serving_schema() {
+    let sc = Scenario::service(
+        "serve/it/schema@L2",
+        quick_trace(400, OpMix::probe_heavy()),
+        2,
+        2,
+        2,
+    );
+    let r = run_scenario(&sc);
+    let mut report = BenchReport::new();
+    r.report_rows(&mut report);
+    let doc = Json::parse(&report.to_json().dump()).expect("report JSON parses");
+    let rows = doc.get("benchmarks").and_then(|b| b.as_arr()).unwrap();
+    let head = rows
+        .iter()
+        .find(|row| row.get("name").and_then(|n| n.as_str()) == Some("serve/it/schema@L2"))
+        .expect("headline row present");
+    for key in ["n", "mean_s", "median_s", "p50_s", "p95_s", "p99_s", "ops_per_sec", "errors"] {
+        assert!(head.get(key).is_some(), "row missing {key}");
+    }
+    let p50 = head.get("p50_s").and_then(|v| v.as_f64()).unwrap();
+    let p99 = head.get("p99_s").and_then(|v| v.as_f64()).unwrap();
+    assert!(p50.is_finite() && p99.is_finite() && p50 <= p99 && p50 > 0.0);
+    // per-kind rows ride along under name/kind
+    assert!(
+        rows.iter().any(|row| {
+            row.get("name").and_then(|n| n.as_str()) == Some("serve/it/schema@L2/probe")
+        }),
+        "probe kind row missing"
+    );
+}
