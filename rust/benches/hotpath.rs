@@ -347,6 +347,59 @@ fn main() {
     });
     report.row("cached-probe/precheck_T1@L0", &s);
 
+    // 10. sharded write commits (`wrshard/` family, PR 8): `threads`
+    //     writer threads each cycling a 1-node MatchAllocate + FreeJob
+    //     through ONE service on the 128-node L0 graph. `serial` holds the
+    //     instance write lock across each whole op (match included); `sK`
+    //     prepares the match under the READ lock and commits through K
+    //     subtree shards (OCC), so concurrent writers queue only on the
+    //     short validate+commit section. Rows are PER-OP seconds summed
+    //     across all writers; the sN:serial ratio is the write-path
+    //     scaling headroom (see PERF.md).
+    let wr_cycles = if smoke { 4 } else { 16 };
+    let wr_ops = threads * wr_cycles * 2;
+    let mut wr_modes: Vec<(String, usize)> = vec![("serial".into(), 0)];
+    for &k in &ladder {
+        wr_modes.push((format!("s{k}"), k));
+    }
+    for (label, k) in &wr_modes {
+        let svc = SchedService::with_workers(
+            SchedInstance::new(table2_graph(0, &mut UidGen::new()), PruneConfig::default()),
+            threads,
+        );
+        if *k > 1 {
+            svc.set_write_shards(*k);
+        }
+        let t7 = t7.clone();
+        let s = run_simple(gwarm, giters, || {
+            let mut handles = Vec::new();
+            for _ in 0..threads {
+                let svc = svc.clone();
+                let spec = t7.clone();
+                handles.push(std::thread::spawn(move || {
+                    for _ in 0..wr_cycles {
+                        let reply = svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() });
+                        let SchedReply::Allocated { job, .. } = reply else {
+                            panic!("wrshard allocation failed: {reply:?}");
+                        };
+                        assert!(!svc.apply(&SchedOp::FreeJob { job }).is_error());
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().expect("wrshard writer panicked");
+            }
+            wr_ops
+        });
+        let per_op: Vec<f64> = s.iter().map(|x| x / wr_ops as f64).collect();
+        report.row(&format!("wrshard/alloc_free_T7x{threads}w@L0/{label}"), &per_op);
+        let snap = svc.telemetry_snapshot();
+        println!(
+            "  (wrshard {label}: {} shard commits, {} conflicts, {} spine contentions)",
+            snap.shard_commits, snap.shard_conflicts, snap.spine_contentions
+        );
+    }
+
     if json {
         let path = "BENCH_hotpath.json";
         report.write_json(path).expect("write bench report");

@@ -10,6 +10,9 @@
 //!       across an offered-rate ladder (open loop: when the target
 //!       saturates, queueing delay lands in the percentiles — the
 //!       coordinated-omission-safe convention)
+//!   serve/churn-wrshard@L0/r{rate}
+//!       the churn mix with 4-way sharded OCC write commits armed
+//!       (PR 8), paired against serve/churn@L0 at the same rate
 //!   serve/depth@L{0..3}
 //!       one balanced mix across the Table 2 graph-size sweep
 //!   serve/retry_storm@L4
@@ -90,6 +93,35 @@ fn main() {
             print_totals(&r);
             results.push(r);
         }
+    }
+
+    // 1b. multi-writer churn with sharded write commits (PR 8): the same
+    //     churn mix, but the service prepares matches under the read lock
+    //     and commits through 4 subtree shards (OCC). Pairs against
+    //     serve/churn@L0 at the same rate — the delta is what the short
+    //     commit section buys the tail when every client thread mutates.
+    {
+        let wr_rate = rate_override.unwrap_or(20_000.0);
+        let ops = ((wr_rate * target_s) as usize).clamp(1_000, ops_cap);
+        let trace = OpTraceSpec {
+            ops,
+            seed,
+            rate_ops_per_sec: wr_rate,
+            mix: OpMix::churn(),
+            tenants: 8,
+            nodes: (1, 4),
+        };
+        let name = format!("serve/churn-wrshard@L0/r{wr_rate:.0}");
+        let sc = Scenario::service(&name, trace, clients, 0, clients).with_write_shards(4);
+        let r = run_scenario(&sc);
+        r.report_rows(&mut report);
+        print_totals(&r);
+        let snap = &r.services[0];
+        println!(
+            "  (wrshard: {} shard commits, {} conflicts, {} spine contentions)",
+            snap.shard_commits, snap.shard_conflicts, snap.spine_contentions
+        );
+        results.push(r);
     }
 
     // 2. hierarchy-depth sweep: the same balanced mix against each Table 2

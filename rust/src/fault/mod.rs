@@ -605,6 +605,46 @@ pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
 }
 
 // ---------------------------------------------------------------------------
+// Sharded-commit fault injection
+// ---------------------------------------------------------------------------
+
+/// Scripted fault plan for the subtree-sharded write-commit path (PR 8):
+/// one entry is consumed per sharded commit, and a `Some(shard)` entry
+/// makes the commit panic the moment it starts processing that shard
+/// bucket — mid-commit, after earlier shards' marks have landed — which is
+/// exactly the torn state the service's panic containment must roll back
+/// without poisoning sibling shards. Deterministic by construction (a
+/// plain FIFO, no randomness), so chaos tests can target "panic while
+/// committing shard 2 of op 7" exactly.
+#[derive(Debug, Clone, Default)]
+pub struct CommitFaultPlan {
+    script: VecDeque<Option<usize>>,
+}
+
+impl CommitFaultPlan {
+    /// A plan that injects the scripted faults in order, then nothing:
+    /// entry `i` applies to the `i`-th sharded commit; `Some(s)` panics
+    /// when shard bucket `s` starts processing, `None` lets the commit
+    /// through untouched.
+    pub fn script(faults: &[Option<usize>]) -> CommitFaultPlan {
+        CommitFaultPlan {
+            script: faults.iter().copied().collect(),
+        }
+    }
+
+    /// Consume the next commit's fault decision (`None` once the script is
+    /// drained — the plan then never fires again).
+    pub fn next_commit(&mut self) -> Option<usize> {
+        self.script.pop_front().flatten()
+    }
+
+    /// Whether the script still holds undelivered entries.
+    pub fn is_exhausted(&self) -> bool {
+        self.script.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Quarantine circuit breaker
 // ---------------------------------------------------------------------------
 

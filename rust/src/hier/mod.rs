@@ -791,6 +791,10 @@ impl Hierarchy {
                 let inst = &mut *guard;
                 inst.graph.restore_from(&g);
                 inst.allocs = a;
+                // sharded write commits (PR 8): the shard job maps were
+                // indexed against the pre-reset table — re-derive them
+                // from the restored one
+                inst.refresh_write_shards();
             }
         }
     }
@@ -916,6 +920,25 @@ impl Hierarchy {
     /// Like `probe_at`, it bypasses the per-node mutex.
     pub fn probe_sharded_at(&self, level: usize, spec: &JobSpec, shards: usize) -> SchedReply {
         self.services[level].probe_sharded(spec, shards)
+    }
+
+    /// Enable (or, with `k <= 1`, disable) the OCC subtree-sharded write
+    /// path at one level ([`SchedService::set_write_shards`]): the match
+    /// half of that level's `MatchAllocate`/`MatchGrowLocal` traffic runs
+    /// under the read lock and commits through subtree-sharded allocation
+    /// maps, leaving the write lock held only for the short commit. Uses
+    /// the service handle, not the per-node mutex, so it is safe to toggle
+    /// while traffic — even a multi-level `MatchGrow` — is in flight.
+    pub fn set_write_shards_at(&self, level: usize, k: usize) {
+        self.services[level].set_write_shards(k);
+    }
+
+    /// Enable sharded write commits at every level with the same width
+    /// (how the chaos soak and the serving benches arm the whole tree).
+    pub fn set_write_shards_all(&self, k: usize) {
+        for svc in &self.services {
+            svc.set_write_shards(k);
+        }
     }
 
     /// Stop all servers. Called on drop as well.

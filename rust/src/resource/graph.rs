@@ -250,6 +250,18 @@ impl ResourceGraph {
         self.epoch
     }
 
+    /// Advance the epoch by `n` without touching any vertex. Used by the
+    /// sharded write-commit path ([`crate::sched::alloc`]): coalescing
+    /// per-shard spine deltas makes *fewer* `vertex_mut` calls than the
+    /// serial mark/bubble walk would, and the sharded commit compensates
+    /// with the difference so a fixed op stream lands on the **same final
+    /// epoch** as serial application (part of the PR 5 determinism
+    /// contract). Moving the counter forward is always safe — it can only
+    /// cost a cache entry, never serve a stale answer.
+    pub fn bump_epochs(&mut self, n: u64) {
+        self.epoch += n;
+    }
+
     /// Replace this graph's contents with a snapshot while keeping the
     /// epoch moving **forward**: the restored graph's epoch is one past the
     /// maximum of both timelines. A plain `*g = snapshot.clone()` would

@@ -4,11 +4,34 @@
 //! resources are given the allocation metadata of a running job allocation"
 //! (§5.1) — so grow extends an existing [`JobId`]'s vertex set instead of
 //! minting a new one.
+//!
+//! ## Sharded write commits (PR 8)
+//!
+//! [`WriteShards`] partitions the allocation bookkeeping by **root-child
+//! subtree**, reusing the PR 5 shard planner
+//! ([`crate::sched::matcher::plan_write_shards`]) so write shards and the
+//! sharded read scan agree on subtree ownership. Each shard owns a
+//! per-subtree allocation map (the partition of [`AllocTable`]'s vertex
+//! sets) plus its own [`SpineBuf`] aggregate-delta buffer; a commit marks
+//! shard-owned vertices and bubbles aggregates strictly inside the shard's
+//! subtree, then merges every shard's buffered spine deltas at the depth-1
+//! root in one short coalesced pass. The protocol preserves the PR 5
+//! determinism contract: for a fixed op stream the final graph, allocation
+//! table, pruning aggregates, **and epoch** are bit-identical to serial
+//! [`AllocTable::allocate`]/[`AllocTable::free`] application — deltas are
+//! additive (order-independent within one op) and the spine merge
+//! compensates the epoch for every coalesced write
+//! ([`ResourceGraph::bump_epochs`]). [`AllocTable`] itself stays
+//! authoritative (JGF encoding, structural grow/shrink, and the
+//! consistency oracle all keep reading it); the shard maps are the
+//! commit-path index, and [`WriteShards::check_partition`] proves the two
+//! views stay equal.
 
 use std::collections::HashMap;
 
 use crate::resource::graph::{JobId, ResourceGraph, VertexId};
-use crate::sched::pruning::{bubble_delta, PruneConfig};
+use crate::sched::matcher::plan_write_shards;
+use crate::sched::pruning::{bubble_delta, bubble_delta_split, PruneConfig, SpineBuf};
 
 /// Lifecycle state of a job allocation.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -247,6 +270,386 @@ impl AllocTable {
     }
 }
 
+// ---- sharded write commits (PR 8) ------------------------------------------
+
+/// One write shard's slice of the allocation bookkeeping: this shard's
+/// partition of the allocation table (job → vertices held *inside the
+/// shard's root-child subtree*) plus the shard's deferred aggregate-delta
+/// buffer for the commit's spine merge.
+#[derive(Debug, Clone, Default)]
+pub struct AllocShard {
+    /// Job → vertices this shard holds for it. Never contains an empty
+    /// vector or a completed job — entries are removed as jobs drain.
+    jobs: HashMap<JobId, Vec<VertexId>>,
+    /// Spine-delta buffer for the in-flight commit; drained (empty)
+    /// between commits.
+    spine: SpineBuf,
+}
+
+impl AllocShard {
+    /// Vertices this shard holds for `job` (empty if none).
+    pub fn vertices_of(&self, job: JobId) -> &[VertexId] {
+        self.jobs.get(&job).map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Number of jobs with at least one vertex in this shard.
+    pub fn job_count(&self) -> usize {
+        self.jobs.len()
+    }
+}
+
+/// Subtree-sharded write-commit state: the PR 5 shard plan over the root's
+/// children, the child→shard ownership map derived from it, and one
+/// [`AllocShard`] per plan range plus a trailing **spine bucket** for
+/// vertices no shard owns (the root itself, or root children grown in
+/// after the plan was built). See the module docs for the commit protocol
+/// and the determinism argument.
+#[derive(Debug, Clone, Default)]
+pub struct WriteShards {
+    /// Contiguous `[lo, hi)` ranges over the root's children, in order
+    /// (the PR 5 partition — read scans and write commits agree on it).
+    ranges: Vec<(u32, u32)>,
+    /// Root-child vertex → owning shard index.
+    child_shard: HashMap<VertexId, usize>,
+    /// Per-shard state; `ranges.len() + 1` entries, the last being the
+    /// spine/unowned bucket.
+    shards: Vec<AllocShard>,
+}
+
+impl WriteShards {
+    /// Plan `shards` write shards over the graph's current root children
+    /// (empty shard maps — call [`WriteShards::rebuild`] to index an
+    /// already-populated table). A rootless or childless graph yields zero
+    /// planned shards; every vertex then lands in the spine bucket.
+    pub fn plan(g: &ResourceGraph, shards: usize) -> WriteShards {
+        let ranges = plan_write_shards(g, shards);
+        let mut child_shard = HashMap::new();
+        if let Some(root) = g.root() {
+            let children = g.children_of(root);
+            for (s, &(lo, hi)) in ranges.iter().enumerate() {
+                for i in lo as usize..hi as usize {
+                    child_shard.insert(children[i], s);
+                }
+            }
+        }
+        let buckets = ranges.len() + 1;
+        WriteShards {
+            ranges,
+            child_shard,
+            shards: vec![AllocShard::default(); buckets],
+        }
+    }
+
+    /// Number of planned subtree shards (the spine bucket not counted).
+    pub fn num_shards(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The planned `[lo, hi)` root-child ranges.
+    pub fn ranges(&self) -> &[(u32, u32)] {
+        &self.ranges
+    }
+
+    /// Index of the spine/unowned bucket.
+    pub fn spine_bucket(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// A shard bucket by index (`0..=num_shards()`, the last being the
+    /// spine bucket).
+    pub fn shard(&self, s: usize) -> Option<&AllocShard> {
+        self.shards.get(s)
+    }
+
+    /// Owning bucket of a vertex: the shard of its depth-2 (root-child)
+    /// ancestor, or the spine bucket for the root itself and for subtrees
+    /// the plan has never seen. O(depth) parent walk, read-only.
+    pub fn shard_of(&self, g: &ResourceGraph, vid: VertexId) -> usize {
+        let mut cur = vid;
+        loop {
+            let d = g.vertex(cur).depth;
+            if d < 2 {
+                return self.spine_bucket();
+            }
+            if d == 2 {
+                return self
+                    .child_shard
+                    .get(&cur)
+                    .copied()
+                    .unwrap_or_else(|| self.spine_bucket());
+            }
+            match g.parent_of(cur) {
+                Some(p) => cur = p,
+                None => return self.spine_bucket(),
+            }
+        }
+    }
+
+    /// Re-index the shard maps from the authoritative table (used after
+    /// serial-fallback ops — structural grow/shrink, snapshot restores —
+    /// that mutate the table without going through a sharded commit).
+    pub fn rebuild(&mut self, g: &ResourceGraph, table: &AllocTable) {
+        for shard in &mut self.shards {
+            shard.jobs.clear();
+        }
+        for a in table.jobs.values() {
+            if a.state != JobState::Running {
+                continue;
+            }
+            for &vid in &a.vertices {
+                if g.vertex(vid).dead {
+                    continue;
+                }
+                let s = self.shard_of(g, vid);
+                self.shards[s].jobs.entry(a.job).or_default().push(vid);
+            }
+        }
+    }
+
+    /// Oracle: the shard maps are exactly a partition of the table's
+    /// running allocations — every sharded vertex is in the table under
+    /// its owning shard, every running table vertex is in its owning
+    /// shard's map, and no spine buffer holds undrained deltas.
+    pub fn check_partition(
+        &self,
+        g: &ResourceGraph,
+        table: &AllocTable,
+    ) -> Result<(), String> {
+        for (s, shard) in self.shards.iter().enumerate() {
+            if !shard.spine.is_empty() {
+                return Err(format!("shard {s} has undrained spine deltas"));
+            }
+            for (job, held) in &shard.jobs {
+                let Some(a) = table.jobs.get(job) else {
+                    return Err(format!("shard {s} holds unknown job {job:?}"));
+                };
+                if a.state != JobState::Running {
+                    return Err(format!("shard {s} holds completed job {job:?}"));
+                }
+                if held.is_empty() {
+                    return Err(format!("shard {s} has empty entry for {job:?}"));
+                }
+                for &vid in held {
+                    if self.shard_of(g, vid) != s {
+                        return Err(format!(
+                            "vertex {vid:?} of {job:?} filed under wrong shard {s}"
+                        ));
+                    }
+                    if !a.vertices.contains(&vid) {
+                        return Err(format!(
+                            "shard {s} holds {vid:?} not in table for {job:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        for a in table.jobs.values() {
+            if a.state != JobState::Running {
+                continue;
+            }
+            for &vid in &a.vertices {
+                if g.vertex(vid).dead {
+                    continue;
+                }
+                let s = self.shard_of(g, vid);
+                let present = self.shards[s]
+                    .jobs
+                    .get(&a.job)
+                    .map(|held| held.contains(&vid))
+                    .unwrap_or(false);
+                if !present {
+                    return Err(format!(
+                        "table vertex {vid:?} of {:?} missing from shard {s}",
+                        a.job
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl AllocTable {
+    /// Sharded twin of [`AllocTable::allocate`]: mark `selection` for a new
+    /// job via the subtree-sharded commit protocol. `on_shard` fires once
+    /// per shard bucket that participates, *before* that bucket's writes —
+    /// the service's telemetry/fault-injection hook. Bit-identical final
+    /// state (table, aggregates, epoch) to the serial twin.
+    pub fn allocate_sharded(
+        &mut self,
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        ws: &mut WriteShards,
+        selection: Vec<VertexId>,
+        on_shard: impl FnMut(usize),
+    ) -> Result<JobId, AllocError> {
+        let job = self.fresh_job_id();
+        self.mark_sharded(g, cfg, ws, job, &selection, on_shard)?;
+        self.jobs.insert(
+            job,
+            Allocation {
+                job,
+                vertices: selection,
+                state: JobState::Running,
+            },
+        );
+        Ok(job)
+    }
+
+    /// Sharded twin of [`AllocTable::grow`] (same `on_shard` hook as
+    /// [`AllocTable::allocate_sharded`]).
+    pub fn grow_sharded(
+        &mut self,
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        ws: &mut WriteShards,
+        job: JobId,
+        selection: Vec<VertexId>,
+        on_shard: impl FnMut(usize),
+    ) -> Result<(), AllocError> {
+        match self.jobs.get(&job) {
+            None => return Err(AllocError::NoSuchJob(job)),
+            Some(a) if a.state != JobState::Running => {
+                return Err(AllocError::NotRunning(job))
+            }
+            Some(_) => {}
+        }
+        self.mark_sharded(g, cfg, ws, job, &selection, on_shard)?;
+        self.jobs
+            .get_mut(&job)
+            .expect("checked above")
+            .vertices
+            .extend(selection);
+        Ok(())
+    }
+
+    /// The sharded mark/bubble phase: validate, bucket the selection by
+    /// owning shard, write each bucket strictly inside its subtree (spine
+    /// deltas buffered per shard), then merge every buffer at the root in
+    /// one coalesced pass (the short spine critical section).
+    fn mark_sharded(
+        &mut self,
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        ws: &mut WriteShards,
+        job: JobId,
+        selection: &[VertexId],
+        mut on_shard: impl FnMut(usize),
+    ) -> Result<(), AllocError> {
+        // validate first so failure leaves no partial marks (serial parity)
+        for &vid in selection {
+            if g.vertex(vid).alloc.is_allocated() {
+                return Err(AllocError::AlreadyAllocated(vid));
+            }
+        }
+        let mut buckets: Vec<Vec<VertexId>> = vec![Vec::new(); ws.shards.len()];
+        for &vid in selection {
+            buckets[ws.shard_of(g, vid)].push(vid);
+        }
+        for (s, bucket) in buckets.iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            on_shard(s);
+            let shard = &mut ws.shards[s];
+            for &vid in bucket {
+                g.vertex_mut(vid).alloc.jobs.push(job);
+                bubble_delta_split(g, vid, cfg, -1, &mut shard.spine);
+                shard.jobs.entry(job).or_default().push(vid);
+            }
+        }
+        for shard in &mut ws.shards {
+            shard.spine.merge_into(g, cfg);
+        }
+        Ok(())
+    }
+
+    /// Sharded twin of [`AllocTable::free`] (same `on_shard` hook as
+    /// [`AllocTable::allocate_sharded`]).
+    pub fn free_sharded(
+        &mut self,
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        ws: &mut WriteShards,
+        job: JobId,
+        on_shard: impl FnMut(usize),
+    ) -> Result<usize, AllocError> {
+        let alloc = self.jobs.get_mut(&job).ok_or(AllocError::NoSuchJob(job))?;
+        if alloc.state != JobState::Running {
+            return Err(AllocError::NotRunning(job));
+        }
+        alloc.state = JobState::Completed;
+        let vertices = std::mem::take(&mut alloc.vertices);
+        let n = vertices.len();
+        Self::release_sharded(g, cfg, ws, job, &vertices, on_shard);
+        Ok(n)
+    }
+
+    /// Sharded twin of [`AllocTable::shrink`] (same `on_shard` hook as
+    /// [`AllocTable::allocate_sharded`]).
+    pub fn shrink_sharded(
+        &mut self,
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        ws: &mut WriteShards,
+        job: JobId,
+        victims: &[VertexId],
+        on_shard: impl FnMut(usize),
+    ) -> Result<(), AllocError> {
+        let alloc = self.jobs.get_mut(&job).ok_or(AllocError::NoSuchJob(job))?;
+        if alloc.state != JobState::Running {
+            return Err(AllocError::NotRunning(job));
+        }
+        alloc.vertices.retain(|v| !victims.contains(v));
+        Self::release_sharded(g, cfg, ws, job, victims, on_shard);
+        Ok(())
+    }
+
+    /// Shared unmark path of the sharded free/shrink: bucket by shard,
+    /// drop shard-map entries, unmark live vertices, bubble +1 deltas with
+    /// spine amounts buffered, merge at the root.
+    fn release_sharded(
+        g: &mut ResourceGraph,
+        cfg: &PruneConfig,
+        ws: &mut WriteShards,
+        job: JobId,
+        vertices: &[VertexId],
+        mut on_shard: impl FnMut(usize),
+    ) {
+        let mut buckets: Vec<Vec<VertexId>> = vec![Vec::new(); ws.shards.len()];
+        for &vid in vertices {
+            buckets[ws.shard_of(g, vid)].push(vid);
+        }
+        for (s, bucket) in buckets.iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            on_shard(s);
+            let shard = &mut ws.shards[s];
+            for &vid in bucket {
+                // the shard map drops the vertex even when the graph vertex
+                // is dead — the table record is gone either way
+                if let Some(held) = shard.jobs.get_mut(&job) {
+                    held.retain(|&v| v != vid);
+                    if held.is_empty() {
+                        shard.jobs.remove(&job);
+                    }
+                }
+                if g.vertex(vid).dead {
+                    continue;
+                }
+                g.vertex_mut(vid).alloc.jobs.retain(|&j| j != job);
+                if !g.vertex(vid).alloc.is_allocated() {
+                    bubble_delta_split(g, vid, cfg, 1, &mut shard.spine);
+                }
+            }
+        }
+        for shard in &mut ws.shards {
+            shard.spine.merge_into(g, cfg);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -333,5 +736,112 @@ mod tests {
         let job = t.allocate(&mut g, &cfg, vec![c0]).unwrap();
         t.free(&mut g, &cfg, job).unwrap();
         assert!(t.free(&mut g, &cfg, job).is_err());
+    }
+
+    fn setup4() -> (ResourceGraph, AllocTable, PruneConfig) {
+        let mut g = ClusterSpec::new("c", 4, 1, 4).build(&mut UidGen::new());
+        let cfg = PruneConfig::default();
+        init_aggregates(&mut g, &cfg);
+        (g, AllocTable::new(), cfg)
+    }
+
+    fn pick(g: &ResourceGraph, n: usize, c: usize) -> VertexId {
+        g.lookup_path(&format!("/c0/node{n}/socket0/core{c}")).unwrap()
+    }
+
+    #[test]
+    fn sharded_commits_match_serial_bit_for_bit() {
+        let (mut ga, mut ta, cfg) = setup4();
+        let (mut gb, mut tb, _) = setup4();
+        assert_eq!(ga.epoch(), gb.epoch());
+        let mut ws = WriteShards::plan(&gb, 2);
+        assert_eq!(ws.num_shards(), 2);
+        // serial reference stream
+        let j0a = ta
+            .allocate(&mut ga, &cfg, vec![pick(&ga, 0, 0), pick(&ga, 3, 1)])
+            .unwrap();
+        let j1a = ta.allocate(&mut ga, &cfg, vec![pick(&ga, 1, 2)]).unwrap();
+        ta.free(&mut ga, &cfg, j0a).unwrap();
+        // identical stream through the sharded commit path
+        let mut touched = Vec::new();
+        let j0b = tb
+            .allocate_sharded(
+                &mut gb,
+                &cfg,
+                &mut ws,
+                vec![pick(&gb, 0, 0), pick(&gb, 3, 1)],
+                |s| touched.push(s),
+            )
+            .unwrap();
+        let j1b = tb
+            .allocate_sharded(&mut gb, &cfg, &mut ws, vec![pick(&gb, 1, 2)], |_| {})
+            .unwrap();
+        tb.free_sharded(&mut gb, &cfg, &mut ws, j0b, |_| {}).unwrap();
+        assert_eq!(j0a, j0b);
+        assert_eq!(j1a, j1b);
+        assert_eq!(touched, vec![0, 1], "disjoint subtrees hit two shards");
+        assert_eq!(ga.epoch(), gb.epoch(), "epochs must stay bit-identical");
+        let root = ga.root().unwrap();
+        assert_eq!(
+            cfg.free_at(&ga, root, &ResourceType::Core),
+            cfg.free_at(&gb, root, &ResourceType::Core)
+        );
+        check_aggregates(&gb, &cfg).unwrap();
+        tb.check_consistency(&gb).unwrap();
+        ws.check_partition(&gb, &tb).unwrap();
+    }
+
+    #[test]
+    fn shard_partition_tracks_grow_shrink_and_rebuild() {
+        let (mut g, mut t, cfg) = setup4();
+        let mut ws = WriteShards::plan(&g, 4);
+        assert_eq!(ws.num_shards(), 4);
+        let sel = vec![pick(&g, 0, 0), pick(&g, 0, 1)];
+        let job = t
+            .allocate_sharded(&mut g, &cfg, &mut ws, sel, |_| {})
+            .unwrap();
+        t.grow_sharded(&mut g, &cfg, &mut ws, job, vec![pick(&g, 2, 0)], |_| {})
+            .unwrap();
+        ws.check_partition(&g, &t).unwrap();
+        let s0 = ws.shard_of(&g, pick(&g, 0, 0));
+        let s2 = ws.shard_of(&g, pick(&g, 2, 0));
+        assert_ne!(s0, s2);
+        assert_eq!(ws.shard(s0).unwrap().vertices_of(job).len(), 2);
+        assert_eq!(ws.shard(s2).unwrap().vertices_of(job).len(), 1);
+        // partial shrink drains one shard's slice, then rebuild re-derives
+        // the same partition from the authoritative table
+        let victims = [pick(&g, 2, 0)];
+        t.shrink_sharded(&mut g, &cfg, &mut ws, job, &victims, |_| {})
+            .unwrap();
+        assert_eq!(ws.shard(s2).unwrap().vertices_of(job).len(), 0);
+        ws.check_partition(&g, &t).unwrap();
+        let mut rebuilt = WriteShards::plan(&g, 4);
+        rebuilt.rebuild(&g, &t);
+        rebuilt.check_partition(&g, &t).unwrap();
+        check_aggregates(&g, &cfg).unwrap();
+        t.check_consistency(&g).unwrap();
+    }
+
+    #[test]
+    fn failed_sharded_mark_leaves_no_partial_state() {
+        let (mut g, mut t, cfg) = setup4();
+        let mut ws = WriteShards::plan(&g, 2);
+        let held = pick(&g, 1, 0);
+        t.allocate_sharded(&mut g, &cfg, &mut ws, vec![held], |_| {})
+            .unwrap();
+        let epoch = g.epoch();
+        // second op selects a free vertex AND the held one: must fail whole
+        let err = t.allocate_sharded(
+            &mut g,
+            &cfg,
+            &mut ws,
+            vec![pick(&g, 0, 0), held],
+            |_| {},
+        );
+        assert!(matches!(err, Err(AllocError::AlreadyAllocated(_))));
+        assert_eq!(g.epoch(), epoch, "failed validation writes nothing");
+        assert!(!g.vertex(pick(&g, 0, 0)).alloc.is_allocated());
+        ws.check_partition(&g, &t).unwrap();
+        check_aggregates(&g, &cfg).unwrap();
     }
 }

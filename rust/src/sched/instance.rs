@@ -19,11 +19,12 @@
 //! This file is the single-threaded core; `sched::service` is the
 //! concurrent serving layer over it.
 
+use crate::fault::CommitFaultPlan;
 use crate::jobspec::JobSpec;
 use crate::resource::graph::{JobId, ResourceGraph, VertexId};
 use crate::resource::jgf::Jgf;
 use crate::rpc::proto::{code, SchedOp, SchedReply};
-use crate::sched::alloc::AllocTable;
+use crate::sched::alloc::{AllocError, AllocTable, WriteShards};
 use crate::sched::grow::{self, AddReport, GrowError};
 use crate::sched::matcher::{
     compile_spec_into, match_compiled, probe_compiled, MatchFail, MatchResult, MatchScratch,
@@ -131,6 +132,18 @@ pub struct SchedInstance {
     /// that probe behind a shared reference bring their own scratch
     /// ([`SchedInstance::probe_with`], how `SchedService` pool workers run).
     scratch: MatchScratch,
+    /// Subtree-sharded write-commit state (PR 8): `Some` routes every
+    /// allocation-path mutation (`MatchAllocate`/`MatchGrowLocal`/`FreeJob`
+    /// /`ShrinkSubtree`) through [`AllocTable`]'s sharded twins; `None`
+    /// (the default) keeps the serial commit path.
+    write_shards: Option<WriteShards>,
+    /// Requested shard count behind `write_shards` (`<= 1` = disabled) —
+    /// kept so [`SchedInstance::refresh_write_shards`] can re-plan after
+    /// structural changes without losing the caller's setting.
+    write_shard_target: usize,
+    /// Scripted mid-commit fault plan (chaos testing; consumed one entry
+    /// per sharded commit).
+    commit_faults: Option<CommitFaultPlan>,
 }
 
 // `SchedService` shares a `SchedInstance` across its worker pool behind an
@@ -151,6 +164,9 @@ impl SchedInstance {
             allocs: AllocTable::new(),
             prune,
             scratch: MatchScratch::new(),
+            write_shards: None,
+            write_shard_target: 0,
+            commit_faults: None,
         }
     }
 
@@ -160,6 +176,123 @@ impl SchedInstance {
     pub fn from_jgf(jgf: &Jgf, prune: PruneConfig) -> Result<SchedInstance, GrowError> {
         let graph = jgf.build_graph(true)?;
         Ok(SchedInstance::new(graph, prune))
+    }
+
+    // ---- sharded write commits (PR 8) -----------------------------------
+
+    /// Enable subtree-sharded write commits with (at most) `k` shards;
+    /// `k <= 1` restores the serial commit path. Plans over the current
+    /// root children and indexes any existing allocations, so it can be
+    /// toggled on a live instance.
+    pub fn set_write_shards(&mut self, k: usize) {
+        self.write_shard_target = k;
+        self.refresh_write_shards();
+    }
+
+    /// Number of planned write shards (0 = serial commits).
+    pub fn write_shard_count(&self) -> usize {
+        self.write_shards
+            .as_ref()
+            .map(WriteShards::num_shards)
+            .unwrap_or(0)
+    }
+
+    /// The sharded write state, when enabled (test/oracle hook —
+    /// [`WriteShards::check_partition`] proves the shard maps partition
+    /// the allocation table).
+    pub fn write_shards(&self) -> Option<&WriteShards> {
+        self.write_shards.as_ref()
+    }
+
+    /// Re-plan the shard partition and re-index the shard maps from the
+    /// authoritative table. Called after structural mutations (grant
+    /// splices, subtree removals) and snapshot restores, which change the
+    /// root-child set or rewrite the table without going through a sharded
+    /// commit.
+    pub fn refresh_write_shards(&mut self) {
+        if self.write_shard_target > 1 {
+            let mut ws = WriteShards::plan(&self.graph, self.write_shard_target);
+            ws.rebuild(&self.graph, &self.allocs);
+            self.write_shards = Some(ws);
+        } else {
+            self.write_shards = None;
+        }
+    }
+
+    /// Install (or clear) a scripted mid-commit fault plan — chaos
+    /// testing's handle on the sharded commit path. One entry is consumed
+    /// per attempted sharded commit; see [`CommitFaultPlan`].
+    pub fn set_commit_faults(&mut self, plan: Option<CommitFaultPlan>) {
+        self.commit_faults = plan;
+    }
+
+    /// OCC validation for the service's two-phase sharded write path:
+    /// whether every vertex of a selection prepared at an earlier epoch is
+    /// still present, live, and unallocated. Spec satisfaction depends
+    /// only on vertex types/sizes — which no allocation-path op changes —
+    /// so a stale-but-free selection is still a valid grant and the
+    /// service may linearize it at commit time.
+    pub fn selection_still_free(&self, selection: &[VertexId]) -> bool {
+        selection.iter().all(|&vid| {
+            if vid.0 as usize >= self.graph.arena_len() {
+                return false; // snapshot restore shrank the arena
+            }
+            let v = self.graph.vertex(vid);
+            !v.dead && !v.alloc.is_allocated()
+        })
+    }
+
+    /// Second phase of the service's sharded write path: commit a match
+    /// that was prepared outside the write lock. Reply construction is
+    /// identical to a serial `MatchAllocate` (`job == None`) or
+    /// `MatchGrowLocal` (`job == Some`), minus the match itself.
+    pub fn commit_prepared(
+        &mut self,
+        m: MatchResult,
+        match_s: f64,
+        job: Option<JobId>,
+    ) -> SchedReply {
+        alloc_reply(self.finish_alloc(m, match_s, job))
+    }
+
+    /// Charge `selection` to `job` (or a fresh id) through the active
+    /// commit path — sharded when enabled, serial otherwise — pulling one
+    /// scripted commit fault if a plan is armed.
+    fn charge_selection(
+        &mut self,
+        job: Option<JobId>,
+        selection: Vec<VertexId>,
+    ) -> Result<JobId, AllocError> {
+        match self.write_shards.as_mut() {
+            Some(ws) => {
+                let fault = self.commit_faults.as_mut().and_then(CommitFaultPlan::next_commit);
+                let on_shard = |s: usize| {
+                    if fault == Some(s) {
+                        panic!("injected commit fault in shard {s}");
+                    }
+                };
+                match job {
+                    None => self.allocs.allocate_sharded(
+                        &mut self.graph,
+                        &self.prune,
+                        ws,
+                        selection,
+                        on_shard,
+                    ),
+                    Some(j) => self
+                        .allocs
+                        .grow_sharded(&mut self.graph, &self.prune, ws, j, selection, on_shard)
+                        .map(|_| j),
+                }
+            }
+            None => match job {
+                None => self.allocs.allocate(&mut self.graph, &self.prune, selection),
+                Some(j) => self
+                    .allocs
+                    .grow(&mut self.graph, &self.prune, j, selection)
+                    .map(|_| j),
+            },
+        }
     }
 
     /// Interpret one typed operation — the single entrypoint everything
@@ -326,12 +459,10 @@ impl SchedInstance {
         let subgraph = Jgf::from_selection(&self.graph, &m.selection);
         let job = match job {
             None => self
-                .allocs
-                .allocate(&mut self.graph, &self.prune, m.selection)
+                .charge_selection(None, m.selection)
                 .expect("matcher returned free vertices"),
             Some(j) => {
-                self.allocs
-                    .grow(&mut self.graph, &self.prune, j, m.selection)
+                self.charge_selection(Some(j), m.selection)
                     .map_err(GrowError::from)?;
                 j
             }
@@ -388,6 +519,9 @@ impl SchedInstance {
     ) -> Result<(AddReport, f64), GrowError> {
         let t = crate::util::metrics::Timer::start();
         let report = grow::run_grow(&mut self.graph, &mut self.allocs, &self.prune, jgf, job)?;
+        // structural serial-fallback op: the root-child set and the table
+        // changed outside the sharded commit path
+        self.refresh_write_shards();
         Ok((report, t.elapsed_secs()))
     }
 
@@ -397,7 +531,10 @@ impl SchedInstance {
     ///
     /// [`release_subtree`]: SchedInstance::release_subtree
     pub fn remove_subgraph(&mut self, path: &str) -> Result<usize, GrowError> {
-        grow::remove_subgraph(&mut self.graph, &self.prune, path)
+        let n = grow::remove_subgraph(&mut self.graph, &self.prune, path)?;
+        // structural serial-fallback op: re-derive the shard partition
+        self.refresh_write_shards();
+        Ok(n)
     }
 
     /// Unbind every job allocation intersecting the subtree at `path` and
@@ -420,9 +557,30 @@ impl SchedInstance {
             }
         }
         for job in jobs {
-            self.allocs
-                .shrink(&mut self.graph, &self.prune, job, &victims)
-                .map_err(GrowError::from)?;
+            match self.write_shards.as_mut() {
+                Some(ws) => {
+                    let fault =
+                        self.commit_faults.as_mut().and_then(CommitFaultPlan::next_commit);
+                    self.allocs
+                        .shrink_sharded(
+                            &mut self.graph,
+                            &self.prune,
+                            ws,
+                            job,
+                            &victims,
+                            |s| {
+                                if fault == Some(s) {
+                                    panic!("injected commit fault in shard {s}");
+                                }
+                            },
+                        )
+                        .map_err(GrowError::from)?;
+                }
+                None => self
+                    .allocs
+                    .shrink(&mut self.graph, &self.prune, job, &victims)
+                    .map_err(GrowError::from)?,
+            }
         }
         Ok(victims)
     }
@@ -444,9 +602,26 @@ impl SchedInstance {
         self.remove_subgraph(path)
     }
 
-    /// Release all of a job's resources.
+    /// Release all of a job's resources (sharded unmark when write
+    /// sharding is enabled — same final state either way).
     pub fn free_job(&mut self, job: JobId) -> Result<usize, GrowError> {
-        Ok(self.allocs.free(&mut self.graph, &self.prune, job)?)
+        match self.write_shards.as_mut() {
+            Some(ws) => {
+                let fault = self.commit_faults.as_mut().and_then(CommitFaultPlan::next_commit);
+                Ok(self.allocs.free_sharded(
+                    &mut self.graph,
+                    &self.prune,
+                    ws,
+                    job,
+                    |s| {
+                        if fault == Some(s) {
+                            panic!("injected commit fault in shard {s}");
+                        }
+                    },
+                )?)
+            }
+            None => Ok(self.allocs.free(&mut self.graph, &self.prune, job)?),
+        }
     }
 
     /// Resources (by id) currently held by a job.
@@ -455,9 +630,14 @@ impl SchedInstance {
     }
 
     /// Graph + allocation consistency for tests and failure injection.
+    /// With write sharding enabled this also proves the shard maps are
+    /// exactly a partition of the allocation table.
     pub fn check(&self) -> Result<(), String> {
         self.graph.check_invariants()?;
         self.allocs.check_consistency(&self.graph)?;
+        if let Some(ws) = &self.write_shards {
+            ws.check_partition(&self.graph, &self.allocs)?;
+        }
         crate::sched::pruning::check_aggregates(&self.graph, &self.prune)
     }
 }
@@ -761,6 +941,65 @@ mod tests {
         assert!(inst.graph.epoch() > before);
         assert!(inst.graph.lookup_path("/cluster0/node1").is_some());
         inst.check().unwrap();
+    }
+
+    #[test]
+    fn sharded_instance_stream_matches_serial_including_epoch() {
+        // twin instances, one with write sharding: every reply's structural
+        // payload and every intermediate epoch must agree
+        let mut a =
+            SchedInstance::new(table2_graph(1, &mut UidGen::new()), PruneConfig::default());
+        let mut b =
+            SchedInstance::new(table2_graph(1, &mut UidGen::new()), PruneConfig::default());
+        b.set_write_shards(4);
+        assert!(b.write_shard_count() >= 2);
+        let spec = JobSpec::nodes_sockets_cores(2, 2, 16);
+        let ops = vec![
+            SchedOp::MatchAllocate { spec: spec.clone() },
+            SchedOp::MatchAllocate { spec: spec.clone() },
+            SchedOp::FreeJob { job: JobId(0) },
+            SchedOp::MatchGrowLocal {
+                job: JobId(1),
+                spec: spec.clone(),
+            },
+            SchedOp::ShrinkSubtree {
+                path: "/cluster0/node0".into(),
+            },
+            SchedOp::FreeJob { job: JobId(1) },
+        ];
+        for op in &ops {
+            let ra = a.apply(op);
+            let rb = b.apply(op);
+            match (&ra, &rb) {
+                (
+                    SchedReply::Allocated {
+                        job: j1,
+                        subgraph: g1,
+                        ..
+                    },
+                    SchedReply::Allocated {
+                        job: j2,
+                        subgraph: g2,
+                        ..
+                    },
+                ) => {
+                    assert_eq!(j1, j2);
+                    assert_eq!(g1, g2);
+                }
+                _ => assert_eq!(ra, rb),
+            }
+            assert_eq!(
+                a.graph.epoch(),
+                b.graph.epoch(),
+                "epoch divergence after {op:?}"
+            );
+        }
+        a.check().unwrap();
+        b.check().unwrap();
+        b.write_shards()
+            .unwrap()
+            .check_partition(&b.graph, &b.allocs)
+            .unwrap();
     }
 
     #[test]

@@ -602,6 +602,22 @@ fn plan_shards(g: &ResourceGraph, root: VertexId, shards: usize, plan: &mut Plan
     debug_assert_eq!(plan.ranges.last().map(|r| r.1), Some(n as u32));
 }
 
+/// Public entry to the PR 5 shard planner for the **write-sharding** path
+/// ([`crate::sched::alloc`]): partition the root's children into at most
+/// `shards` contiguous `[lo, hi)` index ranges balanced by subtree vertex
+/// count — the same partition `traverse_sharded` scans with, so read-side
+/// shard scans and write-side commit shards agree on which subtree belongs
+/// to which shard. Returns an empty vec when the graph has no root or the
+/// root has no children (callers fall back to serial commits).
+pub fn plan_write_shards(g: &ResourceGraph, shards: usize) -> Vec<(u32, u32)> {
+    let Some(root) = g.root() else {
+        return Vec::new();
+    };
+    let mut plan = PlanBuf::default();
+    plan_shards(g, root, shards, &mut plan);
+    plan.ranges
+}
+
 /// Run one shard of a [`ShardJob`]: scan the child range `job.ranges[shard]`
 /// for up to `job.req.count` candidates against `scratch`'s shard-local
 /// traversal state (selection seeded from `job.base_selected`, compiled

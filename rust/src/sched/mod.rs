@@ -15,11 +15,11 @@ pub mod matcher;
 pub mod pruning;
 pub mod service;
 
-pub use alloc::AllocTable;
+pub use alloc::{AllocTable, WriteShards};
 pub use instance::SchedInstance;
 pub use matcher::{
     compile_spec_into, match_compiled, match_resources, match_resources_in,
-    match_resources_sharded, MatchFail, MatchResult, MatchScratch,
+    match_resources_sharded, plan_write_shards, MatchFail, MatchResult, MatchScratch,
 };
 pub use pruning::PruneConfig;
 pub use service::{CacheStats, SchedService, ServiceWriteGuard};

@@ -176,6 +176,103 @@ pub fn bubble_delta(g: &mut ResourceGraph, vid: VertexId, cfg: &PruneConfig, del
     }
 }
 
+/// Containment depth at or above which a vertex belongs to the shared
+/// **spine** rather than to any single write shard. The graph root sits at
+/// depth 1 ([`ResourceGraph::add_root`]), root children at depth 2 — write
+/// shards own disjoint root-child subtrees, so the only vertex every
+/// shard's bubble walk converges on is the depth-1 root itself.
+pub const SPINE_DEPTH: u32 = 1;
+
+/// Deferred spine-delta buffer for one write shard (the per-shard
+/// "aggregate-delta buffer" of the sharded commit protocol — see
+/// [`crate::sched::alloc`]). [`bubble_delta_split`] accumulates aggregate
+/// amounts destined for spine vertices (depth ≤ [`SPINE_DEPTH`]) here
+/// instead of writing them through, so shard-local mark/bubble work never
+/// touches the shared root; [`SpineBuf::merge_into`] then applies the
+/// buffered amounts in one coalesced pass inside the commit's short spine
+/// critical section.
+#[derive(Debug, Clone, Default)]
+pub struct SpineBuf {
+    /// Net buffered amount per pruning slot.
+    amounts: [i64; MAX_TRACKED],
+    /// How many individual `vertex_mut` writes were deferred — the serial
+    /// walk would have bumped the graph epoch once per deferred write, so
+    /// the merge compensates with [`ResourceGraph::bump_epochs`] to keep a
+    /// fixed op stream's final epoch bit-identical to serial application.
+    deferred: u64,
+}
+
+impl SpineBuf {
+    /// Whether nothing has been deferred since the last merge.
+    pub fn is_empty(&self) -> bool {
+        self.deferred == 0
+    }
+
+    /// Buffer one deferred spine write of `amount` against `slot`.
+    fn defer(&mut self, slot: usize, amount: i64) {
+        self.amounts[slot] += amount;
+        self.deferred += 1;
+    }
+
+    /// Apply the buffered spine deltas to the graph root in one coalesced
+    /// pass and reset the buffer. Makes exactly one `vertex_mut` call, then
+    /// advances the epoch by the remaining deferred-write count so the
+    /// total epoch movement equals what the serial walk would have done.
+    pub fn merge_into(&mut self, g: &mut ResourceGraph, cfg: &PruneConfig) {
+        if self.deferred == 0 {
+            return;
+        }
+        let nslots = cfg.nslots();
+        if let Some(root) = g.root() {
+            let v = g.vertex_mut(root);
+            for slot in 0..nslots {
+                if self.amounts[slot] != 0 {
+                    v.agg_add_slot(slot, nslots, self.amounts[slot]);
+                }
+            }
+            g.bump_epochs(self.deferred - 1);
+        }
+        self.amounts = [0; MAX_TRACKED];
+        self.deferred = 0;
+    }
+}
+
+/// [`bubble_delta`] split for the sharded commit path: writes to the vertex
+/// itself and to ancestors **below** the spine immediately (all shard-owned
+/// when `vid` lies in the shard's root-child subtree), and defers writes to
+/// spine vertices (depth ≤ [`SPINE_DEPTH`]) into `spine` for the commit's
+/// coalesced root merge. With a fresh `spine` merged afterwards, the net
+/// aggregate effect — and, via the merge's epoch compensation, the epoch
+/// movement — is identical to one `bubble_delta` call.
+pub fn bubble_delta_split(
+    g: &mut ResourceGraph,
+    vid: VertexId,
+    cfg: &PruneConfig,
+    delta: i64,
+    spine: &mut SpineBuf,
+) {
+    let tracked = cfg.resolve(g.types());
+    let Some(slot) = tracked.slot_of_tid(g.vertex(vid).tid) else {
+        return;
+    };
+    let nslots = cfg.nslots();
+    let amount = delta * g.vertex(vid).size as i64;
+    if g.vertex(vid).depth <= SPINE_DEPTH {
+        spine.defer(slot, amount);
+    } else {
+        g.vertex_mut(vid).agg_add_slot(slot, nslots, amount);
+    }
+    let mut cur = g.parent_of(vid);
+    while let Some(a) = cur {
+        if g.vertex(a).depth <= SPINE_DEPTH {
+            spine.defer(slot, amount);
+        } else {
+            g.vertex_mut(a).agg_add_slot(slot, nslots, amount);
+        }
+        cur = g.parent_of(a);
+    }
+}
+
 /// Recompute aggregates for a freshly attached subgraph and propagate its
 /// totals to the `p` pre-existing ancestors. `new_vertices` must be in
 /// parents-before-children order (as `grow::add_subgraph` returns).
@@ -322,6 +419,43 @@ mod tests {
         let root = g.root().unwrap();
         assert_eq!(free_cores(&g, &cfg, root), 3);
         check_aggregates(&g, &cfg).unwrap();
+    }
+
+    #[test]
+    fn split_bubble_matches_serial_including_epoch() {
+        let mk = || {
+            let mut g = ClusterSpec::new("c", 2, 1, 4).build(&mut UidGen::new());
+            let cfg = PruneConfig::default();
+            init_aggregates(&mut g, &cfg);
+            (g, cfg)
+        };
+        let (mut a, cfg) = mk();
+        let (mut b, _) = mk();
+        assert_eq!(a.epoch(), b.epoch(), "deterministic builds start equal");
+        let marks = ["/c0/node0/socket0/core1", "/c0/node1/socket0/core3"];
+        // serial: mark + bubble straight through
+        for p in marks {
+            let v = a.lookup_path(p).unwrap();
+            a.vertex_mut(v).alloc.jobs.push(JobId(1));
+            bubble_delta(&mut a, v, &cfg, -1);
+        }
+        // split: shard-local writes + one coalesced spine merge
+        let mut spine = SpineBuf::default();
+        for p in marks {
+            let v = b.lookup_path(p).unwrap();
+            b.vertex_mut(v).alloc.jobs.push(JobId(1));
+            bubble_delta_split(&mut b, v, &cfg, -1, &mut spine);
+        }
+        assert!(!spine.is_empty());
+        spine.merge_into(&mut b, &cfg);
+        assert!(spine.is_empty());
+        assert_eq!(a.epoch(), b.epoch(), "epoch compensation must be exact");
+        let root = a.root().unwrap();
+        assert_eq!(
+            free_cores(&a, &cfg, root),
+            free_cores(&b, &cfg, root)
+        );
+        check_aggregates(&b, &cfg).unwrap();
     }
 
     #[test]

@@ -37,6 +37,21 @@
 //!   batched read phases that dedup to a *single* distinct spec through
 //!   this path, trading exact `visited`-metric reply parity for intra-op
 //!   parallelism (feasibility and vertex counts stay identical).
+//! - **Sharded write commits (OCC).** With
+//!   [`SchedService::set_write_shards`] the match half of
+//!   `MatchAllocate`/`MatchGrowLocal` runs as a *prepare* phase under the
+//!   **read** lock — fanned across the shard pool exactly like a sharded
+//!   probe — and only the commit (charging the prepared selection through
+//!   the instance's subtree-sharded allocation maps,
+//!   [`crate::sched::alloc::WriteShards`]) takes the write lock. The
+//!   commit validates optimistically: an unchanged epoch commits
+//!   directly; a moved epoch whose prepared vertices are all still free
+//!   linearizes at commit time (counted as *spine contention*); anything
+//!   else falls back to one serial rematch under the write lock (counted
+//!   as a *shard conflict*). A prepare that finds no match never takes
+//!   the write lock at all. With a fixed single-threaded op stream the
+//!   resulting graph, allocation table, and epoch are bit-identical to
+//!   the serial path — `rust/tests/write_sharding.rs` is the oracle.
 //! - **Count-only pre-check admission.** `MatchAllocate`/`MatchGrowLocal`
 //!   through [`SchedService::apply`] consult the probe cache first: a spec
 //!   the cache knows is infeasible at the current epoch is rejected
@@ -84,12 +99,12 @@ use std::time::{Duration, Instant};
 use crate::bitmap::BitSet;
 use crate::fault::panic_message;
 use crate::jobspec::{JobSpec, ResourceReq};
-use crate::resource::graph::ResourceGraph;
+use crate::resource::graph::{JobId, ResourceGraph};
 use crate::rpc::proto::{code, RpcError, SchedOp, SchedReply};
 use crate::sched::instance::SchedInstance;
 use crate::sched::matcher::{
-    compile_spec_into, probe_sharded_compiled, run_shard, CompiledSpec, MatchScratch, ShardJob,
-    ShardScan,
+    compile_spec_into, match_compiled, match_sharded_compiled, probe_sharded_compiled, run_shard,
+    CompiledSpec, MatchFail, MatchResult, MatchScratch, ShardJob, ShardScan,
 };
 use crate::telemetry::{Telemetry, TelemetrySnapshot, KIND_PROBE};
 
@@ -299,6 +314,11 @@ struct Shared {
     /// spec (1 = sequential, the default; see
     /// [`SchedService::set_read_shards`]).
     read_shards: AtomicUsize,
+    /// Write-commit shard width for the OCC two-phase path (0 or 1 =
+    /// serial commits, the default; see
+    /// [`SchedService::set_write_shards`]). Mirrors the instance's own
+    /// sharded-commit state so `apply` can pick a path without a lock.
+    write_shards: AtomicUsize,
     /// Panic containment on the write path (on by default): mutating ops
     /// run under `catch_unwind` with a pre-op snapshot, and a panic rolls
     /// the instance back instead of poisoning the lock. See
@@ -611,6 +631,10 @@ fn contained<R>(
         Err(payload) => {
             inst.graph.restore_from(&graph_snapshot);
             inst.allocs = allocs_snapshot;
+            // a panic can leave the shard maps / spine buffers torn (e.g. a
+            // mid-commit injection); re-derive them from the restored table
+            // so sibling shards keep committing cleanly
+            inst.refresh_write_shards();
             Err(RpcError::new(
                 code::PANIC,
                 format!(
@@ -707,6 +731,7 @@ impl SchedService {
             inst: RwLock::new(inst),
             cache: Mutex::new(CacheInner::new()),
             read_shards: AtomicUsize::new(1),
+            write_shards: AtomicUsize::new(0),
             write_rollback: AtomicBool::new(true),
             telemetry: Telemetry::new(),
         });
@@ -978,6 +1003,25 @@ impl SchedService {
         self.shared.read_shards.load(Ordering::Relaxed)
     }
 
+    /// Enable the OCC two-phase sharded write path with (at most) `k`
+    /// subtree shards (see the module docs' "Sharded write commits"
+    /// bullet): the match half of `MatchAllocate`/`MatchGrowLocal` runs
+    /// under the read lock, and the instance commits prepared selections
+    /// through its subtree-sharded allocation maps
+    /// ([`SchedInstance::set_write_shards`]). `k <= 1` (the default)
+    /// restores the exact serial write path. Safe to toggle on a live
+    /// service; existing allocations are re-indexed under the write lock.
+    pub fn set_write_shards(&self, k: usize) {
+        self.write().set_write_shards(k);
+        self.shared.write_shards.store(k, Ordering::Relaxed);
+    }
+
+    /// Current write-commit shard width (`0`/`1` = serial commits; see
+    /// [`SchedService::set_write_shards`]).
+    pub fn write_shards(&self) -> usize {
+        self.shared.write_shards.load(Ordering::Relaxed)
+    }
+
     /// Count-only pre-check (cache admission): if the probe cache already
     /// knows `spec` is infeasible at the current epoch, return that
     /// negative answer in `Err` — the caller can skip the write lock
@@ -1047,10 +1091,30 @@ impl SchedService {
                 }
                 Ok(key) => precheck_key = key,
             }
+            let shards = self.write_shards();
+            if shards > 1 {
+                let job = match op {
+                    SchedOp::MatchGrowLocal { job, .. } => Some(*job),
+                    _ => None,
+                };
+                return self.apply_occ(op, spec, job, shards, precheck_key);
+            }
         }
         let mut guard = self.write();
-        let reply = if self.shared.write_rollback.load(Ordering::Relaxed) {
-            match contained(&mut guard, op.name(), |inst| inst.apply(op)) {
+        let reply = self.write_op(&mut guard, op);
+        if let SchedOp::MatchAllocate { spec } | SchedOp::MatchGrowLocal { spec, .. } = op {
+            let epoch = guard.graph.epoch();
+            self.admit_no_match(epoch, spec, precheck_key.take(), &reply);
+        }
+        reply
+    }
+
+    /// Run one mutating op under the write guard with the configured panic
+    /// containment — the single copy of the rollback decision, shared by
+    /// the serial `apply` path and the OCC conflict fallback.
+    fn write_op(&self, guard: &mut ServiceWriteGuard<'_>, op: &SchedOp) -> SchedReply {
+        if self.shared.write_rollback.load(Ordering::Relaxed) {
+            match contained(&mut **guard, op.name(), |inst| inst.apply(op)) {
                 Ok(reply) => reply,
                 Err(e) => {
                     self.shared.telemetry.note_rollback();
@@ -1059,24 +1123,133 @@ impl SchedService {
             }
         } else {
             guard.apply(op)
+        }
+    }
+
+    /// Admit a `no_match` match failure to the probe cache as a negative
+    /// probe entry. A failed match IS a count-only probe result: the match
+    /// half runs before any mutation, so `epoch` — read while the caller
+    /// held the lock that froze it — is exact for the next pre-check.
+    /// Replies that are not `no_match` errors are ignored.
+    fn admit_no_match(
+        &self,
+        epoch: u64,
+        spec: &JobSpec,
+        key: Option<String>,
+        reply: &SchedReply,
+    ) {
+        let no_match = reply
+            .as_error()
+            .map(|e| e.code == code::NO_MATCH)
+            .unwrap_or(false);
+        if !no_match {
+            return;
+        }
+        let key = key.unwrap_or_else(|| probe_key(spec));
+        let mut cache = lock(&self.shared.cache);
+        cache.observe_epoch(epoch);
+        cache.insert(key, epoch, reply.clone());
+    }
+
+    /// The OCC two-phase sharded write path (module docs: "Sharded write
+    /// commits"). Phase 1 *prepares* under the read lock: the match —
+    /// fanned across the shard pool — runs against the frozen graph,
+    /// recording the epoch the selection is valid at. Phase 2 takes the
+    /// write lock only to validate and commit that selection, so
+    /// disjoint-subtree writers queue on the lock for the short commit
+    /// instead of the whole match. Validation maps onto the telemetry
+    /// counters one-to-one:
+    ///
+    /// - epoch unchanged, or moved with every prepared vertex still free
+    ///   (a legitimate linearization — spec satisfaction depends only on
+    ///   vertex types/sizes, which allocation-path ops never change) →
+    ///   commit (`shard_commits`; the moved-epoch case also counts
+    ///   `spine_contentions`);
+    /// - a prepared vertex gone, dead, or allocated → one serial rematch
+    ///   under the write lock (`shard_conflicts`);
+    /// - no match at prepare time → reply (and admit the negative cache
+    ///   entry) WITHOUT ever taking the write lock.
+    fn apply_occ(
+        &self,
+        op: &SchedOp,
+        spec: &JobSpec,
+        job: Option<JobId>,
+        shards: usize,
+        precheck_key: Option<String>,
+    ) -> SchedReply {
+        // phase 1: prepare under the read lock (epoch frozen for the match)
+        let (prepared, prep_epoch, match_s) = {
+            let inst = read_lock(&self.shared.inst);
+            let epoch = inst.graph.epoch();
+            let (m, match_s) = CALLER_SCRATCH.with(|s| {
+                crate::util::metrics::time_it(|| {
+                    self.match_sharded_locked(&inst, spec, shards, &mut s.borrow_mut())
+                })
+            });
+            (m, epoch, match_s)
         };
-        if let SchedOp::MatchAllocate { spec } | SchedOp::MatchGrowLocal { spec, .. } = op {
-            let no_match = reply
-                .as_error()
-                .map(|e| e.code == code::NO_MATCH)
-                .unwrap_or(false);
-            if no_match {
-                // a failed match IS a count-only probe result: the match
-                // half runs before any mutation, so the epoch is unchanged
-                // and the entry is exact for the next pre-check
-                let epoch = guard.graph.epoch();
-                let key = precheck_key.take().unwrap_or_else(|| probe_key(spec));
-                let mut cache = lock(&self.shared.cache);
-                cache.observe_epoch(epoch);
-                cache.insert(key, epoch, reply.clone());
+        let m = match prepared {
+            Ok(m) => m,
+            Err(e) => {
+                // a failed match mutates nothing: answer — and admit the
+                // negative probe entry — without the write lock
+                let reply = SchedReply::err(code::NO_MATCH, e.to_string());
+                self.admit_no_match(prep_epoch, spec, precheck_key, &reply);
+                return reply;
             }
+        };
+        // phase 2: validate + commit under the (short) write lock
+        let mut guard = self.write();
+        let epoch_moved = guard.graph.epoch() != prep_epoch;
+        if epoch_moved && !guard.selection_still_free(&m.selection) {
+            // a concurrent commit took one of our vertices: rematch
+            // serially under the write lock
+            self.shared.telemetry.note_shard_conflict();
+            let reply = self.write_op(&mut guard, op);
+            let epoch = guard.graph.epoch();
+            self.admit_no_match(epoch, spec, precheck_key, &reply);
+            return reply;
+        }
+        if epoch_moved {
+            self.shared.telemetry.note_spine_contention();
+        }
+        let reply = if self.shared.write_rollback.load(Ordering::Relaxed) {
+            match contained(&mut guard, op.name(), |inst| {
+                inst.commit_prepared(m, match_s, job)
+            }) {
+                Ok(reply) => reply,
+                Err(e) => {
+                    self.shared.telemetry.note_rollback();
+                    SchedReply::Error(e)
+                }
+            }
+        } else {
+            guard.commit_prepared(m, match_s, job)
+        };
+        if reply.as_error().is_none() {
+            self.shared.telemetry.note_shard_commit();
         }
         reply
+    }
+
+    /// Prepare-phase match, run while the caller holds the instance read
+    /// lock: the OCC twin of [`SchedService::probe_sharded_locked`],
+    /// returning the full topologically-sorted selection for a later
+    /// commit. Falls back to the sequential compiled match when the plan
+    /// cannot fan out (the selection is bit-identical either way).
+    fn match_sharded_locked(
+        &self,
+        inst: &SchedInstance,
+        spec: &JobSpec,
+        shards: usize,
+        scratch: &mut MatchScratch,
+    ) -> Result<MatchResult, MatchFail> {
+        compile_spec_into(&inst.graph, &inst.prune, spec, scratch);
+        if shards <= 1 || self.shard_pool.target == 0 {
+            return match_compiled(&inst.graph, &inst.prune, spec, scratch);
+        }
+        let mut exec = |job: &ShardJob<'_>| self.shard_exec(job);
+        match_sharded_compiled(&inst.graph, &inst.prune, spec, scratch, shards, &mut exec)
     }
 
     /// Run a queue of ops, partitioned into read/write phases: maximal
@@ -1739,6 +1912,113 @@ mod tests {
         }
         svc.read().check().unwrap();
         twin.check().unwrap();
+    }
+
+    /// With write sharding enabled, a single-threaded op stream through
+    /// `apply` produces state bit-identical to the serial instance —
+    /// including the epoch after every op — and every successful
+    /// match-family commit is counted in `shard_commits` with zero
+    /// conflicts (nothing races a single thread).
+    #[test]
+    fn occ_write_stream_matches_serial_and_counts_commits() {
+        let svc = service(1, 4); // 8 nodes
+        svc.set_write_shards(4);
+        assert_eq!(svc.write_shards(), 4);
+        let mut twin =
+            SchedInstance::new(table2_graph(1, &mut UidGen::new()), PruneConfig::default());
+        let two = JobSpec::nodes_sockets_cores(2, 2, 16);
+        let ops = vec![
+            SchedOp::MatchAllocate { spec: two.clone() },
+            SchedOp::MatchAllocate { spec: two.clone() },
+            SchedOp::FreeJob { job: JobId(0) },
+            SchedOp::MatchGrowLocal {
+                job: JobId(1),
+                spec: two.clone(),
+            },
+            // infeasible: the OCC prepare fails and must answer without
+            // ever taking the write lock (epoch stays put)
+            SchedOp::MatchAllocate {
+                spec: JobSpec::nodes_sockets_cores(64, 2, 16),
+            },
+            SchedOp::ShrinkSubtree {
+                path: "/cluster0/node0".into(),
+            },
+            SchedOp::FreeJob { job: JobId(1) },
+        ];
+        let mut committed = 0u64;
+        for op in &ops {
+            let p = svc.apply(op);
+            let s = twin.apply(op);
+            match (&p, &s) {
+                (
+                    SchedReply::Allocated {
+                        job: j1,
+                        subgraph: g1,
+                        ..
+                    },
+                    SchedReply::Allocated {
+                        job: j2,
+                        subgraph: g2,
+                        ..
+                    },
+                ) => {
+                    assert_eq!(j1, j2);
+                    assert_eq!(g1, g2);
+                    committed += 1;
+                }
+                _ => match (p.as_error(), s.as_error()) {
+                    (Some(e1), Some(e2)) => assert_eq!(e1.code, e2.code),
+                    _ => assert_eq!(&p, &s),
+                },
+            }
+            assert_eq!(svc.epoch(), twin.graph.epoch(), "epoch after {op:?}");
+        }
+        assert_eq!(committed, 3, "two allocates + one grow");
+        let snap = svc.telemetry_snapshot();
+        assert_eq!(snap.shard_commits, committed);
+        assert_eq!(snap.shard_conflicts, 0);
+        assert_eq!(snap.spine_contentions, 0);
+        svc.read().check().unwrap();
+        twin.check().unwrap();
+    }
+
+    /// A scripted mid-commit panic (the chaos layer's injection hook)
+    /// rolls back exactly that commit, answers [`code::PANIC`], and leaves
+    /// the service — and the surviving sibling-shard allocations — serving
+    /// cleanly afterwards.
+    #[test]
+    fn injected_commit_fault_rolls_back_single_commit() {
+        use crate::fault::CommitFaultPlan;
+        let svc = service(1, 2); // 8 nodes
+        svc.set_write_shards(4);
+        let two = JobSpec::nodes_sockets_cores(2, 2, 16);
+        // seed one healthy allocation (nodes 0-1, shard 0)
+        let SchedReply::Allocated { job, .. } =
+            svc.apply(&SchedOp::MatchAllocate { spec: two.clone() })
+        else {
+            panic!("expected Allocated");
+        };
+        // arm a fault in shard 2, then allocate 6 nodes: the selection
+        // spans shards 1..=3, so the scripted panic fires mid-commit
+        svc.write()
+            .set_commit_faults(Some(CommitFaultPlan::script(&[Some(2)])));
+        let epoch_before = svc.epoch();
+        let six = JobSpec::nodes_sockets_cores(6, 2, 16);
+        let r = svc.apply(&SchedOp::MatchAllocate { spec: six.clone() });
+        assert_eq!(r.as_error().unwrap().code, code::PANIC);
+        assert!(svc.epoch() > epoch_before, "rollback went through restore_from");
+        assert_eq!(svc.telemetry_snapshot().rollbacks, 1);
+        // the fault was one-shot and the rollback restored everything:
+        // the same 6-node request now commits, the seeded job still frees
+        assert!(matches!(
+            svc.apply(&SchedOp::MatchAllocate { spec: six }),
+            SchedReply::Allocated { .. }
+        ));
+        assert!(matches!(
+            svc.apply(&SchedOp::FreeJob { job }),
+            SchedReply::Freed { .. }
+        ));
+        svc.read().check().unwrap();
     }
 
     /// A clean local-match failure through the write guard (how an

@@ -108,6 +108,12 @@ pub struct Scenario {
     /// Immediate re-issues of a failed `Allocate`/`Grow` (0 = no retry);
     /// drives the allocate-retry-storm scenarios.
     pub allocate_retries: u32,
+    /// Subtree-sharded write-commit width armed on the target before the
+    /// replay (`0`/`1` = serial commits, the default). On a
+    /// [`Target::Service`] this is [`SchedService::set_write_shards`]; on
+    /// a [`Target::Hierarchy`] it arms every level. Drives the
+    /// multi-writer `churn` scenarios.
+    pub write_shards: usize,
 }
 
 impl Scenario {
@@ -125,6 +131,7 @@ impl Scenario {
             clients,
             target: Target::Service { level, workers },
             allocate_retries: 0,
+            write_shards: 0,
         }
     }
 
@@ -146,12 +153,19 @@ impl Scenario {
                 chaos,
             },
             allocate_retries: 0,
+            write_shards: 0,
         }
     }
 
     /// Builder: set [`Scenario::allocate_retries`].
     pub fn with_retries(mut self, retries: u32) -> Scenario {
         self.allocate_retries = retries;
+        self
+    }
+
+    /// Builder: set [`Scenario::write_shards`].
+    pub fn with_write_shards(mut self, k: usize) -> Scenario {
+        self.write_shards = k;
         self
     }
 }
@@ -346,6 +360,9 @@ fn run_service(
         SchedInstance::new(table2_graph(level, &mut UidGen::new()), PruneConfig::default()),
         workers,
     );
+    if sc.write_shards > 1 {
+        svc.set_write_shards(sc.write_shards);
+    }
     let clients = sc.clients.max(1);
     let retries = sc.allocate_retries;
     let tenants = sc.trace.tenants;
@@ -454,6 +471,9 @@ fn run_hierarchy(
     };
     let hier =
         Hierarchy::build_with_policy(root, levels, None, policy).expect("hierarchy builds");
+    if sc.write_shards > 1 {
+        hier.set_write_shards_all(sc.write_shards);
+    }
     // per tenant: a stack of grant root-path sets (one entry per
     // successful leaf grow), released oldest-first on Shrink, newest-first
     // on Free
@@ -533,6 +553,28 @@ mod tests {
             tenants: 3,
             nodes: (1, 2),
         }
+    }
+
+    /// Multi-writer churn with write sharding armed: issued counts stay
+    /// plan-determined, and the service telemetry proves commits actually
+    /// went through the OCC sharded write path.
+    #[test]
+    fn churn_scenario_with_write_sharding_commits_through_shards() {
+        let sc = Scenario::service(
+            "serve/churn-wrshard@L1",
+            fast_trace(80, OpMix::churn()),
+            4,
+            1,
+            2,
+        )
+        .with_write_shards(4);
+        assert_eq!(sc.write_shards, 4);
+        let r = run_scenario(&sc);
+        assert_eq!(r.planned, 80);
+        let issued: u64 = r.issued_by_kind.iter().sum();
+        assert_eq!(issued, 80);
+        let svc = &r.services[0];
+        assert!(svc.shard_commits > 0, "no commits took the sharded path");
     }
 
     #[test]

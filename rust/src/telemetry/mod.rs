@@ -397,6 +397,9 @@ pub struct Telemetry {
     retries: AtomicU64,
     breaker_trips: AtomicU64,
     rollbacks: AtomicU64,
+    shard_commits: AtomicU64,
+    shard_conflicts: AtomicU64,
+    spine_contentions: AtomicU64,
 }
 
 impl Telemetry {
@@ -427,6 +430,9 @@ impl Telemetry {
             retries: AtomicU64::new(0),
             breaker_trips: AtomicU64::new(0),
             rollbacks: AtomicU64::new(0),
+            shard_commits: AtomicU64::new(0),
+            shard_conflicts: AtomicU64::new(0),
+            spine_contentions: AtomicU64::new(0),
         }
     }
 
@@ -493,6 +499,26 @@ impl Telemetry {
         self.rollbacks.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one write op committed through the sharded (prepare-outside-
+    /// the-write-lock) commit path without needing a serial rematch.
+    pub fn note_shard_commit(&self) {
+        self.shard_commits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one sharded-commit conflict: the prepared selection was
+    /// invalidated by a concurrent commit and the op fell back to a full
+    /// serial rematch under the write lock.
+    pub fn note_shard_conflict(&self) {
+        self.shard_conflicts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one spine contention: the graph epoch moved between prepare
+    /// and commit but the prepared selection still validated — the commit
+    /// proceeded after only the short spine critical section.
+    pub fn note_spine_contention(&self) {
+        self.spine_contentions.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Point-in-time copy of every series. Cache counters here are the
     /// *noted* ones; [`crate::sched::SchedService::telemetry_snapshot`]
     /// overwrites them with the authoritative cache stats.
@@ -521,6 +547,9 @@ impl Telemetry {
             retries: self.retries.load(Ordering::Relaxed),
             breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
             rollbacks: self.rollbacks.load(Ordering::Relaxed),
+            shard_commits: self.shard_commits.load(Ordering::Relaxed),
+            shard_conflicts: self.shard_conflicts.load(Ordering::Relaxed),
+            spine_contentions: self.spine_contentions.load(Ordering::Relaxed),
         }
     }
 }
@@ -571,6 +600,15 @@ pub struct TelemetrySnapshot {
     pub breaker_trips: u64,
     /// Panic-containment rollbacks on the write path.
     pub rollbacks: u64,
+    /// Write ops committed through the sharded commit path (prepared
+    /// outside the write lock, committed without a serial rematch).
+    pub shard_commits: u64,
+    /// Sharded commits whose prepared selection was invalidated by a
+    /// concurrent commit and re-matched serially under the write lock.
+    pub shard_conflicts: u64,
+    /// Sharded commits that saw the epoch move between prepare and commit
+    /// but still validated (only the short spine section was contended).
+    pub spine_contentions: u64,
 }
 
 impl TelemetrySnapshot {
@@ -639,7 +677,10 @@ impl TelemetrySnapshot {
                     .with("precheck_rejections", Json::from(self.precheck_rejections))
                     .with("retries", Json::from(self.retries))
                     .with("breaker_trips", Json::from(self.breaker_trips))
-                    .with("rollbacks", Json::from(self.rollbacks)),
+                    .with("rollbacks", Json::from(self.rollbacks))
+                    .with("shard_commits", Json::from(self.shard_commits))
+                    .with("shard_conflicts", Json::from(self.shard_conflicts))
+                    .with("spine_contentions", Json::from(self.spine_contentions)),
             )
             .with("kinds", Json::Arr(kinds))
     }
@@ -758,6 +799,10 @@ mod tests {
         t.note_breaker_trip();
         t.note_rollback();
         t.note_precheck_rejection();
+        t.note_shard_commit();
+        t.note_shard_commit();
+        t.note_shard_conflict();
+        t.note_spine_contention();
         let s = t.snapshot();
         assert_eq!(s.ops_total(), 2);
         assert_eq!(s.errors_total(), 1);
@@ -768,6 +813,9 @@ mod tests {
         assert_eq!(s.breaker_trips, 1);
         assert_eq!(s.rollbacks, 1);
         assert_eq!(s.precheck_rejections, 1);
+        assert_eq!(s.shard_commits, 2);
+        assert_eq!(s.shard_conflicts, 1);
+        assert_eq!(s.spine_contentions, 1);
         // JSON export includes only the recorded kind
         let doc = crate::util::json::Json::parse(&s.to_json().dump()).unwrap();
         let kinds = doc.get("kinds").and_then(|k| k.as_arr()).unwrap();

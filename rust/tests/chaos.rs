@@ -15,12 +15,14 @@ use std::time::Duration;
 use fluxion::external::ec2::{Ec2Provider, Ec2SimConfig};
 use fluxion::external::provider::{ExternalGrant, ExternalProvider, ProviderError};
 use fluxion::fault::{
-    Backoff, FaultInjector, FaultRates, FaultyProvider, FrameFault, ProviderFault, RetryPolicy,
+    Backoff, CommitFaultPlan, FaultInjector, FaultRates, FaultyProvider, FrameFault,
+    ProviderFault, RetryPolicy,
 };
 use fluxion::hier::{ChaosConfig, Hierarchy, LevelSpec, LinkKind, LinkPolicy};
 use fluxion::jobspec::JobSpec;
 use fluxion::resource::builder::{ClusterSpec, UidGen};
 use fluxion::rpc::proto::code;
+use fluxion::sched::{PruneConfig, SchedInstance, SchedOp, SchedReply, SchedService};
 use fluxion::util::rng::Rng;
 
 /// Master seed for the soak. Override with `CHAOS_SEED=<int>` (decimal or
@@ -258,6 +260,11 @@ fn chaos_soak_three_levels_oracle_verified() {
     let h = Hierarchy::build_with_policy(root, &levels, Some(Box::new(provider)), policy)
         .expect("soak hierarchy");
     assert_eq!(h.depth(), 3);
+    // PR 8: route every level's write commits through the sharded OCC
+    // path, so the whole soak — faulted frames, quarantines, resets —
+    // exercises shard-bucketed marks and spine merges under the same
+    // after-every-op oracle
+    h.set_write_shards_all(4);
 
     let mut rng = Rng::new(seed ^ 0x50AC);
     let mut live_roots: Vec<String> = Vec::new();
@@ -369,4 +376,77 @@ fn chaos_soak_three_levels_oracle_verified() {
     drop(reply);
     h.check_all().expect("consistent after recovery");
     h.shutdown();
+}
+
+/// PR 8 targeted injection: a scripted panic fired MID-COMMIT — after some
+/// shard buckets of a multi-subtree allocation have already written, as
+/// bucket 2 of 0..=3 starts — must roll back that single commit without
+/// poisoning sibling shards or the service. The pre-existing job survives,
+/// the six torn marks are restored, the exhausted fault plan lets the
+/// identical allocation succeed on retry, and the full oracle (graph
+/// invariants, table, shard partition, aggregates) holds at every step.
+#[test]
+fn commit_fault_mid_shard_rolls_back_without_poisoning_siblings() {
+    let svc = SchedService::with_workers(
+        SchedInstance::new(
+            ClusterSpec::new("c", 8, 2, 4).build(&mut UidGen::new()),
+            PruneConfig::default(),
+        ),
+        2,
+    );
+    svc.set_write_shards(4); // 8 root children -> 2 nodes per shard
+
+    // a pre-existing job on node0 (shard 0) — the sibling that must survive
+    let one_node = JobSpec::nodes_sockets_cores(1, 2, 4);
+    let SchedReply::Allocated { job: survivor, .. } = svc.apply(&SchedOp::MatchAllocate {
+        spec: one_node.clone(),
+    }) else {
+        panic!("seed allocation failed");
+    };
+
+    // script: the next sharded commit panics when bucket 2 starts writing —
+    // buckets 0 and 1 of the victim allocation are already marked by then
+    svc.write()
+        .set_commit_faults(Some(CommitFaultPlan::script(&[Some(2)])));
+    let six_nodes = JobSpec::nodes_sockets_cores(6, 2, 4);
+    let reply = svc.apply(&SchedOp::MatchAllocate {
+        spec: six_nodes.clone(),
+    });
+    assert_eq!(
+        reply.as_error().expect("injected fault must surface").code,
+        code::PANIC,
+        "got {reply:?}"
+    );
+    assert_eq!(svc.telemetry_snapshot().rollbacks, 1);
+
+    // single-commit rollback: the six torn marks are gone (7 nodes free
+    // again) but the sibling's node is NOT freed (8 remain infeasible)
+    let seven = JobSpec::nodes_sockets_cores(7, 2, 4);
+    assert!(
+        matches!(svc.probe(&seven), SchedReply::Probed { .. }),
+        "rollback did not restore the torn shard marks"
+    );
+    let eight = JobSpec::nodes_sockets_cores(8, 2, 4);
+    assert_eq!(
+        svc.probe(&eight).as_error().expect("survivor lost").code,
+        code::NO_MATCH,
+        "rollback clobbered the sibling shard's pre-existing allocation"
+    );
+    svc.read().check().expect("oracle after contained fault");
+
+    // the plan is spent: the identical allocation now commits cleanly
+    let SchedReply::Allocated { job: retried, .. } =
+        svc.apply(&SchedOp::MatchAllocate { spec: six_nodes })
+    else {
+        panic!("retry after contained fault failed");
+    };
+    for job in [survivor, retried] {
+        let freed = svc.apply(&SchedOp::FreeJob { job });
+        assert!(matches!(freed, SchedReply::Freed { .. }), "{freed:?}");
+    }
+    assert!(
+        matches!(svc.probe(&eight), SchedReply::Probed { .. }),
+        "capacity lost after rollback + retry + free"
+    );
+    svc.read().check().expect("oracle at quiescence");
 }

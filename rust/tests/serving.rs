@@ -71,6 +71,47 @@ fn seeded_rerun_reproduces_issued_counters() {
     assert_eq!(b.harness.ops_total(), 600);
 }
 
+/// PR 8: the rerun contract holds with the OCC sharded write path armed —
+/// a multi-writer churn scenario with `write_shards = 4` reproduces its
+/// issued-per-kind counters exactly across seeded reruns, commits through
+/// the shard layer on both runs, and never leaves a torn commit behind
+/// (`shard_commits + shard_conflicts` covers every successful match, so a
+/// lost or doubled commit would break the ops-total identity below).
+#[test]
+fn write_sharded_churn_rerun_reproduces_issued_counters() {
+    let mk = || {
+        Scenario::service(
+            "serve/it/wrshard-rerun@L1",
+            quick_trace(600, OpMix::churn()),
+            4,
+            1,
+            4,
+        )
+        .with_write_shards(4)
+    };
+    let a = run_scenario(&mk());
+    let b = run_scenario(&mk());
+    assert_eq!(a.issued_by_kind, b.issued_by_kind);
+    assert_eq!(a.planned, b.planned);
+    for name in OP_KIND_NAMES.iter() {
+        assert_eq!(
+            a.harness.kind(name).unwrap().ops,
+            b.harness.kind(name).unwrap().ops,
+            "kind {name} issued-count drifted across write-sharded reruns"
+        );
+    }
+    assert_eq!(a.harness.ops_total(), 600);
+    assert_eq!(b.harness.ops_total(), 600);
+    // both runs actually exercised the sharded commit path
+    for (run, r) in [("a", &a), ("b", &b)] {
+        let snap = &r.services[0];
+        assert!(
+            snap.shard_commits > 0,
+            "run {run}: churn mix never commits through the shard layer"
+        );
+    }
+}
+
 /// Bucket round-trip at the public boundary: for a spread of latencies,
 /// recording a duration and reading the histogram back keeps the value
 /// inside its reported bucket bounds (≤6.25% relative error by design).

@@ -1,0 +1,315 @@
+//! Concurrent-oracle equivalence layer for the subtree-sharded write
+//! commits (PR 8).
+//!
+//! The commit protocol's contract: with a fixed op stream, an instance
+//! committing through the sharded path (per-subtree allocation maps +
+//! per-shard spine-delta buffers merged at the root) ends **bit-identical**
+//! to serial application — same replies, same allocation table, same
+//! pruning aggregates, same epoch after every op. These tests prove it
+//! with seeded randomized streams (allocate / free / grow / shrink over
+//! disjoint and overlapping subtrees) replayed at shard widths
+//! K ∈ {1, 2, 4, 8} against the K = 1 serial run, with the instance's
+//! full oracle (`check`: graph invariants, table consistency, shard-map
+//! partition, aggregate recomputation) and a brute-force feasibility
+//! oracle consulted after every commit.
+
+use std::collections::HashSet;
+
+use fluxion::jobspec::{JobSpec, ResourceReq};
+use fluxion::resource::builder::{ClusterSpec, UidGen};
+use fluxion::resource::graph::{JobId, ResourceGraph, VertexId};
+use fluxion::sched::{PruneConfig, SchedInstance, SchedOp, SchedReply, SchedService};
+use fluxion::util::rng::Rng;
+
+const NODES: usize = 6;
+const SOCKETS: usize = 2;
+const CORES: usize = 4;
+
+fn instance(write_shards: usize) -> SchedInstance {
+    let mut inst = SchedInstance::new(
+        ClusterSpec::new("c", NODES, SOCKETS, CORES).build(&mut UidGen::new()),
+        PruneConfig::default(),
+    );
+    if write_shards > 1 {
+        inst.set_write_shards(write_shards);
+    }
+    inst
+}
+
+/// Random chain spec. Half the draws fit inside one node subtree
+/// (disjoint-subtree commits); the rest span several subtrees, so their
+/// mark/bubble traffic overlaps shard boundaries and the spine.
+fn rand_spec(rng: &mut Rng) -> JobSpec {
+    let n = 1 + rng.below(NODES as u64 / 2);
+    JobSpec::nodes_sockets_cores(n, 1 + rng.below(SOCKETS as u64), 1 + rng.below(CORES as u64))
+}
+
+/// Build one deterministic op stream by replaying the draws against a
+/// scratch serial instance (job-targeting ops need concrete ids). The
+/// returned `Vec<SchedOp>` is what every shard width replays verbatim.
+fn build_stream(seed: u64, len: usize) -> Vec<SchedOp> {
+    let mut inst = instance(1);
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<JobId> = Vec::new();
+    let mut ops = Vec::with_capacity(len);
+    for _ in 0..len {
+        let op = match rng.below(10) {
+            0..=3 => SchedOp::MatchAllocate {
+                spec: rand_spec(&mut rng),
+            },
+            4..=5 if !live.is_empty() => SchedOp::MatchGrowLocal {
+                job: live[rng.below(live.len() as u64) as usize],
+                spec: rand_spec(&mut rng),
+            },
+            6..=7 if !live.is_empty() => SchedOp::FreeJob {
+                job: live.swap_remove(rng.below(live.len() as u64) as usize),
+            },
+            8 => SchedOp::ShrinkSubtree {
+                path: format!("/c0/node{}", rng.below(NODES as u64)),
+            },
+            _ => SchedOp::MatchAllocate {
+                spec: rand_spec(&mut rng),
+            },
+        };
+        if let SchedReply::Allocated { job, .. } = inst.apply(&op) {
+            if matches!(op, SchedOp::MatchAllocate { .. }) {
+                live.push(job);
+            }
+        }
+        ops.push(op);
+    }
+    ops
+}
+
+/// Replies must agree structurally: allocation payloads exactly (job id +
+/// granted subgraph), errors by code (messages may embed path-dependent
+/// diagnostics), everything else bit-for-bit. Timing floats are excluded
+/// by construction (the Allocated arm compares only job + subgraph).
+fn assert_reply_equal(a: &SchedReply, b: &SchedReply, ctx: &str) {
+    match (a, b) {
+        (
+            SchedReply::Allocated {
+                job: j1,
+                subgraph: g1,
+                ..
+            },
+            SchedReply::Allocated {
+                job: j2,
+                subgraph: g2,
+                ..
+            },
+        ) => {
+            assert_eq!(j1, j2, "{ctx}: job id");
+            assert_eq!(g1, g2, "{ctx}: granted subgraph");
+        }
+        _ => match (a.as_error(), b.as_error()) {
+            (Some(e1), Some(e2)) => assert_eq!(e1.code, e2.code, "{ctx}: error code"),
+            _ => assert_eq!(a, b, "{ctx}: reply"),
+        },
+    }
+}
+
+/// Full-state equality: epoch, live vertex set, per-vertex allocation
+/// info, and the running half of the allocation table (vertex lists in
+/// commit order — the sharded path preserves selection order).
+fn assert_state_equal(a: &SchedInstance, b: &SchedInstance, ctx: &str) {
+    assert_eq!(a.graph.epoch(), b.graph.epoch(), "{ctx}: epoch");
+    let live_a: Vec<VertexId> = a.graph.iter_live().collect();
+    let live_b: Vec<VertexId> = b.graph.iter_live().collect();
+    assert_eq!(live_a, live_b, "{ctx}: live vertex set");
+    for &v in &live_a {
+        assert_eq!(
+            a.graph.vertex(v).alloc,
+            b.graph.vertex(v).alloc,
+            "{ctx}: alloc info at {v:?}"
+        );
+    }
+    let running = |inst: &SchedInstance| -> Vec<(u64, Vec<u32>)> {
+        let mut js: Vec<(u64, Vec<u32>)> = inst
+            .allocs
+            .running_jobs()
+            .map(|al| (al.job.0, al.vertices.iter().map(|v| v.0).collect()))
+            .collect();
+        js.sort();
+        js
+    };
+    assert_eq!(running(a), running(b), "{ctx}: running allocation table");
+}
+
+// ---- brute-force feasibility oracle (chain specs; see matcher_oracle.rs) --
+
+fn oracle_candidates(g: &ResourceGraph, scope: VertexId, tname: &str, out: &mut Vec<VertexId>) {
+    for &c in g.children_of(scope) {
+        if g.type_name(c) == tname {
+            out.push(c);
+        } else {
+            oracle_candidates(g, c, tname, out);
+        }
+    }
+}
+
+fn oracle_sat_req(
+    g: &ResourceGraph,
+    taken: &mut HashSet<VertexId>,
+    trail: &mut Vec<VertexId>,
+    scope: VertexId,
+    req: &ResourceReq,
+) -> bool {
+    assert!(req.with.len() <= 1, "oracle handles chain specs only");
+    let mut cands = Vec::new();
+    oracle_candidates(g, scope, &req.rtype, &mut cands);
+    oracle_choose(g, taken, trail, &cands, 0, req.count, req)
+}
+
+fn oracle_choose(
+    g: &ResourceGraph,
+    taken: &mut HashSet<VertexId>,
+    trail: &mut Vec<VertexId>,
+    cands: &[VertexId],
+    i: usize,
+    remaining: u64,
+    req: &ResourceReq,
+) -> bool {
+    if remaining == 0 {
+        return true;
+    }
+    if i >= cands.len() {
+        return false;
+    }
+    let c = cands[i];
+    let free = !g.vertex(c).alloc.is_allocated() && !taken.contains(&c);
+    if !req.exclusive || free {
+        let mark = trail.len();
+        if req.exclusive {
+            taken.insert(c);
+            trail.push(c);
+        }
+        let mut ok = true;
+        for sub in &req.with {
+            if !oracle_sat_req(g, taken, trail, c, sub) {
+                ok = false;
+                break;
+            }
+        }
+        if ok && oracle_choose(g, taken, trail, cands, i + 1, remaining - 1, req) {
+            return true;
+        }
+        for v in trail.drain(mark..) {
+            taken.remove(&v);
+        }
+    }
+    oracle_choose(g, taken, trail, cands, i + 1, remaining, req)
+}
+
+fn oracle_feasible(g: &ResourceGraph, spec: &JobSpec) -> bool {
+    let Some(root) = g.root() else { return false };
+    let mut taken = HashSet::new();
+    let mut trail = Vec::new();
+    spec.resources
+        .iter()
+        .all(|req| oracle_sat_req(g, &mut taken, &mut trail, root, req))
+}
+
+// ---- the equivalence layer -------------------------------------------------
+
+/// Tentpole oracle: seeded randomized streams at K ∈ {1, 2, 4, 8} end
+/// bit-identical to the serial run — replies, epochs after every op,
+/// allocation table, aggregates — with `check()` (graph invariants, table
+/// consistency, shard-map partition, aggregate recomputation) and the
+/// brute-force feasibility oracle consulted after every commit.
+#[test]
+fn sharded_streams_equal_serial_for_k_ladder() {
+    let probe = JobSpec::nodes_sockets_cores(1, SOCKETS as u64, CORES as u64);
+    for seed in [1u64, 0xBEEF, 0x5EED77] {
+        let ops = build_stream(seed, 80);
+        let mut serial = instance(1);
+        let mut serial_replies = Vec::with_capacity(ops.len());
+        let mut serial_epochs = Vec::with_capacity(ops.len());
+        for op in &ops {
+            serial_replies.push(serial.apply(op));
+            serial_epochs.push(serial.graph.epoch());
+        }
+        serial.check().unwrap();
+        for k in [1usize, 2, 4, 8] {
+            let mut inst = instance(k);
+            for (i, op) in ops.iter().enumerate() {
+                let ctx = format!("seed {seed:#x} K {k} op {i} ({op:?})");
+                let r = inst.apply(op);
+                assert_reply_equal(&r, &serial_replies[i], &ctx);
+                assert_eq!(inst.graph.epoch(), serial_epochs[i], "{ctx}: epoch");
+                inst.check().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+                assert_eq!(
+                    inst.match_only(&probe).is_ok(),
+                    oracle_feasible(&inst.graph, &probe),
+                    "{ctx}: matcher vs brute-force oracle"
+                );
+            }
+            assert_state_equal(&serial, &inst, &format!("seed {seed:#x} K {k} final"));
+        }
+    }
+}
+
+/// The same ladder through `SchedService::apply` with the OCC two-phase
+/// path armed: prepare-under-read-lock + commit-under-write-lock must
+/// stay bit-identical to the serial instance on a single-threaded stream,
+/// and every successful match-family op must be counted as a sharded
+/// commit with zero conflicts.
+#[test]
+fn service_occ_ladder_matches_serial_instance() {
+    let ops = build_stream(0xD00D, 60);
+    let mut serial = instance(1);
+    let serial_replies: Vec<SchedReply> = ops.iter().map(|op| serial.apply(op)).collect();
+    let committed = serial_replies
+        .iter()
+        .filter(|r| matches!(r, SchedReply::Allocated { .. }))
+        .count() as u64;
+    assert!(committed > 0, "stream must exercise successful commits");
+    for k in [1usize, 2, 4, 8] {
+        let svc = SchedService::with_workers(instance(1), 4);
+        if k > 1 {
+            svc.set_write_shards(k);
+        }
+        for (i, op) in ops.iter().enumerate() {
+            let ctx = format!("K {k} op {i} ({op:?})");
+            let r = svc.apply(op);
+            assert_reply_equal(&r, &serial_replies[i], &ctx);
+        }
+        {
+            let guard = svc.read();
+            guard.check().unwrap();
+            assert_state_equal(&serial, &guard, &format!("K {k} final"));
+        }
+        let snap = svc.telemetry_snapshot();
+        if k > 1 {
+            assert_eq!(snap.shard_commits, committed, "K {k}: commit count");
+            assert_eq!(snap.shard_conflicts, 0, "K {k}: nothing races one thread");
+            assert_eq!(snap.spine_contentions, 0, "K {k}");
+        } else {
+            assert_eq!(snap.shard_commits, 0, "serial path takes no shard commits");
+        }
+    }
+}
+
+/// Toggling sharding mid-stream (on a live, partially-allocated instance)
+/// re-indexes existing allocations and stays equivalent to serial from
+/// that point on.
+#[test]
+fn toggling_shards_on_live_instance_stays_equivalent() {
+    let ops = build_stream(0xCAFE, 60);
+    let mut serial = instance(1);
+    let mut inst = instance(1);
+    for (i, op) in ops.iter().enumerate() {
+        // off → 4 shards at op 15, re-plan to 2 at op 30, off again at 45
+        match i {
+            15 => inst.set_write_shards(4),
+            30 => inst.set_write_shards(2),
+            45 => inst.set_write_shards(0),
+            _ => {}
+        }
+        let ctx = format!("op {i} ({op:?})");
+        assert_reply_equal(&inst.apply(op), &serial.apply(op), &ctx);
+        assert_eq!(inst.graph.epoch(), serial.graph.epoch(), "{ctx}: epoch");
+        inst.check().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+    }
+    assert_state_equal(&serial, &inst, "final");
+}

@@ -49,6 +49,21 @@ PYEOF
   exit 0
 fi
 
+# --write-smoke: run ONLY the sharded-write equivalence layer and exit —
+# the K ∈ {1,2,4,8} ladder vs serial replay with the oracle after every
+# commit (rust/tests/write_sharding.rs), plus the multi-writer exactness
+# stress from the concurrency suite. Fast by design: the PR 8 acceptance
+# check without the full tier-1 + bench run.
+if [ "${1:-}" = "--write-smoke" ]; then
+  echo "== write smoke: cargo test --release --test write_sharding =="
+  cargo test --release --test write_sharding -- --nocapture
+  echo "== write smoke: multi-writer stress (concurrency suite) =="
+  cargo test --release --test concurrency \
+    multi_writer_sharded_commits_stay_exact_under_contention -- --nocapture
+  echo "write smoke OK"
+  exit 0
+fi
+
 echo "== tier-1: cargo build --release =="
 cargo build --release
 
@@ -92,6 +107,13 @@ r = ratio("shard/match_T7@L0/s4", "shard/match_T7@L0/seq")
 if r is not None:
     verdict = "sharding wins" if r < 1.0 else "sharding NOT winning here"
     print(f"  seq-vs-s4: s4 is {r:.2f}x of seq -> {verdict} (reported, not gated)")
+
+print("  wrshard/* ladder (multi-writer alloc/free, vs serial write lock):")
+for name in sorted(n for n in med if n.startswith("wrshard/")):
+    base = name.rsplit("/", 1)[0] + "/serial"
+    r = ratio(name, base)
+    extra = f"  ({r:.2f}x of serial)" if r is not None else ""
+    print(f"    {name}: {med[name]:.3e}s{extra}")
 
 for name in ("cached-probe/hit_T1@L0", "cached-probe/precheck_T1@L0"):
     r = ratio(name, "cached-probe/cold_T1@L0")
