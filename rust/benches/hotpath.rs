@@ -10,8 +10,11 @@
 //! the performance pass (EXPERIMENTS.md §Perf, PERF.md) to measure
 //! before/after each optimization. The `shard/` family measures the
 //! intra-match sharded traversal (one T7 match split across top-level node
-//! subtrees, PERF.md PR 5) and `cached-probe/precheck_T1@L0` the
-//! count-only MatchAllocate pre-check served from the probe cache.
+//! subtrees, PERF.md PR 5), `cached-probe/precheck_T1@L0` the
+//! count-only MatchAllocate pre-check served from the probe cache, and the
+//! `rcu/` family (PR 9) the read path under writer churn — instance
+//! read-lock probes vs. pinned RCU-snapshot probes while a writer cycles
+//! allocate/free as fast as it can.
 //!
 //! Flags (after `cargo bench --bench hotpath --`):
 //!   --json       write `BENCH_hotpath.json` at the repo root (the perf
@@ -27,9 +30,11 @@ use fluxion::resource::builder::{table2_graph, UidGen};
 use fluxion::resource::graph::JobId;
 use fluxion::resource::jgf::Jgf;
 use fluxion::rpc::transport::Conn;
-use fluxion::sched::{PruneConfig, SchedInstance, SchedOp, SchedReply, SchedService};
+use fluxion::sched::{MatchScratch, PruneConfig, SchedInstance, SchedOp, SchedReply, SchedService};
 use fluxion::util::bench::{run_simple, run_timed, BenchReport};
 use fluxion::util::json::Json;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -399,6 +404,53 @@ fn main() {
             snap.shard_commits, snap.shard_conflicts, snap.spine_contentions
         );
     }
+
+    // 11. lock-free read path under writer churn (`rcu/` family, PR 9):
+    //     one probe thread measured while a background writer cycles a
+    //     1-node MatchAllocate + FreeJob as fast as it can (each commit
+    //     publishes a fresh snapshot version). `rwlock` takes the instance
+    //     read lock per probe — the pre-PR 9 read path, which queues
+    //     behind every in-flight write — while `rcu` pins the latest
+    //     published snapshot and never touches the lock. Both rows run
+    //     the raw traversal (no probe cache; the cache would hide the
+    //     lock cost being measured), so the rwlock:rcu ratio is purely
+    //     lock acquisition + writer queueing vs. an Arc pin.
+    let churn_svc = SchedService::with_workers(
+        SchedInstance::new(table2_graph(0, &mut UidGen::new()), PruneConfig::default()),
+        2,
+    );
+    let stop = Arc::new(AtomicBool::new(false));
+    let writer = {
+        let svc = churn_svc.clone();
+        let stop = Arc::clone(&stop);
+        let spec = t7.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let reply = svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() });
+                if let SchedReply::Allocated { job, .. } = reply {
+                    assert!(!svc.apply(&SchedOp::FreeJob { job }).is_error());
+                }
+            }
+        })
+    };
+    let mut scratch = MatchScratch::new();
+    let s = run_simple(warm, iters, || {
+        let inst = churn_svc.read();
+        assert!(!inst.probe_with(&t1, &mut scratch).is_error());
+    });
+    report.row("rcu/probe_under_churn@L0/rwlock", &s);
+    let s = run_simple(warm, iters, || {
+        let snap = churn_svc.pin_snapshot();
+        assert!(!snap.probe_with(&t1, &mut scratch).is_error());
+    });
+    report.row("rcu/probe_under_churn@L0/rcu", &s);
+    stop.store(true, Ordering::Relaxed);
+    writer.join().expect("churn writer panicked");
+    let ss = churn_svc.snapshot_stats();
+    println!(
+        "  (rcu churn: {} pins, {} publishes, {} retired, {} live)",
+        ss.pins, ss.publishes, ss.retired, ss.live
+    );
 
     if json {
         let path = "BENCH_hotpath.json";

@@ -13,6 +13,12 @@
 //!   serve/churn-wrshard@L0/r{rate}
 //!       the churn mix with 4-way sharded OCC write commits armed
 //!       (PR 8), paired against serve/churn@L0 at the same rate
+//!   serve/churn-rcu@L0/r{rate}
+//!       the probe-heavy mix with background churn-writer threads
+//!       hammering allocate/free off-schedule (PR 9), paired against
+//!       serve/churn-wrshard@L0 at the same rate — the read tail under
+//!       continuous snapshot publication, plus the pin/publish/retire
+//!       lifecycle totals
 //!   serve/depth@L{0..3}
 //!       one balanced mix across the Table 2 graph-size sweep
 //!   serve/retry_storm@L4
@@ -120,6 +126,38 @@ fn main() {
         println!(
             "  (wrshard: {} shard commits, {} conflicts, {} spine contentions)",
             snap.shard_commits, snap.shard_conflicts, snap.spine_contentions
+        );
+        results.push(r);
+    }
+
+    // 1c. lock-free reads under multi-writer churn (PR 9): a probe-heavy
+    //     trace measured while 2 background churn writers cycle
+    //     allocate/free off-schedule — every commit publishes a fresh RCU
+    //     snapshot version, and the measured probes pin versions instead
+    //     of queueing on the instance lock. Pairs against
+    //     serve/churn-wrshard@L0 at the same rate: that row's tail is the
+    //     write path under contention, this one's is the read path under
+    //     the same kind of write pressure.
+    {
+        let rcu_rate = rate_override.unwrap_or(20_000.0);
+        let ops = ((rcu_rate * target_s) as usize).clamp(1_000, ops_cap);
+        let trace = OpTraceSpec {
+            ops,
+            seed,
+            rate_ops_per_sec: rcu_rate,
+            mix: OpMix::probe_heavy(),
+            tenants: 8,
+            nodes: (1, 4),
+        };
+        let name = format!("serve/churn-rcu@L0/r{rcu_rate:.0}");
+        let sc = Scenario::service(&name, trace, clients, 0, clients).with_churn_writers(2);
+        let r = run_scenario(&sc);
+        r.report_rows(&mut report);
+        print_totals(&r);
+        let snap = &r.services[0];
+        println!(
+            "  (rcu: {} snapshot pins, {} publishes, {} retired)",
+            snap.snapshot_pins, snap.snapshot_publishes, snap.snapshots_retired
         );
         results.push(r);
     }

@@ -59,7 +59,7 @@ use crate::rpc::transport::{
     handler, Conn, InProcServer, Latency, TcpConn, TcpServer, DEFAULT_DEADLINE,
 };
 use crate::rpc::{Request, Response};
-use crate::sched::{PruneConfig, SchedInstance, SchedService};
+use crate::sched::{PruneConfig, SchedInstance, SchedService, SnapshotStats};
 use crate::telemetry::TelemetrySnapshot;
 use crate::util::metrics::Timer;
 
@@ -907,9 +907,21 @@ impl Hierarchy {
     /// read path — what a remote `probe` op hits, minus the transport.
     /// Uses the service handle captured at build time, NOT the per-node
     /// mutex, so it stays responsive while a multi-level `MatchGrow`
-    /// holds that lock for its whole round trip.
+    /// holds that lock for its whole round trip. Since PR 9 the probe is
+    /// fully lock-free: it pins that level's latest published RCU snapshot
+    /// and never touches the instance `RwLock`, so it also stays
+    /// responsive while a writer holds that level's write side.
     pub fn probe_at(&self, level: usize, spec: &JobSpec) -> SchedReply {
         self.services[level].probe(spec)
+    }
+
+    /// RCU snapshot lifecycle counters of a level's [`SchedService`]
+    /// (pins / publishes / retired / live — see
+    /// [`crate::sched::SnapshotStats`]). With no probe in flight `live`
+    /// must be exactly 1; the serving harness prints these per level to
+    /// show version churn is being reclaimed.
+    pub fn snapshot_stats_at(&self, level: usize) -> SnapshotStats {
+        self.services[level].snapshot_stats()
     }
 
     /// Serve a feasibility probe at a level through the **sharded**
@@ -925,8 +937,9 @@ impl Hierarchy {
     /// Enable (or, with `k <= 1`, disable) the OCC subtree-sharded write
     /// path at one level ([`SchedService::set_write_shards`]): the match
     /// half of that level's `MatchAllocate`/`MatchGrowLocal` traffic runs
-    /// under the read lock and commits through subtree-sharded allocation
-    /// maps, leaving the write lock held only for the short commit. Uses
+    /// against a pinned snapshot and commits through subtree-sharded
+    /// allocation maps, leaving the write lock held only for the short
+    /// commit. Uses
     /// the service handle, not the per-node mutex, so it is safe to toggle
     /// while traffic — even a multi-level `MatchGrow` — is in flight.
     pub fn set_write_shards_at(&self, level: usize, k: usize) {

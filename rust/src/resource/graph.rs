@@ -35,9 +35,26 @@
 //! snapshot must go through [`ResourceGraph::restore_from`], which moves
 //! the epoch *forward* past both timelines so a rewound counter can never
 //! alias two different graph states.
+//!
+//! §Snapshots (PR 9): vertex storage is **copy-on-write at subtree
+//! granularity**. The arena is a vector of fixed-size `Arc`-shared chunks
+//! ([`CHUNK_SIZE`] vertices each; arena ids are assigned in build/DFS
+//! order, so one chunk covers a contiguous slice of one or a few adjacent
+//! subtrees), and the containment topology (parent/child links + path
+//! index) sits behind its own `Arc`. `ResourceGraph::clone` is therefore
+//! O(chunks) reference-count bumps — the RCU snapshot publication in
+//! `sched::snapshot` and the write path's rollback snapshots both lean on
+//! this. A writer mutating a freshly cloned graph lazily copies only the
+//! chunks (subtrees) it actually touches via `Arc::make_mut`; while a
+//! graph is unshared (the single-threaded [`crate::sched::SchedInstance`]
+//! steady state), `make_mut` is a refcount check and mutation cost is
+//! unchanged. The epoch doubles as the **snapshot version**: equal epochs
+//! imply identical observable state, so a published snapshot is fully
+//! identified by the epoch it was cloned at.
 
 use std::collections::HashMap;
 use std::fmt;
+use std::sync::Arc;
 
 use crate::resource::types::{ResourceType, TypeId, TypeTable};
 
@@ -149,15 +166,41 @@ impl Vertex {
     }
 }
 
-/// The dynamic resource graph: a containment tree (per the paper's "we assume
-/// the scheduling hierarchy is a tree") with O(1) path lookup.
+const CHUNK_BITS: usize = 6;
+
+/// Vertices per copy-on-write arena chunk (see the module §Snapshots notes).
+/// 64 keeps a chunk within one or a few adjacent subtrees of the paper's
+/// node-level graphs, so a writer touching one node's cores copies one chunk.
+pub const CHUNK_SIZE: usize = 1 << CHUNK_BITS;
+
+/// Containment topology: parent/child links plus the localization index.
+/// Shared behind one `Arc` — structural edits are rare next to allocation
+/// marks, so snapshots almost always share the whole topology and a
+/// structural writer pays one lazy copy per publish interval.
 #[derive(Debug, Clone, Default)]
-pub struct ResourceGraph {
-    vertices: Vec<Vertex>,
+struct Topology {
     parent: Vec<Option<VertexId>>,
     children: Vec<Vec<VertexId>>,
     /// containment path -> vertex (the localization index).
     path_index: HashMap<String, VertexId>,
+}
+
+/// The dynamic resource graph: a containment tree (per the paper's "we assume
+/// the scheduling hierarchy is a tree") with O(1) path lookup.
+///
+/// Storage is copy-on-write (module §Snapshots): `clone` is O(chunks)
+/// refcount bumps and mutation lazily un-shares only the touched chunks,
+/// which is what makes RCU snapshot publication and rollback snapshots
+/// cheap enough to take on every write.
+#[derive(Debug, Clone, Default)]
+pub struct ResourceGraph {
+    /// COW vertex arena: fixed-size chunks, each behind its own `Arc`.
+    /// All chunks except the last are exactly `CHUNK_SIZE` long.
+    chunks: Vec<Arc<Vec<Vertex>>>,
+    /// Arena length (live + tombstoned), cached across the chunk split.
+    len: usize,
+    /// Containment topology, shared whole until a structural edit.
+    topo: Arc<Topology>,
     /// Interned resource types for every vertex in this graph.
     types: TypeTable,
     root: Option<VertexId>,
@@ -207,6 +250,21 @@ impl ResourceGraph {
         ResourceGraph::default()
     }
 
+    // ---- chunked COW internals ------------------------------------------
+
+    /// Shared view of the vertex at raw arena index `i`.
+    #[inline]
+    fn v(&self, i: usize) -> &Vertex {
+        &self.chunks[i >> CHUNK_BITS][i & (CHUNK_SIZE - 1)]
+    }
+
+    /// Exclusive view of the vertex at raw arena index `i`, lazily
+    /// un-sharing (copying) its chunk if a snapshot still holds it.
+    #[inline]
+    fn v_mut(&mut self, i: usize) -> &mut Vertex {
+        &mut Arc::make_mut(&mut self.chunks[i >> CHUNK_BITS])[i & (CHUNK_SIZE - 1)]
+    }
+
     // ---- accessors -------------------------------------------------------
 
     /// The root vertex, if the graph has one.
@@ -216,7 +274,7 @@ impl ResourceGraph {
 
     /// Immutable access to a vertex (live or tombstoned).
     pub fn vertex(&self, id: VertexId) -> &Vertex {
-        &self.vertices[id.0 as usize]
+        self.v(id.0 as usize)
     }
 
     /// Mutable access to a vertex. Bumps the [epoch](ResourceGraph::epoch):
@@ -226,7 +284,7 @@ impl ResourceGraph {
     /// no-op write costs a cache entry, never correctness.
     pub fn vertex_mut(&mut self, id: VertexId) -> &mut Vertex {
         self.epoch += 1;
-        &mut self.vertices[id.0 as usize]
+        self.v_mut(id.0 as usize)
     }
 
     /// The graph's type intern table.
@@ -285,17 +343,17 @@ impl ResourceGraph {
 
     /// Containment parent of a vertex (`None` at the root).
     pub fn parent_of(&self, id: VertexId) -> Option<VertexId> {
-        self.parent[id.0 as usize]
+        self.topo.parent[id.0 as usize]
     }
 
     /// Containment children of a vertex, in insertion order.
     pub fn children_of(&self, id: VertexId) -> &[VertexId] {
-        &self.children[id.0 as usize]
+        &self.topo.children[id.0 as usize]
     }
 
     /// O(1) containment-path lookup (the localization index).
     pub fn lookup_path(&self, path: &str) -> Option<VertexId> {
-        self.path_index.get(path).copied()
+        self.topo.path_index.get(path).copied()
     }
 
     /// Live vertex count.
@@ -316,16 +374,14 @@ impl ResourceGraph {
     /// Arena length (live + tombstoned). `VertexId.0` is always < this, so
     /// callers can size side tables indexed by raw id.
     pub fn arena_len(&self) -> usize {
-        self.vertices.len()
+        self.len
     }
 
     /// Iterate live vertex ids.
     pub fn iter_live(&self) -> impl Iterator<Item = VertexId> + '_ {
-        self.vertices
-            .iter()
-            .enumerate()
-            .filter(|(_, v)| !v.dead)
-            .map(|(i, _)| VertexId(i as u32))
+        (0..self.len)
+            .filter(move |&i| !self.v(i).dead)
+            .map(|i| VertexId(i as u32))
     }
 
     /// Ancestors from the vertex's parent up to the root.
@@ -346,12 +402,12 @@ impl ResourceGraph {
         let mut out = Vec::new();
         let mut stack = vec![id];
         while let Some(v) = stack.pop() {
-            if self.vertices[v.0 as usize].dead {
+            if self.v(v.0 as usize).dead {
                 continue;
             }
             out.push(v);
             // push in reverse so children come out in insertion order
-            for &c in self.children[v.0 as usize].iter().rev() {
+            for &c in self.topo.children[v.0 as usize].iter().rev() {
                 stack.push(c);
             }
         }
@@ -374,26 +430,34 @@ impl ResourceGraph {
     /// O(1) amortized — this is the primitive `AddSubgraph` loops over.
     /// Interns the vertex type and assigns `depth = parent.depth + 1`.
     pub fn add_child(&mut self, parent: VertexId, v: VertexProto) -> Result<VertexId, GraphError> {
-        if self.vertices[parent.0 as usize].dead {
+        if self.vertex(parent).dead {
             return Err(GraphError::Dead(parent));
         }
-        let depth = self.vertices[parent.0 as usize].depth + 1;
+        let depth = self.vertex(parent).depth + 1;
         let id = self.push_vertex(v, depth)?;
-        self.parent[id.0 as usize] = Some(parent);
-        self.children[parent.0 as usize].push(id);
+        let topo = Arc::make_mut(&mut self.topo);
+        topo.parent[id.0 as usize] = Some(parent);
+        topo.children[parent.0 as usize].push(id);
         self.live_edges += 1;
         Ok(id)
     }
 
     fn push_vertex(&mut self, v: VertexProto, depth: u32) -> Result<VertexId, GraphError> {
-        if self.path_index.contains_key(&v.path) {
+        if self.topo.path_index.contains_key(&v.path) {
             return Err(GraphError::DuplicatePath(v.path));
         }
         self.epoch += 1;
         let tid = self.types.intern(&v.rtype);
-        let id = VertexId(self.vertices.len() as u32);
-        self.path_index.insert(v.path.clone(), id);
-        self.vertices.push(Vertex {
+        let id = VertexId(self.len as u32);
+        let topo = Arc::make_mut(&mut self.topo);
+        topo.path_index.insert(v.path.clone(), id);
+        topo.parent.push(None);
+        topo.children.push(Vec::new());
+        if self.len & (CHUNK_SIZE - 1) == 0 {
+            self.chunks.push(Arc::new(Vec::with_capacity(CHUNK_SIZE)));
+        }
+        let chunk = Arc::make_mut(self.chunks.last_mut().expect("fresh chunk"));
+        chunk.push(Vertex {
             tid,
             basename: v.basename,
             id: v.id,
@@ -407,8 +471,7 @@ impl ResourceGraph {
             agg_free: Vec::new(),
             dead: false,
         });
-        self.parent.push(None);
-        self.children.push(Vec::new());
+        self.len += 1;
         self.live_vertices += 1;
         Ok(id)
     }
@@ -416,26 +479,27 @@ impl ResourceGraph {
     /// Remove a leaf (or recursively a whole subtree with `remove_subtree`).
     /// Tombstones the vertex; ids remain stable.
     pub fn remove_leaf(&mut self, id: VertexId) -> Result<(), GraphError> {
-        if self.vertices[id.0 as usize].dead {
+        let i = id.0 as usize;
+        if self.v(i).dead {
             return Err(GraphError::Dead(id));
         }
-        if self.children[id.0 as usize]
+        if self.topo.children[i]
             .iter()
-            .any(|c| !self.vertices[c.0 as usize].dead)
+            .any(|c| !self.v(c.0 as usize).dead)
         {
-            return Err(GraphError::HasChildren(
-                self.vertices[id.0 as usize].path.clone(),
-            ));
+            return Err(GraphError::HasChildren(self.v(i).path.clone()));
         }
-        let path = self.vertices[id.0 as usize].path.clone();
+        let path = self.v(i).path.clone();
+        let parent = self.topo.parent[i];
         self.epoch += 1;
-        self.path_index.remove(&path);
-        self.vertices[id.0 as usize].dead = true;
-        self.live_vertices -= 1;
-        if let Some(p) = self.parent[id.0 as usize] {
-            self.children[p.0 as usize].retain(|&c| c != id);
+        let topo = Arc::make_mut(&mut self.topo);
+        topo.path_index.remove(&path);
+        if let Some(p) = parent {
+            topo.children[p.0 as usize].retain(|&c| c != id);
             self.live_edges -= 1;
         }
+        self.v_mut(i).dead = true;
+        self.live_vertices -= 1;
         if self.root == Some(id) {
             self.root = None;
         }
@@ -458,30 +522,46 @@ impl ResourceGraph {
     pub fn check_invariants(&self) -> Result<(), String> {
         let mut live = 0usize;
         let mut edges = 0usize;
-        for (i, v) in self.vertices.iter().enumerate() {
+        if self.topo.parent.len() != self.len || self.topo.children.len() != self.len {
+            return Err("topology tables out of step with arena".to_string());
+        }
+        let counted: usize = self.chunks.iter().map(|c| c.len()).sum();
+        if counted != self.len {
+            return Err(format!(
+                "chunk lengths sum to {counted}, cached arena len {}",
+                self.len
+            ));
+        }
+        for (ci, c) in self.chunks.iter().enumerate() {
+            if c.len() != CHUNK_SIZE && ci + 1 != self.chunks.len() {
+                return Err(format!("non-terminal chunk {ci} is not full"));
+            }
+        }
+        for i in 0..self.len {
+            let v = self.v(i);
             let id = VertexId(i as u32);
             if v.tid.index() >= self.types.len() {
                 return Err(format!("vertex {} has out-of-table type id", v.path));
             }
             if v.dead {
-                if self.path_index.get(&v.path) == Some(&id) {
+                if self.topo.path_index.get(&v.path) == Some(&id) {
                     return Err(format!("dead vertex {} still indexed", v.path));
                 }
                 continue;
             }
             live += 1;
-            if self.path_index.get(&v.path) != Some(&id) {
+            if self.topo.path_index.get(&v.path) != Some(&id) {
                 return Err(format!("live vertex {} not indexed", v.path));
             }
-            match self.parent[i] {
+            match self.topo.parent[i] {
                 Some(p) => {
-                    if self.vertices[p.0 as usize].dead {
+                    if self.v(p.0 as usize).dead {
                         return Err(format!("{} has dead parent", v.path));
                     }
-                    if !self.children[p.0 as usize].contains(&id) {
+                    if !self.topo.children[p.0 as usize].contains(&id) {
                         return Err(format!("{} missing from parent's children", v.path));
                     }
-                    if v.depth != self.vertices[p.0 as usize].depth + 1 {
+                    if v.depth != self.v(p.0 as usize).depth + 1 {
                         return Err(format!(
                             "{} depth {} != parent depth + 1",
                             v.path, v.depth
@@ -495,11 +575,11 @@ impl ResourceGraph {
                     }
                 }
             }
-            for &c in &self.children[i] {
-                if self.vertices[c.0 as usize].dead {
+            for &c in &self.topo.children[i] {
+                if self.v(c.0 as usize).dead {
                     return Err(format!("{} has dead child", v.path));
                 }
-                if self.parent[c.0 as usize] != Some(id) {
+                if self.topo.parent[c.0 as usize] != Some(id) {
                     return Err(format!("child of {} disagrees on parent", v.path));
                 }
             }
@@ -516,7 +596,7 @@ impl ResourceGraph {
                 self.live_edges
             ));
         }
-        if self.path_index.len() != live {
+        if self.topo.path_index.len() != live {
             return Err("path index size != live vertices".to_string());
         }
         Ok(())
@@ -762,6 +842,70 @@ mod tests {
         assert!(!g.vertex(c0).alloc.is_allocated());
         assert!(g.epoch() > diverged, "epoch must never rewind");
         g.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn clone_shares_chunks_and_mutation_isolates() {
+        // build past one chunk boundary so the clone shares multiple chunks
+        let (mut g, _, n0, _) = tiny();
+        for i in 1..(CHUNK_SIZE + 8) as u64 {
+            g.add_child(
+                n0,
+                make_vertex(
+                    ResourceType::Core,
+                    "core",
+                    i,
+                    100 + i,
+                    &format!("/cluster0/node0/core{i}"),
+                ),
+            )
+            .unwrap();
+        }
+        let snap = g.clone();
+        assert!(
+            g.chunks
+                .iter()
+                .zip(snap.chunks.iter())
+                .all(|(a, b)| Arc::ptr_eq(a, b)),
+            "clone must share every chunk"
+        );
+        assert!(Arc::ptr_eq(&g.topo, &snap.topo), "clone must share topology");
+
+        // mutate one vertex in the original: only that chunk un-shares,
+        // and the snapshot keeps observing the pre-mutation state
+        let c5 = g.lookup_path("/cluster0/node0/core5").unwrap();
+        g.vertex_mut(c5).alloc.jobs.push(JobId(9));
+        let touched = (c5.0 as usize) >> CHUNK_BITS;
+        for (ci, (a, b)) in g.chunks.iter().zip(snap.chunks.iter()).enumerate() {
+            assert_eq!(
+                !Arc::ptr_eq(a, b),
+                ci == touched,
+                "exactly the touched chunk must un-share (chunk {ci})"
+            );
+        }
+        assert!(g.vertex(c5).alloc.is_allocated());
+        assert!(!snap.vertex(c5).alloc.is_allocated());
+        assert!(Arc::ptr_eq(&g.topo, &snap.topo), "metadata write keeps topology shared");
+        g.check_invariants().unwrap();
+        snap.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn structural_edit_unshares_topology_only_once() {
+        let (mut g, _, n0, c0) = tiny();
+        let snap = g.clone();
+        g.remove_leaf(c0).unwrap();
+        assert!(!Arc::ptr_eq(&g.topo, &snap.topo));
+        assert_eq!(snap.lookup_path("/cluster0/node0/core0"), Some(c0));
+        assert_eq!(g.lookup_path("/cluster0/node0/core0"), None);
+        // second structural edit hits the already-unshared topology
+        g.add_child(
+            n0,
+            make_vertex(ResourceType::Core, "core", 9, 99, "/cluster0/node0/core9"),
+        )
+        .unwrap();
+        g.check_invariants().unwrap();
+        snap.check_invariants().unwrap();
     }
 
     #[test]

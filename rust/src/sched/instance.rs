@@ -155,6 +155,27 @@ fn _assert_instance_is_sync() {
     is_send_sync::<SchedInstance>();
 }
 
+/// Feasibility probe against an explicit `(graph, prune)` view — the shared
+/// core of [`SchedInstance::probe_with`] and the snapshot probe path
+/// ([`crate::sched::snapshot::GraphSnapshot::probe_with`]). Compiles the
+/// spec into the caller's scratch every call; per-caller table reuse is the
+/// caller's concern.
+///
+/// Returns the same reply vocabulary as the `Probe` op: `Probed` on a
+/// feasible spec, `Error(no_match)` otherwise.
+pub fn probe_graph(
+    graph: &ResourceGraph,
+    prune: &PruneConfig,
+    spec: &JobSpec,
+    scratch: &mut MatchScratch,
+) -> SchedReply {
+    compile_spec_into(graph, prune, spec, scratch);
+    match probe_compiled(graph, prune, spec, scratch) {
+        Ok((vertices, visited)) => SchedReply::Probed { visited, vertices },
+        Err(e) => SchedReply::err(code::NO_MATCH, e.to_string()),
+    }
+}
+
 impl SchedInstance {
     /// Wrap a graph, initializing pruning aggregates.
     pub fn new(mut graph: ResourceGraph, prune: PruneConfig) -> SchedInstance {
@@ -427,11 +448,7 @@ impl SchedInstance {
     /// Returns the same reply vocabulary as the `Probe` op: `Probed` on a
     /// feasible spec, `Error(no_match)` otherwise.
     pub fn probe_with(&self, spec: &JobSpec, scratch: &mut MatchScratch) -> SchedReply {
-        compile_spec_into(&self.graph, &self.prune, spec, scratch);
-        match probe_compiled(&self.graph, &self.prune, spec, scratch) {
-            Ok((vertices, visited)) => SchedReply::Probed { visited, vertices },
-            Err(e) => SchedReply::err(code::NO_MATCH, e.to_string()),
-        }
+        probe_graph(&self.graph, &self.prune, spec, scratch)
     }
 
     /// Match + allocate with explicit control over spec recompilation — the

@@ -92,7 +92,12 @@ impl std::error::Error for MatchFail {}
 /// **one** compile across every shard's scan: each shard borrows the
 /// dispatcher's `CompiledSpec` read-only while running against its own
 /// shard-local traversal state.
-#[derive(Debug, Default)]
+///
+/// `Clone` because the snapshot-era shard dispatcher hands each fan-out an
+/// **owned** copy (alongside its pinned `Arc<GraphSnapshot>`) instead of a
+/// raw borrow — the tables are three flat vectors, so the copy is cheap
+/// next to a shard scan.
+#[derive(Debug, Clone, Default)]
 pub struct CompiledSpec {
     /// Per request node: interned type id (`NO_TYPE` when unknown).
     req_tid: Vec<u16>,

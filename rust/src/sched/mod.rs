@@ -4,9 +4,11 @@
 //! The entry surface is the typed protocol ([`crate::rpc::proto`]):
 //! [`SchedInstance::apply`] interprets one [`SchedOp`],
 //! [`SchedInstance::apply_batch`] a whole queue with spec-level dedup, and
-//! [`SchedService`] serves either concurrently — read-only probes fan out
+//! [`SchedService`] serves either concurrently — read-only probes run
+//! lock-free against pinned RCU snapshots ([`snapshot`]) and fan out
 //! across a worker pool (with epoch-keyed result caching) while mutating
-//! ops serialize on the write side.
+//! ops serialize on the write side and publish a fresh snapshot version
+//! on commit.
 
 pub mod alloc;
 pub mod grow;
@@ -14,9 +16,11 @@ pub mod instance;
 pub mod matcher;
 pub mod pruning;
 pub mod service;
+pub mod snapshot;
 
 pub use alloc::{AllocTable, WriteShards};
 pub use instance::SchedInstance;
+pub use snapshot::{GraphSnapshot, SnapshotHead, SnapshotStats};
 pub use matcher::{
     compile_spec_into, match_compiled, match_resources, match_resources_in,
     match_resources_sharded, plan_write_shards, MatchFail, MatchResult, MatchScratch,

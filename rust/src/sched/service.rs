@@ -6,21 +6,30 @@
 //! probes* (capacity queries that mutate nothing). [`SchedService`] is the
 //! serving layer that exploits both facts:
 //!
-//! - **Read/write partitioning.** The single-threaded [`SchedInstance`]
-//!   sits behind an `RwLock`. Read-only ops ([`SchedOp::Probe`] — see
-//!   [`SchedOp::is_read_only`]) take the read side and run in parallel;
-//!   mutating ops take the write side, and every graph mutation advances
-//!   the graph's monotonic **epoch**
-//!   ([`crate::resource::graph::ResourceGraph::epoch`]).
-//! - **Per-worker scratch pool.** A pool of `std::thread` workers
-//!   (spawned lazily on the first batched fan-out) each owns one warm
-//!   [`MatchScratch`], and single probes use a thread-local caller
-//!   scratch — replacing the instance's single serializing scratch
-//!   (`SchedInstance`'s own scratch is now just the 1-thread special
-//!   case). [`SchedService::apply_batch`] partitions a
-//!   queue into read/write phases, fans each read phase across the pool,
-//!   and preserves reply order index-for-index with sequential
-//!   [`SchedInstance::apply_batch`].
+//! - **Lock-free reads over RCU snapshots (PR 9).** The single-threaded
+//!   [`SchedInstance`] sits behind an `RwLock`, but **probes never take
+//!   it**: every write publishes an epoch-versioned copy-on-write
+//!   [`GraphSnapshot`] into a [`SnapshotHead`]
+//!   ([`crate::sched::snapshot`]), and read-only ops ([`SchedOp::Probe`]
+//!   — see [`SchedOp::is_read_only`]) pin the latest version and
+//!   traverse it with no instance lock held. A probe issued while a
+//!   writer holds the write lock completes against the prior version
+//!   without blocking — the reader-stall hazard (a queued writer blocks
+//!   new readers) is gone by construction. Mutating ops still take the
+//!   write side; every graph mutation advances the graph's monotonic
+//!   **epoch** ([`crate::resource::graph::ResourceGraph::epoch`]), which
+//!   doubles as the snapshot version.
+//! - **One per-worker scratch pool.** A single pool of `std::thread`
+//!   workers (spawned lazily on the first fan-out) serves both task-level
+//!   read phases and intra-match shard scans — unified now that no
+//!   worker ever touches the instance lock (each run carries its pinned
+//!   snapshot, so the historical worker→queued-writer deadlock is
+//!   structurally impossible and the PR 5 dedicated shard pool plus its
+//!   raw-pointer checkout paths are deleted). Each worker owns one warm
+//!   [`MatchScratch`]; single probes use a thread-local caller scratch.
+//!   [`SchedService::apply_batch`] partitions a queue into read/write
+//!   phases, fans each read phase across the pool, and preserves reply
+//!   order index-for-index with sequential [`SchedInstance::apply_batch`].
 //! - **Epoch-keyed probe cache.** Identical probe specs within an
 //!   unchanged-graph window are answered from a result cache without
 //!   re-traversal (the ROADMAP's "cross-op result reuse"). An entry is
@@ -29,21 +38,22 @@
 //!   by bumping the epoch. See the invalidation rules below.
 //! - **Intra-match sharding.** One probe's candidate scan can split across
 //!   the root's child subtrees ([`SchedService::probe_sharded`], the
-//!   ROADMAP's "parallel per-node match"): a dedicated **shard pool** (one
-//!   warm scratch per worker, spawned lazily, never touching the instance
-//!   lock — see the deadlock note on the internal `ShardRun` type) runs
-//!   [`run_shard`] scans that merge into a selection bit-identical to the
-//!   sequential scan. [`SchedService::set_read_shards`] additionally routes
-//!   batched read phases that dedup to a *single* distinct spec through
-//!   this path, trading exact `visited`-metric reply parity for intra-op
-//!   parallelism (feasibility and vertex counts stay identical).
+//!   ROADMAP's "parallel per-node match"): shard scans fan across the
+//!   worker pool as fully **owned** jobs — each carries its pinned
+//!   `Arc<GraphSnapshot>` plus owned copies of the compiled tables and
+//!   merged selection — and [`run_shard`] merges them into a selection
+//!   bit-identical to the sequential scan.
+//!   [`SchedService::set_read_shards`] additionally routes batched read
+//!   phases that dedup to a *single* distinct spec through this path,
+//!   trading exact `visited`-metric reply parity for intra-op parallelism
+//!   (feasibility and vertex counts stay identical).
 //! - **Sharded write commits (OCC).** With
 //!   [`SchedService::set_write_shards`] the match half of
-//!   `MatchAllocate`/`MatchGrowLocal` runs as a *prepare* phase under the
-//!   **read** lock — fanned across the shard pool exactly like a sharded
-//!   probe — and only the commit (charging the prepared selection through
-//!   the instance's subtree-sharded allocation maps,
-//!   [`crate::sched::alloc::WriteShards`]) takes the write lock. The
+//!   `MatchAllocate`/`MatchGrowLocal` runs as a *prepare* phase against a
+//!   pinned snapshot — fanned across the pool exactly like a sharded
+//!   probe, with no lock held — and only the commit (charging the
+//!   prepared selection through the instance's subtree-sharded allocation
+//!   maps, [`crate::sched::alloc::WriteShards`]) takes the write lock. The
 //!   commit validates optimistically: an unchanged epoch commits
 //!   directly; a moved epoch whose prepared vertices are all still free
 //!   linearizes at commit time (counted as *spine contention*); anything
@@ -68,26 +78,36 @@
 //! ## Cache invalidation rules
 //!
 //! 1. Entries are keyed by the probe spec's canonical JSON and stamped
-//!    with the epoch they were computed at; a lookup only hits when the
-//!    stamp equals the current epoch (stale entries are evicted lazily).
-//! 2. Every lookup and insert happens while holding the instance lock
-//!    (read side), so the epoch cannot move between the stamp being read
-//!    and the entry being used.
+//!    with the epoch (= snapshot version) they were computed at; a lookup
+//!    only hits when the stamp equals the reader's **pinned** version.
+//!    An entry older than the pinned version is permanently stale
+//!    (versions are monotonic) and is evicted on sight; an entry *newer*
+//!    than it — left by a reader pinned ahead of this one — is a plain
+//!    miss and stays resident for current readers.
+//! 2. Lookups and inserts are version-consistent without any instance
+//!    lock: the reader's pinned snapshot fixes the stamp for the whole
+//!    operation, and the insert path drops a result dead-on-arrival when
+//!    its version already trails the newest write-side observation (a
+//!    slow reader can never overwrite a fresher entry).
 //! 3. A failed mutating op needs no special-casing: if it touched the
 //!    graph at all before failing (e.g. `AcceptGrant` splices the subgraph
 //!    and then the allocation step rejects an unknown job), the mutation
-//!    itself advanced the epoch. Ops that fail without touching the graph
-//!    leave the epoch — and therefore the still-accurate cache — alone.
+//!    itself advanced the epoch (and its guard published a new version).
+//!    Ops that fail without touching the graph leave the epoch — and
+//!    therefore the still-accurate cache — alone.
 //! 4. Epochs must never rewind. Snapshot restores MUST go through
 //!    [`ResourceGraph::restore_from`](crate::resource::graph::ResourceGraph::restore_from),
 //!    which moves the epoch forward past both timelines — that is the
 //!    contract. As defense in depth, the write guard records the epoch at
 //!    entry and clears the whole cache if the counter at drop has moved
-//!    backwards (a plain `guard.graph = snapshot` swap). The one thing
-//!    this last-resort check cannot see is a contract-violating swap that
-//!    *also* manually re-advances the counter onto a previously observed
-//!    value within a single guard; `restore_from` exists precisely so no
-//!    caller ever needs to touch the field directly.
+//!    backwards (a plain `guard.graph = snapshot` swap); the write side
+//!    is the **only** caller of the rewind check, since a reader pinned
+//!    at an old version observing "their" old value is normal operation,
+//!    not a rewind. The one thing this last-resort check cannot see is a
+//!    contract-violating swap that *also* manually re-advances the
+//!    counter onto a previously observed value within a single guard;
+//!    `restore_from` exists precisely so no caller ever needs to touch
+//!    the field directly.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -99,13 +119,14 @@ use std::time::{Duration, Instant};
 use crate::bitmap::BitSet;
 use crate::fault::panic_message;
 use crate::jobspec::{JobSpec, ResourceReq};
-use crate::resource::graph::{JobId, ResourceGraph};
+use crate::resource::graph::JobId;
 use crate::rpc::proto::{code, RpcError, SchedOp, SchedReply};
 use crate::sched::instance::SchedInstance;
 use crate::sched::matcher::{
     compile_spec_into, match_compiled, match_sharded_compiled, probe_sharded_compiled, run_shard,
     CompiledSpec, MatchFail, MatchResult, MatchScratch, ShardJob, ShardScan,
 };
+use crate::sched::snapshot::{GraphSnapshot, SnapshotHead, SnapshotStats};
 use crate::telemetry::{Telemetry, TelemetrySnapshot, KIND_PROBE};
 
 /// Upper bound on cached probe entries; exceeding it clears the map (the
@@ -141,10 +162,16 @@ impl CacheInner {
         }
     }
 
-    /// Record the current graph epoch. A value below the last observation
-    /// means the epoch rewound (a snapshot was swapped in behind the
-    /// service's back) — every entry could alias a future epoch value, so
-    /// the whole map is dropped.
+    /// Record the graph epoch observed at a write-guard drop. A value
+    /// below the last observation means the epoch rewound (a snapshot was
+    /// swapped in behind the service's back) — every entry could alias a
+    /// future epoch value, so the whole map is dropped.
+    ///
+    /// **Write side only.** Readers pin snapshot versions that may trail
+    /// the newest publish; a reader reporting its (legitimately old)
+    /// pinned version here would look like a rewind and wipe a valid
+    /// cache. The write guard holds the write lock when it calls this, so
+    /// its observations are the authoritative monotonic sequence.
     fn observe_epoch(&mut self, epoch: u64) {
         if epoch < self.last_epoch {
             self.map.clear();
@@ -153,26 +180,36 @@ impl CacheInner {
         self.last_epoch = epoch;
     }
 
-    /// Look up a probe result valid at `epoch`; evicts a stale entry.
+    /// Look up a probe result valid at the reader's pinned `epoch`. An
+    /// entry stamped *older* is permanently stale (versions are
+    /// monotonic) and is evicted; one stamped *newer* — left by a reader
+    /// pinned ahead of this one — is a miss but stays for current pins.
     fn get(&mut self, key: &str, epoch: u64) -> Option<SchedReply> {
         match self.map.get(key) {
             Some(e) if e.epoch == epoch => {
                 self.hits += 1;
                 Some(e.reply.clone())
             }
-            Some(_) => {
+            Some(e) if e.epoch < epoch => {
                 self.map.remove(key);
                 self.misses += 1;
                 None
             }
-            None => {
+            _ => {
                 self.misses += 1;
                 None
             }
         }
     }
 
+    /// Insert a result computed at pinned version `epoch`. Dead-on-arrival
+    /// guard: a result whose version already trails the newest write-side
+    /// observation is dropped rather than inserted, so a slow reader can
+    /// never overwrite a fresher entry (rule 2).
     fn insert(&mut self, key: String, epoch: u64, reply: SchedReply) {
+        if epoch < self.last_epoch {
+            return;
+        }
         if self.map.len() >= CACHE_CAP && !self.map.contains_key(&key) {
             self.map.clear();
             self.invalidations += 1;
@@ -218,6 +255,10 @@ struct ReadTask {
 /// every task is answered — or every worker has checked out, whichever
 /// comes first (a lost worker's tasks are then computed inline).
 struct ReadRun {
+    /// The version every task in this phase probes — pinned once by the
+    /// dispatcher, shared by every worker, so the whole phase is
+    /// consistent with one epoch and no worker takes the instance lock.
+    snap: Arc<GraphSnapshot>,
     tasks: Vec<ReadTask>,
     cursor: AtomicUsize,
     results: Mutex<Vec<(usize, SchedReply)>>,
@@ -252,41 +293,37 @@ impl Drop for Checkout<'_> {
     }
 }
 
+/// Unified worker mailbox: the one pool serves both task-level read
+/// phases and intra-match shard scans (they became the same kind of work
+/// once every run carried its own pinned snapshot — nothing a worker does
+/// can touch the instance lock).
 enum WorkerMsg {
-    Run(Arc<ReadRun>),
+    Read(Arc<ReadRun>),
+    Shard(Arc<ShardRun>),
     Shutdown,
 }
 
 /// One sharded candidate-scan fan-out in flight (see
-/// [`SchedService::probe_sharded`]). Carries **raw pointers** into the
-/// dispatcher's stack frame (graph, compiled tables, merged selection,
-/// request node) because shard workers are long-lived threads that cannot
-/// borrow from it.
+/// [`SchedService::probe_sharded`]). Fully **owned**: the run pins the
+/// dispatcher's snapshot (`Arc`) and carries owned copies of the compiled
+/// tables, merged selection, and request node, so long-lived workers
+/// borrow from the run itself rather than the dispatcher's stack frame.
+/// This replaced the PR 5 raw-pointer design (and its `unsafe
+/// Send`/`Sync` safety contract) the moment snapshots made the graph
+/// shareable by `Arc` — the copies are three flat vectors and a bitset,
+/// noise next to a shard scan.
 ///
-/// # Safety contract
-///
-/// - Workers dereference the pointers only between claiming a shard index
-///   from `cursor` and incrementing `progress.completed` for that shard.
-/// - The dispatcher blocks in [`SchedService::shard_exec`] until
-///   `completed == ranges.len()` or `workers == 0`; past either point no
-///   worker dereferences them again (the cursor is exhausted — a late
-///   worker's first `fetch_add` returns an out-of-range index and it checks
-///   out without touching the pointers).
-/// - Every referent outlives the dispatcher's blocking wait: the graph and
-///   compiled tables sit behind the instance read guard / scratch borrow
-///   held across the call.
-///
-/// Shard workers deliberately **never acquire the instance `RwLock`**: the
-/// dispatcher already holds the read side for the whole fan-out, and Rust's
-/// lock blocks new readers while a writer is queued — a pool worker taking
-/// the read lock here could deadlock dispatcher → worker → queued writer →
-/// dispatcher. That is also why sharded scans run on a dedicated pool
-/// instead of the read-phase pool, whose workers do take the lock.
+/// Workers never acquire the instance `RwLock` (they have no path to it):
+/// the historical dispatcher → worker → queued-writer deadlock that
+/// forced a dedicated shard pool is structurally impossible, which is why
+/// one pool now serves everything.
 struct ShardRun {
-    graph: *const ResourceGraph,
-    compiled: *const CompiledSpec,
-    base_selected: *const BitSet,
-    req: *const ResourceReq,
+    /// Pinned version this scan traverses (keeps the graph alive and
+    /// immutable for the run's whole lifetime — no liveness protocol).
+    snap: Arc<GraphSnapshot>,
+    compiled: CompiledSpec,
+    base_selected: BitSet,
+    req: ResourceReq,
     nslots: usize,
     ix: usize,
     ranges: Vec<(u32, u32)>,
@@ -296,19 +333,28 @@ struct ShardRun {
     done: Condvar,
 }
 
-// SAFETY: the raw pointers are only dereferenced under the protocol
-// documented on the struct; all other fields are Send + Sync.
-unsafe impl Send for ShardRun {}
-unsafe impl Sync for ShardRun {}
-
-enum ShardMsg {
-    Run(Arc<ShardRun>),
-    Shutdown,
+impl ShardRun {
+    /// The borrowed job view workers (and the dispatcher's inline
+    /// fallback) run shards against — everything borrows from the run.
+    fn job(&self) -> ShardJob<'_> {
+        ShardJob {
+            g: &self.snap.graph,
+            nslots: self.nslots,
+            compiled: &self.compiled,
+            base_selected: &self.base_selected,
+            req: &self.req,
+            ix: self.ix,
+            ranges: &self.ranges,
+        }
+    }
 }
 
 /// State shared between the service handles and the pool workers.
 struct Shared {
     inst: RwLock<SchedInstance>,
+    /// RCU head: the latest published graph version, pinned by every read
+    /// path. Writers publish into it from the write guard's drop hook.
+    snapshots: SnapshotHead,
     cache: Mutex<CacheInner>,
     /// Shard width for batched read phases that dedup to a single distinct
     /// spec (1 = sequential, the default; see
@@ -341,10 +387,11 @@ thread_local! {
         std::cell::RefCell::new(MatchScratch::new());
 }
 
-/// The worker pool. Threads are spawned **lazily** on the first batched
-/// read-phase fan-out — a service that only ever serves single probes
-/// (how `hier` uses it) carries zero idle threads. Dropped (and joined)
-/// when the last service handle goes away.
+/// The worker pool — the **one** pool (read phases and shard scans both
+/// dispatch here). Threads are spawned **lazily** on the first fan-out —
+/// a service that only ever serves single probes (how `hier` uses it)
+/// carries zero idle threads. Dropped (and joined) when the last service
+/// handle goes away.
 struct Pool {
     /// Configured pool size; threads exist only after first use.
     target: usize,
@@ -363,9 +410,9 @@ impl Pool {
                 let (tx, rx) = channel();
                 let worker_shared = shared.clone();
                 let handle = std::thread::Builder::new()
-                    .name(format!("sched-probe-{i}"))
+                    .name(format!("sched-worker-{i}"))
                     .spawn(move || worker_loop(worker_shared, rx))
-                    .expect("spawn sched probe worker");
+                    .expect("spawn sched worker");
                 txs.push(tx);
                 handles.push(handle);
             }
@@ -389,165 +436,51 @@ impl Drop for Pool {
     }
 }
 
-/// The dedicated intra-match shard pool: like [`Pool`], threads spawn
-/// lazily on the first sharded fan-out and each owns one warm scratch —
-/// but these workers **never touch the instance lock** (see the deadlock
-/// note on [`ShardRun`]), so a service that never shards carries zero
-/// extra threads and one that does cannot interlock with queued writers.
-struct ShardPool {
-    /// Configured pool size; threads exist only after first use.
-    target: usize,
-    txs: Mutex<Vec<Sender<ShardMsg>>>,
-    handles: Mutex<Vec<JoinHandle<()>>>,
-}
-
-impl ShardPool {
-    fn new(target: usize) -> ShardPool {
-        ShardPool {
-            target,
-            txs: Mutex::new(Vec::new()),
-            handles: Mutex::new(Vec::new()),
-        }
-    }
-
-    /// Spawn up to `target` shard workers if not yet running; returns the
-    /// sender list (length 0 only when `target` is 0).
-    fn ensure_spawned(&self) -> Vec<Sender<ShardMsg>> {
-        let mut txs = lock(&self.txs);
-        if txs.len() < self.target {
-            let mut handles = lock(&self.handles);
-            for i in txs.len()..self.target {
-                let (tx, rx) = channel();
-                let handle = std::thread::Builder::new()
-                    .name(format!("sched-shard-{i}"))
-                    .spawn(move || shard_worker_loop(rx))
-                    .expect("spawn sched shard worker");
-                txs.push(tx);
-                handles.push(handle);
-            }
-        }
-        txs.clone()
-    }
-}
-
-impl Drop for ShardPool {
-    fn drop(&mut self) {
-        if let Ok(txs) = self.txs.lock() {
-            for tx in txs.iter() {
-                let _ = tx.send(ShardMsg::Shutdown);
-            }
-        }
-        if let Ok(mut handles) = self.handles.lock() {
-            for h in handles.drain(..) {
-                let _ = h.join();
-            }
-        }
-    }
-}
-
-/// Shard worker body: one warm scratch for the thread's lifetime; claims
-/// shard indices off the run's cursor and scans them. Panic handling
-/// mirrors [`worker_loop`]: the thread survives (queued runs must still be
-/// checked out of), the scratch is replaced, and the lost shard falls
-/// through to the dispatcher's inline fallback.
-fn shard_worker_loop(rx: Receiver<ShardMsg>) {
-    let mut scratch = MatchScratch::new();
-    while let Ok(msg) = rx.recv() {
-        match msg {
-            ShardMsg::Run(run) => {
-                let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                    let _checkout = Checkout {
-                        progress: &run.progress,
-                        done: &run.done,
-                    };
-                    loop {
-                        let i = run.cursor.fetch_add(1, Ordering::Relaxed);
-                        if i >= run.ranges.len() {
-                            break;
-                        }
-                        // SAFETY: per the ShardRun contract — we claimed
-                        // shard `i`, so the dispatcher is still blocked
-                        // (completed < ranges.len()) and every referent is
-                        // alive until we bump `completed` below.
-                        let job = unsafe {
-                            ShardJob {
-                                g: &*run.graph,
-                                nslots: run.nslots,
-                                compiled: &*run.compiled,
-                                base_selected: &*run.base_selected,
-                                req: &*run.req,
-                                ix: run.ix,
-                                ranges: &run.ranges,
-                            }
-                        };
-                        let scan = run_shard(&job, i, &mut scratch);
-                        lock(&run.results)[i] = Some(scan);
-                        let mut p = lock(&run.progress);
-                        p.completed += 1;
-                        if p.completed == run.ranges.len() {
-                            run.done.notify_all();
-                        }
-                    }
-                }))
-                .is_err();
-                if panicked {
-                    // the scratch may hold a half-built traversal state
-                    scratch = MatchScratch::new();
-                }
-            }
-            ShardMsg::Shutdown => break,
-        }
-    }
-}
-
-/// Traverse `spec` against `inst` — which the caller holds a read lock on,
-/// freezing `epoch` for the whole operation (invalidation rule 2) — and
-/// record the reply in the cache stamped with that epoch. The single copy
-/// of the cache-coherence-critical sequence; every probe path (single,
-/// pool worker, inline fallback) funnels through here.
+/// Traverse `spec` against a pinned snapshot — which freezes the version
+/// for the whole operation (invalidation rule 2), with **no lock held** —
+/// and record the reply in the cache stamped with that version. The
+/// single copy of the cache-coherence-critical sequence; every probe path
+/// (single, pool worker, inline fallback) funnels through here.
 fn probe_and_cache(
-    inst: &SchedInstance,
+    snap: &GraphSnapshot,
     cache: &Mutex<CacheInner>,
     key: &str,
     spec: &JobSpec,
-    epoch: u64,
     scratch: &mut MatchScratch,
 ) -> SchedReply {
-    let reply = inst.probe_with(spec, scratch);
+    let reply = snap.probe_with(spec, scratch);
     let mut c = lock(cache);
-    c.observe_epoch(epoch);
-    c.insert(key.to_string(), epoch, reply.clone());
+    c.insert(key.to_string(), snap.version, reply.clone());
     reply
 }
 
 /// Worker body: one warm [`MatchScratch`] for the thread's lifetime; each
-/// run is drained under a single read lock, so every probe in it is
-/// consistent with one epoch. A panicking probe is caught so the thread
-/// survives to serve runs already queued in its channel (a dead receiver
-/// would drop them without ever checking out, hanging their dispatchers);
-/// the caught run's unfinished tasks fall through to the dispatcher's
-/// inline fallback, which re-raises the panic on the calling thread.
+/// run traverses the snapshot its dispatcher pinned, so every probe (or
+/// shard scan) in it is consistent with one version and **no worker ever
+/// takes the instance lock** — a queued writer cannot stall or deadlock a
+/// fan-out. A panicking item is caught so the thread survives to serve
+/// runs already queued in its channel (a dead receiver would drop them
+/// without ever checking out, hanging their dispatchers); the caught
+/// run's unfinished items fall through to the dispatcher's inline
+/// fallback, which re-raises the panic on the calling thread.
 fn worker_loop(shared: Arc<Shared>, rx: Receiver<WorkerMsg>) {
     let mut scratch = MatchScratch::new();
     while let Ok(msg) = rx.recv() {
-        match msg {
-            WorkerMsg::Run(run) => {
-                let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let panicked = match msg {
+            WorkerMsg::Read(run) => {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                     let _checkout = Checkout {
                         progress: &run.progress,
                         done: &run.done,
                     };
-                    let inst = read_lock(&shared.inst);
-                    let epoch = inst.graph.epoch();
                     loop {
                         let i = run.cursor.fetch_add(1, Ordering::Relaxed);
                         let Some(task) = run.tasks.get(i) else { break };
                         let reply = probe_and_cache(
-                            &inst,
+                            &run.snap,
                             &shared.cache,
                             &task.key,
                             &task.spec,
-                            epoch,
                             &mut scratch,
                         );
                         lock(&run.results).push((i, reply));
@@ -558,13 +491,35 @@ fn worker_loop(shared: Arc<Shared>, rx: Receiver<WorkerMsg>) {
                         }
                     }
                 }))
-                .is_err();
-                if panicked {
-                    // the scratch may hold a half-built traversal state
-                    scratch = MatchScratch::new();
-                }
+                .is_err()
+            }
+            WorkerMsg::Shard(run) => {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let _checkout = Checkout {
+                        progress: &run.progress,
+                        done: &run.done,
+                    };
+                    loop {
+                        let i = run.cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= run.ranges.len() {
+                            break;
+                        }
+                        let scan = run_shard(&run.job(), i, &mut scratch);
+                        lock(&run.results)[i] = Some(scan);
+                        let mut p = lock(&run.progress);
+                        p.completed += 1;
+                        if p.completed == run.ranges.len() {
+                            run.done.notify_all();
+                        }
+                    }
+                }))
+                .is_err()
             }
             WorkerMsg::Shutdown => break,
+        };
+        if panicked {
+            // the scratch may hold a half-built traversal state
+            scratch = MatchScratch::new();
         }
     }
 }
@@ -581,9 +536,9 @@ fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 /// never wedges the wait), then block until all `n` items are answered
 /// ("don't wait for a worker busy finishing someone else's run") or every
 /// reached worker has checked out (a dead/panicked worker's items fall
-/// through to the caller's inline fallback). For shard runs this wait is
-/// also the safety window of the `ShardRun` raw pointers: past either exit
-/// condition no worker dereferences them again.
+/// through to the caller's inline fallback). Runs are fully owned
+/// (`Arc`-held snapshot + owned tables), so the wait is purely a
+/// completion barrier — there is no pointer-liveness window to protect.
 fn fan_out_and_wait<M>(
     txs: &[Sender<M>],
     fanout: usize,
@@ -652,10 +607,16 @@ fn write_lock(l: &RwLock<SchedInstance>) -> RwLockWriteGuard<'_, SchedInstance> 
 
 /// Write-side access to the shared instance. Dereferences to
 /// [`SchedInstance`]; on drop it re-observes the graph epoch so the probe
-/// cache can detect (and defend against) a rewound counter.
+/// cache can detect (and defend against) a rewound counter, and — when
+/// the epoch moved — **publishes** a fresh snapshot version so lock-free
+/// readers see the mutation. Publication happens while the write lock is
+/// still held, which totally orders versions along the write stream.
 pub struct ServiceWriteGuard<'a> {
     guard: RwLockWriteGuard<'a, SchedInstance>,
     cache: &'a Mutex<CacheInner>,
+    /// RCU head to publish into when this guard's mutations moved the
+    /// epoch.
+    snapshots: &'a SnapshotHead,
     /// Epoch when the guard was taken; compared on drop.
     entered_epoch: u64,
 }
@@ -680,15 +641,25 @@ impl Drop for ServiceWriteGuard<'_> {
         // never observed the pre-guard value (observe_epoch's own check
         // compares against the last *cache* observation, which can lag).
         let epoch = self.guard.graph.epoch();
-        let mut cache = lock(self.cache);
-        // only clear here when observe_epoch below won't see the rewind
-        // itself (the cache never observed the pre-guard value), so one
-        // rewind counts as exactly one invalidation
-        if epoch < self.entered_epoch && epoch >= cache.last_epoch {
-            cache.map.clear();
-            cache.invalidations += 1;
+        {
+            let mut cache = lock(self.cache);
+            // only clear here when observe_epoch below won't see the rewind
+            // itself (the cache never observed the pre-guard value), so one
+            // rewind counts as exactly one invalidation
+            if epoch < self.entered_epoch && epoch >= cache.last_epoch {
+                cache.map.clear();
+                cache.invalidations += 1;
+            }
+            cache.observe_epoch(epoch);
         }
-        cache.observe_epoch(epoch);
+        // publish exactly when the observable state changed (epoch moved;
+        // equal epochs imply identical state, so skipping is lossless).
+        // Still under the write lock: publishes are totally ordered, and a
+        // reader pinning "the latest version" always gets a graph at least
+        // as fresh as any write that completed before its pin.
+        if epoch != self.entered_epoch {
+            self.snapshots.publish(&self.guard.graph, &self.guard.prune);
+        }
     }
 }
 
@@ -706,9 +677,6 @@ impl Drop for ServiceWriteGuard<'_> {
 pub struct SchedService {
     shared: Arc<Shared>,
     pool: Arc<Pool>,
-    /// Dedicated lock-free pool for intra-match shard scans (see
-    /// `ShardRun` for why it is separate from `pool`).
-    shard_pool: Arc<ShardPool>,
 }
 
 impl SchedService {
@@ -727,8 +695,12 @@ impl SchedService {
     /// special case, useful as a bench baseline). Worker threads are
     /// spawned lazily on the first batched read-phase fan-out.
     pub fn with_workers(inst: SchedInstance, workers: usize) -> SchedService {
+        // version 0 of the chain is published before the service exists,
+        // so there is never a moment a reader has nothing to pin
+        let snapshots = SnapshotHead::new(&inst.graph, &inst.prune);
         let shared = Arc::new(Shared {
             inst: RwLock::new(inst),
+            snapshots,
             cache: Mutex::new(CacheInner::new()),
             read_shards: AtomicUsize::new(1),
             write_shards: AtomicUsize::new(0),
@@ -742,7 +714,6 @@ impl SchedService {
                 txs: Mutex::new(Vec::new()),
                 handles: Mutex::new(Vec::new()),
             }),
-            shard_pool: Arc::new(ShardPool::new(workers)),
         }
     }
 
@@ -770,8 +741,23 @@ impl SchedService {
         ServiceWriteGuard {
             guard,
             cache: &self.shared.cache,
+            snapshots: &self.shared.snapshots,
             entered_epoch,
         }
+    }
+
+    /// Pin the latest published snapshot version: an `Arc`-held,
+    /// epoch-versioned view every probe path runs against. Never blocks
+    /// behind the instance lock — a writer mid-mutation just means the pin
+    /// returns the prior version. The version stays alive (and
+    /// bit-identical) for as long as the caller holds the `Arc`.
+    pub fn pin_snapshot(&self) -> Arc<GraphSnapshot> {
+        self.shared.snapshots.pin()
+    }
+
+    /// Snapshot lifecycle counters (pins / publishes / retired / live).
+    pub fn snapshot_stats(&self) -> SnapshotStats {
+        self.shared.snapshots.stats()
     }
 
     /// Current graph epoch (see `ResourceGraph::epoch`).
@@ -831,35 +817,28 @@ impl SchedService {
     /// [`SchedService::apply`] (which records under its own timer — the
     /// split keeps one op from counting twice).
     fn probe_impl(&self, spec: &JobSpec) -> SchedReply {
-        // hold the read lock across lookup, traversal, and insert: the
-        // epoch is frozen for the whole operation (invalidation rule 2)
-        let inst = read_lock(&self.shared.inst);
-        let epoch = inst.graph.epoch();
+        // pin a snapshot instead of taking the read lock: the version is
+        // frozen for the whole operation (invalidation rule 2) and a
+        // writer holding the write lock cannot stall us
+        let snap = self.pin_snapshot();
         let key = probe_key(spec);
         {
             let mut cache = lock(&self.shared.cache);
-            cache.observe_epoch(epoch);
-            if let Some(reply) = cache.get(&key, epoch) {
+            if let Some(reply) = cache.get(&key, snap.version) {
                 return reply;
             }
         }
         CALLER_SCRATCH.with(|s| {
-            probe_and_cache(
-                &inst,
-                &self.shared.cache,
-                &key,
-                spec,
-                epoch,
-                &mut s.borrow_mut(),
-            )
+            probe_and_cache(&snap, &self.shared.cache, &key, spec, &mut s.borrow_mut())
         })
     }
 
     /// Serve one feasibility probe through the **sharded** intra-match
     /// path: cache hit within the current epoch, or one traversal whose
     /// candidate scan splits into up to `shards` contiguous top-level
-    /// subtree ranges fanned across the dedicated shard pool (see the
-    /// module docs). Falls back to the sequential [`SchedService::probe`]
+    /// subtree ranges fanned across the worker pool, each shard job
+    /// holding its own pinned snapshot (see the module docs). Falls back
+    /// to the sequential [`SchedService::probe`]
     /// traversal when `shards <= 1`, the pool size is 0, or the plan
     /// collapses to one range.
     ///
@@ -880,85 +859,86 @@ impl SchedService {
     /// Sharded-probe core (untimed; [`SchedService::probe_sharded`] wraps
     /// it with the telemetry record).
     fn probe_sharded_impl(&self, spec: &JobSpec, shards: usize) -> SchedReply {
-        // hold the read lock across lookup, traversal, and insert, exactly
-        // like `probe` (invalidation rule 2)
-        let inst = read_lock(&self.shared.inst);
-        let epoch = inst.graph.epoch();
+        // pin a snapshot instead of taking the read lock, exactly like
+        // `probe` (invalidation rule 2)
+        let snap = self.pin_snapshot();
         let key = probe_key(spec);
         {
             let mut cache = lock(&self.shared.cache);
-            cache.observe_epoch(epoch);
-            if let Some(reply) = cache.get(&key, epoch) {
+            if let Some(reply) = cache.get(&key, snap.version) {
                 return reply;
             }
         }
         CALLER_SCRATCH.with(|s| {
-            self.sharded_probe_and_cache(&inst, &key, spec, epoch, shards, &mut s.borrow_mut())
+            self.sharded_probe_and_cache(&snap, &key, spec, shards, &mut s.borrow_mut())
         })
     }
 
-    /// Sharded twin of [`probe_and_cache`]: traverse through the shard
-    /// pool and record the reply at the epoch the caller's read lock
-    /// froze. The single copy of the sharded path's cache-coherence
-    /// sequence (both `probe_sharded` and the batched single-spec read
-    /// phase funnel through here).
+    /// Sharded twin of [`probe_and_cache`]: traverse through the pool and
+    /// record the reply at the pinned version. The single copy of the
+    /// sharded path's cache-coherence sequence (both `probe_sharded` and
+    /// the batched single-spec read phase funnel through here).
     fn sharded_probe_and_cache(
         &self,
-        inst: &SchedInstance,
+        snap: &Arc<GraphSnapshot>,
         key: &str,
         spec: &JobSpec,
-        epoch: u64,
         shards: usize,
         scratch: &mut MatchScratch,
     ) -> SchedReply {
-        let reply = self.probe_sharded_locked(inst, spec, shards, scratch);
+        let reply = self.probe_sharded_snapshot(snap, spec, shards, scratch);
         let mut cache = lock(&self.shared.cache);
-        cache.observe_epoch(epoch);
-        cache.insert(key.to_string(), epoch, reply.clone());
+        cache.insert(key.to_string(), snap.version, reply.clone());
         reply
     }
 
-    /// Sharded traversal core, run while the caller holds the instance
-    /// read lock: compile once into the dispatcher scratch, then fan each
-    /// top-level request across the shard pool.
-    fn probe_sharded_locked(
+    /// Sharded traversal core against a pinned snapshot: compile once into
+    /// the dispatcher scratch, then fan each top-level request across the
+    /// pool.
+    fn probe_sharded_snapshot(
         &self,
-        inst: &SchedInstance,
+        snap: &Arc<GraphSnapshot>,
         spec: &JobSpec,
         shards: usize,
         scratch: &mut MatchScratch,
     ) -> SchedReply {
-        if shards <= 1 || self.shard_pool.target == 0 {
-            return inst.probe_with(spec, scratch);
+        if shards <= 1 || self.pool.target == 0 {
+            return snap.probe_with(spec, scratch);
         }
-        compile_spec_into(&inst.graph, &inst.prune, spec, scratch);
-        let mut exec = |job: &ShardJob<'_>| self.shard_exec(job);
-        match probe_sharded_compiled(&inst.graph, &inst.prune, spec, scratch, shards, &mut exec) {
+        compile_spec_into(&snap.graph, &snap.prune, spec, scratch);
+        let mut exec = |job: &ShardJob<'_>| self.shard_exec(snap, job);
+        match probe_sharded_compiled(&snap.graph, &snap.prune, spec, scratch, shards, &mut exec) {
             Ok((vertices, visited)) => SchedReply::Probed { visited, vertices },
             Err(e) => SchedReply::err(code::NO_MATCH, e.to_string()),
         }
     }
 
-    /// Execute one [`ShardJob`] across the shard pool: claim-by-cursor
-    /// dispatch, blocking wait until every shard is answered or every
-    /// worker has checked out, then an inline fallback for any shard the
-    /// pool lost (send failure or worker panic — the panic itself
-    /// re-raises here via `run_shard` reproducing it, or more typically the
-    /// shard just recomputes cleanly on this thread).
-    fn shard_exec(&self, job: &ShardJob<'_>) -> Vec<ShardScan> {
+    /// Execute one [`ShardJob`] across the pool: build a fully owned
+    /// [`ShardRun`] (pinning `snap` and copying the compiled tables +
+    /// merged selection out of the dispatcher's borrowed job), dispatch by
+    /// claim-cursor, block until every shard is answered or every worker
+    /// has checked out, then an inline fallback for any shard the pool
+    /// lost (send failure or worker panic — the panic itself re-raises
+    /// here via `run_shard` reproducing it, or more typically the shard
+    /// just recomputes cleanly on this thread).
+    fn shard_exec(&self, snap: &Arc<GraphSnapshot>, job: &ShardJob<'_>) -> Vec<ShardScan> {
         let n = job.ranges.len();
-        let txs = self.shard_pool.ensure_spawned();
+        let txs = self.pool.ensure_spawned(&self.shared);
         let fanout = txs.len().min(n);
-        // probe_sharded_locked bails on a zero-target pool and
+        // probe_sharded_snapshot bails on a zero-target pool and
         // traverse_sharded on single-range plans, and ensure_spawned panics
         // rather than under-spawn — so there is always someone to dispatch
         // to (the lost-worker fallback below still covers dead channels)
         debug_assert!(fanout > 0);
+        debug_assert!(
+            std::ptr::eq(job.g, &snap.graph),
+            "shard jobs must traverse the pinned snapshot's graph"
+        );
         let run = Arc::new(ShardRun {
-            graph: job.g as *const ResourceGraph,
-            compiled: job.compiled as *const CompiledSpec,
-            base_selected: job.base_selected as *const BitSet,
-            req: job.req as *const ResourceReq,
+            snap: Arc::clone(snap),
+            compiled: job.compiled.clone(),
+            base_selected: job.base_selected.clone(),
+            req: job.req.clone(),
             nslots: job.nslots,
             ix: job.ix,
             ranges: job.ranges.to_vec(),
@@ -970,16 +950,15 @@ impl SchedService {
             }),
             done: Condvar::new(),
         });
-        // the wait inside is the other half of the ShardRun safety contract
         fan_out_and_wait(&txs, fanout, n, &run.progress, &run.done, || {
-            ShardMsg::Run(run.clone())
+            WorkerMsg::Shard(run.clone())
         });
         let mut results = lock(&run.results);
         let mut fallback: Option<MatchScratch> = None;
         (0..n)
             .map(|i| match results[i].take() {
                 Some(s) => s,
-                None => run_shard(job, i, fallback.get_or_insert_with(MatchScratch::new)),
+                None => run_shard(&run.job(), i, fallback.get_or_insert_with(MatchScratch::new)),
             })
             .collect()
     }
@@ -1006,7 +985,8 @@ impl SchedService {
     /// Enable the OCC two-phase sharded write path with (at most) `k`
     /// subtree shards (see the module docs' "Sharded write commits"
     /// bullet): the match half of `MatchAllocate`/`MatchGrowLocal` runs
-    /// under the read lock, and the instance commits prepared selections
+    /// against a pinned snapshot (no lock), and the instance commits
+    /// prepared selections
     /// through its subtree-sharded allocation maps
     /// ([`SchedInstance::set_write_shards`]). `k <= 1` (the default)
     /// restores the exact serial write path. Safe to toggle on a live
@@ -1030,13 +1010,15 @@ impl SchedService {
     /// re-encoding the spec; the key build (the pre-check's only
     /// allocation) is skipped entirely while the cache is empty.
     fn precheck_infeasible(&self, spec: &JobSpec) -> Result<Option<String>, SchedReply> {
-        let inst = read_lock(&self.shared.inst);
-        let epoch = inst.graph.epoch();
         let mut cache = lock(&self.shared.cache);
         if cache.map.is_empty() {
             return Ok(None);
         }
-        cache.observe_epoch(epoch);
+        // the latest published version is the stamp a fresh probe would
+        // pin; no instance lock, no pin — the pre-check only needs the
+        // number (a stale read is merely conservative: worst case one
+        // extra traversal under the write lock)
+        let epoch = self.shared.snapshots.version();
         let key = probe_key(spec);
         match cache.get(&key, epoch) {
             Some(reply)
@@ -1061,7 +1043,7 @@ impl SchedService {
     ///
     /// The pre-check rejection is epoch-consistent rather than
     /// write-instant-consistent: it is the answer the graph gave at the
-    /// moment the read lock was held, exactly like any probe — a writer
+    /// version the pre-check observed, exactly like any probe — a writer
     /// racing in between could have freed capacity. Callers that must
     /// re-test under the write lock can send the op through
     /// [`SchedService::write`] directly.
@@ -1147,18 +1129,20 @@ impl SchedService {
         }
         let key = key.unwrap_or_else(|| probe_key(spec));
         let mut cache = lock(&self.shared.cache);
-        cache.observe_epoch(epoch);
+        // no observe_epoch here: the OCC no-match path passes a pinned
+        // prepare version that may legitimately trail the newest write —
+        // the insert's dead-on-arrival guard already keeps it honest
         cache.insert(key, epoch, reply.clone());
     }
 
     /// The OCC two-phase sharded write path (module docs: "Sharded write
-    /// commits"). Phase 1 *prepares* under the read lock: the match —
-    /// fanned across the shard pool — runs against the frozen graph,
-    /// recording the epoch the selection is valid at. Phase 2 takes the
-    /// write lock only to validate and commit that selection, so
-    /// disjoint-subtree writers queue on the lock for the short commit
-    /// instead of the whole match. Validation maps onto the telemetry
-    /// counters one-to-one:
+    /// commits"). Phase 1 *prepares* against a pinned snapshot: the match
+    /// — fanned across the pool — runs against the frozen version with
+    /// **no lock held**, recording the version the selection is valid at.
+    /// Phase 2 takes the write lock only to validate and commit that
+    /// selection, so disjoint-subtree writers queue on the lock for the
+    /// short commit instead of the whole match. Validation maps onto the
+    /// telemetry counters one-to-one:
     ///
     /// - epoch unchanged, or moved with every prepared vertex still free
     ///   (a legitimate linearization — spec satisfaction depends only on
@@ -1177,16 +1161,16 @@ impl SchedService {
         shards: usize,
         precheck_key: Option<String>,
     ) -> SchedReply {
-        // phase 1: prepare under the read lock (epoch frozen for the match)
+        // phase 1: prepare against a pinned snapshot (version frozen for
+        // the match; no lock of any kind held while matching)
         let (prepared, prep_epoch, match_s) = {
-            let inst = read_lock(&self.shared.inst);
-            let epoch = inst.graph.epoch();
+            let snap = self.pin_snapshot();
             let (m, match_s) = CALLER_SCRATCH.with(|s| {
                 crate::util::metrics::time_it(|| {
-                    self.match_sharded_locked(&inst, spec, shards, &mut s.borrow_mut())
+                    self.match_sharded_snapshot(&snap, spec, shards, &mut s.borrow_mut())
                 })
             });
-            (m, epoch, match_s)
+            (m, snap.version, match_s)
         };
         let m = match prepared {
             Ok(m) => m,
@@ -1232,24 +1216,24 @@ impl SchedService {
         reply
     }
 
-    /// Prepare-phase match, run while the caller holds the instance read
-    /// lock: the OCC twin of [`SchedService::probe_sharded_locked`],
-    /// returning the full topologically-sorted selection for a later
-    /// commit. Falls back to the sequential compiled match when the plan
-    /// cannot fan out (the selection is bit-identical either way).
-    fn match_sharded_locked(
+    /// Prepare-phase match against a pinned snapshot: the OCC twin of
+    /// [`SchedService::probe_sharded_snapshot`], returning the full
+    /// topologically-sorted selection for a later commit. Falls back to
+    /// the sequential compiled match when the plan cannot fan out (the
+    /// selection is bit-identical either way).
+    fn match_sharded_snapshot(
         &self,
-        inst: &SchedInstance,
+        snap: &Arc<GraphSnapshot>,
         spec: &JobSpec,
         shards: usize,
         scratch: &mut MatchScratch,
     ) -> Result<MatchResult, MatchFail> {
-        compile_spec_into(&inst.graph, &inst.prune, spec, scratch);
-        if shards <= 1 || self.shard_pool.target == 0 {
-            return match_compiled(&inst.graph, &inst.prune, spec, scratch);
+        compile_spec_into(&snap.graph, &snap.prune, spec, scratch);
+        if shards <= 1 || self.pool.target == 0 {
+            return match_compiled(&snap.graph, &snap.prune, spec, scratch);
         }
-        let mut exec = |job: &ShardJob<'_>| self.shard_exec(job);
-        match_sharded_compiled(&inst.graph, &inst.prune, spec, scratch, shards, &mut exec)
+        let mut exec = |job: &ShardJob<'_>| self.shard_exec(snap, job);
+        match_sharded_compiled(&snap.graph, &snap.prune, spec, scratch, shards, &mut exec)
     }
 
     /// Run a queue of ops, partitioned into read/write phases: maximal
@@ -1327,15 +1311,16 @@ impl SchedService {
     /// the pool (or inline for degenerate runs). `base` is the run's
     /// offset into `replies`.
     fn read_phase(&self, ops: &[SchedOp], base: usize, replies: &mut [Option<SchedReply>]) {
-        // 1. cache pass under the read lock (epoch frozen); misses dedup
-        //    into one task per distinct spec
+        // 1. pin one snapshot for the whole phase (every task probes the
+        //    same version — stronger phase consistency than the read-lock
+        //    era, where the fallback paths could re-lock at a newer
+        //    epoch); cache pass at that version, misses dedup into one
+        //    task per distinct spec
+        let snap = self.pin_snapshot();
         let mut tasks: Vec<ReadTask> = Vec::new();
         let mut task_of_key: HashMap<String, usize> = HashMap::new();
         {
-            let inst = read_lock(&self.shared.inst);
-            let epoch = inst.graph.epoch();
             let mut cache = lock(&self.shared.cache);
-            cache.observe_epoch(epoch);
             for (k, op) in ops.iter().enumerate() {
                 let SchedOp::Probe { spec } = op else {
                     unreachable!("read phases contain only read-only ops");
@@ -1345,7 +1330,7 @@ impl SchedService {
                     tasks[*ti].slots.push(base + k);
                     continue;
                 }
-                match cache.get(&key, epoch) {
+                match cache.get(&key, snap.version) {
                     Some(reply) => replies[base + k] = Some(reply),
                     None => {
                         task_of_key.insert(key.clone(), tasks.len());
@@ -1368,10 +1353,10 @@ impl SchedService {
             // the pool — as k subtree shards *within* the one traversal.
             let shards = self.read_shards();
             for task in &tasks {
-                let reply = if shards > 1 && self.shard_pool.target > 0 {
-                    self.compute_task_sharded(task, shards)
+                let reply = if shards > 1 && workers > 0 {
+                    self.compute_task_sharded(&snap, task, shards)
                 } else {
-                    self.compute_task(task)
+                    self.compute_task(&snap, task)
                 };
                 for &slot in &task.slots {
                     replies[slot] = Some(reply.clone());
@@ -1380,16 +1365,16 @@ impl SchedService {
             return;
         }
         // 2. fan out across the pool (spawned on first use); the
-        //    dispatcher holds NO lock while waiting (workers each take
-        //    their own read lock, so a queued writer can never deadlock
-        //    the phase)
+        //    dispatcher holds NO lock while waiting and workers probe the
+        //    phase's pinned snapshot, so a queued writer can never stall
+        //    or deadlock the phase
         let txs = self.pool.ensure_spawned(&self.shared);
         let ntasks = tasks.len();
         // never wake more workers than there are tasks — a surplus worker
-        // would only acquire the read lock, find the cursor exhausted, and
-        // check out
+        // would only find the cursor exhausted and check out
         let fanout = txs.len().min(ntasks);
         let run = Arc::new(ReadRun {
+            snap: Arc::clone(&snap),
             tasks,
             cursor: AtomicUsize::new(0),
             results: Mutex::new(Vec::with_capacity(ntasks)),
@@ -1400,7 +1385,7 @@ impl SchedService {
             done: Condvar::new(),
         });
         fan_out_and_wait(&txs, fanout, ntasks, &run.progress, &run.done, || {
-            WorkerMsg::Run(run.clone())
+            WorkerMsg::Read(run.clone())
         });
         let mut task_replies: Vec<Option<SchedReply>> = vec![None; ntasks];
         for (ti, reply) in lock(&run.results).drain(..) {
@@ -1410,7 +1395,7 @@ impl SchedService {
             // defense: compute any task the pool lost on this thread
             let reply = match task_replies[ti].take() {
                 Some(r) => r,
-                None => self.compute_task(task),
+                None => self.compute_task(&snap, task),
             };
             for &slot in &task.slots {
                 replies[slot] = Some(reply.clone());
@@ -1419,17 +1404,14 @@ impl SchedService {
     }
 
     /// Probe one task on the calling thread with its thread-local scratch
-    /// (and record it in the cache).
-    fn compute_task(&self, task: &ReadTask) -> SchedReply {
-        let inst = read_lock(&self.shared.inst);
-        let epoch = inst.graph.epoch();
+    /// against the phase's pinned snapshot (and record it in the cache).
+    fn compute_task(&self, snap: &Arc<GraphSnapshot>, task: &ReadTask) -> SchedReply {
         CALLER_SCRATCH.with(|s| {
             probe_and_cache(
-                &inst,
+                snap,
                 &self.shared.cache,
                 &task.key,
                 &task.spec,
-                epoch,
                 &mut s.borrow_mut(),
             )
         })
@@ -1437,19 +1419,15 @@ impl SchedService {
 
     /// Probe one task through the sharded intra-match path (the batched
     /// read phases' single-spec case) and record it in the cache at the
-    /// epoch frozen by this thread's read lock.
-    fn compute_task_sharded(&self, task: &ReadTask, shards: usize) -> SchedReply {
-        let inst = read_lock(&self.shared.inst);
-        let epoch = inst.graph.epoch();
+    /// phase's pinned version.
+    fn compute_task_sharded(
+        &self,
+        snap: &Arc<GraphSnapshot>,
+        task: &ReadTask,
+        shards: usize,
+    ) -> SchedReply {
         CALLER_SCRATCH.with(|s| {
-            self.sharded_probe_and_cache(
-                &inst,
-                &task.key,
-                &task.spec,
-                epoch,
-                shards,
-                &mut s.borrow_mut(),
-            )
+            self.sharded_probe_and_cache(snap, &task.key, &task.spec, shards, &mut s.borrow_mut())
         })
     }
 
@@ -1492,6 +1470,10 @@ impl SchedService {
         snap.cache_misses = c.misses;
         snap.cache_invalidations = c.invalidations;
         snap.cache_entries = c.entries as u64;
+        let s = self.snapshot_stats();
+        snap.snapshot_pins = s.pins;
+        snap.snapshot_publishes = s.publishes;
+        snap.snapshots_retired = s.retired;
         snap
     }
 }

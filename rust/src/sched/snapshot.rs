@@ -1,0 +1,253 @@
+//! Epoch-versioned RCU snapshots of the resource graph (PR 9).
+//!
+//! The lock-free read path: writers keep mutating the authoritative
+//! [`crate::sched::SchedInstance`] under the service `RwLock` exactly as
+//! before, but every write now ends with a **publish** — a cheap
+//! [`ResourceGraph::clone`] (copy-on-write: refcount bumps, see
+//! `resource::graph` §Snapshots) swapped into a [`SnapshotHead`]. Readers
+//! **pin** the head (`Arc::clone` under a pointer-sized critical section)
+//! and traverse their pinned [`GraphSnapshot`] with no instance lock held:
+//! a probe issued while a writer holds the write lock completes against
+//! the prior version without blocking.
+//!
+//! §Version lifecycle: `publish(E)` → any number of `pin()`s at `E` →
+//! superseded by `publish(E')` → **retired** when the last pin drops (the
+//! `Arc` refcount reaching zero runs [`GraphSnapshot`]'s `Drop`, which is
+//! counted — the leak test in `tests/rcu.rs` holds the accounting to
+//! exactly `live = 1 + published − retired`). There is no grace-period
+//! machinery to get wrong: retirement *is* `Arc` reclamation.
+//!
+//! §Why a `Mutex` head is still "lock-free enough": the head mutex guards
+//! two pointer copies (readers: `Arc::clone`; writers: pointer swap) and
+//! is never held across traversal, I/O, or allocation of the new version —
+//! writers build the next graph entirely off to the side. Readers can
+//! therefore stall each other for the duration of a refcount bump, but
+//! never behind a writer's graph mutation, which is the hazard that
+//! matters (and the one the stress test pins down with a deliberately
+//! stalled writer). `std` has no `AtomicArc`; this is the std-only RCU.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::jobspec::JobSpec;
+use crate::resource::graph::ResourceGraph;
+use crate::rpc::proto::SchedReply;
+use crate::sched::instance::probe_graph;
+use crate::sched::matcher::MatchScratch;
+use crate::sched::pruning::PruneConfig;
+
+/// One immutable published version of the resource graph, pinned by
+/// readers via `Arc<GraphSnapshot>`. Holds everything a probe needs —
+/// graph and pruning config — so the read path never touches the live
+/// instance.
+#[derive(Debug)]
+pub struct GraphSnapshot {
+    /// The graph as of `version` (COW clone — shares chunks with the
+    /// authoritative graph until a writer touches them).
+    pub graph: ResourceGraph,
+    /// Pruning configuration the graph's aggregates were built under.
+    pub prune: PruneConfig,
+    /// The graph epoch this version was published at. Monotonic across
+    /// publishes; equal versions imply bit-identical observable state,
+    /// so this is also the probe-cache key for results computed here.
+    pub version: u64,
+    /// Retirement counter shared with the head (bumped on drop).
+    retired: Arc<AtomicU64>,
+}
+
+impl GraphSnapshot {
+    /// Feasibility probe against this pinned version. Same reply
+    /// vocabulary as [`crate::sched::SchedInstance::probe_with`]; takes no
+    /// lock of any kind.
+    pub fn probe_with(&self, spec: &JobSpec, scratch: &mut MatchScratch) -> SchedReply {
+        probe_graph(&self.graph, &self.prune, spec, scratch)
+    }
+}
+
+impl Drop for GraphSnapshot {
+    fn drop(&mut self) {
+        // last unpin retires the version; counted so leak tests (and
+        // telemetry) can assert reclamation actually happens
+        self.retired.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Pin/publish/retire statistics (surfaced through service telemetry).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SnapshotStats {
+    /// Reader pins taken (`SnapshotHead::pin` calls).
+    pub pins: u64,
+    /// Versions published after the initial one.
+    pub publishes: u64,
+    /// Versions fully retired (dropped by their last pinner).
+    pub retired: u64,
+    /// Versions currently reachable: the head plus any still pinned.
+    pub live: u64,
+}
+
+/// The RCU head: the latest published [`GraphSnapshot`] plus lifecycle
+/// counters. One per [`crate::sched::SchedService`].
+#[derive(Debug)]
+pub struct SnapshotHead {
+    /// Latest version. The mutex critical section is two pointer copies —
+    /// see the module docs for why this never blocks readers behind
+    /// writers.
+    head: Mutex<Arc<GraphSnapshot>>,
+    published: AtomicU64,
+    pins: AtomicU64,
+    retired: Arc<AtomicU64>,
+}
+
+impl SnapshotHead {
+    /// Start the version chain with an initial published snapshot.
+    pub fn new(graph: &ResourceGraph, prune: &PruneConfig) -> SnapshotHead {
+        let retired = Arc::new(AtomicU64::new(0));
+        let first = Arc::new(GraphSnapshot {
+            graph: graph.clone(),
+            prune: prune.clone(),
+            version: graph.epoch(),
+            retired: Arc::clone(&retired),
+        });
+        SnapshotHead {
+            head: Mutex::new(first),
+            published: AtomicU64::new(0),
+            pins: AtomicU64::new(0),
+            retired,
+        }
+    }
+
+    /// Pin the latest published version. Wait-free in practice: the lock
+    /// covers one `Arc::clone`.
+    pub fn pin(&self) -> Arc<GraphSnapshot> {
+        self.pins.fetch_add(1, Ordering::Relaxed);
+        let head = self
+            .head
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner());
+        Arc::clone(&head)
+    }
+
+    /// Version of the latest published snapshot, without taking a pin
+    /// (used by pre-checks that only need the stamp, not the graph).
+    pub fn version(&self) -> u64 {
+        self.head
+            .lock()
+            .unwrap_or_else(|poisoned| poisoned.into_inner())
+            .version
+    }
+
+    /// Publish a new version cloned from the authoritative graph. Called
+    /// by the service write guard on drop, while the write lock is still
+    /// held — so publishes are totally ordered and `version` is monotonic
+    /// along the chain.
+    pub fn publish(&self, graph: &ResourceGraph, prune: &PruneConfig) {
+        let next = Arc::new(GraphSnapshot {
+            graph: graph.clone(),
+            prune: prune.clone(),
+            version: graph.epoch(),
+            retired: Arc::clone(&self.retired),
+        });
+        let prev = {
+            let mut head = self
+                .head
+                .lock()
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            std::mem::replace(&mut *head, next)
+        };
+        self.published.fetch_add(1, Ordering::Relaxed);
+        // superseded version (if unpinned) retires here, outside the lock
+        drop(prev);
+    }
+
+    /// Lifecycle counters. `live` counts versions not yet retired — with
+    /// no outstanding reader pins it must be exactly 1 (the head), which
+    /// is the no-leak invariant.
+    pub fn stats(&self) -> SnapshotStats {
+        let publishes = self.published.load(Ordering::Relaxed);
+        let retired = self.retired.load(Ordering::Relaxed);
+        SnapshotStats {
+            pins: self.pins.load(Ordering::Relaxed),
+            publishes,
+            retired,
+            live: 1 + publishes - retired,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobspec::table1_jobspec;
+    use crate::resource::builder::{table2_graph, UidGen};
+
+    // build through SchedInstance::new so pruning aggregates are
+    // initialized before the first version is published (the service does
+    // the same)
+    fn head() -> (ResourceGraph, PruneConfig, SnapshotHead) {
+        let inst = crate::sched::SchedInstance::new(
+            table2_graph(0, &mut UidGen::new()),
+            PruneConfig::default(),
+        );
+        let h = SnapshotHead::new(&inst.graph, &inst.prune);
+        (inst.graph, inst.prune, h)
+    }
+
+    #[test]
+    fn pin_returns_latest_published_version() {
+        let (mut g, prune, h) = head();
+        let v0 = h.pin().version;
+        assert_eq!(v0, g.epoch());
+        g.bump_epochs(3);
+        h.publish(&g, &prune);
+        let pinned = h.pin();
+        assert_eq!(pinned.version, g.epoch());
+        assert!(pinned.version > v0);
+        assert_eq!(h.stats().pins, 2);
+        assert_eq!(h.stats().publishes, 1);
+    }
+
+    #[test]
+    fn old_version_survives_while_pinned_and_retires_on_unpin() {
+        let (mut g, prune, h) = head();
+        let old = h.pin();
+        let old_version = old.version;
+        g.bump_epochs(1);
+        h.publish(&g, &prune);
+        // superseded but pinned: still readable, not retired
+        assert_eq!(old.version, old_version);
+        assert_eq!(h.stats().live, 2);
+        assert_eq!(h.stats().retired, 0);
+        drop(old);
+        let s = h.stats();
+        assert_eq!(s.retired, 1);
+        assert_eq!(s.live, 1, "only the head survives once unpinned");
+    }
+
+    #[test]
+    fn snapshot_probe_matches_instance_probe() {
+        let inst = crate::sched::SchedInstance::new(
+            table2_graph(0, &mut UidGen::new()),
+            PruneConfig::default(),
+        );
+        let h = SnapshotHead::new(&inst.graph, &inst.prune);
+        let spec = table1_jobspec("T1");
+        let mut s1 = MatchScratch::default();
+        let mut s2 = MatchScratch::default();
+        let a = inst.probe_with(&spec, &mut s1);
+        let b = h.pin().probe_with(&spec, &mut s2);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+    }
+
+    #[test]
+    fn churn_without_pins_keeps_exactly_one_live_version() {
+        let (mut g, prune, h) = head();
+        for _ in 0..100 {
+            g.bump_epochs(1);
+            h.publish(&g, &prune);
+        }
+        let s = h.stats();
+        assert_eq!(s.publishes, 100);
+        assert_eq!(s.retired, 100, "every superseded version retired");
+        assert_eq!(s.live, 1);
+    }
+}

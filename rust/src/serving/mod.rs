@@ -53,6 +53,7 @@
 //! knob), each re-issue counted via [`Telemetry::note_retry`]; the op still
 //! records exactly **one** harness latency sample covering all attempts.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::{Duration, Instant};
 
 use crate::hier::{ChaosConfig, Hierarchy, LevelSpec, LinkPolicy};
@@ -114,6 +115,16 @@ pub struct Scenario {
     /// a [`Target::Hierarchy`] it arms every level. Drives the
     /// multi-writer `churn` scenarios.
     pub write_shards: usize,
+    /// Background **churn-writer** threads run alongside the clients for
+    /// the whole replay (Service target only; 0 = none, the default).
+    /// Each loops allocate/free against the same service off-schedule —
+    /// open-loop measurement of the *read path under writer churn*: every
+    /// write publishes a fresh RCU snapshot version, so probes keep
+    /// completing against pinned versions while the write lock stays hot.
+    /// Churn ops are unmeasured by the harness (they are load, not
+    /// traffic) but show up in the service-side telemetry and snapshot
+    /// lifecycle counters. Drives the `churn-rcu` scenarios.
+    pub churn_writers: usize,
 }
 
 impl Scenario {
@@ -132,6 +143,7 @@ impl Scenario {
             target: Target::Service { level, workers },
             allocate_retries: 0,
             write_shards: 0,
+            churn_writers: 0,
         }
     }
 
@@ -154,6 +166,7 @@ impl Scenario {
             },
             allocate_retries: 0,
             write_shards: 0,
+            churn_writers: 0,
         }
     }
 
@@ -166,6 +179,12 @@ impl Scenario {
     /// Builder: set [`Scenario::write_shards`].
     pub fn with_write_shards(mut self, k: usize) -> Scenario {
         self.write_shards = k;
+        self
+    }
+
+    /// Builder: set [`Scenario::churn_writers`].
+    pub fn with_churn_writers(mut self, n: usize) -> Scenario {
+        self.churn_writers = n;
         self
     }
 }
@@ -366,24 +385,57 @@ fn run_service(
     let clients = sc.clients.max(1);
     let retries = sc.allocate_retries;
     let tenants = sc.trace.tenants;
+    let stop_churn = AtomicBool::new(false);
     let start = Instant::now();
+    let mut wall_s = 0.0;
     std::thread::scope(|scope| {
-        for c in 0..clients {
+        // background churn writers: unscheduled allocate/free load that
+        // keeps the write lock hot (and the snapshot head publishing) for
+        // the whole replay; stopped only after every client drains
+        for w in 0..sc.churn_writers {
             let svc = svc.clone();
+            let stop_churn = &stop_churn;
             scope.spawn(move || {
-                // per-thread live-job tracking: each tenant's list only
-                // sees this thread's slice of the plan, which is all
-                // grow/shrink/free need to exercise real lifecycles
-                let mut live: Vec<Vec<JobId>> = vec![Vec::new(); tenants];
-                for op in plan.iter().skip(c).step_by(clients) {
-                    wait_until(start, op.at_ns);
-                    let error = service_op(&svc, harness, &mut live, op, retries);
-                    record_op(harness, start, op, error);
+                let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+                let mut jobs: Vec<JobId> = Vec::new();
+                while !stop_churn.load(Ordering::Relaxed) {
+                    if let SchedReply::Allocated { job, .. } =
+                        svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() })
+                    {
+                        jobs.push(job);
+                    }
+                    // staggered depth per writer so frees interleave with
+                    // allocs instead of phase-locking across writers
+                    if jobs.len() > 2 + w {
+                        let job = jobs.remove(0);
+                        svc.apply(&SchedOp::FreeJob { job });
+                    }
+                }
+                for job in jobs {
+                    svc.apply(&SchedOp::FreeJob { job });
                 }
             });
         }
+        std::thread::scope(|clients_scope| {
+            for c in 0..clients {
+                let svc = svc.clone();
+                clients_scope.spawn(move || {
+                    // per-thread live-job tracking: each tenant's list only
+                    // sees this thread's slice of the plan, which is all
+                    // grow/shrink/free need to exercise real lifecycles
+                    let mut live: Vec<Vec<JobId>> = vec![Vec::new(); tenants];
+                    for op in plan.iter().skip(c).step_by(clients) {
+                        wait_until(start, op.at_ns);
+                        let error = service_op(&svc, harness, &mut live, op, retries);
+                        record_op(harness, start, op, error);
+                    }
+                });
+            }
+        });
+        // the replay's wall clock excludes the churn writers' drain
+        wall_s = start.elapsed().as_secs_f64();
+        stop_churn.store(true, Ordering::Relaxed);
     });
-    let wall_s = start.elapsed().as_secs_f64();
     (wall_s, vec![svc.telemetry_snapshot()])
 }
 
@@ -575,6 +627,31 @@ mod tests {
         assert_eq!(issued, 80);
         let svc = &r.services[0];
         assert!(svc.shard_commits > 0, "no commits took the sharded path");
+    }
+
+    /// Probe traffic under background churn writers: issued counts stay
+    /// plan-determined, and the snapshot lifecycle counters prove the
+    /// read path pinned RCU versions while the writers kept publishing.
+    #[test]
+    fn churn_rcu_scenario_pins_snapshots_while_writers_publish() {
+        let sc = Scenario::service(
+            "serve/churn-rcu@L1",
+            fast_trace(80, OpMix::probe_heavy()),
+            2,
+            1,
+            2,
+        )
+        .with_churn_writers(2);
+        assert_eq!(sc.churn_writers, 2);
+        let r = run_scenario(&sc);
+        assert_eq!(r.planned, 80);
+        let issued: u64 = r.issued_by_kind.iter().sum();
+        assert_eq!(issued, 80);
+        let svc = &r.services[0];
+        assert!(svc.snapshot_pins > 0, "no probe pinned a snapshot");
+        assert!(svc.snapshot_publishes > 0, "churn writers never published");
+        // every superseded version was reclaimed once the run drained
+        assert_eq!(svc.snapshot_publishes, svc.snapshots_retired);
     }
 
     #[test]

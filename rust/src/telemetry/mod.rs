@@ -550,6 +550,9 @@ impl Telemetry {
             shard_commits: self.shard_commits.load(Ordering::Relaxed),
             shard_conflicts: self.shard_conflicts.load(Ordering::Relaxed),
             spine_contentions: self.spine_contentions.load(Ordering::Relaxed),
+            snapshot_pins: 0,
+            snapshot_publishes: 0,
+            snapshots_retired: 0,
         }
     }
 }
@@ -609,6 +612,16 @@ pub struct TelemetrySnapshot {
     /// Sharded commits that saw the epoch move between prepare and commit
     /// but still validated (only the short spine section was contended).
     pub spine_contentions: u64,
+    /// RCU snapshot pins taken by the lock-free read path (stamped by the
+    /// service from its [`crate::sched::SnapshotStats`], like the cache
+    /// counters above; 0 from a raw [`Telemetry::snapshot`]).
+    pub snapshot_pins: u64,
+    /// Snapshot versions published by the write side (beyond the initial
+    /// one).
+    pub snapshot_publishes: u64,
+    /// Superseded snapshot versions fully retired (dropped by their last
+    /// pinner) — `publishes - retired` is the reclamation backlog.
+    pub snapshots_retired: u64,
 }
 
 impl TelemetrySnapshot {
@@ -680,7 +693,10 @@ impl TelemetrySnapshot {
                     .with("rollbacks", Json::from(self.rollbacks))
                     .with("shard_commits", Json::from(self.shard_commits))
                     .with("shard_conflicts", Json::from(self.shard_conflicts))
-                    .with("spine_contentions", Json::from(self.spine_contentions)),
+                    .with("spine_contentions", Json::from(self.spine_contentions))
+                    .with("snapshot_pins", Json::from(self.snapshot_pins))
+                    .with("snapshot_publishes", Json::from(self.snapshot_publishes))
+                    .with("snapshots_retired", Json::from(self.snapshots_retired)),
             )
             .with("kinds", Json::Arr(kinds))
     }

@@ -1,0 +1,230 @@
+//! RCU snapshot contract for the lock-free read path (PR 9).
+//!
+//! Three pillars, matching the design's acceptance criteria:
+//! 1. **No read ever takes the instance lock**: every probe flavor
+//!    (single, sharded, batched read phase through the pool) completes
+//!    while a writer deliberately stalls holding the write lock.
+//! 2. **Pinned versions are immutable**: a reader pinned at version E
+//!    keeps getting bit-identical match results while K writer threads
+//!    commit — the pinned `Arc<GraphSnapshot>` is the consistency unit.
+//! 3. **No snapshot leaks**: retirement is `Arc` reclamation, and the
+//!    lifecycle counters prove it — with no pins outstanding exactly one
+//!    version (the head) is live, no matter how much churn preceded.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fluxion::jobspec::JobSpec;
+use fluxion::resource::builder::{table2_graph, UidGen};
+use fluxion::sched::{
+    MatchScratch, PruneConfig, SchedInstance, SchedOp, SchedReply, SchedService,
+};
+
+fn service(level: usize, workers: usize) -> SchedService {
+    SchedService::with_workers(
+        SchedInstance::new(table2_graph(level, &mut UidGen::new()), PruneConfig::default()),
+        workers,
+    )
+}
+
+/// The acceptance stress: a writer takes the write lock and STALLS on it.
+/// Every read-path flavor must still complete promptly — pre-PR 9, each of
+/// these queued behind the stalled guard (readers block while a writer
+/// holds, or even waits for, an `RwLock`). The deadline turns "probe
+/// acquired the instance lock" into a deterministic failure instead of a
+/// hang.
+#[test]
+fn probes_complete_while_a_writer_stalls_on_the_write_lock() {
+    let svc = service(1, 4); // L1: 8 nodes
+    let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+    let expected = svc.probe(&spec);
+    assert!(matches!(expected, SchedReply::Probed { .. }));
+
+    // park a writer inside the guard; `held` fires only once the write
+    // lock is genuinely held
+    let (held_tx, held_rx) = channel();
+    let (release_tx, release_rx) = channel::<()>();
+    let stalled = {
+        let svc = svc.clone();
+        std::thread::spawn(move || {
+            let guard = svc.write();
+            held_tx.send(()).expect("main thread alive");
+            release_rx.recv().expect("released");
+            drop(guard);
+        })
+    };
+    held_rx.recv().expect("writer reached the guard");
+
+    // all three read flavors on a helper thread, against a cleared cache
+    // (real traversals, not cache hits), with a hard deadline
+    let (done_tx, done_rx) = channel();
+    let prober = {
+        let svc = svc.clone();
+        let spec = spec.clone();
+        let expected = expected.clone();
+        std::thread::spawn(move || {
+            svc.clear_cache();
+            assert_eq!(svc.probe(&spec), expected);
+            svc.clear_cache();
+            // sharded contract: feasibility + vertex count identical,
+            // `visited` an upper bound
+            match (svc.probe_sharded(&spec, 4), &expected) {
+                (
+                    SchedReply::Probed { vertices: a, .. },
+                    SchedReply::Probed { vertices: b, .. },
+                ) => assert_eq!(a, *b),
+                (other, _) => panic!("sharded probe failed under stall: {other:?}"),
+            }
+            svc.clear_cache();
+            let ops: Vec<SchedOp> = (1..=4u64)
+                .map(|n| SchedOp::Probe {
+                    spec: JobSpec::nodes_sockets_cores(n, 2, 16),
+                })
+                .collect();
+            let replies = svc.apply_batch(&ops);
+            assert!(
+                replies.iter().all(|r| matches!(r, SchedReply::Probed { .. })),
+                "batched read phase failed under stall: {replies:?}"
+            );
+            done_tx.send(()).expect("main thread alive");
+        })
+    };
+    done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("read path blocked behind a stalled writer — probes must never take the instance lock");
+    prober.join().expect("prober panicked");
+    release_tx.send(()).expect("stalled writer alive");
+    stalled.join().expect("stalled writer panicked");
+    svc.read().check().unwrap();
+}
+
+/// Property: a reader pinned at version E observes bit-identical match
+/// results for the pin's whole lifetime, no matter how many writers
+/// commit (and publish) behind it. The pinned snapshot IS version E —
+/// there is no window where a reader sees a mix of epochs.
+#[test]
+fn pinned_reader_sees_bit_identical_results_while_writers_commit() {
+    const WRITERS: usize = 3;
+    const CYCLES: usize = 60;
+    let svc = service(1, 4); // L1: 8 nodes
+    let specs: Vec<JobSpec> = (1..=4u64)
+        .map(|n| JobSpec::nodes_sockets_cores(n, 2, 16))
+        .collect();
+
+    let snap = svc.pin_snapshot();
+    let pinned_version = snap.version;
+    let baseline: Vec<SchedReply> = {
+        let mut scratch = MatchScratch::new();
+        specs.iter().map(|s| snap.probe_with(s, &mut scratch)).collect()
+    };
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader = {
+        let snap = Arc::clone(&snap);
+        let specs = specs.clone();
+        let baseline = baseline.clone();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut scratch = MatchScratch::new();
+            let mut rounds = 0usize;
+            // probe-then-check-stop: at least one full round always runs
+            loop {
+                for (spec, expect) in specs.iter().zip(&baseline) {
+                    let r = snap.probe_with(spec, &mut scratch);
+                    assert_eq!(
+                        &r, expect,
+                        "pinned version {pinned_version} drifted mid-pin"
+                    );
+                }
+                rounds += 1;
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            rounds
+        })
+    };
+
+    let mut writers = Vec::new();
+    for _ in 0..WRITERS {
+        let svc = svc.clone();
+        let spec = specs[0].clone();
+        writers.push(std::thread::spawn(move || {
+            for _ in 0..CYCLES {
+                let reply = svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() });
+                let SchedReply::Allocated { job, .. } = reply else {
+                    panic!("writer allocation failed (>= 5 nodes always free): {reply:?}");
+                };
+                let freed = svc.apply(&SchedOp::FreeJob { job });
+                assert!(matches!(freed, SchedReply::Freed { .. }), "{freed:?}");
+            }
+        }));
+    }
+    for w in writers {
+        w.join().expect("writer panicked");
+    }
+    stop.store(true, Ordering::Relaxed);
+    let rounds = reader.join().expect("pinned reader panicked");
+    assert!(rounds >= 1);
+
+    // the writers really did publish past the pin...
+    assert_eq!(snap.version, pinned_version);
+    assert!(
+        svc.epoch() > pinned_version,
+        "writers committed, the head must have moved past the pin"
+    );
+    let stats = svc.snapshot_stats();
+    assert!(
+        stats.publishes >= (WRITERS * CYCLES * 2) as u64,
+        "every alloc and free publishes: {stats:?}"
+    );
+    // ...and with our pin still held, exactly two versions are live: the
+    // pinned one and the head
+    assert_eq!(stats.live, 2, "{stats:?}");
+    drop(snap);
+    assert_eq!(svc.snapshot_stats().live, 1);
+    svc.read().check().unwrap();
+}
+
+/// No-leak invariant: versions retire the moment their last pin drops.
+/// After arbitrary churn with no reader pinned, exactly one version (the
+/// head) is live and `publishes == retired`; a held pin keeps exactly one
+/// superseded version alive, releasing it reclaims immediately.
+#[test]
+fn snapshot_versions_retire_exactly_when_unpinned() {
+    let svc = service(3, 2); // L3: 2 nodes
+    let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+    for _ in 0..100 {
+        let SchedReply::Allocated { job, .. } =
+            svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() })
+        else {
+            panic!("allocation failed on a free graph");
+        };
+        let freed = svc.apply(&SchedOp::FreeJob { job });
+        assert!(matches!(freed, SchedReply::Freed { .. }), "{freed:?}");
+    }
+    let s = svc.snapshot_stats();
+    assert!(s.publishes >= 200, "each alloc and free publishes: {s:?}");
+    assert_eq!(s.retired, s.publishes, "a superseded version leaked: {s:?}");
+    assert_eq!(s.live, 1, "only the head may remain live: {s:?}");
+
+    // a pin holds its version across supersession — and only that version
+    let pin = svc.pin_snapshot();
+    let SchedReply::Allocated { job, .. } =
+        svc.apply(&SchedOp::MatchAllocate { spec: spec.clone() })
+    else {
+        panic!("allocation failed on a free graph");
+    };
+    assert_eq!(svc.snapshot_stats().live, 2, "pinned old version + head");
+    let freed = svc.apply(&SchedOp::FreeJob { job });
+    assert!(matches!(freed, SchedReply::Freed { .. }), "{freed:?}");
+    // the alloc-era head was unpinned, so it retired on the free's publish
+    assert_eq!(svc.snapshot_stats().live, 2, "pinned old version + new head");
+    drop(pin);
+    let s = svc.snapshot_stats();
+    assert_eq!(s.live, 1, "unpinning must reclaim immediately: {s:?}");
+    assert_eq!(s.retired, s.publishes);
+    svc.read().check().unwrap();
+}
