@@ -28,6 +28,12 @@
 //!       a 3-level hierarchy (8-node root) replayed single-threaded,
 //!       without and with seeded link-fault injection, so the same seed
 //!       reports percentiles clean vs. faulty in one run
+//!   serve/kill-restart@L2
+//!       the serve/hier3 topology with write-ahead journaling armed and
+//!       the leaf level killed + rebuilt from its journal every 32 ops
+//!       (PR 10) — recovery (replay, grant-ledger reconcile, breaker
+//!       reset) runs on the replay clock, so the pair against serve/hier3
+//!       prices crash consistency at depth
 //!
 //! Every scenario also prints issued/error/retry/breaker-trip totals, and
 //! per-kind `name/kind` rows ride along in the JSON.
@@ -258,6 +264,33 @@ fn main() {
     ));
     r.report_rows(&mut report);
     print_totals(&r);
+    results.push(r);
+
+    // 5. the same 3-level topology with crash/recovery cycles: journaling
+    //    armed on every level and the leaf killed + rebuilt from its
+    //    journal every 32 ops (PR 10). Each cycle replays the committed
+    //    prefix, reconciles grant ledgers with the parent, and resets the
+    //    link breaker — all on the replay clock, so recovery cost lands in
+    //    the surrounding ops' percentiles. Pairs against serve/hier3.
+    let kill_trace = OpTraceSpec {
+        ops: if smoke { 48 } else { 300 },
+        seed,
+        rate_ops_per_sec: if smoke { 150.0 } else { 100.0 },
+        mix: OpMix::balanced(),
+        tenants: 4,
+        nodes: (1, 2),
+    };
+    let r = run_scenario(
+        &Scenario::hierarchy("serve/kill-restart@L2", kill_trace, 1, hier_levels(), None)
+            .with_kill_restart(2, 32),
+    );
+    r.report_rows(&mut report);
+    print_totals(&r);
+    let leaf = r.services.last().expect("leaf snapshot");
+    println!(
+        "  (recovery: {} journal appends, {} replayed, {} reconciles, {} orphans released)",
+        leaf.journal_appends, leaf.journal_replays, leaf.reconciles, leaf.orphans_released
+    );
     results.push(r);
 
     let total_ops: usize = results.iter().map(|r| r.planned).sum();

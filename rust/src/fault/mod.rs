@@ -18,6 +18,11 @@
 //!   ([`RetryPolicy`], [`Backoff`], [`RetryConn`], [`RetryingProvider`])
 //!   and the quarantine circuit breaker ([`CircuitBreaker`]) that
 //!   `hier` attaches to every parent link.
+//! - **Crashes** — scripted whole-level kills ([`CrashPlan`]) that fire at
+//!   the journal/reconcile lifecycle points ([`CrashPoint`]) where crash
+//!   recovery (PR 10, [`crate::sched::journal`]) has something to prove:
+//!   orphaned grants, uncommitted journal suffixes, interrupted
+//!   reconciliation.
 //!
 //! ## Retry semantics (at-most-once for mutations)
 //!
@@ -274,6 +279,13 @@ impl FaultInjector {
     /// Snapshot of every decision made so far.
     pub fn stats(&self) -> FaultStats {
         self.lock().stats
+    }
+
+    /// Zero the decision counters (scripts, rates, and rng position are
+    /// untouched — this resets *bookkeeping*, not behaviour).
+    /// `Hierarchy::reset` calls this so stats don't leak across runs.
+    pub fn reset_stats(&self) {
+        self.lock().stats = FaultStats::default();
     }
 
     fn lock(&self) -> std::sync::MutexGuard<'_, InjectorState> {
@@ -645,6 +657,76 @@ impl CommitFaultPlan {
 }
 
 // ---------------------------------------------------------------------------
+// Scripted level crashes
+// ---------------------------------------------------------------------------
+
+/// Where in an op's lifecycle a scripted crash fires (PR 10). Each point
+/// pins one distinct recovery obligation:
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Before the op's journal append: the crash leaves **no trace** — on
+    /// restart the op simply never happened. In the hierarchy this is the
+    /// child dying after its parent granted but before the child journaled
+    /// the splice, i.e. an **orphaned parent-side grant**.
+    PreJournal,
+    /// After the journal append but before the mutation commits: restart
+    /// finds an op frame with no commit frame and must **discard the
+    /// uncommitted suffix**. In the hierarchy this is the parent dying
+    /// after serving a grant without journaling it — the child holds a
+    /// **ghost job** the restarted parent has no record of.
+    PostJournal,
+    /// Mid-reconcile: the handshake reply was computed but the crash hits
+    /// before the initiator acts on it. The retried reconcile must be
+    /// idempotent and still converge.
+    MidReconcile,
+}
+
+/// Scripted, deterministic level-kill plan: a FIFO of [`CrashPoint`]s.
+/// Code at each crash site asks [`CrashPlan::fires`] whether the front of
+/// the script names *its* point; only then is the entry consumed and the
+/// crash simulated (the op aborts with [`crate::rpc::proto::code::CRASHED`]
+/// and the harness kills + restarts the level). A plain FIFO with no
+/// randomness — like [`CommitFaultPlan`] — so tests can say "crash exactly
+/// at the journal append of the 1st mutating op" and replay it from a
+/// `RECOVERY_SEED`.
+#[derive(Debug, Clone, Default)]
+pub struct CrashPlan {
+    script: VecDeque<CrashPoint>,
+}
+
+impl CrashPlan {
+    /// A plan that fires the scripted points in order, then never again.
+    pub fn script(points: &[CrashPoint]) -> CrashPlan {
+        CrashPlan {
+            script: points.iter().copied().collect(),
+        }
+    }
+
+    /// A single scripted crash.
+    pub fn once(point: CrashPoint) -> CrashPlan {
+        CrashPlan::script(&[point])
+    }
+
+    /// Does the crash fire *here*? Consumes the front entry only when it
+    /// matches `point`; a non-matching front stays queued for its own
+    /// site (sites poll in lifecycle order, so the front decides which
+    /// site dies first).
+    pub fn fires(&mut self, point: CrashPoint) -> bool {
+        if self.script.front() == Some(&point) {
+            self.script.pop_front();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Whether every scripted crash has fired.
+    pub fn is_exhausted(&self) -> bool {
+        self.script.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Quarantine circuit breaker
 // ---------------------------------------------------------------------------
 
@@ -780,6 +862,17 @@ impl CircuitBreaker {
     /// How many times a half-open trial restored the link.
     pub fn restores(&self) -> u64 {
         self.restores
+    }
+
+    /// Forget all history: back to `Closed` with zero failures, trips, and
+    /// restores. Used by `Hierarchy::reset` (stale breaker state must not
+    /// leak across test runs) and after a level restart (the rebuilt level
+    /// starts with a clean link).
+    pub fn reset(&mut self) {
+        self.failures = 0;
+        self.state = BreakerState::Closed;
+        self.trips = 0;
+        self.restores = 0;
     }
 }
 
@@ -997,5 +1090,60 @@ mod tests {
         b.record_failure(); // trial fails: straight back to open
         assert_eq!(b.state_name(), "open");
         assert_eq!(b.trips(), 2);
+    }
+
+    #[test]
+    fn breaker_reset_forgets_all_history() {
+        let mut b = CircuitBreaker::new(1, Duration::from_secs(60));
+        b.record_failure();
+        assert_eq!(b.state_name(), "open");
+        assert_eq!(b.trips(), 1);
+        b.reset();
+        assert_eq!(b.state_name(), "closed");
+        assert!(b.admit());
+        assert_eq!(b.trips(), 0);
+        assert_eq!(b.restores(), 0);
+        // and the failure count really is zeroed: one failure trips a
+        // threshold-1 breaker again, not an inherited count
+        b.record_failure();
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn injector_reset_stats_keeps_rng_position() {
+        let rates = FaultRates {
+            drop: 0.3,
+            corrupt: 0.3,
+            ..FaultRates::none()
+        };
+        let a = FaultInjector::new(9, rates);
+        let b = FaultInjector::new(9, rates);
+        for _ in 0..16 {
+            a.frame_fault();
+            b.frame_fault();
+        }
+        a.reset_stats();
+        assert_eq!(a.stats(), FaultStats::default());
+        // behaviour is untouched: both injectors keep making the same
+        // decisions after one of them reset its counters
+        for _ in 0..16 {
+            assert_eq!(a.frame_fault(), b.frame_fault());
+        }
+    }
+
+    #[test]
+    fn crash_plan_fires_only_at_the_front_point() {
+        let mut p = CrashPlan::script(&[CrashPoint::PostJournal, CrashPoint::PreJournal]);
+        // front is PostJournal: the PreJournal site must NOT consume it
+        assert!(!p.fires(CrashPoint::PreJournal));
+        assert!(!p.fires(CrashPoint::MidReconcile));
+        assert!(p.fires(CrashPoint::PostJournal));
+        // now PreJournal is the front
+        assert!(!p.fires(CrashPoint::PostJournal));
+        assert!(p.fires(CrashPoint::PreJournal));
+        assert!(p.is_exhausted());
+        assert!(!p.fires(CrashPoint::PreJournal), "exhausted plans never fire");
+        assert!(CrashPlan::default().is_exhausted());
+        assert!(!CrashPlan::once(CrashPoint::MidReconcile).is_exhausted());
     }
 }

@@ -39,6 +39,22 @@
 //! poisoning the node mutex (the internal `lock_node` helper tolerates the
 //! poison either way). [`LinkPolicy::chaos`] threads deterministic fault injection
 //! through every link for soak tests.
+//!
+//! §Crash recovery (PR 10): with [`Hierarchy::enable_journals`] every
+//! level write-ahead journals its mutations ([`crate::sched::journal`])
+//! and records its **grant ledger** — the attach roots it granted to its
+//! child (`granted_roots`) and the roots it holds from its parent
+//! (`boot_roots` + `added_roots`) — as durable journal notes. A killed
+//! level ([`Hierarchy::kill_and_restart_level`]) rebuilds from snapshot +
+//! replay, re-registers with its parent, and runs the `Reconcile`
+//! handshake: parent and child exchange ledgers; **orphaned** parent-side
+//! grants (granted, never committed by the child) are released through
+//! the ordinary subtractive path, **ghost** child-side subtrees (held,
+//! never recorded by the parent) are cancelled. [`Hierarchy::maintain`]
+//! half-open trials run the same handshake, so a level coming back from
+//! quarantine re-converges its ledgers instead of just proving the link.
+//! The cross-level invariant ([`Hierarchy::check_ledgers`]): on every
+//! link, parent grants (boot + dynamic) = child claims, exactly.
 
 pub mod report;
 
@@ -47,8 +63,8 @@ use std::time::Duration;
 
 use crate::external::provider::ExternalProvider;
 use crate::fault::{
-    chaos_handler, panic_message, CircuitBreaker, FaultInjector, FaultRates, FaultyConn,
-    RetryConn, RetryPolicy,
+    chaos_handler, panic_message, CircuitBreaker, CrashPlan, CrashPoint, FaultInjector,
+    FaultRates, FaultyConn, RetryConn, RetryPolicy,
 };
 use crate::jobspec::JobSpec;
 use crate::resource::graph::JobId;
@@ -61,9 +77,10 @@ use crate::rpc::transport::{
 use crate::rpc::{Request, Response};
 use crate::sched::{PruneConfig, SchedInstance, SchedService, SnapshotStats};
 use crate::telemetry::TelemetrySnapshot;
+use crate::util::json::Json;
 use crate::util::metrics::Timer;
 
-pub use report::{GrowReport, LevelTiming};
+pub use report::{GrowReport, LevelTiming, RestartReport};
 
 /// How a level talks to its parent.
 #[derive(Debug, Clone, Copy)]
@@ -237,6 +254,22 @@ struct NodeState {
     /// with [`code::LEVEL_UNAVAILABLE`] until a half-open trial restores
     /// it.
     breaker: CircuitBreaker,
+    /// Parent-side grant ledger: attach roots of subgraphs this node
+    /// granted DOWN to its child dynamically (through the serve MatchGrow
+    /// path). A successful child-initiated shrink removes its root; a
+    /// `Reconcile` releases entries the child never committed (orphans).
+    granted_roots: std::collections::HashSet<String>,
+    /// Attach roots of the boot grant THIS node's graph was built from
+    /// (empty at L0). Part of the child-side claim set in reconciliation.
+    boot_roots: Vec<String>,
+    /// Attach roots of the boot grant this node carved out for its child
+    /// at build time (empty at the leaf). Statically granted — a child
+    /// claim matching one of these is never a ghost.
+    child_boot_roots: Vec<String>,
+    /// Scripted crash injection for the hierarchy-level crash sites
+    /// (grant splice, grant durability, mid-reconcile). Service-level op
+    /// sites are armed separately via `SchedService::set_crash_plan`.
+    crash_plan: CrashPlan,
 }
 
 impl NodeState {
@@ -382,6 +415,19 @@ impl NodeState {
                         ))
                     }
                 };
+                // crash site: the grant reply arrived (the ancestor already
+                // committed and charged it) but this level dies before
+                // splicing it in — the classic orphaned-grant window that
+                // restart reconciliation must close.
+                if self.crash_plan.fires(CrashPoint::PreJournal) {
+                    return Err(RpcError::new(
+                        code::CRASHED,
+                        format!(
+                            "injected: level {} crashed before splicing grant (orphan at parent)",
+                            self.level
+                        ),
+                    ));
+                }
                 // 3. top-down: splice the grant into our graph, charge it to
                 //    the child's job (it passes through to the requester).
                 //    Re-acquires the write side; a failed splice may still
@@ -501,6 +547,260 @@ impl NodeState {
     }
 }
 
+/// Grant-ledger bookkeeping and the parent-child reconciliation handshake
+/// (PR 10). The ledger is durable as journal notes: hierarchy mutations go
+/// through raw service write guards (no op frames), so each ledger write
+/// also forces a journal checkpoint — recovery = latest checkpoint + the
+/// last committed "ledger" note, exactly paired.
+impl NodeState {
+    /// Serialize the grant-ledger state (both sides: what we hold from the
+    /// parent, what we granted to the child) as one JSON document.
+    fn ledger_json(&self) -> Json {
+        let arr = |it: &mut dyn Iterator<Item = &String>| {
+            Json::Arr(it.map(|r| Json::from(r.as_str())).collect())
+        };
+        let sorted_set = |s: &std::collections::HashSet<String>| {
+            let mut v: Vec<&String> = s.iter().collect();
+            v.sort();
+            Json::Arr(v.into_iter().map(|r| Json::from(r.as_str())).collect())
+        };
+        let cloud = Json::Arr(
+            self.cloud_grants
+                .iter()
+                .map(|(roots, ids)| {
+                    Json::obj()
+                        .with("roots", Json::from(roots.as_str()))
+                        .with("ids", arr(&mut ids.iter()))
+                })
+                .collect(),
+        );
+        Json::obj()
+            .with("granted", sorted_set(&self.granted_roots))
+            .with("child_boot", arr(&mut self.child_boot_roots.iter()))
+            .with("boot", arr(&mut self.boot_roots.iter()))
+            .with("added", sorted_set(&self.added_roots))
+            .with("cloud", cloud)
+    }
+
+    /// Restore the ledger from a recovered journal note (inverse of
+    /// [`NodeState::ledger_json`]). Unknown/missing fields default empty.
+    fn apply_ledger(&mut self, data: &Json) {
+        let strs = |key: &str| -> Vec<String> {
+            data.get(key)
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|j| j.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        self.granted_roots = strs("granted").into_iter().collect();
+        self.child_boot_roots = strs("child_boot");
+        self.boot_roots = strs("boot");
+        self.added_roots = strs("added").into_iter().collect();
+        self.cloud_grants = data
+            .get("cloud")
+            .and_then(Json::as_arr)
+            .map(|a| {
+                a.iter()
+                    .filter_map(|j| {
+                        let roots = j.get("roots")?.as_str()?.to_string();
+                        let ids = j
+                            .get("ids")
+                            .and_then(Json::as_arr)
+                            .map(|ids| {
+                                ids.iter()
+                                    .filter_map(|i| i.as_str().map(str::to_string))
+                                    .collect()
+                            })
+                            .unwrap_or_default();
+                        Some((roots, ids))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+    }
+
+    /// Make the current graph + ledger state durable: checkpoint the op
+    /// journal (hier mutations bypass op frames) and append a "ledger"
+    /// note. No-op while journaling is off. Must NOT be called while a
+    /// service write guard is held (the checkpoint takes one).
+    fn journal_ledger(&self) {
+        if !self.inst.journal_enabled() {
+            return;
+        }
+        self.inst.journal_checkpoint();
+        self.inst.journal_note("ledger", self.ledger_json());
+    }
+
+    /// The claim set this node asserts to its PARENT: the boot grant plus
+    /// every dynamically spliced root, minus subtrees obtained from this
+    /// node's own provider (the parent never saw those — §3 per-user
+    /// specialization). Sorted + deduped for deterministic reconciles.
+    fn claimed_roots(&self) -> Vec<String> {
+        let cloud: std::collections::HashSet<&str> = self
+            .cloud_grants
+            .iter()
+            .flat_map(|(roots, _)| roots.split(','))
+            .collect();
+        let mut v: Vec<String> = self
+            .boot_roots
+            .iter()
+            .chain(self.added_roots.iter())
+            .filter(|r| !cloud.contains(r.as_str()))
+            .cloned()
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Parent side of the `Reconcile` handshake: the child asserted
+    /// `claimed`; release every ledgered grant the child does NOT claim
+    /// (orphans — granted, never committed below) through the ordinary
+    /// subtractive path, and report back every claim we have no record of
+    /// (ghosts — the child cancels those). Per-orphan errors are
+    /// tolerated: the entry stays ledgered and a retried reconcile
+    /// converges.
+    fn serve_reconcile(&mut self, claimed: &[String]) -> SchedReply {
+        let claimed_set: std::collections::HashSet<&str> =
+            claimed.iter().map(String::as_str).collect();
+        let mut orphans: Vec<String> = self
+            .granted_roots
+            .iter()
+            .filter(|r| !claimed_set.contains(r.as_str()))
+            .cloned()
+            .collect();
+        orphans.sort();
+        let mut released = 0u64;
+        for r in &orphans {
+            // shrink_return handles all three positions uniformly: owner
+            // (free the allocation), splicer (delete + keep ascending),
+            // cloud (release instances here)
+            match self.shrink_return(r) {
+                Ok(_) => {
+                    self.granted_roots.remove(r);
+                    released += 1;
+                }
+                // deterministic local refusal: there is nothing left to
+                // release (the grant is already physically gone — e.g. a
+                // child shrink that errored after this level's removal
+                // kept the entry ledgered). Settle it, don't count it.
+                Err(e) if e.code == code::SHRINK_FAILED => {
+                    self.granted_roots.remove(r);
+                }
+                // transient (quarantined / timed-out ascent): keep the
+                // entry — a retried reconcile converges once the link does
+                Err(_) => {}
+            }
+        }
+        let mut ghosts: Vec<String> = claimed
+            .iter()
+            .filter(|r| {
+                !self.granted_roots.contains(*r) && !self.child_boot_roots.contains(r)
+            })
+            .cloned()
+            .collect();
+        ghosts.sort();
+        ghosts.dedup();
+        if released > 0 {
+            self.inst.telemetry().note_orphans_released(released);
+            self.journal_ledger();
+        }
+        SchedReply::Reconciled {
+            orphans_released: released,
+            ghosts,
+        }
+    }
+
+    /// Child side of the handshake, breaker-gated. See
+    /// [`NodeState::reconcile_admitted`].
+    fn reconcile(&mut self) -> Result<(u64, Vec<String>), RpcError> {
+        if self.parent.is_none() {
+            return Ok((0, Vec::new()));
+        }
+        if !self.breaker.admit() {
+            return Err(level_unavailable(self.level, &self.breaker));
+        }
+        self.reconcile_admitted()
+    }
+
+    /// Send this node's claim set up the parent link and act on the
+    /// answer: parent-side orphans were already released over there; ghost
+    /// claims (subtrees the parent has no record of) are cancelled here by
+    /// deleting the subtree. The crash window between receiving the reply
+    /// and cancelling is scripted ([`CrashPoint::MidReconcile`]) — a
+    /// retried reconcile re-reports the same ghosts, so the handshake is
+    /// idempotent. Assumes the breaker already admitted the call (or the
+    /// caller IS the half-open trial).
+    fn reconcile_admitted(&mut self) -> Result<(u64, Vec<String>), RpcError> {
+        let roots = self.claimed_roots();
+        let conn = match &mut self.parent {
+            Some(conn) => conn,
+            None => return Ok((0, Vec::new())),
+        };
+        let called = conn.call(&Request::new(
+            self.level as u64,
+            SchedOp::Reconcile { roots },
+        ));
+        let resp = match called {
+            Ok(resp) => {
+                self.breaker.record_success();
+                resp
+            }
+            Err(e) => {
+                let trips = self.breaker.trips();
+                self.breaker.record_failure();
+                if self.breaker.trips() > trips {
+                    self.inst.telemetry().note_breaker_trip();
+                }
+                return Err(RpcError::from_io(
+                    &format!("level {}: reconcile ascent failed", self.level),
+                    &e,
+                ));
+            }
+        };
+        let (orphans_released, ghosts) = match resp.reply {
+            SchedReply::Reconciled {
+                orphans_released,
+                ghosts,
+            } => (orphans_released, ghosts),
+            SchedReply::Error(e) => return Err(e),
+            other => {
+                return Err(RpcError::new(
+                    code::BAD_REPLY,
+                    format!("parent sent unexpected '{}' reply to reconcile", other.name()),
+                ))
+            }
+        };
+        self.inst.telemetry().note_reconcile();
+        if self.crash_plan.fires(CrashPoint::MidReconcile) {
+            return Err(RpcError::new(
+                code::CRASHED,
+                format!(
+                    "injected: level {} crashed mid-reconcile (ghost cancellation pending)",
+                    self.level
+                ),
+            ));
+        }
+        for g in &ghosts {
+            // cancel: the parent never granted this subtree (its crash
+            // predates the grant's durability) — delete it outright; the
+            // vertices live on in the parent's inventory as free. Best
+            // effort: a retried reconcile after a partial cancel must not
+            // re-assert the claim, so the root leaves the ledger either way.
+            if self.added_roots.remove(g) {
+                let _ = self.inst.write().release_subtree(g);
+            }
+        }
+        if !ghosts.is_empty() {
+            self.journal_ledger();
+        }
+        Ok((orphans_released, ghosts))
+    }
+}
+
 /// Attach-root paths of a JGF document (nodes whose parent path is not in
 /// the document). One pass with a path set — grants are checked on every
 /// level they descend through, so this runs per level per MatchGrow.
@@ -585,6 +885,10 @@ impl Hierarchy {
             added_roots: std::collections::HashSet::new(),
             cloud_grants: Vec::new(),
             breaker: CircuitBreaker::new(policy.breaker_threshold, policy.breaker_cooldown),
+            granted_roots: std::collections::HashSet::new(),
+            boot_roots: Vec::new(),
+            child_boot_roots: Vec::new(),
+            crash_plan: CrashPlan::default(),
         }));
         nodes.push(root);
 
@@ -600,6 +904,10 @@ impl Hierarchy {
                     format!("level {level} boot: parent cannot grant {} nodes: {e}", spec.boot_nodes)
                 })?;
                 p.child_job = Some(out.job);
+                // boot ledger: these roots are statically granted — they
+                // anchor reconciliation (a child claim over them is never
+                // a ghost) but are not releasable orphan candidates
+                p.child_boot_roots = attach_roots(&out.subgraph);
                 (out.subgraph, p.inst.clone())
             };
             // per-link injectors: each link derives independent client and
@@ -656,6 +964,7 @@ impl Hierarchy {
                     .map_err(|e| e.to_string())?,
             );
             services.push(inst.clone());
+            let boot_roots = attach_roots(&grant);
             nodes.push(Arc::new(Mutex::new(NodeState {
                 level,
                 inst,
@@ -667,6 +976,10 @@ impl Hierarchy {
                 added_roots: std::collections::HashSet::new(),
                 cloud_grants: Vec::new(),
                 breaker: CircuitBreaker::new(policy.breaker_threshold, policy.breaker_cooldown),
+                granted_roots: std::collections::HashSet::new(),
+                boot_roots,
+                child_boot_roots: Vec::new(),
+                crash_plan: CrashPlan::default(),
             })));
         }
 
@@ -738,6 +1051,9 @@ impl Hierarchy {
         let total = Timer::start();
         let (jgf, levels) = n.match_grow(spec).map_err(|e| e.to_string())?;
         let total_s = total.elapsed_secs();
+        // the leaf's splice/allocation went through a raw write guard —
+        // checkpoint + ledger note make it crash-durable (no-op w/o journal)
+        n.journal_ledger();
         Ok(GrowReport {
             subgraph_size: jgf.size(),
             roots: attach_roots(&jgf),
@@ -761,7 +1077,9 @@ impl Hierarchy {
     pub fn shrink_from_leaf(&self, path: &str) -> Result<usize, String> {
         let leaf = self.nodes.last().expect("hierarchy has levels");
         let mut n = lock_node(leaf);
-        n.shrink_return(path).map_err(|e| e.to_string())
+        let removed = n.shrink_return(path).map_err(|e| e.to_string())?;
+        n.journal_ledger();
+        Ok(removed)
     }
 
     /// Restore every level to its post-boot snapshot (the "helper script
@@ -775,6 +1093,13 @@ impl Hierarchy {
     /// predates every grant, so after the rollback nothing references
     /// them), and `added_roots`/`cloud_grants` are cleared. Without this a
     /// reset would orphan provider instances.
+    ///
+    /// A reset is a full experiment reinitialization, so the *surrounding*
+    /// machinery resets with the graphs: per-level circuit breakers forget
+    /// their trip history, telemetry rate windows restart (histograms and
+    /// counters are cumulative and survive), fault-injector stats rewind
+    /// (the deterministic fault schedule itself keeps advancing), and the
+    /// dynamic grant ledgers return to their boot state.
     pub fn reset(&self) {
         for node in &self.nodes {
             let mut n = lock_node(node);
@@ -786,6 +1111,9 @@ impl Hierarchy {
                 }
             }
             n.added_roots.clear();
+            n.granted_roots.clear();
+            n.breaker.reset();
+            n.inst.telemetry().reset_rate_windows();
             if let Some((g, a)) = n.snapshot.clone() {
                 let mut guard = n.inst.write();
                 let inst = &mut *guard;
@@ -795,6 +1123,15 @@ impl Hierarchy {
                 // indexed against the pre-reset table — re-derive them
                 // from the restored one
                 inst.refresh_write_shards();
+            }
+            n.journal_ledger();
+        }
+        for (client, server) in &self.injectors {
+            if let Some(inj) = client {
+                inj.reset_stats();
+            }
+            if let Some(inj) = server {
+                inj.reset_stats();
             }
         }
     }
@@ -835,9 +1172,13 @@ impl Hierarchy {
     }
 
     /// One tick of link maintenance: every level whose parent-link breaker
-    /// has finished its cooldown sends a half-open trial probe through the
-    /// real link — a well-formed reply restores the level (quarantine
-    /// lifts), a transport failure re-opens it for another cooldown. Call
+    /// has finished its cooldown runs a half-open trial through the real
+    /// link — since PR 10 the trial is the full `Reconcile` handshake, not
+    /// a bare probe: a link that went dark may have dropped grant traffic
+    /// mid-flight, so re-admission doubles as ledger re-convergence
+    /// (orphans released at the parent, ghosts cancelled here). A
+    /// well-formed handshake restores the level (quarantine lifts), a
+    /// transport failure re-opens it for another cooldown. Call
     /// periodically (chaos soaks call it between ops). Returns
     /// `(level, state)` for every level below the root, observed after any
     /// trial.
@@ -846,27 +1187,9 @@ impl Hierarchy {
         for (level, node) in self.nodes.iter().enumerate().skip(1) {
             let mut n = lock_node(node);
             if n.parent.is_some() && n.breaker.state_name() == "half-open" && n.breaker.admit() {
-                let req = Request::new(
-                    level as u64,
-                    SchedOp::Probe {
-                        spec: JobSpec::nodes_sockets_cores(1, 1, 1),
-                    },
-                );
-                let trial = n
-                    .parent
-                    .as_mut()
-                    .expect("checked parent.is_some above")
-                    .call(&req);
-                match trial {
-                    Ok(_) => n.breaker.record_success(),
-                    Err(_) => {
-                        let trips = n.breaker.trips();
-                        n.breaker.record_failure();
-                        if n.breaker.trips() > trips {
-                            n.inst.telemetry().note_breaker_trip();
-                        }
-                    }
-                }
+                // reconcile_admitted records breaker success/failure and
+                // the trip-delta telemetry itself
+                let _ = n.reconcile_admitted();
             }
             states.push((level, n.breaker.state_name()));
         }
@@ -952,6 +1275,128 @@ impl Hierarchy {
         for svc in &self.services {
             svc.set_write_shards(k);
         }
+    }
+
+    /// Turn on write-ahead journaling at every level
+    /// ([`SchedService::enable_journal`]): the journal opens with a
+    /// snapshot of the current graph + alloc state and an initial "ledger"
+    /// note, so recovery is well-defined from this moment on regardless of
+    /// how much history preceded it.
+    pub fn enable_journals(&self, snapshot_every: u64) {
+        for node in &self.nodes {
+            let n = lock_node(node);
+            n.inst.enable_journal(snapshot_every);
+            n.inst.journal_note("ledger", n.ledger_json());
+        }
+    }
+
+    /// Arm a level's *hierarchy* crash sites (grant splice, grant
+    /// durability, mid-reconcile) with a scripted [`CrashPlan`]. The
+    /// service-level op sites (pre-/post-journal around `apply`) are armed
+    /// separately via [`Hierarchy::set_service_crash_plan`].
+    pub fn set_crash_plan(&self, level: usize, plan: CrashPlan) {
+        lock_node(&self.nodes[level]).crash_plan = plan;
+    }
+
+    /// Arm a level's service-side crash sites
+    /// ([`SchedService::set_crash_plan`]): `PreJournal` kills an op before
+    /// its journal append (no trace), `PostJournal` after the append but
+    /// before commit (an uncommitted suffix recovery must discard).
+    pub fn set_service_crash_plan(&self, level: usize, plan: CrashPlan) {
+        self.services[level].set_crash_plan(plan);
+    }
+
+    /// Run the child-initiated `Reconcile` handshake on one level's parent
+    /// link (no-op Ok at the root). Returns
+    /// `(orphans_released_at_parent, ghost_roots_cancelled_here)`.
+    pub fn reconcile_level(&self, level: usize) -> Result<(u64, Vec<String>), String> {
+        lock_node(&self.nodes[level])
+            .reconcile()
+            .map_err(|e| e.to_string())
+    }
+
+    /// Kill one level and bring it back: the level's live in-memory state
+    /// is discarded and replaced by what its write-ahead journal proves —
+    /// snapshot + bounded replay of the committed op suffix — then the
+    /// grant ledger is restored from the last committed "ledger" note, the
+    /// parent-link breaker starts fresh, and the level re-registers by
+    /// reconciling with its parent; the level below re-asserts its claims
+    /// the same way so grants the crashed level lost are released as
+    /// orphans. `matched_live` reports whether the recovered state was
+    /// bit-identical to the pre-kill live state (true for a clean kill;
+    /// deliberately false when a crash site suppressed durability).
+    pub fn kill_and_restart_level(&self, level: usize) -> Result<RestartReport, String> {
+        let (replayed, torn, uncommitted, matched_live, mut reconcile_errors) = {
+            let mut n = lock_node(&self.nodes[level]);
+            let rec = n
+                .inst
+                .recover_from_journal()
+                .ok_or_else(|| format!("level {level}: journaling not enabled"))?;
+            let matched_live = {
+                let live = n.inst.read();
+                crate::sched::states_bit_identical(&rec.inst, &live).is_ok()
+            };
+            n.inst.install_recovered(&rec.inst);
+            if let Some((_, data)) = rec.notes.iter().rev().find(|(tag, _)| tag == "ledger") {
+                let data = data.clone();
+                n.apply_ledger(&data);
+            }
+            // the restarted process has no memory of past link failures
+            n.breaker.reset();
+            n.inst.telemetry().note_journal_replays(rec.replayed);
+            let mut errors = Vec::new();
+            if let Err(e) = n.reconcile() {
+                errors.push(e.to_string());
+            }
+            (rec.replayed, rec.torn, rec.uncommitted, matched_live, errors)
+        };
+        // the child below re-asserts its claims against our rebuilt ledger
+        // (outside our node lock — its reconcile ascends into us)
+        if level + 1 < self.nodes.len() {
+            if let Err(e) = lock_node(&self.nodes[level + 1]).reconcile() {
+                reconcile_errors.push(e.to_string());
+            }
+        }
+        Ok(RestartReport {
+            level,
+            replayed,
+            torn,
+            uncommitted,
+            matched_live,
+            reconcile_errors,
+        })
+    }
+
+    /// The cross-level ledger invariant: on every parent-child link, the
+    /// parent's grant set (boot + dynamic) must equal the child's claim
+    /// set (boot + spliced, minus the child's own provider bursts) — every
+    /// grant has exactly one live holder and every held subtree exactly
+    /// one grantor. Violated between a crash and its reconcile; must hold
+    /// after.
+    pub fn check_ledgers(&self) -> Result<(), String> {
+        for i in 0..self.nodes.len().saturating_sub(1) {
+            let mut parent_side: Vec<String> = {
+                let p = lock_node(&self.nodes[i]);
+                p.granted_roots
+                    .iter()
+                    .chain(p.child_boot_roots.iter())
+                    .cloned()
+                    .collect()
+            };
+            parent_side.sort();
+            parent_side.dedup();
+            let child_side = lock_node(&self.nodes[i + 1]).claimed_roots();
+            if parent_side != child_side {
+                return Err(format!(
+                    "ledger divergence on link {}->{}: parent grants {:?} vs child claims {:?}",
+                    i,
+                    i + 1,
+                    parent_side,
+                    child_side
+                ));
+            }
+        }
+        Ok(())
     }
 
     /// Stop all servers. Called on drop as well.
@@ -1040,19 +1485,45 @@ fn node_handler(
 fn serve(n: &mut NodeState, req: Request) -> Response {
     match &req.op {
         SchedOp::MatchGrow { spec } => match n.match_grow(spec) {
-            Ok((jgf, levels)) => Response::ok(
-                req.id,
-                SchedReply::Grown {
-                    subgraph: jgf,
-                    levels,
-                },
-            ),
+            Ok((jgf, levels)) => {
+                // crash site: the grant reply leaves for the child but this
+                // level dies before its ledger write (and the checkpoint
+                // that would make the allocation durable) lands — after a
+                // restart the child holds a subtree this level has no
+                // record of: a ghost the Reconcile handshake cancels.
+                if n.crash_plan.fires(CrashPoint::PostJournal) {
+                    // skip durability on purpose; the reply still descends
+                } else {
+                    for r in attach_roots(&jgf) {
+                        n.granted_roots.insert(r);
+                    }
+                    n.journal_ledger();
+                }
+                Response::ok(
+                    req.id,
+                    SchedReply::Grown {
+                        subgraph: jgf,
+                        levels,
+                    },
+                )
+            }
             Err(e) => Response::ok(req.id, SchedReply::Error(e)),
         },
         SchedOp::ShrinkReturn { path } => match n.shrink_return(path) {
-            Ok(removed) => Response::ok(req.id, SchedReply::Removed { vertices: removed }),
+            Ok(removed) => {
+                // the child returned the subtree — its grant leaves the
+                // parent-side ledger (boot grants have no ledger entry)
+                if n.granted_roots.remove(path) {
+                    n.journal_ledger();
+                }
+                Response::ok(req.id, SchedReply::Removed { vertices: removed })
+            }
             Err(e) => Response::ok(req.id, SchedReply::Error(e)),
         },
+        SchedOp::Reconcile { roots } => {
+            let reply = n.serve_reconcile(roots);
+            Response::ok(req.id, reply)
+        }
         SchedOp::Probe { .. } => Response {
             id: req.id,
             reply: n.inst.apply(&req.op),
@@ -1331,6 +1802,65 @@ mod tests {
         assert_eq!(level, 0, "free capacity lives at the root");
         assert!(matches!(reply, SchedReply::Probed { .. }));
         h.grow_from_leaf(&spec).unwrap();
+        h.check_all().unwrap();
+        h.shutdown();
+    }
+
+    /// PR 10: the grant ledgers stay balanced through the dynamic
+    /// lifecycle, and a clean kill/restart recovers bit-identically from
+    /// the write-ahead journal and reconciles without incident.
+    #[test]
+    fn ledgers_balance_through_grow_and_clean_restart() {
+        let h = paper_hierarchy();
+        h.enable_journals(8);
+        h.check_ledgers().unwrap();
+        let report = h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
+        h.check_ledgers().unwrap();
+        let leaf = h.depth() - 1;
+        let r = h.kill_and_restart_level(leaf).unwrap();
+        assert!(r.matched_live, "clean kill must recover bit-identically: {r:?}");
+        assert!(r.reconcile_errors.is_empty(), "{:?}", r.reconcile_errors);
+        assert_eq!(r.torn, 0);
+        assert!(h.telemetry_snapshot_at(leaf).reconciles >= 1);
+        h.check_ledgers().unwrap();
+        h.check_all().unwrap();
+        // the restarted leaf still owns its grant: the shrink goes through
+        h.shrink_from_leaf(&report.roots[0]).unwrap();
+        h.check_ledgers().unwrap();
+        h.shutdown();
+    }
+
+    /// Satellite (PR 10): `reset` rewinds the surrounding machinery with
+    /// the graphs — breakers, injector stats, and the dynamic grant
+    /// ledgers all return to boot state.
+    #[test]
+    fn reset_rewinds_breakers_injector_stats_and_ledgers() {
+        let root = table2_graph(3, &mut UidGen::new()); // 2 nodes
+        let levels = [LevelSpec {
+            boot_nodes: 1,
+            link: LinkKind::InProc,
+        }];
+        let h = Hierarchy::build_with_policy(
+            root,
+            &levels,
+            None,
+            LinkPolicy {
+                chaos: Some(ChaosConfig::client_only(42, FaultRates::none())),
+                ..LinkPolicy::default()
+            },
+        )
+        .unwrap();
+        h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
+        let inj = h.client_injector(1).unwrap();
+        assert!(inj.stats().delivered > 0);
+        h.reset();
+        assert_eq!(inj.stats().delivered, 0, "reset rewinds injector stats");
+        assert_eq!(h.parent_link_state(1), "closed");
+        h.check_ledgers().unwrap();
+        // the dynamic ledger entries are gone: growing again re-grants
+        let report = h.grow_from_leaf(&table1_jobspec("T7")).unwrap();
+        assert!(!report.roots.is_empty());
+        h.check_ledgers().unwrap();
         h.check_all().unwrap();
         h.shutdown();
     }

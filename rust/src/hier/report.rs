@@ -24,6 +24,28 @@ pub struct GrowReport {
     pub roots: Vec<String>,
 }
 
+/// Outcome of one [`crate::hier::Hierarchy::kill_and_restart_level`]
+/// cycle: what the write-ahead journal proved, whether it matched the
+/// pre-kill live state, and how the post-restart reconciliation fared.
+#[derive(Debug, Clone)]
+pub struct RestartReport {
+    /// The level that was killed and restarted.
+    pub level: usize,
+    /// Committed op frames replayed on top of the recovery snapshot.
+    pub replayed: u64,
+    /// Torn frames discarded from the journal tail.
+    pub torn: u64,
+    /// Well-formed op frames dropped for lack of a commit frame.
+    pub uncommitted: u64,
+    /// Whether the recovered state was bit-identical to the pre-kill live
+    /// state (true for a clean kill; false when a scripted crash site
+    /// suppressed durability, i.e. the journal is legitimately behind).
+    pub matched_live: bool,
+    /// Errors from the parent/child reconcile handshakes (empty on a
+    /// fully converged restart; a later retry converges).
+    pub reconcile_errors: Vec<String>,
+}
+
 impl GrowReport {
     /// Sum of component times across levels — the paper reports this covers
     /// ≥98% of the measured total (§6).

@@ -25,6 +25,7 @@
 //! | `remove_subgraph`  | `path`                                         |
 //! | `match_grow`       | `spec`                                         |
 //! | `shrink_return`    | `path`                                         |
+//! | `reconcile`        | `roots` (array of strings)                     |
 //!
 //! | `"reply"`   | fields                                                  |
 //! |-------------|---------------------------------------------------------|
@@ -34,6 +35,7 @@
 //! | `freed`     | `vertices`                                              |
 //! | `removed`   | `vertices`                                              |
 //! | `grown`     | `subgraph`, `levels` (array of level-timing docs)       |
+//! | `reconciled`| `orphans_released`, `ghosts` (array of strings)         |
 //! | `error`     | `code` (string, see [`code`]), `message`                |
 //!
 //! Unknown tags are decode errors — there is no extensible escape hatch;
@@ -93,6 +95,12 @@ pub mod code {
     /// invalidated); the lock is NOT poisoned and the service keeps
     /// serving.
     pub const PANIC: &str = "panic";
+    /// The level crashed at a scripted crash point (deterministic crash
+    /// injection, see [`crate::fault::CrashPlan`]): in-memory state past
+    /// the last durable journal frame is considered lost. The caller must
+    /// treat the op's outcome as unknown until the level restarts from its
+    /// journal and reconciles grant ledgers with its parent.
+    pub const CRASHED: &str = "crashed";
     /// The op is valid but not serviceable by the receiver (e.g. a
     /// hierarchical op sent to a bare `SchedInstance`).
     pub const UNSUPPORTED_OP: &str = "unsupported_op";
@@ -348,6 +356,24 @@ pub enum SchedOp {
         /// Containment path of the subtree being returned.
         path: String,
     },
+    /// Grant-ledger reconciliation, child → parent (the restart protocol's
+    /// handshake, also the circuit breaker's half-open trial). `roots` is
+    /// the child's believed grant ledger: the attach roots of every
+    /// subgraph it holds from this parent (boot grant + dynamic grants;
+    /// cloud-burst roots from the child's *own* provider excluded). The
+    /// parent compares against its own ledger, releases **orphans** (roots
+    /// it granted that the child never committed or lost in a crash) and
+    /// reports **ghosts** (roots the child claims that the parent has no
+    /// record of granting) for the child to cancel. Served by a hierarchy
+    /// node; idempotent — repeating it converges.
+    ///
+    /// Reply: [`SchedReply::Reconciled`]. Errors: [`code::CRASHED`]
+    /// (scripted mid-reconcile crash), [`code::LEVEL_UNAVAILABLE`].
+    Reconcile {
+        /// The child's grant ledger: attach roots of every subgraph it
+        /// holds from this parent.
+        roots: Vec<String>,
+    },
 }
 
 impl SchedOp {
@@ -373,7 +399,8 @@ impl SchedOp {
             | SchedOp::ShrinkSubtree { .. }
             | SchedOp::RemoveSubgraph { .. }
             | SchedOp::MatchGrow { .. }
-            | SchedOp::ShrinkReturn { .. } => false,
+            | SchedOp::ShrinkReturn { .. }
+            | SchedOp::Reconcile { .. } => false,
         }
     }
 
@@ -389,6 +416,7 @@ impl SchedOp {
             SchedOp::RemoveSubgraph { .. } => "remove_subgraph",
             SchedOp::MatchGrow { .. } => "match_grow",
             SchedOp::ShrinkReturn { .. } => "shrink_return",
+            SchedOp::Reconcile { .. } => "reconcile",
         }
     }
 
@@ -414,6 +442,10 @@ impl SchedOp {
             SchedOp::ShrinkSubtree { path }
             | SchedOp::RemoveSubgraph { path }
             | SchedOp::ShrinkReturn { path } => doc.with("path", Json::from(path.as_str())),
+            SchedOp::Reconcile { roots } => doc.with(
+                "roots",
+                Json::Arr(roots.iter().map(|r| Json::from(r.as_str())).collect()),
+            ),
         }
     }
 
@@ -454,6 +486,19 @@ impl SchedOp {
             "remove_subgraph" => Ok(SchedOp::RemoveSubgraph { path: path(doc)? }),
             "match_grow" => Ok(SchedOp::MatchGrow { spec: spec(doc)? }),
             "shrink_return" => Ok(SchedOp::ShrinkReturn { path: path(doc)? }),
+            "reconcile" => Ok(SchedOp::Reconcile {
+                roots: doc
+                    .get("roots")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| JsonError::Schema("op missing 'roots'".into()))?
+                    .iter()
+                    .map(|r| {
+                        r.as_str().map(str::to_string).ok_or_else(|| {
+                            JsonError::Schema("'roots' entry is not a string".into())
+                        })
+                    })
+                    .collect::<Result<Vec<String>, JsonError>>()?,
+            }),
             other => Err(JsonError::Schema(format!("unknown op '{other}'"))),
         }
     }
@@ -520,6 +565,17 @@ pub enum SchedReply {
         /// Per-level timing entries, topmost level first.
         levels: Vec<LevelTiming>,
     },
+    /// `Reconcile` completed: the parent released `orphans_released` grants
+    /// the child never committed (or lost in a crash) and reports `ghosts`
+    /// — roots the child claims that the parent never granted — for the
+    /// child to cancel.
+    Reconciled {
+        /// Parent-side grants released as orphans during this handshake.
+        orphans_released: u64,
+        /// Child-claimed roots the parent has no grant record of; the
+        /// child cancels these subtrees on receipt.
+        ghosts: Vec<String>,
+    },
     /// The op failed; see [`code`] for the vocabulary.
     Error(RpcError),
 }
@@ -534,6 +590,7 @@ impl SchedReply {
             SchedReply::Freed { .. } => "freed",
             SchedReply::Removed { .. } => "removed",
             SchedReply::Grown { .. } => "grown",
+            SchedReply::Reconciled { .. } => "reconciled",
             SchedReply::Error(_) => "error",
         }
     }
@@ -590,6 +647,15 @@ impl SchedReply {
             SchedReply::Grown { subgraph, levels } => doc
                 .with("subgraph", subgraph.to_json())
                 .with("levels", levels_to_json(levels)),
+            SchedReply::Reconciled {
+                orphans_released,
+                ghosts,
+            } => doc
+                .with("orphans_released", Json::from(*orphans_released))
+                .with(
+                    "ghosts",
+                    Json::Arr(ghosts.iter().map(|g| Json::from(g.as_str())).collect()),
+                ),
             SchedReply::Error(e) => {
                 // reuse RpcError's field layout so the bare-reply and
                 // envelope encodings cannot drift apart
@@ -650,6 +716,20 @@ impl SchedReply {
                         .ok_or_else(|| JsonError::Schema("reply missing 'levels'".into()))?,
                 )?,
             }),
+            "reconciled" => Ok(SchedReply::Reconciled {
+                orphans_released: doc.u64_field("orphans_released")?,
+                ghosts: doc
+                    .get("ghosts")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| JsonError::Schema("reply missing 'ghosts'".into()))?
+                    .iter()
+                    .map(|g| {
+                        g.as_str().map(str::to_string).ok_or_else(|| {
+                            JsonError::Schema("'ghosts' entry is not a string".into())
+                        })
+                    })
+                    .collect::<Result<Vec<String>, JsonError>>()?,
+            }),
             "error" => Ok(SchedReply::Error(RpcError::from_json(doc)?)),
             other => Err(JsonError::Schema(format!("unknown reply '{other}'"))),
         }
@@ -699,6 +779,10 @@ mod tests {
         roundtrip_op(SchedOp::ShrinkReturn {
             path: "/c0/node3".into(),
         });
+        roundtrip_op(SchedOp::Reconcile {
+            roots: vec!["/c0/node1".into(), "/c0/node4".into()],
+        });
+        roundtrip_op(SchedOp::Reconcile { roots: vec![] });
     }
 
     #[test]
@@ -732,6 +816,14 @@ mod tests {
                 visited: 8,
             }],
         });
+        roundtrip_reply(SchedReply::Reconciled {
+            orphans_released: 2,
+            ghosts: vec!["/c0/node5".into()],
+        });
+        roundtrip_reply(SchedReply::Reconciled {
+            orphans_released: 0,
+            ghosts: vec![],
+        });
         roundtrip_reply(SchedReply::err(code::NO_MATCH, "no satisfying resources"));
     }
 
@@ -754,6 +846,9 @@ mod tests {
             SchedOp::RemoveSubgraph { path: "/x".into() },
             SchedOp::MatchGrow { spec },
             SchedOp::ShrinkReturn { path: "/x".into() },
+            SchedOp::Reconcile {
+                roots: vec!["/x".into()],
+            },
         ] {
             assert!(!op.is_read_only(), "{} must not be read-only", op.name());
         }
@@ -792,6 +887,8 @@ mod tests {
             r#"{"op":"match_allocate"}"#,
             r#"{"op":"free_job"}"#,
             r#"{"op":"shrink_subtree"}"#,
+            r#"{"op":"reconcile"}"#,
+            r#"{"reply":"reconciled","ghosts":[]}"#,
             r#"{"reply":"allocated","job":1}"#,
             r#"{"reply":"error","code":"x"}"#,
         ] {

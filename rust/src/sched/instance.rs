@@ -199,6 +199,26 @@ impl SchedInstance {
         Ok(SchedInstance::new(graph, prune))
     }
 
+    /// Rehydrate an instance from already-consistent parts — the journal
+    /// recovery constructor ([`crate::sched::journal`]). Unlike
+    /// [`SchedInstance::new`] this does **not** re-run `init_aggregates`
+    /// (which mutates the graph) and it takes the allocation table as-is,
+    /// so a `(graph.clone(), allocs.clone())` snapshot pair round-trips
+    /// bit-identically: same epoch, same allocations, same pruning
+    /// aggregates. The caller warrants the parts came from a live instance
+    /// (aggregates initialized, table consistent with the graph).
+    pub fn from_parts(graph: ResourceGraph, allocs: AllocTable, prune: PruneConfig) -> SchedInstance {
+        SchedInstance {
+            graph,
+            allocs,
+            prune,
+            scratch: MatchScratch::new(),
+            write_shards: None,
+            write_shard_target: 0,
+            commit_faults: None,
+        }
+    }
+
     // ---- sharded write commits (PR 8) -----------------------------------
 
     /// Enable subtree-sharded write commits with (at most) `k` shards;
@@ -357,7 +377,9 @@ impl SchedInstance {
                 Ok(n) => SchedReply::Removed { vertices: n },
                 Err(e) => SchedReply::err(code::SHRINK_FAILED, e.to_string()),
             },
-            SchedOp::MatchGrow { .. } | SchedOp::ShrinkReturn { .. } => SchedReply::err(
+            SchedOp::MatchGrow { .. }
+            | SchedOp::ShrinkReturn { .. }
+            | SchedOp::Reconcile { .. } => SchedReply::err(
                 code::UNSUPPORTED_OP,
                 format!(
                     "'{}' is a hierarchical op; send it to a hierarchy node (crate::hier)",
@@ -414,7 +436,8 @@ impl SchedInstance {
                 | SchedOp::ShrinkSubtree { .. }
                 | SchedOp::RemoveSubgraph { .. }
                 | SchedOp::MatchGrow { .. }
-                | SchedOp::ShrinkReturn { .. }) => self.apply(op),
+                | SchedOp::ShrinkReturn { .. }
+                | SchedOp::Reconcile { .. }) => self.apply(op),
             };
             replies.push(reply);
         }
@@ -796,6 +819,30 @@ mod tests {
         assert_eq!(r.as_error().unwrap().code, code::UNSUPPORTED_OP);
         let r = inst.apply(&SchedOp::ShrinkReturn { path: "/x".into() });
         assert_eq!(r.as_error().unwrap().code, code::UNSUPPORTED_OP);
+        let r = inst.apply(&SchedOp::Reconcile { roots: vec![] });
+        assert_eq!(r.as_error().unwrap().code, code::UNSUPPORTED_OP);
+    }
+
+    /// The journal-recovery constructor must round-trip a live instance's
+    /// parts bit-identically — same epoch, same live vertices, same
+    /// allocations, aggregates untouched (`new()` would re-run
+    /// `init_aggregates` and perturb nothing visible but is banned on the
+    /// recovery path precisely because it *mutates* the graph).
+    #[test]
+    fn from_parts_round_trips_bit_identically() {
+        let mut uids = UidGen::new();
+        let mut inst = SchedInstance::new(table2_graph(2, &mut uids), PruneConfig::default());
+        inst.match_allocate(&table1_jobspec("T7")).unwrap();
+        let twin = SchedInstance::from_parts(
+            inst.graph.clone(),
+            inst.allocs.clone(),
+            PruneConfig::default(),
+        );
+        assert_eq!(twin.graph.epoch(), inst.graph.epoch());
+        twin.check().unwrap();
+        let jobs: Vec<_> = twin.allocs.running_jobs().map(|a| a.job).collect();
+        let want: Vec<_> = inst.allocs.running_jobs().map(|a| a.job).collect();
+        assert_eq!(jobs, want);
     }
 
     #[test]

@@ -1,0 +1,570 @@
+//! Write-ahead op journal + snapshot/replay recovery (PR 10).
+//!
+//! Crash consistency for one scheduler level: every state-mutating
+//! [`SchedOp`] a [`crate::sched::SchedService`] accepts is **appended to
+//! the journal before it commits**, as a sequence-numbered, checksummed,
+//! canonical-JSON frame; once the mutation completes (success *or* typed
+//! failure — failed ops may still have advanced the graph epoch and replay
+//! must reproduce that) a matching commit frame lands behind it. Every
+//! `snapshot_every` commits the journal takes a checkpoint — a cheap
+//! copy-on-write clone of the graph + allocation table (the PR 9 chunked
+//! arena makes this O(chunks) refcount bumps) — and drops the op/commit
+//! frames it covers, so recovery is **snapshot + bounded replay**.
+//!
+//! ## Frame format
+//!
+//! One canonical-JSON object per frame (a line in a real on-disk log; this
+//! simulation keeps the encoded strings in memory so tests can tear and
+//! corrupt them byte-for-byte):
+//!
+//! | `"kind"`  | fields                                   | durable at    |
+//! |-----------|------------------------------------------|---------------|
+//! | `op`      | `seq`, `op` (a [`SchedOp`] doc), `sum`   | commit frame  |
+//! | `commit`  | `seq`, `epoch` (post-op), `fin`, `sum`   | append        |
+//! | `note`    | `seq`, `tag`, `data`, `sum`              | append        |
+//!
+//! `sum` is an FNV-1a 64 checksum (hex string — the crate's JSON numbers
+//! are exact only to 2^53) over the frame's payload. `note` frames carry
+//! hierarchy bookkeeping (grant ledgers, see [`crate::hier`]) that is not
+//! a `SchedOp`; they are durable as soon as they are appended and survive
+//! checkpoints (ledger recovery folds the *last* committed note, so notes
+//! are never dropped with the op frames they interleave).
+//!
+//! ## Recovery contract
+//!
+//! [`recover`] parses frames in order and **discards the torn tail**: the
+//! first frame that fails to parse or checksum truncates everything after
+//! it, and op frames with no commit frame (the op was appended but the
+//! crash hit before its mutation completed) are dropped. The committed
+//! prefix is replayed — in sequence order, through the same serial
+//! [`SchedInstance::apply`] the service linearizes to — onto a clone of
+//! the checkpoint, and the result is **bit-identical** to the pre-crash
+//! committed state: same graph epoch, same allocation table, same pruning
+//! aggregates (the PR 8 equivalence contract; [`states_bit_identical`] is
+//! the checker). Replay never goes through [`SchedInstance::new`] or
+//! `restore_from`, both of which perturb graph state (`init_aggregates`
+//! mutates, `restore_from` advances the epoch); it uses
+//! [`SchedInstance::from_parts`] on the checkpoint's clones.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use crate::resource::graph::ResourceGraph;
+use crate::rpc::proto::SchedOp;
+use crate::sched::alloc::AllocTable;
+use crate::sched::instance::SchedInstance;
+use crate::sched::pruning::PruneConfig;
+use crate::util::json::Json;
+
+/// FNV-1a 64-bit checksum — the journal's frame integrity check (zero-dep,
+/// deterministic, good enough to catch torn writes and bit rot; this is an
+/// integrity code, not a cryptographic one).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A journal checkpoint: the full level state at sequence `seq`, held as
+/// cheap copy-on-write clones. Recovery replays only frames after `seq`.
+#[derive(Clone)]
+pub struct JournalSnapshot {
+    /// Last sequence number the checkpoint covers (0 = journal creation).
+    pub seq: u64,
+    /// The graph at checkpoint time (epoch preserved exactly by `clone`).
+    pub graph: ResourceGraph,
+    /// The allocation table at checkpoint time.
+    pub allocs: AllocTable,
+}
+
+/// The write-ahead journal of one scheduler level.
+pub struct OpJournal {
+    base: JournalSnapshot,
+    frames: Vec<String>,
+    next_seq: u64,
+    snapshot_every: u64,
+    commits_since_snapshot: u64,
+    appends: u64,
+}
+
+impl OpJournal {
+    /// Open a journal over the instance's current state: the creation
+    /// checkpoint is `seq` 0 and covers everything that happened before.
+    /// `snapshot_every` bounds replay length: a checkpoint is taken after
+    /// that many commit frames (minimum 1).
+    pub fn new(inst: &SchedInstance, snapshot_every: u64) -> OpJournal {
+        OpJournal {
+            base: JournalSnapshot {
+                seq: 0,
+                graph: inst.graph.clone(),
+                allocs: inst.allocs.clone(),
+            },
+            frames: Vec::new(),
+            next_seq: 1,
+            snapshot_every: snapshot_every.max(1),
+            commits_since_snapshot: 0,
+            appends: 0,
+        }
+    }
+
+    /// Append one op frame **before** its mutation runs; returns the
+    /// sequence number the caller must pass back to
+    /// [`OpJournal::commit_op`] once the mutation completes. An op frame
+    /// with no commit frame behind it is exactly what a crash between
+    /// append and commit leaves — recovery drops it.
+    pub fn append_op(&mut self, op: &SchedOp) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let op_doc = op.to_json();
+        let sum = fnv1a(op_doc.dump().as_bytes());
+        let frame = Json::obj()
+            .with("kind", Json::from("op"))
+            .with("seq", Json::from(seq))
+            .with("op", op_doc)
+            .with("sum", Json::from(format!("{sum:016x}").as_str()));
+        self.frames.push(frame.dump());
+        self.appends += 1;
+        seq
+    }
+
+    /// Append the commit frame for `seq`, recording the post-op graph
+    /// epoch (replay asserts it re-derives the same one). Takes the
+    /// periodic checkpoint when due.
+    pub fn commit_op(&mut self, seq: u64, inst: &SchedInstance) {
+        self.commit_frame(seq, inst, true);
+    }
+
+    /// Commit frame for a **mid-phase** op: one applied inside a batched
+    /// write phase, where the recorded epoch is the post-*phase* value —
+    /// per-op replay can't re-derive it, so the frame is flagged non-final
+    /// (`fin: false`) and [`recover`] skips its epoch cross-check. The
+    /// phase's last op commits through [`OpJournal::commit_op`] and its
+    /// epoch IS checked, which pins the whole phase.
+    pub fn commit_op_mid(&mut self, seq: u64, inst: &SchedInstance) {
+        self.commit_frame(seq, inst, false);
+    }
+
+    fn commit_frame(&mut self, seq: u64, inst: &SchedInstance, fin: bool) {
+        let epoch = inst.graph.epoch();
+        let sum = fnv1a(format!("commit:{seq}:{epoch}:{fin}").as_bytes());
+        let frame = Json::obj()
+            .with("kind", Json::from("commit"))
+            .with("seq", Json::from(seq))
+            .with("epoch", Json::from(epoch))
+            .with("fin", Json::from(fin))
+            .with("sum", Json::from(format!("{sum:016x}").as_str()));
+        self.frames.push(frame.dump());
+        self.commits_since_snapshot += 1;
+        if self.commits_since_snapshot >= self.snapshot_every {
+            self.checkpoint(inst);
+        }
+    }
+
+    /// Append one note frame: hierarchy bookkeeping (grant ledgers) that
+    /// is durable at append and survives checkpoints. Returns its seq.
+    pub fn note(&mut self, tag: &str, data: Json) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let sum = fnv1a(format!("note:{seq}:{tag}:{}", data.dump()).as_bytes());
+        let frame = Json::obj()
+            .with("kind", Json::from("note"))
+            .with("seq", Json::from(seq))
+            .with("tag", Json::from(tag))
+            .with("data", data)
+            .with("sum", Json::from(format!("{sum:016x}").as_str()));
+        self.frames.push(frame.dump());
+        self.appends += 1;
+        seq
+    }
+
+    /// Take a checkpoint of the instance's state now and drop the op and
+    /// commit frames it covers (note frames are retained — ledger recovery
+    /// folds over them regardless of checkpoint cadence). The hierarchy
+    /// calls this after mutations that bypass the op path (grant splices,
+    /// shrinks driven through the write guard).
+    pub fn checkpoint(&mut self, inst: &SchedInstance) {
+        self.base = JournalSnapshot {
+            seq: self.next_seq - 1,
+            graph: inst.graph.clone(),
+            allocs: inst.allocs.clone(),
+        };
+        self.frames.retain(|f| {
+            Json::parse(f)
+                .ok()
+                .and_then(|doc| doc.str_field("kind").ok().map(|k| k == "note"))
+                .unwrap_or(false)
+        });
+        self.commits_since_snapshot = 0;
+    }
+
+    /// Op frames appended so far (note frames included; commit frames are
+    /// not appends).
+    pub fn appends(&self) -> u64 {
+        self.appends
+    }
+
+    /// Frames currently in the log (after checkpoint trimming).
+    pub fn frames(&self) -> &[String] {
+        &self.frames
+    }
+
+    /// Clone out the recovery inputs: the latest checkpoint and every
+    /// frame after it. Tests tear and corrupt the returned frames to
+    /// exercise the torn-tail contract.
+    pub fn export(&self) -> (JournalSnapshot, Vec<String>) {
+        (self.base.clone(), self.frames.clone())
+    }
+}
+
+/// The outcome of a snapshot-plus-replay recovery.
+pub struct Recovery {
+    /// The recovered instance: checkpoint clone + committed-op replay.
+    pub inst: SchedInstance,
+    /// Committed ops replayed on top of the checkpoint.
+    pub replayed: u64,
+    /// Frames discarded as the torn tail (first unparseable or
+    /// checksum-failed frame and everything after it).
+    pub torn: u64,
+    /// Parsed op frames dropped for having no commit frame (the crash hit
+    /// between append and commit — the mutation never completed).
+    pub uncommitted: u64,
+    /// Replayed ops whose re-derived graph epoch disagreed with the epoch
+    /// recorded in their commit frame. Zero on every healthy recovery; a
+    /// nonzero count means replay diverged from the original execution.
+    pub epoch_mismatches: u64,
+    /// Committed notes in append order (`(tag, data)`); the hierarchy
+    /// folds these to rebuild its grant ledgers.
+    pub notes: Vec<(String, Json)>,
+}
+
+/// Parse one frame; `None` means the frame is torn/corrupt (bad JSON, bad
+/// checksum, unknown kind, missing fields) and truncates the log there.
+enum Frame {
+    Op { seq: u64, op: SchedOp },
+    Commit { seq: u64, epoch: u64, fin: bool },
+    Note { tag: String, data: Json },
+}
+
+fn parse_frame(line: &str) -> Option<Frame> {
+    let doc = Json::parse(line).ok()?;
+    let sum = u64::from_str_radix(doc.str_field("sum").ok()?, 16).ok()?;
+    match doc.str_field("kind").ok()? {
+        "op" => {
+            let seq = doc.u64_field("seq").ok()?;
+            let op_doc = doc.get("op")?;
+            if fnv1a(op_doc.dump().as_bytes()) != sum {
+                return None;
+            }
+            Some(Frame::Op {
+                seq,
+                op: SchedOp::from_json(op_doc).ok()?,
+            })
+        }
+        "commit" => {
+            let seq = doc.u64_field("seq").ok()?;
+            let epoch = doc.u64_field("epoch").ok()?;
+            let fin = doc.get("fin")?.as_bool()?;
+            if fnv1a(format!("commit:{seq}:{epoch}:{fin}").as_bytes()) != sum {
+                return None;
+            }
+            Some(Frame::Commit { seq, epoch, fin })
+        }
+        "note" => {
+            let seq = doc.u64_field("seq").ok()?;
+            let tag = doc.str_field("tag").ok()?.to_string();
+            let data = doc.get("data")?.clone();
+            if fnv1a(format!("note:{seq}:{tag}:{}", data.dump()).as_bytes()) != sum {
+                return None;
+            }
+            Some(Frame::Note { tag, data })
+        }
+        _ => None,
+    }
+}
+
+/// Replay one committed op with the same containment the service write
+/// path uses: a panicking op rolls the instance back to its pre-op clones
+/// (epoch advanced by `restore_from`), exactly like
+/// `SchedService`'s contained apply — so a journaled stream that included
+/// a contained panic replays to the same state it left behind.
+fn replay_op(inst: &mut SchedInstance, op: &SchedOp) {
+    let graph_before = inst.graph.clone();
+    let allocs_before = inst.allocs.clone();
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        inst.apply(op);
+    }));
+    if result.is_err() {
+        inst.graph.restore_from(&graph_before);
+        inst.allocs = allocs_before;
+        inst.refresh_write_shards();
+    }
+}
+
+/// Rebuild a level's state from its journal: clone the checkpoint, replay
+/// the committed op suffix in sequence order, surface the committed notes.
+/// See the module docs for the torn-tail and bit-identity contracts.
+pub fn recover(base: &JournalSnapshot, frames: &[String], prune: PruneConfig) -> Recovery {
+    let mut ops: Vec<(u64, SchedOp)> = Vec::new();
+    let mut commits: HashMap<u64, (u64, bool)> = HashMap::new();
+    let mut notes: Vec<(String, Json)> = Vec::new();
+    let mut torn = 0u64;
+    for (i, line) in frames.iter().enumerate() {
+        match parse_frame(line) {
+            Some(Frame::Op { seq, op }) => ops.push((seq, op)),
+            Some(Frame::Commit { seq, epoch, fin }) => {
+                commits.insert(seq, (epoch, fin));
+            }
+            Some(Frame::Note { tag, data }) => notes.push((tag, data)),
+            None => {
+                torn = (frames.len() - i) as u64;
+                break;
+            }
+        }
+    }
+    ops.sort_by_key(|(seq, _)| *seq);
+    let mut inst = SchedInstance::from_parts(base.graph.clone(), base.allocs.clone(), prune);
+    let mut replayed = 0u64;
+    let mut uncommitted = 0u64;
+    let mut epoch_mismatches = 0u64;
+    for (seq, op) in &ops {
+        let Some(&(epoch, fin)) = commits.get(seq) else {
+            uncommitted += 1;
+            continue;
+        };
+        replay_op(&mut inst, op);
+        replayed += 1;
+        if fin && inst.graph.epoch() != epoch {
+            epoch_mismatches += 1;
+        }
+    }
+    Recovery {
+        inst,
+        replayed,
+        torn,
+        uncommitted,
+        epoch_mismatches,
+        notes,
+    }
+}
+
+/// The PR 8 bit-identity contract as a checker: same graph epoch, same
+/// live vertex set, same per-vertex allocation info, same running half of
+/// the allocation table. `Ok(())` or a description of the first
+/// divergence. (Pruning aggregates are covered transitively:
+/// [`SchedInstance::check`] recomputes them, and both recovery tests and
+/// the hierarchy restart path run it alongside this.)
+pub fn states_bit_identical(a: &SchedInstance, b: &SchedInstance) -> Result<(), String> {
+    if a.graph.epoch() != b.graph.epoch() {
+        return Err(format!(
+            "epoch {} != {}",
+            a.graph.epoch(),
+            b.graph.epoch()
+        ));
+    }
+    let live_a: Vec<_> = a.graph.iter_live().collect();
+    let live_b: Vec<_> = b.graph.iter_live().collect();
+    if live_a != live_b {
+        return Err(format!(
+            "live vertex sets differ ({} vs {} vertices)",
+            live_a.len(),
+            live_b.len()
+        ));
+    }
+    for &v in &live_a {
+        if a.graph.vertex(v).alloc != b.graph.vertex(v).alloc {
+            return Err(format!("alloc info diverges at vertex {v:?}"));
+        }
+    }
+    let running = |inst: &SchedInstance| -> Vec<(u64, Vec<u32>)> {
+        let mut js: Vec<(u64, Vec<u32>)> = inst
+            .allocs
+            .running_jobs()
+            .map(|al| (al.job.0, al.vertices.iter().map(|v| v.0).collect()))
+            .collect();
+        js.sort();
+        js
+    };
+    let (ra, rb) = (running(a), running(b));
+    if ra != rb {
+        return Err(format!(
+            "running allocation tables differ ({} vs {} jobs)",
+            ra.len(),
+            rb.len()
+        ));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jobspec::JobSpec;
+    use crate::resource::builder::{ClusterSpec, UidGen};
+
+    fn inst() -> SchedInstance {
+        SchedInstance::new(
+            ClusterSpec::new("c", 3, 2, 8).build(&mut UidGen::new()),
+            PruneConfig::default(),
+        )
+    }
+
+    fn spec() -> JobSpec {
+        JobSpec::nodes_sockets_cores(1, 1, 4)
+    }
+
+    #[test]
+    fn fnv1a_is_stable_and_input_sensitive() {
+        // reference vectors for the 64-bit FNV-1a parameters
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a(b"commit:1:2"), fnv1a(b"commit:2:1"));
+    }
+
+    #[test]
+    fn append_commit_replay_is_bit_identical() {
+        let mut live = inst();
+        let mut journal = OpJournal::new(&live, 1000); // never checkpoints
+        for _ in 0..4 {
+            let op = SchedOp::MatchAllocate { spec: spec() };
+            let seq = journal.append_op(&op);
+            live.apply(&op);
+            journal.commit_op(seq, &live);
+        }
+        let op = SchedOp::FreeJob {
+            job: crate::resource::graph::JobId(1),
+        };
+        let seq = journal.append_op(&op);
+        live.apply(&op);
+        journal.commit_op(seq, &live);
+
+        let (base, frames) = journal.export();
+        let rec = recover(&base, &frames, PruneConfig::default());
+        assert_eq!(rec.replayed, 5);
+        assert_eq!(rec.torn, 0);
+        assert_eq!(rec.uncommitted, 0);
+        assert_eq!(rec.epoch_mismatches, 0);
+        states_bit_identical(&rec.inst, &live).unwrap();
+        rec.inst.check().unwrap();
+    }
+
+    #[test]
+    fn failed_ops_replay_too() {
+        // a committed op that answered with an error still replays: failed
+        // grants can mutate the graph, so the journal never filters them
+        let mut live = inst();
+        let mut journal = OpJournal::new(&live, 1000);
+        let ops = [
+            SchedOp::MatchAllocate {
+                spec: JobSpec::nodes_sockets_cores(100, 1, 1), // no_match
+            },
+            SchedOp::MatchAllocate { spec: spec() },
+            SchedOp::FreeJob {
+                job: crate::resource::graph::JobId(77), // unknown job
+            },
+        ];
+        for op in &ops {
+            let seq = journal.append_op(op);
+            live.apply(op);
+            journal.commit_op(seq, &live);
+        }
+        let (base, frames) = journal.export();
+        let rec = recover(&base, &frames, PruneConfig::default());
+        assert_eq!(rec.replayed, 3);
+        assert_eq!(rec.epoch_mismatches, 0);
+        states_bit_identical(&rec.inst, &live).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_bounds_replay_and_keeps_notes() {
+        let mut live = inst();
+        let mut journal = OpJournal::new(&live, 2); // checkpoint every 2 commits
+        journal.note("ledger", Json::obj().with("v", Json::from(1u64)));
+        for i in 0..5u64 {
+            let op = SchedOp::MatchAllocate { spec: spec() };
+            let seq = journal.append_op(&op);
+            live.apply(&op);
+            journal.commit_op(seq, &live);
+            journal.note("ledger", Json::obj().with("v", Json::from(i + 2)));
+        }
+        let (base, frames) = journal.export();
+        // 4 of the 5 commits are behind checkpoints; at most 1 op replays
+        let rec = recover(&base, &frames, PruneConfig::default());
+        assert!(rec.replayed <= 1, "replayed {}", rec.replayed);
+        assert_eq!(base.seq > 0, true);
+        states_bit_identical(&rec.inst, &live).unwrap();
+        // every note survived every checkpoint, in order
+        assert_eq!(rec.notes.len(), 6);
+        let last = rec.notes.last().unwrap();
+        assert_eq!(last.0, "ledger");
+        assert_eq!(last.1.get("v").and_then(Json::as_u64), Some(6));
+    }
+
+    #[test]
+    fn uncommitted_op_frame_is_dropped() {
+        let mut live = inst();
+        let mut journal = OpJournal::new(&live, 1000);
+        let op = SchedOp::MatchAllocate { spec: spec() };
+        let seq = journal.append_op(&op);
+        live.apply(&op);
+        journal.commit_op(seq, &live);
+        // appended, never committed — the crash window
+        journal.append_op(&SchedOp::MatchAllocate { spec: spec() });
+        let (base, frames) = journal.export();
+        let rec = recover(&base, &frames, PruneConfig::default());
+        assert_eq!(rec.replayed, 1);
+        assert_eq!(rec.uncommitted, 1);
+        states_bit_identical(&rec.inst, &live).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_truncates_from_first_bad_frame() {
+        let mut live = inst();
+        let mut journal = OpJournal::new(&live, 1000);
+        let mut reference = None;
+        for i in 0..3 {
+            let op = SchedOp::MatchAllocate { spec: spec() };
+            let seq = journal.append_op(&op);
+            live.apply(&op);
+            journal.commit_op(seq, &live);
+            if i == 1 {
+                // state after the second committed op — where a tear
+                // right after frame 4 must land recovery
+                reference = Some((live.graph.clone(), live.allocs.clone()));
+            }
+        }
+        let (base, mut frames) = journal.export();
+        assert_eq!(frames.len(), 6);
+        // corrupt the 5th frame (3rd op's op frame): everything from it on
+        // is discarded even though the 6th frame is well-formed
+        frames[4] = frames[4].replace("match_allocate", "match_allocatX");
+        let rec = recover(&base, &frames, PruneConfig::default());
+        assert_eq!(rec.torn, 2);
+        assert_eq!(rec.replayed, 2);
+        let (g, a) = reference.unwrap();
+        let want = SchedInstance::from_parts(g, a, PruneConfig::default());
+        states_bit_identical(&rec.inst, &want).unwrap();
+    }
+
+    #[test]
+    fn checksum_catches_payload_tampering() {
+        let mut live = inst();
+        let mut journal = OpJournal::new(&live, 1000);
+        let op = SchedOp::FreeJob {
+            job: crate::resource::graph::JobId(3),
+        };
+        let seq = journal.append_op(&op);
+        live.apply(&op);
+        journal.commit_op(seq, &live);
+        let (base, mut frames) = journal.export();
+        // flip the job id inside the op payload; frame still parses as
+        // JSON but the checksum no longer matches
+        frames[0] = frames[0].replace("\"job\":3", "\"job\":4");
+        assert!(parse_frame(&frames[0]).is_none());
+        let rec = recover(&base, &frames, PruneConfig::default());
+        assert_eq!(rec.replayed, 0);
+        assert_eq!(rec.torn, 2);
+    }
+}

@@ -8,11 +8,14 @@
 //! lock-free against pinned RCU snapshots ([`snapshot`]) and fan out
 //! across a worker pool (with epoch-keyed result caching) while mutating
 //! ops serialize on the write side and publish a fresh snapshot version
-//! on commit.
+//! on commit. When journaling is enabled ([`journal`]), every mutating op
+//! is written ahead to a checksummed frame log so a crashed level recovers
+//! by snapshot + bounded replay, bit-identical to its committed state.
 
 pub mod alloc;
 pub mod grow;
 pub mod instance;
+pub mod journal;
 pub mod matcher;
 pub mod pruning;
 pub mod service;
@@ -20,6 +23,7 @@ pub mod snapshot;
 
 pub use alloc::{AllocTable, WriteShards};
 pub use instance::SchedInstance;
+pub use journal::{recover, states_bit_identical, JournalSnapshot, OpJournal, Recovery};
 pub use snapshot::{GraphSnapshot, SnapshotHead, SnapshotStats};
 pub use matcher::{
     compile_spec_into, match_compiled, match_resources, match_resources_in,

@@ -125,6 +125,13 @@ pub struct Scenario {
     /// traffic) but show up in the service-side telemetry and snapshot
     /// lifecycle counters. Drives the `churn-rcu` scenarios.
     pub churn_writers: usize,
+    /// `(level, every)`: kill and restart `level` from its write-ahead
+    /// journal every `every` replayed ops (Hierarchy target only; `None` =
+    /// never, the default). Arms journaling on every level at build.
+    /// Restarts are load, not traffic — unmeasured by the harness, but the
+    /// replay/reconcile counters land in the per-level service telemetry.
+    /// Drives the `kill-restart` scenarios.
+    pub kill_restart: Option<(usize, usize)>,
 }
 
 impl Scenario {
@@ -144,6 +151,7 @@ impl Scenario {
             allocate_retries: 0,
             write_shards: 0,
             churn_writers: 0,
+            kill_restart: None,
         }
     }
 
@@ -167,6 +175,7 @@ impl Scenario {
             allocate_retries: 0,
             write_shards: 0,
             churn_writers: 0,
+            kill_restart: None,
         }
     }
 
@@ -185,6 +194,12 @@ impl Scenario {
     /// Builder: set [`Scenario::churn_writers`].
     pub fn with_churn_writers(mut self, n: usize) -> Scenario {
         self.churn_writers = n;
+        self
+    }
+
+    /// Builder: set [`Scenario::kill_restart`].
+    pub fn with_kill_restart(mut self, level: usize, every: usize) -> Scenario {
+        self.kill_restart = Some((level, every));
         self
     }
 }
@@ -526,6 +541,9 @@ fn run_hierarchy(
     if sc.write_shards > 1 {
         hier.set_write_shards_all(sc.write_shards);
     }
+    if sc.kill_restart.is_some() {
+        hier.enable_journals(64);
+    }
     // per tenant: a stack of grant root-path sets (one entry per
     // successful leaf grow), released oldest-first on Shrink, newest-first
     // on Free
@@ -563,6 +581,17 @@ fn run_hierarchy(
         record_op(harness, start, op, error);
         if chaos.is_some() && i % 64 == 63 {
             hier.maintain();
+        }
+        // Kill/restart cycles are load, not traffic: the level rebuilds
+        // from its journal and reconciles grant ledgers with its parent
+        // while the replay clock keeps running, so the recovery cost shows
+        // up as latency on the surrounding measured ops.
+        if let Some((level, every)) = sc.kill_restart {
+            if every > 0 && i % every == every - 1 {
+                let level = level.min(hier.depth() - 1);
+                hier.kill_and_restart_level(level)
+                    .expect("kill/restart during replay");
+            }
         }
     }
     let wall_s = start.elapsed().as_secs_f64();
@@ -749,6 +778,38 @@ mod tests {
             let total: u64 = r.issued_by_kind.iter().sum();
             total
         });
+    }
+
+    #[test]
+    fn hierarchy_scenario_survives_kill_restart_cycles() {
+        let sc = Scenario::hierarchy(
+            "serve/kill",
+            OpTraceSpec {
+                ops: 40,
+                rate_ops_per_sec: 50_000.0,
+                ..fast_trace(40, OpMix::balanced())
+            },
+            2, // root: 4 nodes
+            vec![
+                LevelSpec {
+                    boot_nodes: 2,
+                    link: LinkKind::InProc,
+                },
+                LevelSpec {
+                    boot_nodes: 1,
+                    link: LinkKind::InProc,
+                },
+            ],
+            None,
+        )
+        .with_kill_restart(2, 16);
+        let r = run_scenario(&sc);
+        // Restarts are load, not traffic: every planned op still issues.
+        assert_eq!(r.harness.ops_total(), 40);
+        // 40 ops / kill every 16 = kills at i = 15, 31; the restarted leaf
+        // reconciles grant ledgers with its parent after each rebuild.
+        let leaf = &r.services[2];
+        assert!(leaf.reconciles >= 2, "one reconcile per restart");
     }
 
     #[test]

@@ -14,10 +14,11 @@
 //!   `u64::MAX` ns (≤ 6.25 % relative error), each bucket an `AtomicU64`.
 //!   Quantiles (p50/p95/p99/…) are reconstructed from bucket midpoints at
 //!   snapshot time, clamped into the exact recorded `[min, max]`.
-//! - [`Telemetry`] — a set of histograms keyed by op kind (the nine
+//! - [`Telemetry`] — a set of histograms keyed by op kind (the ten
 //!   [`SchedOp`] wire names by default, or any caller-supplied kind list),
 //!   plus global counters (cache hits/misses, pre-check rejections,
-//!   retries, breaker trips, rollbacks) and sustained-throughput windows.
+//!   retries, breaker trips, rollbacks, journal appends/replays,
+//!   reconciles) and sustained-throughput windows.
 //! - [`TelemetrySnapshot`] — a point-in-time copy with percentile
 //!   accessors and a JSON export ([`TelemetrySnapshot::to_json`]) that the
 //!   serving bench folds into `BENCH_serving.json` rows.
@@ -275,9 +276,9 @@ impl HistogramSnapshot {
     }
 }
 
-/// Stable wire names of the nine [`SchedOp`] kinds, in [`kind_index`]
+/// Stable wire names of the ten [`SchedOp`] kinds, in [`kind_index`]
 /// order — the default kind set of [`Telemetry::new`].
-pub static KIND_NAMES: [&str; 9] = [
+pub static KIND_NAMES: [&str; 10] = [
     "match_allocate",
     "match_grow_local",
     "probe",
@@ -287,13 +288,14 @@ pub static KIND_NAMES: [&str; 9] = [
     "remove_subgraph",
     "match_grow",
     "shrink_return",
+    "reconcile",
 ];
 
 /// Index of the `probe` kind in [`KIND_NAMES`] (the one read-only op; the
 /// service's probe paths record under it directly).
 pub const KIND_PROBE: usize = 2;
 
-/// The [`KIND_NAMES`] index of an op (total over all nine kinds).
+/// The [`KIND_NAMES`] index of an op (total over all ten kinds).
 pub fn kind_index(op: &SchedOp) -> usize {
     match op {
         SchedOp::MatchAllocate { .. } => 0,
@@ -305,6 +307,7 @@ pub fn kind_index(op: &SchedOp) -> usize {
         SchedOp::RemoveSubgraph { .. } => 6,
         SchedOp::MatchGrow { .. } => 7,
         SchedOp::ShrinkReturn { .. } => 8,
+        SchedOp::Reconcile { .. } => 9,
     }
 }
 
@@ -335,6 +338,17 @@ impl RateWindows {
     fn record(&self, elapsed_ms: u64) {
         let idx = ((elapsed_ms / self.window_ms) as usize).min(self.slots.len() - 1);
         self.slots[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Zero every slot. The window origin cannot be rebased behind `&self`
+    /// (slot indices still derive from the telemetry's start instant), but
+    /// counts recorded before the reset no longer leak into later
+    /// snapshots — the stale-rate fix [`Telemetry::reset_rate_windows`]
+    /// rides on.
+    fn reset(&self) {
+        for s in &self.slots {
+            s.store(0, Ordering::Relaxed);
+        }
     }
 
     fn snapshot(&self, elapsed_ms: u64) -> ThroughputSnapshot {
@@ -400,10 +414,14 @@ pub struct Telemetry {
     shard_commits: AtomicU64,
     shard_conflicts: AtomicU64,
     spine_contentions: AtomicU64,
+    journal_appends: AtomicU64,
+    journal_replays: AtomicU64,
+    reconciles: AtomicU64,
+    orphans_released: AtomicU64,
 }
 
 impl Telemetry {
-    /// Telemetry over the nine [`SchedOp`] kinds ([`KIND_NAMES`]) with the
+    /// Telemetry over the ten [`SchedOp`] kinds ([`KIND_NAMES`]) with the
     /// default 250 ms / 10 min rate windows.
     pub fn new() -> Telemetry {
         Telemetry::with_kinds(&KIND_NAMES)
@@ -433,6 +451,10 @@ impl Telemetry {
             shard_commits: AtomicU64::new(0),
             shard_conflicts: AtomicU64::new(0),
             spine_contentions: AtomicU64::new(0),
+            journal_appends: AtomicU64::new(0),
+            journal_replays: AtomicU64::new(0),
+            reconciles: AtomicU64::new(0),
+            orphans_released: AtomicU64::new(0),
         }
     }
 
@@ -519,6 +541,39 @@ impl Telemetry {
         self.spine_contentions.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one write-ahead journal append (an op frame written before its
+    /// commit, see [`crate::sched::OpJournal`]).
+    pub fn note_journal_append(&self) {
+        self.journal_appends.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` journal ops replayed during a snapshot-plus-replay
+    /// recovery (one restart contributes its whole replayed suffix).
+    pub fn note_journal_replays(&self, n: u64) {
+        self.journal_replays.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count one grant-ledger reconciliation handshake initiated by this
+    /// level (restart re-registration or a breaker half-open trial).
+    pub fn note_reconcile(&self) {
+        self.reconciles.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count `n` orphaned parent-side grants released while serving one
+    /// `Reconcile` (grants the child never committed or lost in a crash).
+    pub fn note_orphans_released(&self, n: u64) {
+        self.orphans_released.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Zero the throughput rate windows. The window origin stays the
+    /// telemetry's start instant (it cannot be rebased behind `&self`),
+    /// but counts recorded before the reset stop leaking into later
+    /// snapshots — `crate::hier::Hierarchy::reset` calls this so one test
+    /// run's op rates do not bleed into the next.
+    pub fn reset_rate_windows(&self) {
+        self.rate.reset();
+    }
+
     /// Point-in-time copy of every series. Cache counters here are the
     /// *noted* ones; [`crate::sched::SchedService::telemetry_snapshot`]
     /// overwrites them with the authoritative cache stats.
@@ -550,6 +605,10 @@ impl Telemetry {
             shard_commits: self.shard_commits.load(Ordering::Relaxed),
             shard_conflicts: self.shard_conflicts.load(Ordering::Relaxed),
             spine_contentions: self.spine_contentions.load(Ordering::Relaxed),
+            journal_appends: self.journal_appends.load(Ordering::Relaxed),
+            journal_replays: self.journal_replays.load(Ordering::Relaxed),
+            reconciles: self.reconciles.load(Ordering::Relaxed),
+            orphans_released: self.orphans_released.load(Ordering::Relaxed),
             snapshot_pins: 0,
             snapshot_publishes: 0,
             snapshots_retired: 0,
@@ -612,6 +671,14 @@ pub struct TelemetrySnapshot {
     /// Sharded commits that saw the epoch move between prepare and commit
     /// but still validated (only the short spine section was contended).
     pub spine_contentions: u64,
+    /// Write-ahead journal op frames appended before commit.
+    pub journal_appends: u64,
+    /// Journal ops replayed by snapshot-plus-replay recoveries.
+    pub journal_replays: u64,
+    /// Grant-ledger reconciliation handshakes initiated by this level.
+    pub reconciles: u64,
+    /// Orphaned parent-side grants released while serving `Reconcile` ops.
+    pub orphans_released: u64,
     /// RCU snapshot pins taken by the lock-free read path (stamped by the
     /// service from its [`crate::sched::SnapshotStats`], like the cache
     /// counters above; 0 from a raw [`Telemetry::snapshot`]).
@@ -694,6 +761,10 @@ impl TelemetrySnapshot {
                     .with("shard_commits", Json::from(self.shard_commits))
                     .with("shard_conflicts", Json::from(self.shard_conflicts))
                     .with("spine_contentions", Json::from(self.spine_contentions))
+                    .with("journal_appends", Json::from(self.journal_appends))
+                    .with("journal_replays", Json::from(self.journal_replays))
+                    .with("reconciles", Json::from(self.reconciles))
+                    .with("orphans_released", Json::from(self.orphans_released))
                     .with("snapshot_pins", Json::from(self.snapshot_pins))
                     .with("snapshot_publishes", Json::from(self.snapshot_publishes))
                     .with("snapshots_retired", Json::from(self.snapshots_retired)),
@@ -819,6 +890,11 @@ mod tests {
         t.note_shard_commit();
         t.note_shard_conflict();
         t.note_spine_contention();
+        t.note_journal_append();
+        t.note_journal_append();
+        t.note_journal_replays(5);
+        t.note_reconcile();
+        t.note_orphans_released(3);
         let s = t.snapshot();
         assert_eq!(s.ops_total(), 2);
         assert_eq!(s.errors_total(), 1);
@@ -832,12 +908,31 @@ mod tests {
         assert_eq!(s.shard_commits, 2);
         assert_eq!(s.shard_conflicts, 1);
         assert_eq!(s.spine_contentions, 1);
+        assert_eq!(s.journal_appends, 2);
+        assert_eq!(s.journal_replays, 5);
+        assert_eq!(s.reconciles, 1);
+        assert_eq!(s.orphans_released, 3);
         // JSON export includes only the recorded kind
         let doc = crate::util::json::Json::parse(&s.to_json().dump()).unwrap();
         let kinds = doc.get("kinds").and_then(|k| k.as_arr()).unwrap();
         assert_eq!(kinds.len(), 1);
         assert_eq!(kinds[0].get("name").and_then(|n| n.as_str()), Some("probe"));
         assert!(kinds[0].get("p99_s").and_then(|p| p.as_f64()).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn rate_window_reset_forgets_prior_counts() {
+        let t = Telemetry::new();
+        for _ in 0..100 {
+            t.record_kind(0, Duration::from_nanos(10), false);
+        }
+        t.reset_rate_windows();
+        let s = t.snapshot();
+        // the windows hold nothing recorded before the reset (peak is a
+        // max over the zeroed slots, so it is immune to elapsed-time skew)
+        assert_eq!(s.throughput.peak_window_ops_per_sec, 0.0);
+        // histograms and op counters are intentionally untouched
+        assert_eq!(s.ops_total(), 100);
     }
 
     #[test]

@@ -56,6 +56,7 @@ const KNOWN_CODES: &[&str] = &[
     code::LEVEL_UNAVAILABLE,
     code::PANIC,
     code::BAD_REPLY,
+    code::CRASHED,
 ];
 
 fn assert_known_code(err: &str, what: &str) {
@@ -265,12 +266,17 @@ fn chaos_soak_three_levels_oracle_verified() {
     // exercises shard-bucketed marks and spine merges under the same
     // after-every-op oracle
     h.set_write_shards_all(4);
+    // PR 10: every level write-ahead journals, so seeded kill/restart
+    // cycles ride the same stream — recovery + reconciliation must hold
+    // up under concurrent frame and provider faults
+    h.enable_journals(16);
 
     let mut rng = Rng::new(seed ^ 0x50AC);
     let mut live_roots: Vec<String> = Vec::new();
     let mut grows_ok = 0u32;
     let mut grow_errs = 0u32;
     let mut shrinks_ok = 0u32;
+    let mut kills = 0u32;
     let small = JobSpec::nodes_sockets_cores(1, 2, 16);
     let big = JobSpec::nodes_sockets_cores(2, 2, 16);
     let probe = JobSpec::nodes_sockets_cores(1, 1, 8);
@@ -305,7 +311,7 @@ fn chaos_soak_three_levels_oracle_verified() {
                     "probe_up may only fail on quarantine: {e}"
                 ),
             },
-            75..=94 => {
+            75..=89 => {
                 if let Some(path) = live_roots.pop() {
                     match h.shrink_from_leaf(&path) {
                         Ok(_) => shrinks_ok += 1,
@@ -314,6 +320,22 @@ fn chaos_soak_three_levels_oracle_verified() {
                         // stay individually consistent — verified below)
                         Err(e) => assert_known_code(&e, &format!("shrink[{i}]")),
                     }
+                }
+            }
+            90..=94 => {
+                // seeded level kill: discard the level's live state,
+                // rebuild from its journal, reconcile with its neighbors.
+                // Under active frame faults the reconcile half of the
+                // restart may fail (and ledgers stay diverged until a
+                // later handshake) — the per-level oracle must hold
+                // regardless, and the sweep below must converge at the end.
+                let level = 1 + rng.below(2) as usize;
+                let report = h.kill_and_restart_level(level).unwrap_or_else(|e| {
+                    panic!("kill/restart L{level} at op {i} (seed {seed:#x}): {e}")
+                });
+                kills += 1;
+                for e in &report.reconcile_errors {
+                    assert_known_code(e, &format!("restart reconcile[{i}]"));
                 }
             }
             _ => {
@@ -340,7 +362,8 @@ fn chaos_soak_three_levels_oracle_verified() {
     );
     eprintln!(
         "soak seed {seed:#x}: {grows_ok} grows ok, {grow_errs} grow errors, \
-         {shrinks_ok} shrinks ok, {injected} frame faults, provider stats {:?}",
+         {shrinks_ok} shrinks ok, {kills} kills, {injected} frame faults, \
+         provider stats {:?}",
         provider_inj.stats()
     );
 
@@ -367,6 +390,37 @@ fn chaos_soak_three_levels_oracle_verified() {
         states.iter().all(|(_, s)| *s == "closed"),
         "links failed to recover after the soak: {states:?} (seed {seed:#x})"
     );
+
+    // PR 10: with the links clean, explicit handshakes re-converge
+    // whatever the faulted restarts left diverged — the cross-level
+    // ledger invariant must hold at quiescence
+    for level in 1..=2 {
+        let inj = h.client_injector(level).expect("chaos link");
+        for _ in 0..64 {
+            inj.push_frame_fault(FrameFault::Deliver);
+        }
+    }
+    for _ in 0..8 {
+        if h.check_ledgers().is_ok() {
+            break;
+        }
+        for level in 1..h.depth() {
+            let _ = h.reconcile_level(level);
+        }
+        // a handshake that tripped a breaker needs its cooldown to elapse
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    h.check_ledgers()
+        .unwrap_or_else(|e| panic!("ledgers failed to converge (seed {seed:#x}): {e}"));
+    if kills > 0 {
+        let reconciles: u64 = (1..h.depth())
+            .map(|l| h.telemetry_snapshot_at(l).reconciles)
+            .sum();
+        assert!(
+            reconciles > 0,
+            "kill/restart cycles ran but no reconcile was counted (seed {seed:#x})"
+        );
+    }
 
     // and the recovered hierarchy still works end to end
     h.reset();

@@ -1,0 +1,439 @@
+//! Crash-consistency suite (PR 10): write-ahead journal replay, torn-tail
+//! truncation, scripted level crashes at every injection point, and the
+//! parent-child grant reconciliation that re-converges the hierarchy after
+//! each kill/restart cycle.
+//!
+//! Invariants proven here, after EVERY cycle:
+//!   - the per-level allocation oracle (`Hierarchy::check_all`);
+//!   - the cross-level ledger invariant (`Hierarchy::check_ledgers`):
+//!     every parent grant has exactly one live child claim and vice versa;
+//!   - committed-prefix replay is bit-identical
+//!     (`fluxion::sched::states_bit_identical`).
+//!
+//! Reproducibility contract mirrors the chaos soak: the seeded streams
+//! derive from one master seed, overridable with
+//! `RECOVERY_SEED=0x2EC0 cargo test --test recovery` (decimal or 0x-hex).
+
+use std::sync::{Arc, Mutex};
+
+use fluxion::external::ec2::{Ec2Provider, Ec2SimConfig};
+use fluxion::external::provider::{ExternalGrant, ExternalProvider, ProviderError};
+use fluxion::fault::{
+    CrashPlan, CrashPoint, FaultInjector, FaultRates, FaultyProvider, ProviderFault,
+};
+use fluxion::hier::{Hierarchy, LevelSpec, LinkKind};
+use fluxion::jobspec::JobSpec;
+use fluxion::resource::builder::{ClusterSpec, UidGen};
+use fluxion::resource::graph::JobId;
+use fluxion::rpc::proto::code;
+use fluxion::sched::{
+    recover, states_bit_identical, PruneConfig, SchedInstance, SchedOp, SchedReply,
+    SchedService,
+};
+use fluxion::util::rng::Rng;
+
+/// Master seed. Override with `RECOVERY_SEED=<int>` (decimal or
+/// `0x`-prefixed hex) to reproduce or explore a different schedule.
+fn recovery_seed() -> u64 {
+    match std::env::var("RECOVERY_SEED") {
+        Ok(s) => {
+            let s = s.trim().to_string();
+            let parsed = match s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+                Some(hex) => u64::from_str_radix(hex, 16),
+                None => s.parse::<u64>(),
+            };
+            parsed.unwrap_or_else(|_| panic!("RECOVERY_SEED must be an integer, got {s:?}"))
+        }
+        Err(_) => 0x2EC0,
+    }
+}
+
+/// A journaled single service driven through a seeded alloc/free/probe
+/// stream. Returns the service and the jobs still live at the end.
+fn journaled_service(seed: u64, ops: usize) -> (SchedService, Vec<JobId>) {
+    let svc = SchedService::new(SchedInstance::new(
+        ClusterSpec::new("c", 4, 2, 8).build(&mut UidGen::new()),
+        PruneConfig::default(),
+    ));
+    svc.enable_journal(3 + seed % 5);
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<JobId> = Vec::new();
+    let shapes = [(1u64, 1u64, 2u64), (1, 2, 8), (2, 2, 8), (1, 1, 8)];
+    for _ in 0..ops {
+        match rng.below(10) {
+            0..=5 => {
+                let (n, s, c) = shapes[rng.below(shapes.len() as u64) as usize];
+                let reply = svc.apply(&SchedOp::MatchAllocate {
+                    spec: JobSpec::nodes_sockets_cores(n, s, c),
+                });
+                if let SchedReply::Allocated { job, .. } = reply {
+                    live.push(job);
+                }
+            }
+            6..=7 => {
+                if !live.is_empty() {
+                    let job = live.swap_remove(rng.below(live.len() as u64) as usize);
+                    let reply = svc.apply(&SchedOp::FreeJob { job });
+                    assert!(matches!(reply, SchedReply::Freed { .. }), "{reply:?}");
+                }
+            }
+            _ => {
+                // read-only: probes never touch the journal
+                let _ = svc.probe(&JobSpec::nodes_sockets_cores(1, 1, 1));
+            }
+        }
+    }
+    (svc, live)
+}
+
+/// Tentpole: replaying the committed journal prefix of a seeded mixed op
+/// stream reproduces the live graph epoch, alloc table, and aggregates
+/// bit-identically — the PR 8 equivalence contract, now across a crash.
+#[test]
+fn seeded_op_stream_replays_bit_identically() {
+    let seed = recovery_seed();
+    let (svc, live) = journaled_service(seed, 90);
+    let rec = svc.recover_from_journal().expect("journal enabled");
+    assert_eq!(rec.torn, 0, "clean journal has no torn tail (seed {seed:#x})");
+    assert_eq!(rec.uncommitted, 0, "every accepted op committed (seed {seed:#x})");
+    assert_eq!(
+        rec.epoch_mismatches, 0,
+        "replay diverged from recorded epochs (seed {seed:#x})"
+    );
+    states_bit_identical(&rec.inst, &svc.read())
+        .unwrap_or_else(|e| panic!("replay not bit-identical (seed {seed:#x}): {e}"));
+    rec.inst.check().expect("recovered oracle");
+    assert!(
+        svc.telemetry_snapshot().journal_appends > 0,
+        "journaled stream recorded no appends"
+    );
+    drop(live);
+}
+
+/// Satellite: a torn tail — the last frame truncated mid-write or
+/// corrupted — is discarded from the first bad frame on, and the journal
+/// still replays the committed prefix cleanly at every truncation depth.
+#[test]
+fn torn_tail_is_discarded_and_prefix_replays() {
+    let seed = recovery_seed() ^ 0x7EA4;
+    let (svc, _live) = journaled_service(seed, 60);
+    let (base, frames) = svc.journal_export().expect("journal enabled");
+    let prune = PruneConfig::default();
+    let full = recover(&base, &frames, prune.clone());
+    states_bit_identical(&full.inst, &svc.read()).expect("full replay bit-identical");
+
+    // frame-boundary truncation: suffix frames simply absent (the classic
+    // torn write that lost whole appends). Not corruption — torn stays 0,
+    // but an op whose commit frame fell off is dropped as uncommitted.
+    for k in 1..=frames.len().min(4) {
+        let cut = &frames[..frames.len() - k];
+        let rec = recover(&base, cut, prune.clone());
+        assert_eq!(rec.torn, 0, "truncation at depth {k} is not corruption");
+        rec.inst.check().unwrap_or_else(|e| {
+            panic!("oracle violated after truncating {k} frames (seed {seed:#x}): {e}")
+        });
+        assert!(
+            rec.inst.graph.epoch() <= svc.read().graph.epoch(),
+            "a replayed prefix can never be ahead of the live timeline"
+        );
+    }
+
+    // mid-frame corruption: flip bytes inside the last frame — the
+    // checksum rejects it and recovery discards the suffix from there.
+    let mut torn = frames.clone();
+    let last = torn.last_mut().expect("stream journaled frames");
+    let cutoff = last.len() / 2;
+    last.truncate(cutoff);
+    let rec = recover(&base, &torn, prune.clone());
+    assert_eq!(rec.torn, 1, "half-written final frame must be detected");
+    rec.inst
+        .check()
+        .expect("oracle after discarding the torn suffix");
+}
+
+/// A 3-level chain with spare capacity at the root: L1 boots 2 nodes, the
+/// leaf boots 1 of those, one node stays free at L0 — so a leaf grow
+/// escalates to the top and the grant descends through every link.
+fn chain3() -> Hierarchy {
+    let root = ClusterSpec::new("cluster", 3, 2, 16).build(&mut UidGen::new());
+    let levels = vec![
+        LevelSpec {
+            boot_nodes: 2,
+            link: LinkKind::InProc,
+        },
+        LevelSpec {
+            boot_nodes: 1,
+            link: LinkKind::InProc,
+        },
+    ];
+    Hierarchy::build(root, &levels).expect("chain hierarchy")
+}
+
+/// Crash point 1 (pre-journal): the leaf dies after the grant reply
+/// arrives but before splicing it — the parent holds an orphaned grant the
+/// child never committed. The restart reconcile must release it upstream
+/// and restore the ledger invariant AND the capacity.
+#[test]
+fn orphaned_grant_is_released_after_child_restart() {
+    let h = chain3();
+    h.enable_journals(4);
+    h.check_ledgers().expect("balanced at boot");
+    let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+    let leaf = h.depth() - 1;
+
+    h.set_crash_plan(leaf, CrashPlan::once(CrashPoint::PreJournal));
+    let err = h.grow_from_leaf(&spec).expect_err("scripted crash");
+    assert!(err.starts_with(code::CRASHED), "want crashed, got: {err}");
+    h.check_ledgers()
+        .expect_err("orphaned grant must show as ledger divergence");
+    h.check_all().expect("per-level oracle still holds");
+
+    let report = h.kill_and_restart_level(leaf).expect("restart");
+    assert!(
+        report.matched_live,
+        "the crash predates any leaf mutation: {report:?}"
+    );
+    assert!(report.reconcile_errors.is_empty(), "{:?}", report.reconcile_errors);
+    h.check_ledgers().expect("reconcile released the orphan");
+    h.check_all().expect("oracle after restart");
+    assert!(
+        h.telemetry_snapshot_at(leaf - 1).orphans_released >= 1,
+        "the leaf's parent must count the released orphan"
+    );
+    // the released capacity is reusable: the same grow now lands
+    let report = h.grow_from_leaf(&spec).expect("grow after recovery");
+    assert!(report.subgraph_size > 0);
+    h.check_ledgers().expect("balanced after re-grow");
+    h.shutdown();
+}
+
+/// Crash point 2 (post-journal / pre-commit durability): a mid-level
+/// grants downward but dies before its ledger write lands — after its
+/// restart the child holds a ghost subtree the parent has no record of.
+/// The handshake cancels the ghost below and releases the now-unclaimed
+/// upstream grant as an orphan above.
+#[test]
+fn ghost_subtree_is_cancelled_after_parent_restart() {
+    let h = chain3();
+    h.enable_journals(4);
+    let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+
+    h.set_crash_plan(1, CrashPlan::once(CrashPoint::PostJournal));
+    // the grow SUCCEEDS at the leaf — the crash hits L1's durability only
+    let report = h.grow_from_leaf(&spec).expect("grant descends");
+    assert!(report.subgraph_size > 0);
+    h.check_ledgers()
+        .expect_err("undurable grant must show as ledger divergence");
+
+    let restart = h.kill_and_restart_level(1).expect("restart");
+    assert!(
+        !restart.matched_live,
+        "the journal is legitimately behind the pre-kill live state: {restart:?}"
+    );
+    assert!(restart.reconcile_errors.is_empty(), "{:?}", restart.reconcile_errors);
+    h.check_ledgers()
+        .expect("ghost cancelled below, orphan released above");
+    h.check_all().expect("oracle after restart");
+    assert!(
+        h.telemetry_snapshot_at(0).orphans_released >= 1,
+        "L0 must release the grant L1 lost"
+    );
+    // full capacity is back: the same grow lands again end to end
+    let report = h.grow_from_leaf(&spec).expect("grow after recovery");
+    assert!(report.subgraph_size > 0);
+    h.check_ledgers().expect("balanced after re-grow");
+    h.shutdown();
+}
+
+/// Crash point 3 (mid-reconcile): the child crashes after receiving the
+/// `Reconciled` reply but before cancelling its ghosts. The handshake is
+/// idempotent — a retried reconcile re-reports the same ghosts and
+/// converges.
+#[test]
+fn mid_reconcile_crash_retries_idempotently() {
+    let h = chain3();
+    h.enable_journals(4);
+    let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+    let leaf = h.depth() - 1;
+
+    // ghost setup as above: L1 grants without durability, then restarts
+    h.set_crash_plan(1, CrashPlan::once(CrashPoint::PostJournal));
+    h.grow_from_leaf(&spec).expect("grant descends");
+    // ...but the leaf's half of the restart handshake dies mid-reconcile
+    h.set_crash_plan(leaf, CrashPlan::once(CrashPoint::MidReconcile));
+    let restart = h.kill_and_restart_level(1).expect("restart");
+    assert!(
+        restart
+            .reconcile_errors
+            .iter()
+            .any(|e| e.starts_with(code::CRASHED)),
+        "the scripted mid-reconcile crash must surface: {restart:?}"
+    );
+    h.check_ledgers()
+        .expect_err("ghost not yet cancelled: divergence persists");
+    h.check_all().expect("oracle between handshake attempts");
+
+    // retry (crash plan exhausted): same claims, same ghosts, converges
+    let (_, ghosts) = h.reconcile_level(leaf).expect("retried reconcile");
+    assert!(!ghosts.is_empty(), "retry must re-report the ghost");
+    h.check_ledgers().expect("converged after retry");
+    h.check_all().expect("oracle after convergence");
+    h.shutdown();
+}
+
+/// An [`ExternalProvider`] the test keeps a handle to after the hierarchy
+/// boxes it (same pattern as the chaos soak).
+struct SharedProvider(Arc<Mutex<FaultyProvider<Ec2Provider>>>);
+
+impl ExternalProvider for SharedProvider {
+    fn name(&self) -> &str {
+        "shared-faulty-ec2"
+    }
+
+    fn request(&mut self, spec: &JobSpec) -> Result<ExternalGrant, ProviderError> {
+        self.0.lock().unwrap().request(spec)
+    }
+
+    fn release(&mut self, instance_ids: &[String]) -> Result<(), ProviderError> {
+        self.0.lock().unwrap().release(instance_ids)
+    }
+}
+
+/// Satellite 2: a spot reclaim racing a level crash. `FaultyProvider`'s
+/// release-before-error contract means the failed burst leaves no
+/// provider-side state, so the subsequent kill/restart reconciles to a
+/// clean ledger with zero orphaned instances; and a SUCCESSFUL burst's
+/// cloud bookkeeping survives the owner's restart via the ledger note.
+#[test]
+fn spot_reclaim_racing_level_crash_leaves_no_orphans() {
+    let root = ClusterSpec::new("cluster", 1, 2, 16).build(&mut UidGen::new());
+    let inj = FaultInjector::new(recovery_seed() ^ 0x5407, FaultRates::none());
+    let provider = FaultyProvider::new(
+        Ec2Provider::new(Ec2SimConfig {
+            time_scale: 1e-4,
+            ..Ec2SimConfig::default()
+        }),
+        inj.clone(),
+    );
+    let shared = Arc::new(Mutex::new(provider));
+    let levels = vec![LevelSpec {
+        boot_nodes: 1,
+        link: LinkKind::InProc,
+    }];
+    let h = Hierarchy::build_with_external(
+        root,
+        &levels,
+        Some(Box::new(SharedProvider(shared.clone()))),
+    )
+    .expect("burst hierarchy");
+    h.enable_journals(4);
+    let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+
+    // the reclaim fires mid-grant; the provider released its instances
+    // before surfacing the error, so the crash window holds no state
+    inj.push_provider_fault(ProviderFault::Reclaim);
+    let e = h.grow_from_leaf(&spec).expect_err("scripted reclaim");
+    assert!(e.starts_with(code::PROVIDER_API), "want provider_api, got: {e}");
+    assert!(shared.lock().unwrap().inner().live_instances().is_empty());
+    for level in [1, 0] {
+        let r = h.kill_and_restart_level(level).expect("restart");
+        assert!(r.reconcile_errors.is_empty(), "{:?}", r.reconcile_errors);
+    }
+    h.check_ledgers().expect("no orphaned grants from the failed burst");
+    h.check_all().expect("oracle after failed burst + restarts");
+
+    // a clean burst, then the OWNER of the cloud grant restarts: its
+    // cloud_grants bookkeeping must come back from the journal ledger
+    // note, so the later shrink still releases the real instances
+    let report = h.grow_from_leaf(&spec).expect("clean burst");
+    assert!(!shared.lock().unwrap().inner().live_instances().is_empty());
+    h.check_ledgers().expect("balanced after burst");
+    let r = h.kill_and_restart_level(0).expect("owner restart");
+    assert!(r.matched_live, "burst state was journaled: {r:?}");
+    h.check_ledgers().expect("balanced after owner restart");
+    h.shrink_from_leaf(&report.roots[0]).expect("shrink burst");
+    assert!(
+        shared.lock().unwrap().inner().live_instances().is_empty(),
+        "restart lost the cloud grant bookkeeping: instances orphaned"
+    );
+    h.check_all().expect("oracle at quiescence");
+    h.shutdown();
+}
+
+/// The kill/restart soak: a seeded mixed op stream where random levels are
+/// killed and restarted mid-stream. After EVERY op the per-level oracle
+/// holds; after every kill/restart cycle the cross-level ledger invariant
+/// holds too, and the reconcile/replay counters advance.
+#[test]
+fn seeded_kill_restart_soak_converges_every_cycle() {
+    let seed = recovery_seed() ^ 0x50AC;
+    let h = chain3();
+    h.enable_journals(8);
+    h.set_write_shards_all(4);
+    let mut rng = Rng::new(seed);
+    let spec = JobSpec::nodes_sockets_cores(1, 2, 16);
+    let probe = JobSpec::nodes_sockets_cores(1, 1, 8);
+    let mut live_roots: Vec<String> = Vec::new();
+    let mut grows_ok = 0u32;
+    let mut kills = 0u32;
+
+    for i in 0..80 {
+        match rng.below(100) {
+            0..=39 => {
+                if let Ok(report) = h.grow_from_leaf(&spec) {
+                    grows_ok += 1;
+                    live_roots.extend(report.roots);
+                }
+            }
+            40..=59 => {
+                if let Some(path) = live_roots.pop() {
+                    let _ = h.shrink_from_leaf(&path);
+                }
+            }
+            60..=74 => {
+                let _ = h.probe_up(&probe);
+            }
+            75..=89 => {
+                let level = 1 + rng.below((h.depth() - 1) as u64) as usize;
+                let report = h
+                    .kill_and_restart_level(level)
+                    .unwrap_or_else(|e| panic!("restart L{level} at op {i} (seed {seed:#x}): {e}"));
+                assert!(
+                    report.matched_live,
+                    "clean kill must replay bit-identically at op {i} (seed {seed:#x}): {report:?}"
+                );
+                assert!(
+                    report.reconcile_errors.is_empty(),
+                    "op {i} (seed {seed:#x}): {:?}",
+                    report.reconcile_errors
+                );
+                h.check_ledgers().unwrap_or_else(|e| {
+                    panic!("ledger invariant after kill L{level} at op {i} (seed {seed:#x}): {e}")
+                });
+                kills += 1;
+            }
+            _ => {
+                h.reset();
+                live_roots.clear();
+            }
+        }
+        h.check_all()
+            .unwrap_or_else(|e| panic!("oracle violated at op {i} (seed {seed:#x}): {e}"));
+    }
+
+    assert!(grows_ok > 0, "soak never grew (seed {seed:#x})");
+    assert!(kills > 0, "soak never killed a level (seed {seed:#x})");
+    let reconciles: u64 = (1..h.depth())
+        .map(|l| h.telemetry_snapshot_at(l).reconciles)
+        .sum();
+    assert!(
+        reconciles >= kills as u64,
+        "every restart reconciles at least once: {reconciles} < {kills} (seed {seed:#x})"
+    );
+    eprintln!(
+        "recovery soak seed {seed:#x}: {grows_ok} grows, {kills} kill/restart cycles, \
+         {reconciles} reconciles"
+    );
+    h.check_ledgers().expect("balanced at quiescence");
+    h.shutdown();
+}

@@ -79,6 +79,25 @@ if [ "${1:-}" = "--rcu-smoke" ]; then
   exit 0
 fi
 
+# --recovery-smoke: run ONLY the crash-recovery suite and exit — the
+# bit-identical journal replay property, the torn-tail discard tests, the
+# scripted crash sites (pre-journal orphan, post-journal ghost,
+# mid-reconcile retry), the spot-reclaim-vs-crash race, and the seeded
+# kill/restart soak with the oracle plus the cross-level ledger invariant
+# after every cycle (rust/tests/recovery.rs), plus the journal module's
+# unit tests. The seed is fixed for reproducibility; override with
+# RECOVERY_SEED=<int> (decimal or 0x-hex) to replay a specific schedule.
+# The PR 10 acceptance check without the full tier-1 + bench run.
+if [ "${1:-}" = "--recovery-smoke" ]; then
+  export RECOVERY_SEED="${RECOVERY_SEED:-0x2EC0}"
+  echo "== recovery smoke: cargo test --release --test recovery (RECOVERY_SEED=$RECOVERY_SEED) =="
+  cargo test --release --test recovery -- --nocapture
+  echo "== recovery smoke: journal units (lib suite) =="
+  cargo test --release --lib sched::journal -- --nocapture
+  echo "recovery smoke OK"
+  exit 0
+fi
+
 # --tsan: informational ThreadSanitizer pass over the RCU + concurrency
 # suites. Requires a nightly toolchain with the rust-src component
 # (-Zbuild-std); when none is installed this mode REPORTS that and exits 0
@@ -108,6 +127,9 @@ cargo test -q
 
 echo "== rcu suite (release: the stalled-writer stress is timing-sensitive) =="
 cargo test --release --test rcu -q
+
+echo "== recovery suite (release: the kill/restart soak replays full journals) =="
+cargo test --release --test recovery -q
 
 echo "== rustdoc: cargo doc --no-deps (zero warnings required) =="
 RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" cargo doc --no-deps
